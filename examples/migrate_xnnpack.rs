@@ -1,0 +1,82 @@
+//! End-to-end migration driver — the full §4.2 workflow on real
+//! workloads, the repository's E2E validation example.
+//!
+//! For each of the 10 XNNPACK kernels (or one chosen with
+//! `--kernel <name>`):
+//!   1. interpret the NEON program (golden reference),
+//!   2. translate with original-SIMDe (baseline) and RVV-enhanced SIMDe,
+//!   3. execute both on the Spike-like RVV simulator and check numerics,
+//!   4. check the NEON golden against the JAX/XLA oracle (PJRT) if
+//!      `artifacts/` exists,
+//!   5. report the dynamic-instruction-count speedup (Figure 2).
+//!
+//! Run: make artifacts && cargo run --release --example migrate_xnnpack
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use simde_rvv::coordinator::verify_kernel;
+use simde_rvv::kernels;
+use simde_rvv::runtime::GoldenOracle;
+use simde_rvv::rvv::machine::RvvConfig;
+use simde_rvv::sim::Simulator;
+use simde_rvv::simde::{Mode, Translator};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let only = args
+        .iter()
+        .position(|a| a == "--kernel")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+
+    let oracle = match GoldenOracle::load(Path::new("artifacts")) {
+        Ok(o) => {
+            println!("golden oracle loaded: {} ops on {}\n", o.ops().len(), o.platform());
+            Some(o)
+        }
+        Err(e) => {
+            println!("note: running without the XLA oracle ({e:#})\n");
+            None
+        }
+    };
+
+    let cfg = RvvConfig::new(128);
+    let cases: Vec<_> = match &only {
+        Some(k) => vec![kernels::by_name(k).expect("unknown kernel")],
+        None => kernels::suite(),
+    };
+
+    println!(
+        "{:<12} {:>12} {:>12} {:>9}  {:>9}  verified",
+        "kernel", "baseline", "rvv-custom", "speedup", "wall"
+    );
+    let mut speedups = Vec::new();
+    for case in &cases {
+        let t0 = Instant::now();
+        let (rb, _) = Translator::new(Mode::Baseline, cfg).translate(&case.prog)?;
+        let (rc, _) = Translator::new(Mode::RvvCustom, cfg).translate(&case.prog)?;
+        let (_, sb) = Simulator::new(&rb, cfg, &case.inputs)?.run()?;
+        let (_, sc) = Simulator::new(&rc, cfg, &case.inputs)?.run()?;
+        let outcome = verify_kernel(case, 128, oracle.as_ref())?;
+        let speedup = sb.total() as f64 / sc.total() as f64;
+        speedups.push(speedup);
+        println!(
+            "{:<12} {:>12} {:>12} {:>8.2}x  {:>8.1?}  {}",
+            case.name,
+            sb.total(),
+            sc.total(),
+            speedup,
+            t0.elapsed(),
+            if outcome.passed { "yes" } else { "NO" }
+        );
+        assert!(outcome.passed, "{} failed verification", case.name);
+    }
+    let (min, max) = speedups
+        .iter()
+        .fold((f64::INFINITY, 0.0f64), |(lo, hi), &s| (lo.min(s), hi.max(s)));
+    println!("\nspeedup range: {min:.2}x – {max:.2}x   (paper Figure 2: 1.51x – 5.13x)");
+    Ok(())
+}

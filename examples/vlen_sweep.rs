@@ -1,0 +1,62 @@
+//! A1 ablation — vector-length-agnostic scaling study.
+//!
+//! The paper's §3.2 makes the conversion vlen-aware (Table 2). This
+//! example sweeps VLEN in {128, 256, 512}: NEON 128-bit types always
+//! occupy the low 128 bits of the wider registers (LMUL=1 fixed-vlen
+//! types), so the *custom* instruction count is vlen-invariant, while the
+//! baseline's union grows with vlen (the Listing 4 memcpy hazard —
+//! demonstrated at the end with the store bug injected).
+//!
+//! Run: cargo run --release --example vlen_sweep
+
+use anyhow::Result;
+
+use simde_rvv::coordinator;
+use simde_rvv::kernels;
+use simde_rvv::rvv::machine::RvvConfig;
+use simde_rvv::sim::Simulator;
+use simde_rvv::simde::types_map::union_size_bytes;
+use simde_rvv::simde::{Mode, Translator};
+use simde_rvv::neon::vreg::VecTy;
+use simde_rvv::neon::elem::Elem;
+
+fn main() -> Result<()> {
+    let vlens = [128u32, 256, 512];
+    println!("## VLA sweep: Figure-2 speedups by VLEN\n");
+    print!("{:<12}", "kernel");
+    for v in vlens {
+        print!(" vlen={v:<6}");
+    }
+    println!();
+    let tables: Vec<_> = vlens
+        .iter()
+        .map(|&v| coordinator::figure2(v, 4))
+        .collect::<Result<Vec<_>>>()?;
+    for (i, name) in kernels::NAMES.iter().enumerate() {
+        print!("{name:<12}");
+        for t in &tables {
+            print!(" {:<10}", format!("{:.2}x", t[i].speedup));
+        }
+        println!();
+    }
+
+    println!("\n## union size growth (Listing 4 hazard precondition)\n");
+    let q = VecTy::q(Elem::I32);
+    for v in vlens {
+        println!(
+            "vlen={v}: sizeof(simde_int32x4 union) = {} bytes (NEON value: 16)",
+            union_size_bytes(q, v, true)
+        );
+    }
+
+    println!("\n## store-bug injection at vlen=256 (memcpy(sizeof(union)))\n");
+    let case = kernels::vrelu::build(64);
+    let cfg = RvvConfig::new(256);
+    let tr = Translator::new(Mode::Baseline, cfg).with_union_store_bug(true);
+    let (rp, _) = tr.translate(&case.prog)?;
+    match Simulator::new(&rp, cfg, &case.inputs)?.run() {
+        Err(e) => println!("store bug reproduced -> simulator fault: {e:#}"),
+        Ok(_) => println!("store overran into adjacent elements (see tests/store_bug.rs)"),
+    }
+    Ok(())
+}

@@ -1,0 +1,70 @@
+"""AOT lowering: jax -> HLO text artifacts for the Rust runtime.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids, so text round-trips cleanly (see
+/opt/xla-example/gen_hlo.py and README there).
+
+Usage: cd python && python -m compile.aot --out ../artifacts
+Writes artifacts/<op>.hlo.txt and artifacts/manifest.txt with lines
+`<op>;<n_inputs>;<n_outputs>;<in shapes>;<out shapes>` for the runtime's
+sanity checks. Build-time only; never on the Rust request path.
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import GOLDEN
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def shape_str(s) -> str:
+    return "f32[" + ",".join(str(d) for d in s.shape) + "]"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None, help="lower a single op")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = []
+    for name, (fn, specs) in GOLDEN.items():
+        if args.only and name != args.only:
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        # output arity from an abstract eval
+        outs = jax.eval_shape(fn, *specs)
+        n_out = len(outs)
+        in_shapes = "+".join(shape_str(s) for s in specs)
+        out_shapes = "+".join(
+            "{}[{}]".format(str(o.dtype), ",".join(str(d) for d in o.shape))
+            for o in outs
+        )
+        manifest.append(f"{name};{len(specs)};{n_out};{in_shapes};{out_shapes}")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    if not args.only:
+        with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+            f.write("\n".join(manifest) + "\n")
+        print(f"wrote manifest with {len(manifest)} ops")
+
+
+if __name__ == "__main__":
+    main()

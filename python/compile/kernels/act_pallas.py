@@ -1,0 +1,40 @@
+"""Layer-1 Pallas kernel: fused elementwise activation over a flat array.
+
+Covers the paper's elementwise benchmark ops (vrelu/vsqrt/vtanh/vsigmoid)
+as one blocked Pallas kernel parameterised by the activation — the same
+role XNNPACK's vunary microkernels play. interpret=True for CPU-PJRT
+executability (see gemm_pallas.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_ACTS = {
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    "sqrt": jnp.sqrt,
+    "tanh": jnp.tanh,
+    "sigmoid": lambda x: 1.0 / (1.0 + jnp.exp(-x)),
+}
+
+
+def _act_kernel(x_ref, o_ref, *, act):
+    o_ref[...] = _ACTS[act](x_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("act", "block"))
+def activation(x, *, act: str, block: int = 1024):
+    """Apply `act` elementwise with a blocked Pallas kernel."""
+    (n,) = x.shape
+    block = min(block, n)
+    assert n % block == 0, f"n={n} not divisible by block={block}"
+    return pl.pallas_call(
+        functools.partial(_act_kernel, act=act),
+        grid=(n // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(x)

@@ -1,0 +1,59 @@
+"""Layer-1 Pallas kernel: tiled f32 GEMM microkernel.
+
+The compute hot-spot of the XNNPACK workloads (gemm itself, and convhwc via
+im2col) runs through this kernel in the L2 golden model. Tiling is
+BlockSpec-driven: (BM, BK) x (BK, BN) tiles, accumulating into the output
+tile across the K grid dimension (the innermost, sequential grid axis) —
+MXU-shaped `jnp.dot` per tile step.
+
+`interpret=True` always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO so the Rust runtime can
+run the artifact (see /opt/xla-example/README.md). Real-TPU VMEM/MXU
+estimates are recorded in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref, *, k_steps):
+    """One (BM, BN) output tile; grid axis 2 walks the K tiles."""
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+    del k_steps
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def gemm(a, b, *, bm: int = 32, bn: int = 32, bk: int = 32):
+    """C = A @ B with a Pallas tiled microkernel (f32)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch {k} vs {k2}"
+    bm = min(bm, m)
+    bn = min(bn, n)
+    bk = min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"shapes ({m},{k},{n}) not divisible by tiles ({bm},{bk},{bn})"
+    )
+    k_steps = k // bk
+    return pl.pallas_call(
+        functools.partial(_gemm_kernel, k_steps=k_steps),
+        grid=(m // bm, n // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,99 @@
+"""Pure-jnp reference oracle for the 10 XNNPACK benchmark ops.
+
+These references define the *mathematical* semantics the Rust kernels are
+validated against. Shapes and layouts match rust/src/kernels/ exactly
+(HWC layout, valid padding, the same bilinear corner formula, argmax tie =
+first occurrence).
+"""
+
+import jax.numpy as jnp
+
+IBILINEAR_WEIGHTS = (0.25, 0.75)
+
+
+def gemm(a, b):
+    """C[M,N] = A[M,K] @ B[K,N] (f32)."""
+    return a @ b
+
+
+def convhwc(i, w, bias):
+    """3x3 valid conv, HWC in, HWC out; w layout (KH, KW, Cin, Cout)."""
+    h = i.shape[0]
+    oh = h - 2
+    # im2col patches: (OH*OW, KH*KW*Cin)
+    rows = []
+    for ky in range(3):
+        for kx in range(3):
+            rows.append(i[ky : ky + oh, kx : kx + oh, :])
+    patches = jnp.concatenate(rows, axis=-1).reshape(oh * oh, -1)
+    wmat = w.reshape(-1, w.shape[-1])
+    out = patches @ wmat + bias
+    return out.reshape(oh, oh, w.shape[-1])
+
+
+def dwconv(i, w, bias):
+    """3x3 valid depthwise conv; w layout (KH*KW, C) flattened row-major."""
+    h, _, c = i.shape
+    oh = h - 2
+    acc = jnp.broadcast_to(bias, (oh, oh, c))
+    for ky in range(3):
+        for kx in range(3):
+            acc = acc + i[ky : ky + oh, kx : kx + oh, :] * w[ky * 3 + kx]
+    return acc
+
+
+def maxpool(i):
+    """2x2 stride-2 max pooling, HWC."""
+    h, _, c = i.shape
+    oh = h // 2
+    x = i.reshape(oh, 2, oh, 2, c)
+    return x.max(axis=(1, 3))
+
+
+def argmaxpool(i):
+    """2x2 argmax pooling: (values, indices) with window order
+    (0,0),(0,1),(1,0),(1,1) and first-max tie breaking."""
+    h, _, c = i.shape
+    oh = h // 2
+    x = i.reshape(oh, 2, oh, 2, c)
+    stacked = jnp.stack(
+        [x[:, 0, :, 0], x[:, 0, :, 1], x[:, 1, :, 0], x[:, 1, :, 1]], axis=0
+    )
+    vals = stacked.max(axis=0)
+    idxs = stacked.argmax(axis=0).astype(jnp.uint32)
+    return vals, idxs
+
+
+def vrelu(x):
+    return jnp.maximum(x, 0.0)
+
+
+def vsqrt(x):
+    return jnp.sqrt(x)
+
+
+def vtanh(x):
+    return jnp.tanh(x)
+
+
+def vsigmoid(x):
+    return 1.0 / (1.0 + jnp.exp(-x))
+
+
+def ibilinear(i):
+    """2x bilinear upsampling with interior sample offsets {0.25, 0.75} --
+    the exact corner formula of rust/src/kernels/ibilinear.rs."""
+    h, _, c = i.shape
+    oh = 2 * (h - 1)
+    tl = i[:-1, :-1, :]
+    tr = i[:-1, 1:, :]
+    bl = i[1:, :-1, :]
+    br = i[1:, 1:, :]
+    out = jnp.zeros((oh, oh, c), dtype=i.dtype)
+    for dy, wb in enumerate(IBILINEAR_WEIGHTS):
+        for dx, wa in enumerate(IBILINEAR_WEIGHTS):
+            top = tl + wa * (tr - tl)
+            bot = bl + wa * (br - bl)
+            px = top + wb * (bot - top)
+            out = out.at[dy::2, dx::2, :].set(px)
+    return out

@@ -1,0 +1,94 @@
+"""Layer-2 JAX model: the golden computations for the 10 XNNPACK benchmark
+ops at the Figure-2 shapes, composed from the L1 Pallas kernels where the
+compute is matmul/elementwise-shaped (gemm, convhwc-via-im2col, the four
+v-ops) and plain jnp elsewhere.
+
+Each entry in `GOLDEN` is (function, list of input ShapeDtypeStructs) whose
+input order matches the Rust kernel's buffer declaration order — the Rust
+runtime feeds its own input buffers positionally.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.act_pallas import activation
+from .kernels.gemm_pallas import gemm as pallas_gemm
+
+F32 = jnp.float32
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+# -- the ops, L1-composed ----------------------------------------------------
+
+
+def gemm(a, b):
+    return (pallas_gemm(a, b),)
+
+
+def convhwc(i, w, bias):
+    """im2col + the Pallas GEMM microkernel + bias."""
+    h, _, cin = i.shape
+    oh = h - 2
+    cout = w.shape[-1]
+    rows = []
+    for ky in range(3):
+        for kx in range(3):
+            rows.append(i[ky : ky + oh, kx : kx + oh, :])
+    patches = jnp.concatenate(rows, axis=-1).reshape(oh * oh, 9 * cin)
+    wmat = w.reshape(9 * cin, cout)
+    # tile sizes dividing (100, 72, 16)
+    out = pallas_gemm(patches, wmat, bm=25, bn=cout, bk=9 * cin // 2) + bias
+    return (out.reshape(oh, oh, cout),)
+
+
+def dwconv(i, w, bias):
+    return (ref.dwconv(i, w, bias),)
+
+
+def maxpool(i):
+    return (ref.maxpool(i),)
+
+
+def argmaxpool(i):
+    vals, idxs = ref.argmaxpool(i)
+    return (vals, idxs)
+
+
+def vrelu(x):
+    return (activation(x, act="relu"),)
+
+
+def vsqrt(x):
+    return (activation(x, act="sqrt"),)
+
+
+def vtanh(x):
+    return (activation(x, act="tanh"),)
+
+
+def vsigmoid(x):
+    return (activation(x, act="sigmoid"),)
+
+
+def ibilinear(i):
+    return (ref.ibilinear(i),)
+
+
+# -- the Figure-2 golden suite -------------------------------------------------
+
+GOLDEN = {
+    "gemm": (gemm, [_spec(64, 64), _spec(64, 64)]),
+    "convhwc": (convhwc, [_spec(12, 12, 8), _spec(3, 3, 8, 16), _spec(16)]),
+    "dwconv": (dwconv, [_spec(16, 16, 16), _spec(9, 16), _spec(16)]),
+    "maxpool": (maxpool, [_spec(32, 32, 16)]),
+    "argmaxpool": (argmaxpool, [_spec(32, 32, 16)]),
+    "vrelu": (vrelu, [_spec(16384)]),
+    "vsqrt": (vsqrt, [_spec(16384)]),
+    "vtanh": (vtanh, [_spec(8192)]),
+    "vsigmoid": (vsigmoid, [_spec(8192)]),
+    "ibilinear": (ibilinear, [_spec(17, 17, 4)]),
+}

@@ -1,0 +1,127 @@
+"""L1 Pallas kernels vs the pure-jnp oracle — the core correctness signal
+of the compile path, including hypothesis shape/seed sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.act_pallas import activation
+from compile.kernels.gemm_pallas import gemm as pallas_gemm
+
+
+def rand(key, *shape):
+    return jax.random.uniform(jax.random.PRNGKey(key), shape, jnp.float32, -1, 1)
+
+
+class TestPallasGemm:
+    def test_matches_ref_default(self):
+        a = rand(0, 64, 64)
+        b = rand(1, 64, 64)
+        np.testing.assert_allclose(pallas_gemm(a, b), ref.gemm(a, b), rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("m,k,n", [(32, 32, 32), (64, 32, 96), (96, 64, 32), (128, 128, 128)])
+    def test_shapes(self, m, k, n):
+        a = rand(m, m, k)
+        b = rand(n, k, n)
+        np.testing.assert_allclose(pallas_gemm(a, b), a @ b, rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("bm,bn,bk", [(16, 16, 16), (32, 32, 32), (64, 64, 64), (32, 16, 64)])
+    def test_tilings_agree(self, bm, bn, bk):
+        a = rand(7, 64, 64)
+        b = rand(8, 64, 64)
+        got = pallas_gemm(a, b, bm=bm, bn=bn, bk=bk)
+        np.testing.assert_allclose(got, a @ b, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        mt=st.integers(1, 4),
+        kt=st.integers(1, 4),
+        nt=st.integers(1, 4),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_tile_multiples(self, mt, kt, nt, seed):
+        m, k, n = 16 * mt, 16 * kt, 16 * nt
+        a = rand(seed, m, k)
+        b = rand(seed + 1, k, n)
+        got = pallas_gemm(a, b, bm=16, bn=16, bk=16)
+        np.testing.assert_allclose(got, a @ b, rtol=1e-4, atol=1e-4)
+
+    def test_rejects_mismatched_inner_dims(self):
+        with pytest.raises(AssertionError):
+            pallas_gemm(rand(0, 32, 16), rand(1, 32, 32))
+
+
+class TestPallasActivation:
+    @pytest.mark.parametrize("act,fn", [
+        ("relu", ref.vrelu),
+        ("tanh", ref.vtanh),
+        ("sigmoid", ref.vsigmoid),
+    ])
+    def test_matches_ref(self, act, fn):
+        x = rand(3, 4096) * 5
+        np.testing.assert_allclose(activation(x, act=act), fn(x), rtol=1e-5, atol=1e-6)
+
+    def test_sqrt_positive_domain(self):
+        x = jnp.abs(rand(4, 4096)) * 100 + 0.01
+        np.testing.assert_allclose(activation(x, act="sqrt"), jnp.sqrt(x), rtol=1e-6)
+
+    @settings(max_examples=15, deadline=None)
+    @given(blocks=st.integers(1, 8), block=st.sampled_from([64, 256, 1024]), seed=st.integers(0, 1 << 30))
+    def test_hypothesis_blockings(self, blocks, block, seed):
+        n = blocks * block
+        x = rand(seed, n) * 3
+        np.testing.assert_allclose(
+            activation(x, act="tanh", block=block), jnp.tanh(x), rtol=1e-5, atol=1e-6
+        )
+
+
+class TestRefOracle:
+    """Internal consistency of the oracle itself."""
+
+    def test_maxpool_matches_loop(self):
+        x = rand(0, 8, 8, 4)
+        got = np.asarray(ref.maxpool(x))
+        xn = np.asarray(x)
+        for oy in range(4):
+            for ox in range(4):
+                for c in range(4):
+                    want = xn[2 * oy : 2 * oy + 2, 2 * ox : 2 * ox + 2, c].max()
+                    assert got[oy, ox, c] == want
+
+    def test_argmaxpool_first_max_tiebreak(self):
+        x = jnp.zeros((2, 2, 1), jnp.float32)  # all equal -> index 0
+        vals, idxs = ref.argmaxpool(x)
+        assert idxs.dtype == jnp.uint32
+        assert int(idxs[0, 0, 0]) == 0
+
+    def test_convhwc_matches_direct_loop(self):
+        i = rand(1, 6, 6, 4)
+        w = rand(2, 3, 3, 4, 8) * 0.5
+        bias = rand(3, 8) * 0.1
+        got = np.asarray(ref.convhwc(i, w, bias))
+        (inp, wn, bn) = (np.asarray(i), np.asarray(w), np.asarray(bias))
+        for oy in range(4):
+            for ox in range(4):
+                for co in range(8):
+                    acc = bn[co]
+                    for ky in range(3):
+                        for kx in range(3):
+                            for ci in range(4):
+                                acc += inp[oy + ky, ox + kx, ci] * wn[ky, kx, ci, co]
+                    assert abs(got[oy, ox, co] - acc) < 1e-4
+
+    def test_ibilinear_corner_exactness(self):
+        i = rand(5, 5, 5, 4)
+        out = np.asarray(ref.ibilinear(i))
+        assert out.shape == (8, 8, 4)
+        inp = np.asarray(i)
+        # spot-check pixel (0,0): weights (0.25, 0.25)
+        tl, tr, bl = inp[0, 0, 0], inp[0, 1, 0], inp[1, 0, 0]
+        br = inp[1, 1, 0]
+        top = tl + 0.25 * (tr - tl)
+        bot = bl + 0.25 * (br - bl)
+        want = top + 0.25 * (bot - top)
+        assert abs(out[0, 0, 0] - want) < 1e-6

@@ -1,0 +1,53 @@
+//! A2 ablation bench: which conversion categories buy the speedup?
+//! Starting from full-custom, force one category at a time back to the
+//! baseline (generic) rules and report the per-kernel slowdown.
+
+use simde_rvv::benchlib::header;
+use simde_rvv::kernels;
+use simde_rvv::neon::ops::Category;
+use simde_rvv::rvv::machine::RvvConfig;
+use simde_rvv::sim::Simulator;
+use simde_rvv::simde::{Mode, Translator};
+
+fn total(case: &kernels::KernelCase, force: Option<Category>) -> u64 {
+    let cfg = RvvConfig::new(128);
+    let mut tr = Translator::new(Mode::RvvCustom, cfg);
+    if let Some(c) = force {
+        tr = tr.with_forced_baseline(vec![c]);
+    }
+    let (rp, _) = tr.translate(&case.prog).unwrap();
+    let (_, stats) = Simulator::new(&rp, cfg, &case.inputs).unwrap().run().unwrap();
+    stats.total()
+}
+
+fn main() {
+    header("A2 — per-category contribution (icount vs full-custom, >1 means the category's custom rules matter)");
+    let cats = [
+        Category::Memory,
+        Category::Arith,
+        Category::Compare,
+        Category::Bitwise,
+        Category::Convert,
+        Category::FloatEst,
+        Category::Permute,
+    ];
+    print!("| kernel | full |");
+    for c in cats {
+        print!(" -{c:?} |");
+    }
+    println!();
+    print!("|---|---:|");
+    for _ in cats {
+        print!("---:|");
+    }
+    println!();
+    for case in kernels::suite() {
+        let full = total(&case, None);
+        print!("| {} | {} |", case.name, full);
+        for c in cats {
+            let t = total(&case, Some(c));
+            print!(" {:.2}x |", t as f64 / full as f64);
+        }
+        println!();
+    }
+}

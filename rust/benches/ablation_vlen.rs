@@ -1,0 +1,37 @@
+//! A1 ablation bench: Figure-2 speedups as VLEN scales 128 -> 512.
+//! Custom-mode counts are vlen-invariant (fixed-vlen LMUL=1 types keep
+//! NEON values in the low 128 bits); the ratio shifts only through the
+//! baseline's union traffic.
+
+use simde_rvv::benchlib::header;
+use simde_rvv::coordinator;
+use simde_rvv::kernels;
+
+fn main() {
+    header("A1 — vlen sweep");
+    let vlens = [128u32, 256, 512];
+    let tables: Vec<_> = vlens
+        .iter()
+        .map(|&v| coordinator::figure2(v, 4).expect("figure2"))
+        .collect();
+    print!("| kernel |");
+    for v in vlens {
+        print!(" vlen={v} |");
+    }
+    println!();
+    print!("|---|");
+    for _ in vlens {
+        print!("---:|");
+    }
+    println!();
+    for (i, name) in kernels::NAMES.iter().enumerate() {
+        print!("| {name} |");
+        for t in &tables {
+            print!(" {:.2}x |", t[i].speedup);
+        }
+        println!();
+        for t in &tables {
+            assert!(t[i].speedup > 1.0);
+        }
+    }
+}

@@ -1,0 +1,34 @@
+//! Figure 2 regeneration bench: the 10 XNNPACK kernels through both SIMDe
+//! modes at vlen=128, reporting dynamic instruction counts + speedups
+//! (the paper's metric) and pipeline wall time.
+
+use simde_rvv::benchlib::{bench_auto, header};
+use simde_rvv::coordinator;
+use simde_rvv::kernels;
+use simde_rvv::report;
+use simde_rvv::rvv::machine::RvvConfig;
+use simde_rvv::sim::Simulator;
+use simde_rvv::simde::{Mode, Translator};
+use std::time::Duration;
+
+fn main() {
+    header("Figure 2 — XNNPACK suite, baseline vs RVV-enhanced SIMDe");
+    let rows = coordinator::figure2(128, 4).expect("figure2");
+    print!("{}", report::fig2_markdown(&rows, 128));
+
+    // sanity: the Figure-2 claims hold
+    for r in &rows {
+        assert!(r.speedup > 1.0, "{} regressed", r.kernel);
+    }
+
+    header("pipeline wall time per kernel (translate + simulate, custom mode)");
+    let cfg = RvvConfig::new(128);
+    for case in kernels::suite() {
+        let r = bench_auto(case.name, Duration::from_millis(400), || {
+            let (rp, _) = Translator::new(Mode::RvvCustom, cfg).translate(&case.prog).unwrap();
+            let (_, stats) = Simulator::new(&rp, cfg, &case.inputs).unwrap().run().unwrap();
+            std::hint::black_box(stats.total());
+        });
+        println!("{}", r.line());
+    }
+}

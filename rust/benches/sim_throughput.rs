@@ -1,0 +1,36 @@
+//! Perf bench (L3 hot path): simulator + translator throughput.
+//! The EXPERIMENTS.md §Perf target: >= 100 M simulated element-ops/s.
+
+use simde_rvv::benchlib::{bench_auto, header};
+use simde_rvv::kernels;
+use simde_rvv::rvv::machine::RvvConfig;
+use simde_rvv::sim::Simulator;
+use simde_rvv::simde::{Mode, Translator};
+use std::time::Duration;
+
+fn main() {
+    let cfg = RvvConfig::new(128);
+    header("translator throughput");
+    for case in [kernels::gemm::case(), kernels::vsigmoid::case()] {
+        let r = bench_auto(&format!("translate/{}", case.name), Duration::from_millis(300), || {
+            let (rp, _) = Translator::new(Mode::RvvCustom, cfg).translate(&case.prog).unwrap();
+            std::hint::black_box(rp.static_ops());
+        });
+        println!("{}", r.line());
+    }
+
+    header("simulator throughput (custom-mode programs)");
+    for case in kernels::suite() {
+        let (rp, _) = Translator::new(Mode::RvvCustom, cfg).translate(&case.prog).unwrap();
+        let mut insts = 0u64;
+        let r = bench_auto(&format!("simulate/{}", case.name), Duration::from_millis(500), || {
+            let (_, stats) = Simulator::new(&rp, cfg, &case.inputs).unwrap().run().unwrap();
+            insts = stats.total();
+            std::hint::black_box(insts);
+        });
+        let vec_elems = insts * 4; // ~4 lanes per vector instruction
+        let mips = insts as f64 / r.median.as_secs_f64() / 1e6;
+        let meps = vec_elems as f64 / r.median.as_secs_f64() / 1e6;
+        println!("{}  [{mips:.1} M inst/s, ~{meps:.0} M elem-ops/s]", r.line());
+    }
+}

@@ -1,0 +1,22 @@
+//! Table 1 regeneration bench: the full-surface NEON catalog, counts by
+//! return base type vs the paper, and generation throughput.
+
+use simde_rvv::benchlib::{bench_auto, header};
+use simde_rvv::neon::catalog;
+use simde_rvv::report;
+use std::time::Duration;
+
+fn main() {
+    header("Table 1 — NEON intrinsic counts by return base type");
+    print!("{}", report::table1_markdown());
+
+    let cat = catalog::generate();
+    println!("\ncatalog size: {} intrinsics", cat.len());
+    assert!(cat.len() > 2500);
+
+    header("catalog generation throughput");
+    let r = bench_auto("catalog::generate", Duration::from_millis(400), || {
+        std::hint::black_box(catalog::generate().len());
+    });
+    println!("{}", r.line());
+}

@@ -1,0 +1,31 @@
+//! Table 2 regeneration bench: the NEON->RVV type mapping across vlen
+//! bands and extension sets, plus mapping throughput.
+
+use simde_rvv::benchlib::{bench_auto, header};
+use simde_rvv::report;
+use simde_rvv::simde::types_map::{map_neon_type, table2_rows};
+use std::time::Duration;
+
+fn main() {
+    header("Table 2 — NEON types -> RVV fixed-vlen types");
+    print!("{}", report::table2_markdown(true));
+    println!();
+    print!("{}", report::table2_markdown(false));
+
+    header("type-map throughput (22 rows x 3 vlens x 2 ext-sets)");
+    let rows = table2_rows();
+    let r = bench_auto("types_map", Duration::from_millis(200), || {
+        let mut n = 0;
+        for &vt in &rows {
+            for vlen in [32, 64, 128] {
+                for zvfh in [false, true] {
+                    if map_neon_type(vt, vlen, zvfh).is_ok() {
+                        n += 1;
+                    }
+                }
+            }
+        }
+        std::hint::black_box(n);
+    });
+    println!("{}", r.line());
+}

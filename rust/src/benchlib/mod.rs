@@ -1,0 +1,83 @@
+//! Minimal benchmark harness (criterion is unavailable offline): warmup +
+//! timed iterations with mean/median/min reporting, used by the
+//! `harness = false` bench targets.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<32} iters={:<4} mean={:>10.3?} median={:>10.3?} min={:>10.3?}",
+            self.name, self.iters, self.mean, self.median, self.min
+        )
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` runs.
+pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed());
+    }
+    times.sort();
+    let mean = times.iter().sum::<Duration>() / iters.max(1) as u32;
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean,
+        median: times[times.len() / 2],
+        min: times[0],
+    }
+}
+
+/// Auto-scale iteration count so each bench takes ~`budget`.
+pub fn bench_auto(name: &str, budget: Duration, mut f: impl FnMut()) -> BenchResult {
+    // one calibration run
+    let t = Instant::now();
+    f();
+    let once = t.elapsed().max(Duration::from_micros(1));
+    let iters = (budget.as_nanos() / once.as_nanos()).clamp(3, 1000) as usize;
+    bench(name, 1, iters, f)
+}
+
+/// Print a standard bench header.
+pub fn header(title: &str) {
+    println!("=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_times() {
+        let r = bench("spin", 1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(r.iters, 5);
+        assert!(r.min <= r.median && r.median <= r.mean * 5);
+    }
+
+    #[test]
+    fn auto_scales() {
+        let r = bench_auto("fast", Duration::from_millis(5), || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(r.iters >= 3);
+    }
+}

@@ -1,0 +1,104 @@
+//! Minimal CLI argument parser (no clap offline): subcommand + `--key
+//! value` flags + `--flag` booleans.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    bools: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                match it.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        let v = it.next().unwrap();
+                        args.flags.insert(key.to_string(), v);
+                    }
+                    _ => args.bools.push(key.to_string()),
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(a);
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_u32(&self, key: &str, default: u32) -> Result<u32> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => match v.parse() {
+                Ok(n) => Ok(n),
+                Err(_) => bail!("--{key} must be an integer, got '{v}'"),
+            },
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        Ok(self.get_u32(key, default as u32)? as usize)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.bools.iter().any(|b| b == key)
+    }
+
+    /// Comma-separated u32 list flag.
+    pub fn get_u32_list(&self, key: &str, default: &[u32]) -> Result<Vec<u32>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|x| x.trim().parse::<u32>().map_err(|_| anyhow::anyhow!("bad --{key} entry '{x}'")))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_flags_and_bools() {
+        // boolean flags bind greedily: put positionals before them
+        let a = parse("bench fig2 --vlen 256 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("bench"));
+        assert_eq!(a.get("vlen"), Some("256"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["fig2"]);
+    }
+
+    #[test]
+    fn u32_list() {
+        let a = parse("sweep --vlens 128,256,512");
+        assert_eq!(a.get_u32_list("vlens", &[128]).unwrap(), vec![128, 256, 512]);
+        let a = parse("sweep");
+        assert_eq!(a.get_u32_list("vlens", &[128]).unwrap(), vec![128]);
+    }
+
+    #[test]
+    fn default_values() {
+        let a = parse("bench");
+        assert_eq!(a.get_u32("vlen", 128).unwrap(), 128);
+        assert!(parse("bench --vlen abc").get_u32("vlen", 128).is_err());
+    }
+}

@@ -1,0 +1,195 @@
+//! Configuration system: a minimal TOML-subset parser (no serde offline)
+//! plus the typed settings the pipeline consumes. Files look like:
+//!
+//! ```toml
+//! [sim]
+//! vlen = 128
+//! zvfh = true
+//!
+//! [run]
+//! threads = 4
+//! artifacts = "artifacts"
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::rvv::machine::RvvConfig;
+
+/// A parsed config value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Bool(bool),
+    Str(String),
+}
+
+impl Value {
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed file: `section.key -> value`.
+#[derive(Debug, Default, Clone)]
+pub struct Config {
+    pub values: BTreeMap<String, Value>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (no, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name.strip_suffix(']').with_context(|| format!("line {}: bad section", no + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", no + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let v = v.trim();
+            let val = if v == "true" {
+                Value::Bool(true)
+            } else if v == "false" {
+                Value::Bool(false)
+            } else if let Ok(i) = v.parse::<i64>() {
+                Value::Int(i)
+            } else {
+                let s = v.trim_matches('"');
+                if s.len() + 2 != v.len() && v.starts_with('"') {
+                    bail!("line {}: unterminated string", no + 1);
+                }
+                Value::Str(s.to_string())
+            };
+            values.insert(key, val);
+        }
+        Ok(Config { values })
+    }
+
+    pub fn load(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+        Config::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+}
+
+/// Typed settings for the whole pipeline.
+#[derive(Debug, Clone)]
+pub struct Settings {
+    pub vlen: u32,
+    pub zvfh: bool,
+    pub threads: usize,
+    pub artifacts: String,
+}
+
+impl Default for Settings {
+    fn default() -> Settings {
+        Settings { vlen: 128, zvfh: true, threads: default_threads(), artifacts: "artifacts".into() }
+    }
+}
+
+fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+impl Settings {
+    pub fn from_config(cfg: &Config) -> Result<Settings> {
+        let mut s = Settings::default();
+        if let Some(v) = cfg.get("sim.vlen") {
+            let v = v.as_int().context("sim.vlen must be an integer")?;
+            if !(32..=65536).contains(&v) || (v as u64).count_ones() != 1 {
+                bail!("sim.vlen must be a power of two in [32, 65536], got {v}");
+            }
+            s.vlen = v as u32;
+        }
+        if let Some(v) = cfg.get("sim.zvfh") {
+            s.zvfh = v.as_bool().context("sim.zvfh must be a bool")?;
+        }
+        if let Some(v) = cfg.get("run.threads") {
+            s.threads = v.as_int().context("run.threads must be an integer")?.max(1) as usize;
+        }
+        if let Some(v) = cfg.get("run.artifacts") {
+            s.artifacts = v.as_str().context("run.artifacts must be a string")?.to_string();
+        }
+        Ok(s)
+    }
+
+    pub fn rvv(&self) -> RvvConfig {
+        RvvConfig { vlen: self.vlen, zvfh: self.zvfh }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(
+            "# comment\n[sim]\nvlen = 256\nzvfh = false\n\n[run]\nthreads = 8\nartifacts = \"art\"\n",
+        )
+        .unwrap();
+        assert_eq!(c.get("sim.vlen"), Some(&Value::Int(256)));
+        assert_eq!(c.get("sim.zvfh"), Some(&Value::Bool(false)));
+        assert_eq!(c.get("run.artifacts"), Some(&Value::Str("art".into())));
+        let s = Settings::from_config(&c).unwrap();
+        assert_eq!(s.vlen, 256);
+        assert!(!s.zvfh);
+        assert_eq!(s.threads, 8);
+    }
+
+    #[test]
+    fn rejects_bad_vlen() {
+        let c = Config::parse("[sim]\nvlen = 100\n").unwrap();
+        assert!(Settings::from_config(&c).is_err());
+        let c = Config::parse("[sim]\nvlen = 7\n").unwrap();
+        assert!(Settings::from_config(&c).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(Config::parse("novalue\n").is_err());
+        assert!(Config::parse("[unclosed\n").is_err());
+    }
+
+    #[test]
+    fn defaults_are_sane() {
+        let s = Settings::default();
+        assert_eq!(s.vlen, 128);
+        assert!(s.zvfh);
+        assert!(s.threads >= 1);
+    }
+}

@@ -1,0 +1,149 @@
+//! L3 coordinator: the migration/benchmark pipeline. Runs the
+//! (kernel x mode x vlen) job matrix across a worker-thread pool
+//! (std::thread — the work is CPU-bound simulation, no async needed),
+//! verifies translated outputs against the NEON interpretation and the
+//! JAX/XLA golden oracle, and aggregates the Figure 2 rows.
+
+mod verify;
+
+pub use verify::{verify_kernel, VerifyOutcome};
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::kernels::{self, KernelCase};
+use crate::rvv::machine::RvvConfig;
+use crate::sim::{SimStats, Simulator};
+use crate::simde::{Mode, Translator};
+
+/// One unit of work.
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub kernel: &'static str,
+    pub mode: Mode,
+    pub vlen: u32,
+}
+
+/// Result of one simulated job.
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    pub job: Job,
+    pub stats: SimStats,
+    pub wall: Duration,
+}
+
+/// Run one job (translate + simulate).
+pub fn run_job(job: &Job) -> Result<JobResult> {
+    let case = kernels::by_name(job.kernel)
+        .with_context(|| format!("unknown kernel '{}'", job.kernel))?;
+    run_job_on(&case, job)
+}
+
+fn run_job_on(case: &KernelCase, job: &Job) -> Result<JobResult> {
+    let cfg = RvvConfig::new(job.vlen);
+    let t0 = Instant::now();
+    let tr = Translator::new(job.mode, cfg);
+    let (rp, _) = tr.translate(&case.prog)?;
+    let (_, stats) = Simulator::new(&rp, cfg, &case.inputs)?.run()?;
+    Ok(JobResult { job: job.clone(), stats, wall: t0.elapsed() })
+}
+
+/// Run a job list across `threads` workers; results in input order.
+pub fn run_matrix(jobs: Vec<Job>, threads: usize) -> Result<Vec<JobResult>> {
+    let n = jobs.len();
+    let queue: Arc<Mutex<VecDeque<(usize, Job)>>> =
+        Arc::new(Mutex::new(jobs.into_iter().enumerate().collect()));
+    let (tx, rx) = mpsc::channel::<(usize, Result<JobResult>)>();
+
+    let workers: Vec<_> = (0..threads.max(1))
+        .map(|_| {
+            let queue = Arc::clone(&queue);
+            let tx = tx.clone();
+            std::thread::spawn(move || loop {
+                let next = queue.lock().unwrap().pop_front();
+                match next {
+                    Some((idx, job)) => {
+                        let r = run_job(&job);
+                        if tx.send((idx, r)).is_err() {
+                            return;
+                        }
+                    }
+                    None => return,
+                }
+            })
+        })
+        .collect();
+    drop(tx);
+
+    let mut slots: Vec<Option<JobResult>> = (0..n).map(|_| None).collect();
+    for (idx, r) in rx {
+        slots[idx] = Some(r?);
+    }
+    for w in workers {
+        w.join().expect("worker panicked");
+    }
+    Ok(slots.into_iter().map(|s| s.expect("missing result")).collect())
+}
+
+/// One Figure 2 row.
+#[derive(Debug, Clone)]
+pub struct Fig2Row {
+    pub kernel: &'static str,
+    pub baseline: u64,
+    pub custom: u64,
+    pub speedup: f64,
+}
+
+/// Compute the Figure 2 table at a given vlen across the worker pool.
+pub fn figure2(vlen: u32, threads: usize) -> Result<Vec<Fig2Row>> {
+    let mut jobs = Vec::new();
+    for name in kernels::NAMES {
+        jobs.push(Job { kernel: name, mode: Mode::Baseline, vlen });
+        jobs.push(Job { kernel: name, mode: Mode::RvvCustom, vlen });
+    }
+    let results = run_matrix(jobs, threads)?;
+    let rows = results
+        .chunks(2)
+        .map(|pair| {
+            let (b, c) = (&pair[0], &pair[1]);
+            debug_assert_eq!(b.job.kernel, c.job.kernel);
+            Fig2Row {
+                kernel: b.job.kernel,
+                baseline: b.stats.total(),
+                custom: c.stats.total(),
+                speedup: b.stats.total() as f64 / c.stats.total() as f64,
+            }
+        })
+        .collect();
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_runs_in_parallel_and_preserves_order() {
+        let jobs = vec![
+            Job { kernel: "vrelu", mode: Mode::Baseline, vlen: 128 },
+            Job { kernel: "vrelu", mode: Mode::RvvCustom, vlen: 128 },
+            Job { kernel: "maxpool", mode: Mode::RvvCustom, vlen: 128 },
+        ];
+        let results = run_matrix(jobs, 3).unwrap();
+        assert_eq!(results.len(), 3);
+        assert_eq!(results[0].job.kernel, "vrelu");
+        assert_eq!(results[0].job.mode, Mode::Baseline);
+        assert_eq!(results[2].job.kernel, "maxpool");
+        assert!(results[0].stats.total() > results[1].stats.total());
+    }
+
+    #[test]
+    fn unknown_kernel_is_an_error() {
+        let jobs = vec![Job { kernel: "nope", mode: Mode::Baseline, vlen: 128 }];
+        assert!(run_matrix(jobs, 1).is_err());
+    }
+}

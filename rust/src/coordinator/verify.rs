@@ -1,0 +1,112 @@
+//! Verification: translated-program outputs vs the NEON golden
+//! interpretation, and (when artifacts are available) vs the JAX/XLA
+//! oracle — the reproduction of the paper's §4.1 validation workflow.
+
+use anyhow::{bail, Context, Result};
+
+use crate::ir::BufKind;
+use crate::kernels::KernelCase;
+use crate::neon::elem::Elem;
+use crate::neon::interp::{Buffer, NeonInterp};
+use crate::runtime::GoldenOracle;
+use crate::rvv::machine::RvvConfig;
+use crate::sim::Simulator;
+use crate::simde::{Mode, Translator};
+use crate::testutil::max_abs_diff;
+
+/// Per-mode, per-output comparison outcome for one kernel.
+#[derive(Debug, Clone)]
+pub struct VerifyOutcome {
+    pub kernel: &'static str,
+    /// (mode, output name, max |diff| vs NEON interp) — integer outputs
+    /// report 0.0 only on exact match.
+    pub vs_neon: Vec<(Mode, String, f32)>,
+    /// (output name, max |diff| of NEON interp vs XLA oracle), empty if no
+    /// oracle was supplied.
+    pub vs_golden: Vec<(String, f32)>,
+    pub passed: bool,
+}
+
+/// Ordered output buffer names (declaration order, matching the golden
+/// artifact's positional outputs).
+fn output_names(case: &KernelCase) -> Vec<String> {
+    case.prog
+        .bufs
+        .iter()
+        .filter(|b| b.kind == BufKind::Output)
+        .map(|b| b.name.clone())
+        .collect()
+}
+
+/// Ordered input buffers (declaration order, matching the golden
+/// artifact's positional inputs).
+fn ordered_inputs<'a>(case: &'a KernelCase) -> Vec<&'a Buffer> {
+    case.prog
+        .bufs
+        .iter()
+        .filter(|b| b.kind == BufKind::Input)
+        .map(|b| &case.inputs[&b.name])
+        .collect()
+}
+
+fn diff_buffers(a: &Buffer, b: &Buffer) -> Result<f32> {
+    if a.elem.is_float() {
+        Ok(max_abs_diff(&a.as_f32s(), &b.as_f32s()))
+    } else if a.data == b.data {
+        Ok(0.0)
+    } else {
+        bail!("integer outputs differ")
+    }
+}
+
+/// Verify one kernel under both translation modes, optionally against the
+/// XLA oracle.
+pub fn verify_kernel(
+    case: &KernelCase,
+    vlen: u32,
+    oracle: Option<&GoldenOracle>,
+) -> Result<VerifyOutcome> {
+    let cfg = RvvConfig::new(vlen);
+    let neon_out = NeonInterp::new(&case.prog, &case.inputs)?
+        .run()
+        .with_context(|| format!("{}: NEON interpretation", case.name))?;
+
+    let mut vs_neon = Vec::new();
+    let mut passed = true;
+    for mode in [Mode::RvvCustom, Mode::Baseline] {
+        let (rp, _) = Translator::new(mode, cfg).translate(&case.prog)?;
+        let (out, _) = Simulator::new(&rp, cfg, &case.inputs)?.run()?;
+        for name in output_names(case) {
+            let d = diff_buffers(&out[&name], &neon_out[&name])
+                .with_context(|| format!("{} {mode:?} output {name}", case.name))?;
+            if d > case.sim_tol {
+                passed = false;
+            }
+            vs_neon.push((mode, name, d));
+        }
+    }
+
+    let mut vs_golden = Vec::new();
+    if let Some(oracle) = oracle {
+        let golden = oracle
+            .run(case.name, &ordered_inputs(case))
+            .with_context(|| format!("{}: golden oracle", case.name))?;
+        for (name, gbuf) in output_names(case).into_iter().zip(golden) {
+            let nbuf = &neon_out[&name];
+            let d = if nbuf.elem == Elem::F32 {
+                max_abs_diff(&nbuf.as_f32s(), &gbuf.as_f32s())
+            } else if nbuf.data == gbuf.data {
+                0.0
+            } else {
+                passed = false;
+                f32::INFINITY
+            };
+            if d > case.golden_tol {
+                passed = false;
+            }
+            vs_golden.push((name, d));
+        }
+    }
+
+    Ok(VerifyOutcome { kernel: case.name, vs_neon, vs_golden, passed })
+}

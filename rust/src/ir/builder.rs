@@ -1,0 +1,118 @@
+//! Fluent builder for IR programs — the "C file" authoring surface the
+//! kernel suite uses.
+
+use super::program::{AddrExpr, Arg, BufDecl, BufKind, NeonCall, Program, Stmt};
+use crate::neon::elem::Elem;
+use crate::neon::ops::{Family, NeonOp};
+
+pub struct ProgramBuilder {
+    name: String,
+    bufs: Vec<BufDecl>,
+    frames: Vec<Vec<Stmt>>,
+    next_vreg: u32,
+    next_sreg: u32,
+}
+
+impl ProgramBuilder {
+    pub fn new(name: &str) -> ProgramBuilder {
+        ProgramBuilder {
+            name: name.to_string(),
+            bufs: Vec::new(),
+            frames: vec![Vec::new()],
+            next_vreg: 0,
+            next_sreg: 0,
+        }
+    }
+
+    // -- buffers -------------------------------------------------------------
+
+    pub fn input(&mut self, name: &str, elem: Elem, len: usize) -> u32 {
+        self.add_buf(name, elem, len, BufKind::Input)
+    }
+
+    pub fn output(&mut self, name: &str, elem: Elem, len: usize) -> u32 {
+        self.add_buf(name, elem, len, BufKind::Output)
+    }
+
+    pub fn scratch(&mut self, name: &str, elem: Elem, len: usize) -> u32 {
+        self.add_buf(name, elem, len, BufKind::Scratch)
+    }
+
+    fn add_buf(&mut self, name: &str, elem: Elem, len: usize, kind: BufKind) -> u32 {
+        self.bufs.push(BufDecl { name: name.to_string(), elem, len, kind });
+        (self.bufs.len() - 1) as u32
+    }
+
+    // -- registers -----------------------------------------------------------
+
+    pub fn fresh_vreg(&mut self) -> u32 {
+        let r = self.next_vreg;
+        self.next_vreg += 1;
+        r
+    }
+
+    pub fn fresh_sreg(&mut self) -> u32 {
+        let r = self.next_sreg;
+        self.next_sreg += 1;
+        r
+    }
+
+    // -- statements ----------------------------------------------------------
+
+    fn push(&mut self, s: Stmt) {
+        self.frames.last_mut().unwrap().push(s);
+    }
+
+    /// Emit a vector-producing intrinsic, returning the destination vreg.
+    pub fn vop(&mut self, family: Family, elem: Elem, q: bool, args: Vec<Arg>) -> u32 {
+        let dst = self.fresh_vreg();
+        self.vop_into(dst, family, elem, q, args);
+        dst
+    }
+
+    /// Emit a vector-producing intrinsic into an existing vreg (loop-carried
+    /// accumulators).
+    pub fn vop_into(&mut self, dst: u32, family: Family, elem: Elem, q: bool, args: Vec<Arg>) {
+        let op = NeonOp::new(family, elem, q);
+        debug_assert!(op.is_valid(), "invalid op {}", op.name());
+        debug_assert!(op.sig().ret.is_some(), "{} returns void", op.name());
+        self.next_vreg = self.next_vreg.max(dst + 1);
+        self.push(Stmt::VOp { dst, call: NeonCall { op, args } });
+    }
+
+    /// Emit a void intrinsic (store).
+    pub fn vstore(&mut self, family: Family, elem: Elem, q: bool, args: Vec<Arg>) {
+        let op = NeonOp::new(family, elem, q);
+        debug_assert!(op.is_valid(), "invalid op {}", op.name());
+        debug_assert!(op.sig().ret.is_none(), "{} returns a value", op.name());
+        self.push(Stmt::VStore { call: NeonCall { op, args } });
+    }
+
+    /// Set a scalar register to an affine expression.
+    pub fn sset(&mut self, dst: u32, expr: AddrExpr) {
+        self.next_sreg = self.next_sreg.max(dst + 1);
+        self.push(Stmt::SSet { dst, expr });
+    }
+
+    /// Structured counted loop; the closure receives the induction
+    /// variable's scalar register.
+    pub fn loop_(&mut self, start: i64, end: i64, step: i64, f: impl FnOnce(&mut Self, u32)) {
+        assert!(step > 0 && end >= start, "bad loop bounds {start}..{end} step {step}");
+        let ivar = self.fresh_sreg();
+        self.frames.push(Vec::new());
+        f(self, ivar);
+        let body = self.frames.pop().unwrap();
+        self.push(Stmt::Loop { ivar, start, end, step, body });
+    }
+
+    pub fn finish(mut self) -> Program {
+        assert_eq!(self.frames.len(), 1, "unclosed loop frame");
+        Program {
+            name: self.name,
+            bufs: self.bufs,
+            body: self.frames.pop().unwrap(),
+            n_vregs: self.next_vreg as usize,
+            n_sregs: self.next_sreg as usize,
+        }
+    }
+}

@@ -1,0 +1,58 @@
+//! Portable intrinsic-program IR.
+//!
+//! Kernels (the XNNPACK-like suite) are written once as programs over NEON
+//! intrinsics with structured loops and affine addressing — the IR analogue
+//! of a C source file that includes `<arm_neon.h>`. The same program is
+//! (a) interpreted directly under NEON semantics (golden reference), and
+//! (b) translated by the SIMDe engine into an RVV program and executed on
+//! the Spike-like simulator.
+
+mod builder;
+mod program;
+
+pub use builder::ProgramBuilder;
+pub use program::{
+    AddrExpr, Arg, BufDecl, BufKind, NeonCall, Program, Stmt,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::neon::elem::Elem;
+    use crate::neon::ops::Family;
+
+    #[test]
+    fn build_vector_add_listing9() {
+        // the paper's Listing 9: 4-wide s32 vector add
+        let mut b = ProgramBuilder::new("vadd_listing9");
+        let a_buf = b.input("A", Elem::I32, 4);
+        let b_buf = b.input("B", Elem::I32, 4);
+        let o_buf = b.output("O", Elem::I32, 4);
+        let va = b.vop(Family::Ld1, Elem::I32, true, vec![Arg::mem(a_buf, AddrExpr::k(0))]);
+        let vb = b.vop(Family::Ld1, Elem::I32, true, vec![Arg::mem(b_buf, AddrExpr::k(0))]);
+        let vc = b.vop(Family::Add, Elem::I32, true, vec![Arg::V(va), Arg::V(vb)]);
+        b.vstore(Family::St1, Elem::I32, true, vec![Arg::mem(o_buf, AddrExpr::k(0)), Arg::V(vc)]);
+        let p = b.finish();
+        assert_eq!(p.bufs.len(), 3);
+        assert_eq!(p.body.len(), 4);
+        assert!(p.n_vregs >= 3);
+    }
+
+    #[test]
+    fn loops_nest() {
+        let mut b = ProgramBuilder::new("nested");
+        let buf = b.output("O", Elem::F32, 64);
+        let zero = b.vop(Family::DupN, Elem::F32, true, vec![Arg::Imm(0)]);
+        b.loop_(0, 4, 1, |b, i| {
+            b.loop_(0, 4, 1, |b, j| {
+                let idx = AddrExpr::SReg(i).mul(16).add(AddrExpr::SReg(j).mul(4));
+                b.vstore(Family::St1, Elem::F32, true, vec![Arg::mem(buf, idx), Arg::V(zero)]);
+            });
+        });
+        let p = b.finish();
+        assert_eq!(p.body.len(), 2); // DupN + outer loop
+        let counts = p.count_static();
+        assert_eq!(counts.loops, 2);
+        assert_eq!(counts.intrinsic_calls, 2);
+    }
+}

@@ -1,0 +1,202 @@
+//! IR data structures: buffers, statements, affine address expressions.
+
+use crate::neon::elem::Elem;
+use crate::neon::ops::NeonOp;
+
+/// Buffer role in a program.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BufKind {
+    Input,
+    Output,
+    /// Read-write scratch initialised to zero (e.g. accumulator spill).
+    Scratch,
+}
+
+/// A named memory buffer of `len` elements of type `elem`.
+#[derive(Debug, Clone)]
+pub struct BufDecl {
+    pub name: String,
+    pub elem: Elem,
+    pub len: usize,
+    pub kind: BufKind,
+}
+
+/// Affine integer expression over loop variables / scalar registers.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AddrExpr {
+    Const(i64),
+    SReg(u32),
+    Add(Box<AddrExpr>, Box<AddrExpr>),
+    Mul(Box<AddrExpr>, i64),
+}
+
+impl AddrExpr {
+    pub fn k(v: i64) -> AddrExpr {
+        AddrExpr::Const(v)
+    }
+
+    pub fn s(r: u32) -> AddrExpr {
+        AddrExpr::SReg(r)
+    }
+
+    pub fn add(self, rhs: AddrExpr) -> AddrExpr {
+        AddrExpr::Add(Box::new(self), Box::new(rhs))
+    }
+
+    pub fn addk(self, k: i64) -> AddrExpr {
+        self.add(AddrExpr::Const(k))
+    }
+
+    pub fn mul(self, k: i64) -> AddrExpr {
+        AddrExpr::Mul(Box::new(self), k)
+    }
+
+    /// Evaluate given scalar register values.
+    pub fn eval(&self, sregs: &[i64]) -> i64 {
+        match self {
+            AddrExpr::Const(v) => *v,
+            AddrExpr::SReg(r) => sregs[*r as usize],
+            AddrExpr::Add(a, b) => a.eval(sregs) + b.eval(sregs),
+            AddrExpr::Mul(a, k) => a.eval(sregs) * k,
+        }
+    }
+
+    /// Number of scalar ALU ops this expression costs when computed naively
+    /// (used by the simulator's address-arithmetic accounting; compilers
+    /// fold most of this into addressing modes, counted the same for both
+    /// translation modes).
+    pub fn op_count(&self) -> u64 {
+        match self {
+            AddrExpr::Const(_) | AddrExpr::SReg(_) => 0,
+            AddrExpr::Add(a, b) => 1 + a.op_count() + b.op_count(),
+            AddrExpr::Mul(a, _) => 1 + a.op_count(),
+        }
+    }
+}
+
+/// One NEON intrinsic invocation.
+#[derive(Debug, Clone)]
+pub struct NeonCall {
+    pub op: NeonOp,
+    pub args: Vec<Arg>,
+}
+
+/// Argument of an intrinsic call in the IR.
+#[derive(Debug, Clone)]
+pub enum Arg {
+    /// Vector register.
+    V(u32),
+    /// Scalar register (for `vdup_n` of loop-derived ints).
+    S(u32),
+    /// Immediate (lane index, shift amount).
+    Imm(i64),
+    /// Float immediate (vdup_n of float constants).
+    ImmF(f64),
+    /// Memory operand: `&buf[index]` in *elements* of the buffer type.
+    Mem { buf: u32, index: AddrExpr },
+}
+
+impl Arg {
+    pub fn mem(buf: u32, index: AddrExpr) -> Arg {
+        Arg::Mem { buf, index }
+    }
+}
+
+/// Program statement.
+#[derive(Debug, Clone)]
+pub enum Stmt {
+    /// `v<dst> = intrinsic(args)`.
+    VOp { dst: u32, call: NeonCall },
+    /// Void intrinsic (stores).
+    VStore { call: NeonCall },
+    /// `s<dst> = expr` (scalar/address computation).
+    SSet { dst: u32, expr: AddrExpr },
+    /// `for ivar in (start..end).step_by(step) { body }` — `ivar` is a
+    /// scalar register holding the induction variable.
+    Loop {
+        ivar: u32,
+        start: i64,
+        end: i64,
+        step: i64,
+        body: Vec<Stmt>,
+    },
+}
+
+/// A complete kernel program.
+#[derive(Debug, Clone)]
+pub struct Program {
+    pub name: String,
+    pub bufs: Vec<BufDecl>,
+    pub body: Vec<Stmt>,
+    pub n_vregs: usize,
+    pub n_sregs: usize,
+}
+
+/// Static structure counts (for reports and tests).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct StaticCounts {
+    pub intrinsic_calls: usize,
+    pub loops: usize,
+    pub sset: usize,
+}
+
+impl Program {
+    pub fn buf(&self, name: &str) -> Option<(u32, &BufDecl)> {
+        self.bufs
+            .iter()
+            .enumerate()
+            .find(|(_, b)| b.name == name)
+            .map(|(i, b)| (i as u32, b))
+    }
+
+    pub fn count_static(&self) -> StaticCounts {
+        fn walk(stmts: &[Stmt], c: &mut StaticCounts) {
+            for s in stmts {
+                match s {
+                    Stmt::VOp { .. } | Stmt::VStore { .. } => c.intrinsic_calls += 1,
+                    Stmt::SSet { .. } => c.sset += 1,
+                    Stmt::Loop { body, .. } => {
+                        c.loops += 1;
+                        walk(body, c);
+                    }
+                }
+            }
+        }
+        let mut c = StaticCounts::default();
+        walk(&self.body, &mut c);
+        c
+    }
+
+    /// Every distinct NEON op used by the program (the "migration surface"
+    /// a SIMDe port must cover).
+    pub fn used_ops(&self) -> Vec<NeonOp> {
+        fn walk(stmts: &[Stmt], out: &mut Vec<NeonOp>) {
+            for s in stmts {
+                match s {
+                    Stmt::VOp { call, .. } | Stmt::VStore { call } => out.push(call.op),
+                    Stmt::Loop { body, .. } => walk(body, out),
+                    Stmt::SSet { .. } => {}
+                }
+            }
+        }
+        let mut out = Vec::new();
+        walk(&self.body, &mut out);
+        out.sort_by_key(|o| o.name());
+        out.dedup();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn addr_expr_eval() {
+        // i*16 + j*4 + 3
+        let e = AddrExpr::s(0).mul(16).add(AddrExpr::s(1).mul(4)).addk(3);
+        assert_eq!(e.eval(&[2, 1]), 39);
+        assert_eq!(e.eval(&[0, 0]), 3);
+        assert!(e.op_count() >= 3);
+    }
+}

@@ -1,0 +1,120 @@
+//! ARGMAXPOOL: 2x2 max pooling that also returns the index of the max
+//! (XNNPACK argmaxpool pattern: `vcgtq` compare + `vbslq` select for both
+//! the running value and the running index).
+
+use crate::ir::{AddrExpr, Arg, Program, ProgramBuilder};
+use crate::neon::elem::Elem;
+use crate::neon::interp::{Buffer, Inputs};
+use crate::neon::ops::Family;
+use crate::testutil::Rng;
+use super::KernelCase;
+
+pub fn program(h: usize, c: usize) -> Program {
+    assert_eq!(h % 2, 0);
+    assert_eq!(c % 4, 0);
+    let oh = h / 2;
+    let mut b = ProgramBuilder::new("argmaxpool");
+    let i_buf = b.input("I", Elem::F32, h * h * c);
+    let ov_buf = b.output("OV", Elem::F32, oh * oh * c);
+    let oi_buf = b.output("OI", Elem::U32, oh * oh * c);
+    // hoisted index constants
+    let zero_idx = b.vop(Family::DupN, Elem::U32, true, vec![Arg::Imm(0)]);
+    let jvs: Vec<u32> = (1..4)
+        .map(|j| b.vop(Family::DupN, Elem::U32, true, vec![Arg::Imm(j)]))
+        .collect();
+
+    b.loop_(0, oh as i64, 1, |b, oy| {
+        b.loop_(0, oh as i64, 1, |b, ox| {
+            b.loop_(0, c as i64, 4, |b, ci| {
+                let at = |dy: i64, dx: i64| {
+                    AddrExpr::s(oy)
+                        .mul(2)
+                        .addk(dy)
+                        .mul((h * c) as i64)
+                        .add(AddrExpr::s(ox).mul(2).addk(dx).mul(c as i64))
+                        .add(AddrExpr::s(ci))
+                };
+                let best = b.vop(Family::Ld1, Elem::F32, true, vec![Arg::mem(i_buf, at(0, 0))]);
+                let idx = b.fresh_vreg();
+                b.vop_into(idx, Family::Orr, Elem::U32, true, vec![Arg::V(zero_idx), Arg::V(zero_idx)]);
+                for (j, (dy, dx)) in [(0i64, 1i64), (1, 0), (1, 1)].iter().enumerate() {
+                    let v = b.vop(Family::Ld1, Elem::F32, true, vec![Arg::mem(i_buf, at(*dy, *dx))]);
+                    // c = v > best (u32 all-ones mask)
+                    let cmp = b.vop(Family::Cgt, Elem::F32, true, vec![Arg::V(v), Arg::V(best)]);
+                    b.vop_into(best, Family::Bsl, Elem::F32, true, vec![Arg::V(cmp), Arg::V(v), Arg::V(best)]);
+                    b.vop_into(idx, Family::Bsl, Elem::U32, true, vec![Arg::V(cmp), Arg::V(jvs[j]), Arg::V(idx)]);
+                }
+                let oidx = AddrExpr::s(oy)
+                    .mul(oh as i64)
+                    .add(AddrExpr::s(ox))
+                    .mul(c as i64)
+                    .add(AddrExpr::s(ci));
+                b.vstore(Family::St1, Elem::F32, true, vec![Arg::mem(ov_buf, oidx.clone()), Arg::V(best)]);
+                b.vstore(Family::St1, Elem::U32, true, vec![Arg::mem(oi_buf, oidx), Arg::V(idx)]);
+            });
+        });
+    });
+    b.finish()
+}
+
+pub fn inputs(h: usize, c: usize, seed: u64) -> Inputs {
+    let mut rng = Rng::new(seed);
+    let mut i = Inputs::new();
+    i.insert("I".into(), Buffer::from_f32s(&rng.f32s(h * h * c, -4.0, 4.0)));
+    i
+}
+
+pub fn build(h: usize, c: usize) -> KernelCase {
+    KernelCase {
+        name: "argmaxpool",
+        description: "2x2 argmax pooling (vcgtq + vbslq value/index tracking)",
+        prog: program(h, c),
+        inputs: inputs(h, c, 0xa59a),
+        sim_tol: 0.0,
+        golden_tol: 0.0,
+    }
+}
+
+/// Figure 2 default: 32x32x16.
+pub fn case() -> KernelCase {
+    build(32, 16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::neon::interp::NeonInterp;
+
+    #[test]
+    fn matches_scalar_reference() {
+        let (h, c) = (8, 8);
+        let case = build(h, c);
+        let oh = h / 2;
+        let i = case.inputs["I"].as_f32s();
+        let out = NeonInterp::new(&case.prog, &case.inputs).unwrap().run().unwrap();
+        let vals = out["OV"].as_f32s();
+        let idxs = out["OI"].as_u32s();
+        for oy in 0..oh {
+            for ox in 0..oh {
+                for ch in 0..c {
+                    let v = [
+                        i[(2 * oy * h + 2 * ox) * c + ch],
+                        i[(2 * oy * h + 2 * ox + 1) * c + ch],
+                        i[((2 * oy + 1) * h + 2 * ox) * c + ch],
+                        i[((2 * oy + 1) * h + 2 * ox + 1) * c + ch],
+                    ];
+                    let (mut bi, mut bv) = (0u32, v[0]);
+                    for (j, &x) in v.iter().enumerate().skip(1) {
+                        if x > bv {
+                            bv = x;
+                            bi = j as u32;
+                        }
+                    }
+                    let o = (oy * oh + ox) * c + ch;
+                    assert_eq!(vals[o], bv, "value at {o}");
+                    assert_eq!(idxs[o], bi, "index at {o}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,124 @@
+//! CONVHWC: 3x3 direct convolution over HWC-layout input, Cout blocked by
+//! NR=4 q-register accumulators (XNNPACK conv_hwc pattern: broadcast input
+//! pixel x weight row `vfmaq`).
+
+use crate::ir::{AddrExpr, Arg, Program, ProgramBuilder};
+use crate::neon::elem::Elem;
+use crate::neon::interp::{Buffer, Inputs};
+use crate::neon::ops::Family;
+use crate::testutil::Rng;
+use super::KernelCase;
+
+const KH: usize = 3;
+const KW: usize = 3;
+
+/// `h` = input height/width (square), `cin`/`cout` channels; valid padding.
+pub fn program(h: usize, cin: usize, cout: usize) -> Program {
+    assert_eq!(cout % 4, 0);
+    let oh = h - KH + 1;
+    let mut b = ProgramBuilder::new("convhwc");
+    let i_buf = b.input("I", Elem::F32, h * h * cin);
+    let w_buf = b.input("W", Elem::F32, KH * KW * cin * cout);
+    let bias_buf = b.input("BIAS", Elem::F32, cout);
+    let o_buf = b.output("O", Elem::F32, oh * oh * cout);
+
+    b.loop_(0, oh as i64, 1, |b, oy| {
+        b.loop_(0, oh as i64, 1, |b, ox| {
+            b.loop_(0, cout as i64, 4, |b, co| {
+                let acc = b.vop(Family::Ld1, Elem::F32, true, vec![Arg::mem(bias_buf, AddrExpr::s(co))]);
+                b.loop_(0, KH as i64, 1, |b, ky| {
+                    b.loop_(0, KW as i64, 1, |b, kx| {
+                        b.loop_(0, cin as i64, 1, |b, ci| {
+                            // x = I[(oy+ky)*H*Cin + (ox+kx)*Cin + ci] broadcast
+                            let idx = AddrExpr::s(oy)
+                                .add(AddrExpr::s(ky))
+                                .mul((h * cin) as i64)
+                                .add(AddrExpr::s(ox).add(AddrExpr::s(kx)).mul(cin as i64))
+                                .add(AddrExpr::s(ci));
+                            let x = b.vop(Family::Ld1Dup, Elem::F32, true, vec![Arg::mem(i_buf, idx)]);
+                            // w = W[((ky*KW+kx)*Cin + ci)*Cout + co .. +4]
+                            let widx = AddrExpr::s(ky)
+                                .mul(KW as i64)
+                                .add(AddrExpr::s(kx))
+                                .mul(cin as i64)
+                                .add(AddrExpr::s(ci))
+                                .mul(cout as i64)
+                                .add(AddrExpr::s(co));
+                            let w = b.vop(Family::Ld1, Elem::F32, true, vec![Arg::mem(w_buf, widx)]);
+                            b.vop_into(acc, Family::Fma, Elem::F32, true, vec![Arg::V(acc), Arg::V(x), Arg::V(w)]);
+                        });
+                    });
+                });
+                let oidx = AddrExpr::s(oy)
+                    .mul(oh as i64)
+                    .add(AddrExpr::s(ox))
+                    .mul(cout as i64)
+                    .add(AddrExpr::s(co));
+                b.vstore(Family::St1, Elem::F32, true, vec![Arg::mem(o_buf, oidx), Arg::V(acc)]);
+            });
+        });
+    });
+    b.finish()
+}
+
+pub fn inputs(h: usize, cin: usize, cout: usize, seed: u64) -> Inputs {
+    let mut rng = Rng::new(seed);
+    let mut i = Inputs::new();
+    i.insert("I".into(), Buffer::from_f32s(&rng.f32s(h * h * cin, -1.0, 1.0)));
+    i.insert("W".into(), Buffer::from_f32s(&rng.f32s(KH * KW * cin * cout, -0.5, 0.5)));
+    i.insert("BIAS".into(), Buffer::from_f32s(&rng.f32s(cout, -0.1, 0.1)));
+    i
+}
+
+pub fn build(h: usize, cin: usize, cout: usize) -> KernelCase {
+    KernelCase {
+        name: "convhwc",
+        description: "3x3 HWC direct convolution, Cout-blocked vfmaq",
+        prog: program(h, cin, cout),
+        inputs: inputs(h, cin, cout, 0xc0ffee),
+        sim_tol: 1e-4,
+        golden_tol: 1e-3,
+    }
+}
+
+/// Figure 2 default: 12x12x8 -> 10x10x16.
+pub fn case() -> KernelCase {
+    build(12, 8, 16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::neon::interp::NeonInterp;
+
+    #[test]
+    fn matches_scalar_reference() {
+        let (h, cin, cout) = (6, 4, 8);
+        let case = build(h, cin, cout);
+        let oh = h - 2;
+        let i = case.inputs["I"].as_f32s();
+        let w = case.inputs["W"].as_f32s();
+        let bias = case.inputs["BIAS"].as_f32s();
+        let out = NeonInterp::new(&case.prog, &case.inputs).unwrap().run().unwrap();
+
+        let mut want = vec![0f32; oh * oh * cout];
+        for oy in 0..oh {
+            for ox in 0..oh {
+                for co in 0..cout {
+                    let mut acc = bias[co];
+                    for ky in 0..3 {
+                        for kx in 0..3 {
+                            for ci in 0..cin {
+                                let x = i[((oy + ky) * h + ox + kx) * cin + ci];
+                                let wv = w[((ky * 3 + kx) * cin + ci) * cout + co];
+                                acc = x.mul_add(wv, acc);
+                            }
+                        }
+                    }
+                    want[(oy * oh + ox) * cout + co] = acc;
+                }
+            }
+        }
+        crate::testutil::assert_close(&out["O"].as_f32s(), &want, 1e-4, "convhwc");
+    }
+}

@@ -1,0 +1,110 @@
+//! DWCONV: 3x3 depthwise convolution, channel-blocked (XNNPACK dwconv
+//! pattern: per-channel `vfmaq` of input x weight, no channel reduction).
+
+use crate::ir::{AddrExpr, Arg, Program, ProgramBuilder};
+use crate::neon::elem::Elem;
+use crate::neon::interp::{Buffer, Inputs};
+use crate::neon::ops::Family;
+use crate::testutil::Rng;
+use super::KernelCase;
+
+pub fn program(h: usize, c: usize) -> Program {
+    assert_eq!(c % 4, 0);
+    let oh = h - 2;
+    let mut b = ProgramBuilder::new("dwconv");
+    let i_buf = b.input("I", Elem::F32, h * h * c);
+    let w_buf = b.input("W", Elem::F32, 9 * c);
+    let bias_buf = b.input("BIAS", Elem::F32, c);
+    let o_buf = b.output("O", Elem::F32, oh * oh * c);
+
+    b.loop_(0, oh as i64, 1, |b, oy| {
+        b.loop_(0, oh as i64, 1, |b, ox| {
+            b.loop_(0, c as i64, 4, |b, ci| {
+                let acc = b.vop(Family::Ld1, Elem::F32, true, vec![Arg::mem(bias_buf, AddrExpr::s(ci))]);
+                b.loop_(0, 3, 1, |b, ky| {
+                    b.loop_(0, 3, 1, |b, kx| {
+                        let iidx = AddrExpr::s(oy)
+                            .add(AddrExpr::s(ky))
+                            .mul((h * c) as i64)
+                            .add(AddrExpr::s(ox).add(AddrExpr::s(kx)).mul(c as i64))
+                            .add(AddrExpr::s(ci));
+                        let x = b.vop(Family::Ld1, Elem::F32, true, vec![Arg::mem(i_buf, iidx)]);
+                        let widx = AddrExpr::s(ky)
+                            .mul(3)
+                            .add(AddrExpr::s(kx))
+                            .mul(c as i64)
+                            .add(AddrExpr::s(ci));
+                        let w = b.vop(Family::Ld1, Elem::F32, true, vec![Arg::mem(w_buf, widx)]);
+                        b.vop_into(acc, Family::Fma, Elem::F32, true, vec![Arg::V(acc), Arg::V(x), Arg::V(w)]);
+                    });
+                });
+                let oidx = AddrExpr::s(oy)
+                    .mul(oh as i64)
+                    .add(AddrExpr::s(ox))
+                    .mul(c as i64)
+                    .add(AddrExpr::s(ci));
+                b.vstore(Family::St1, Elem::F32, true, vec![Arg::mem(o_buf, oidx), Arg::V(acc)]);
+            });
+        });
+    });
+    b.finish()
+}
+
+pub fn inputs(h: usize, c: usize, seed: u64) -> Inputs {
+    let mut rng = Rng::new(seed);
+    let mut i = Inputs::new();
+    i.insert("I".into(), Buffer::from_f32s(&rng.f32s(h * h * c, -1.0, 1.0)));
+    i.insert("W".into(), Buffer::from_f32s(&rng.f32s(9 * c, -0.5, 0.5)));
+    i.insert("BIAS".into(), Buffer::from_f32s(&rng.f32s(c, -0.1, 0.1)));
+    i
+}
+
+pub fn build(h: usize, c: usize) -> KernelCase {
+    KernelCase {
+        name: "dwconv",
+        description: "3x3 depthwise convolution, channel-blocked vfmaq",
+        prog: program(h, c),
+        inputs: inputs(h, c, 0xdeadbeef),
+        sim_tol: 1e-4,
+        golden_tol: 1e-3,
+    }
+}
+
+/// Figure 2 default: 16x16x16.
+pub fn case() -> KernelCase {
+    build(16, 16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::neon::interp::NeonInterp;
+
+    #[test]
+    fn matches_scalar_reference() {
+        let (h, c) = (6, 8);
+        let case = build(h, c);
+        let oh = h - 2;
+        let i = case.inputs["I"].as_f32s();
+        let w = case.inputs["W"].as_f32s();
+        let bias = case.inputs["BIAS"].as_f32s();
+        let out = NeonInterp::new(&case.prog, &case.inputs).unwrap().run().unwrap();
+
+        let mut want = vec![0f32; oh * oh * c];
+        for oy in 0..oh {
+            for ox in 0..oh {
+                for ch in 0..c {
+                    let mut acc = bias[ch];
+                    for ky in 0..3 {
+                        for kx in 0..3 {
+                            acc = i[((oy + ky) * h + ox + kx) * c + ch]
+                                .mul_add(w[(ky * 3 + kx) * c + ch], acc);
+                        }
+                    }
+                    want[(oy * oh + ox) * c + ch] = acc;
+                }
+            }
+        }
+        crate::testutil::assert_close(&out["O"].as_f32s(), &want, 1e-4, "dwconv");
+    }
+}

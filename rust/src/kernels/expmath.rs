@@ -1,0 +1,145 @@
+//! Shared NEON-intrinsic building blocks for the transcendental kernels:
+//! XNNPACK-style `exp(-z)` (round-to-nearest `vcvtnq` + extended-precision
+//! ln2 reduction + p5 Horner polynomial + exponent-bit reconstruction) and
+//! reciprocal via `vrecpeq` + two Newton steps.
+//!
+//! These are the op mixes that make vtanh/vsigmoid hot in the paper's
+//! Figure 2: `vcvtnq`/`vrndn` scalarise in baseline SIMDe while the
+//! customized conversions keep them single RVV instructions.
+
+use crate::ir::{Arg, ProgramBuilder};
+use crate::neon::elem::Elem;
+use crate::neon::ops::Family;
+
+pub const LOG2E: f64 = std::f64::consts::LOG2_E;
+pub const LN2_HI: f64 = 0.693145751953125; // high bits of ln2, exact in f32
+pub const LN2_LO: f64 = 1.428606765330187045e-06;
+const C2: f64 = 0.5;
+const C3: f64 = 1.0 / 6.0;
+const C4: f64 = 1.0 / 24.0;
+const C5: f64 = 1.0 / 120.0;
+
+/// Loop-invariant constant registers for the exp evaluation — hoisted
+/// outside the element loop like clang does with `vdupq_n_f32` of
+/// constants.
+pub struct ExpConsts {
+    mlog2e: u32,
+    ln2hi: u32,
+    ln2lo: u32,
+    one: u32,
+    c2: u32,
+    c3: u32,
+    c4: u32,
+    c5: u32,
+}
+
+impl ExpConsts {
+    pub fn hoist(b: &mut ProgramBuilder) -> ExpConsts {
+        let f = Elem::F32;
+        let mut dup = |v: f64| b.vop(Family::DupN, f, true, vec![Arg::ImmF(v)]);
+        ExpConsts {
+            mlog2e: dup(-LOG2E),
+            ln2hi: dup(LN2_HI),
+            ln2lo: dup(LN2_LO),
+            one: dup(1.0),
+            c2: dup(C2),
+            c3: dup(C3),
+            c4: dup(C4),
+            c5: dup(C5),
+        }
+    }
+
+    pub fn one(&self) -> u32 {
+        self.one
+    }
+}
+
+/// Emit `exp(-z)` for a register `z` holding values in [0, ~80).
+/// Returns the register with the result.
+pub fn emit_exp_neg(b: &mut ProgramBuilder, k: &ExpConsts, z: u32) -> u32 {
+    let f = Elem::F32;
+    // n = round_ne(-z * log2e)
+    let t0 = b.vop(Family::Mul, f, true, vec![Arg::V(z), Arg::V(k.mlog2e)]);
+    let n_i = b.vop(Family::CvtnFI, f, true, vec![Arg::V(t0)]);
+    let n_f = b.vop(Family::CvtIF, Elem::I32, true, vec![Arg::V(n_i)]);
+    // r = -z - n*ln2   (two-term ln2 for extra precision)
+    let negz = b.vop(Family::Neg, f, true, vec![Arg::V(z)]);
+    let r1 = b.vop(Family::Fms, f, true, vec![Arg::V(negz), Arg::V(n_f), Arg::V(k.ln2hi)]);
+    let r = b.vop(Family::Fms, f, true, vec![Arg::V(r1), Arg::V(n_f), Arg::V(k.ln2lo)]);
+    // p = e^r, Horner p5 (SSA: each fma writes a fresh register)
+    let mut p = k.c5;
+    for coeff in [k.c4, k.c3, k.c2, k.one, k.one] {
+        p = b.vop(Family::Fma, f, true, vec![Arg::V(coeff), Arg::V(p), Arg::V(r)]);
+    }
+    // scale by 2^n: add n << 23 to the float's bits
+    let bits = b.vop(Family::ShlN, Elem::I32, true, vec![Arg::V(n_i), Arg::Imm(23)]);
+    let p_i = b.vop(Family::Reinterpret, Elem::I32, true, vec![Arg::V(p)]);
+    let e_i = b.vop(Family::Add, Elem::I32, true, vec![Arg::V(p_i), Arg::V(bits)]);
+    b.vop(Family::Reinterpret, Elem::F32, true, vec![Arg::V(e_i)])
+}
+
+/// Emit `1/d` via `vrecpeq_f32` + two `vrecpsq_f32` Newton steps.
+pub fn emit_recip(b: &mut ProgramBuilder, d: u32) -> u32 {
+    let f = Elem::F32;
+    let mut rcp = b.vop(Family::Recpe, f, true, vec![Arg::V(d)]);
+    for _ in 0..2 {
+        let step = b.vop(Family::Recps, f, true, vec![Arg::V(d), Arg::V(rcp)]);
+        rcp = b.vop(Family::Mul, f, true, vec![Arg::V(rcp), Arg::V(step)]);
+    }
+    rcp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::AddrExpr;
+    use crate::neon::interp::{Buffer, Inputs, NeonInterp};
+    use crate::testutil::{max_rel_diff, Rng};
+
+    #[test]
+    fn exp_neg_accuracy() {
+        let n = 64;
+        let mut b = ProgramBuilder::new("exp_test");
+        let x = b.input("X", Elem::F32, n);
+        let y = b.output("Y", Elem::F32, n);
+        let k = ExpConsts::hoist(&mut b);
+        b.loop_(0, n as i64, 4, |b, i| {
+            let z = b.vop(Family::Ld1, Elem::F32, true, vec![Arg::mem(x, AddrExpr::s(i))]);
+            let e = emit_exp_neg(b, &k, z);
+            b.vstore(Family::St1, Elem::F32, true, vec![Arg::mem(y, AddrExpr::s(i)), Arg::V(e)]);
+        });
+        let p = b.finish();
+
+        let mut rng = Rng::new(3);
+        let xs = rng.f32s(n, 0.0, 16.0);
+        let mut inputs = Inputs::new();
+        inputs.insert("X".into(), Buffer::from_f32s(&xs));
+        let out = NeonInterp::new(&p, &inputs).unwrap().run().unwrap();
+        let want: Vec<f32> = xs.iter().map(|v| (-v).exp()).collect();
+        let rel = max_rel_diff(&out["Y"].as_f32s(), &want);
+        assert!(rel < 1e-5, "exp rel err {rel}");
+    }
+
+    #[test]
+    fn recip_accuracy() {
+        let n = 64;
+        let mut b = ProgramBuilder::new("recip_test");
+        let x = b.input("X", Elem::F32, n);
+        let y = b.output("Y", Elem::F32, n);
+        b.loop_(0, n as i64, 4, |b, i| {
+            let d = b.vop(Family::Ld1, Elem::F32, true, vec![Arg::mem(x, AddrExpr::s(i))]);
+            let r = emit_recip(b, d);
+            b.vstore(Family::St1, Elem::F32, true, vec![Arg::mem(y, AddrExpr::s(i)), Arg::V(r)]);
+        });
+        let p = b.finish();
+
+        let mut rng = Rng::new(5);
+        let xs = rng.f32s(n, 0.5, 10.0);
+        let mut inputs = Inputs::new();
+        inputs.insert("X".into(), Buffer::from_f32s(&xs));
+        let out = NeonInterp::new(&p, &inputs).unwrap().run().unwrap();
+        let want: Vec<f32> = xs.iter().map(|v| 1.0 / v).collect();
+        let rel = max_rel_diff(&out["Y"].as_f32s(), &want);
+        assert!(rel < 1e-6, "recip rel err {rel}");
+    }
+}

@@ -1,0 +1,108 @@
+//! GEMM: f32 matrix multiply `C[M,N] = A[M,K] x B[K,N]`, XNNPACK-style
+//! microkernel — per (m, n-block) a q-register accumulator fed by
+//! broadcast-A x row-of-B `vfmaq_f32` (NR = 4).
+
+use crate::ir::{AddrExpr, Arg, Program, ProgramBuilder};
+use crate::neon::elem::Elem;
+use crate::neon::interp::{Buffer, Inputs};
+use crate::neon::ops::Family;
+use crate::testutil::Rng;
+use super::KernelCase;
+
+pub fn program(m: usize, k: usize, n: usize) -> Program {
+    assert_eq!(n % 4, 0, "N must be a multiple of NR=4");
+    let mut b = ProgramBuilder::new("gemm");
+    let a_buf = b.input("A", Elem::F32, m * k);
+    let b_buf = b.input("B", Elem::F32, k * n);
+    let c_buf = b.output("C", Elem::F32, m * n);
+
+    b.loop_(0, m as i64, 1, |b, mi| {
+        b.loop_(0, n as i64, 4, |b, ni| {
+            let acc = b.vop(Family::DupN, Elem::F32, true, vec![Arg::ImmF(0.0)]);
+            b.loop_(0, k as i64, 1, |b, ki| {
+                // a = broadcast A[m*K + k]
+                let a = b.vop(
+                    Family::Ld1Dup,
+                    Elem::F32,
+                    true,
+                    vec![Arg::mem(a_buf, AddrExpr::s(mi).mul(k as i64).add(AddrExpr::s(ki)))],
+                );
+                // bv = B[k*N + n .. +4]
+                let bv = b.vop(
+                    Family::Ld1,
+                    Elem::F32,
+                    true,
+                    vec![Arg::mem(b_buf, AddrExpr::s(ki).mul(n as i64).add(AddrExpr::s(ni)))],
+                );
+                // acc += a * bv (fused)
+                b.vop_into(acc, Family::Fma, Elem::F32, true, vec![Arg::V(acc), Arg::V(a), Arg::V(bv)]);
+            });
+            b.vstore(
+                Family::St1,
+                Elem::F32,
+                true,
+                vec![
+                    Arg::mem(c_buf, AddrExpr::s(mi).mul(n as i64).add(AddrExpr::s(ni))),
+                    Arg::V(acc),
+                ],
+            );
+        });
+    });
+    b.finish()
+}
+
+pub fn inputs(m: usize, k: usize, n: usize, seed: u64) -> Inputs {
+    let mut rng = Rng::new(seed);
+    let mut i = Inputs::new();
+    i.insert("A".into(), Buffer::from_f32s(&rng.f32s(m * k, -1.0, 1.0)));
+    i.insert("B".into(), Buffer::from_f32s(&rng.f32s(k * n, -1.0, 1.0)));
+    i
+}
+
+pub fn build(m: usize, k: usize, n: usize) -> KernelCase {
+    KernelCase {
+        name: "gemm",
+        description: "f32 GEMM microkernel (vfmaq accumulators, NR=4)",
+        prog: program(m, k, n),
+        inputs: inputs(m, k, n, 0x9e3779b9),
+        sim_tol: 1e-4,
+        golden_tol: 1e-3,
+    }
+}
+
+/// Figure 2 default: 64x64x64.
+pub fn case() -> KernelCase {
+    build(64, 64, 64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::neon::interp::NeonInterp;
+
+    /// Scalar reference.
+    fn gemm_ref(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+        let mut c = vec![0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0f32;
+                for p in 0..k {
+                    acc = a[i * k + p].mul_add(b[p * n + j], acc);
+                }
+                c[i * n + j] = acc;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matches_scalar_reference() {
+        let (m, k, n) = (8, 12, 8);
+        let case = build(m, k, n);
+        let a = case.inputs["A"].as_f32s();
+        let b = case.inputs["B"].as_f32s();
+        let out = NeonInterp::new(&case.prog, &case.inputs).unwrap().run().unwrap();
+        let want = gemm_ref(m, k, n, &a, &b);
+        crate::testutil::assert_close(&out["C"].as_f32s(), &want, 1e-4, "gemm");
+    }
+}

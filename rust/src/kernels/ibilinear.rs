@@ -1,0 +1,133 @@
+//! IBILINEAR: 2x bilinear upsampling over a C-channel image (XNNPACK
+//! ibilinear pattern: per output pixel, `top = tl + a*(tr-tl)`,
+//! `bottom = bl + a*(br-bl)`, `out = top + b*(bottom-top)` — sub + fma
+//! chains over channel q-registers).
+//!
+//! Output grid: out (2(H-1), 2(W-1)) with sample offsets a,b in
+//! {0.25, 0.75} (align_corners=false style interior samples).
+
+use crate::ir::{AddrExpr, Arg, Program, ProgramBuilder};
+use crate::neon::elem::Elem;
+use crate::neon::interp::{Buffer, Inputs};
+use crate::neon::ops::Family;
+use crate::testutil::Rng;
+use super::KernelCase;
+
+pub const WEIGHTS: [f64; 2] = [0.25, 0.75];
+
+/// `h` = square input side, `c` = channels (multiple of 4).
+pub fn program(h: usize, c: usize) -> Program {
+    assert_eq!(c % 4, 0);
+    let oh = 2 * (h - 1);
+    let f = Elem::F32;
+    let mut b = ProgramBuilder::new("ibilinear");
+    let i_buf = b.input("I", Elem::F32, h * h * c);
+    let o_buf = b.output("O", Elem::F32, oh * oh * c);
+    // hoisted weight broadcasts (two distinct sample offsets)
+    let w_lo = b.vop(Family::DupN, f, true, vec![Arg::ImmF(WEIGHTS[0])]);
+    let w_hi = b.vop(Family::DupN, f, true, vec![Arg::ImmF(WEIGHTS[1])]);
+    let wreg = [w_lo, w_hi];
+
+    b.loop_(0, (h - 1) as i64, 1, |b, sy| {
+        b.loop_(0, (h - 1) as i64, 1, |b, sx| {
+            b.loop_(0, c as i64, 4, |b, ci| {
+                let corner = |dy: i64, dx: i64| {
+                    AddrExpr::s(sy)
+                        .addk(dy)
+                        .mul((h * c) as i64)
+                        .add(AddrExpr::s(sx).addk(dx).mul(c as i64))
+                        .add(AddrExpr::s(ci))
+                };
+                let tl = b.vop(Family::Ld1, f, true, vec![Arg::mem(i_buf, corner(0, 0))]);
+                let tr = b.vop(Family::Ld1, f, true, vec![Arg::mem(i_buf, corner(0, 1))]);
+                let bl = b.vop(Family::Ld1, f, true, vec![Arg::mem(i_buf, corner(1, 0))]);
+                let br = b.vop(Family::Ld1, f, true, vec![Arg::mem(i_buf, corner(1, 1))]);
+                let dtop = b.vop(Family::Sub, f, true, vec![Arg::V(tr), Arg::V(tl)]);
+                let dbot = b.vop(Family::Sub, f, true, vec![Arg::V(br), Arg::V(bl)]);
+                for dy in 0..2usize {
+                    for dx in 0..2usize {
+                        let av = wreg[dx];
+                        let bv = wreg[dy];
+                        let top = b.vop(Family::Fma, f, true, vec![Arg::V(tl), Arg::V(dtop), Arg::V(av)]);
+                        let bot = b.vop(Family::Fma, f, true, vec![Arg::V(bl), Arg::V(dbot), Arg::V(av)]);
+                        let dv = b.vop(Family::Sub, f, true, vec![Arg::V(bot), Arg::V(top)]);
+                        let out = b.vop(Family::Fma, f, true, vec![Arg::V(top), Arg::V(dv), Arg::V(bv)]);
+                        let oidx = AddrExpr::s(sy)
+                            .mul(2)
+                            .addk(dy as i64)
+                            .mul(oh as i64)
+                            .add(AddrExpr::s(sx).mul(2).addk(dx as i64))
+                            .mul(c as i64)
+                            .add(AddrExpr::s(ci));
+                        b.vstore(Family::St1, f, true, vec![Arg::mem(o_buf, oidx), Arg::V(out)]);
+                    }
+                }
+            });
+        });
+    });
+    b.finish()
+}
+
+pub fn inputs(h: usize, c: usize, seed: u64) -> Inputs {
+    let mut rng = Rng::new(seed);
+    let mut i = Inputs::new();
+    i.insert("I".into(), Buffer::from_f32s(&rng.f32s(h * h * c, -2.0, 2.0)));
+    i
+}
+
+pub fn build(h: usize, c: usize) -> KernelCase {
+    KernelCase {
+        name: "ibilinear",
+        description: "2x bilinear upsampling (sub+fma interpolation chains)",
+        prog: program(h, c),
+        inputs: inputs(h, c, 0xb111),
+        sim_tol: 1e-5,
+        golden_tol: 1e-4,
+    }
+}
+
+/// Figure 2 default: 17x17x4 -> 32x32x4.
+pub fn case() -> KernelCase {
+    build(17, 4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::neon::interp::NeonInterp;
+
+    #[test]
+    fn matches_scalar_reference() {
+        let (h, c) = (5, 4);
+        let case = build(h, c);
+        let oh = 2 * (h - 1);
+        let img = case.inputs["I"].as_f32s();
+        let out = NeonInterp::new(&case.prog, &case.inputs).unwrap().run().unwrap();
+        let got = out["O"].as_f32s();
+        for sy in 0..h - 1 {
+            for sx in 0..h - 1 {
+                for ch in 0..c {
+                    let at = |y: usize, x: usize| img[(y * h + x) * c + ch];
+                    for (dy, wb) in WEIGHTS.iter().enumerate() {
+                        for (dx, wa) in WEIGHTS.iter().enumerate() {
+                            let (wa, wb) = (*wa as f32, *wb as f32);
+                            let top = at(sy, sx) + wa * (at(sy, sx + 1) - at(sy, sx));
+                            let bot = at(sy + 1, sx) + wa * (at(sy + 1, sx + 1) - at(sy + 1, sx));
+                            let want = top + wb * (bot - top);
+                            let o = ((2 * sy + dy) * oh + 2 * sx + dx) * c + ch;
+                            assert!(
+                                (got[o] - want).abs() < 1e-5,
+                                "pixel ({},{}) ch {}: {} vs {}",
+                                2 * sy + dy,
+                                2 * sx + dx,
+                                ch,
+                                got[o],
+                                want
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}

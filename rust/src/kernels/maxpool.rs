@@ -1,0 +1,99 @@
+//! MAXPOOL: 2x2 stride-2 max pooling over HWC layout (`vmaxq_f32` tree).
+
+use crate::ir::{AddrExpr, Arg, Program, ProgramBuilder};
+use crate::neon::elem::Elem;
+use crate::neon::interp::{Buffer, Inputs};
+use crate::neon::ops::Family;
+use crate::testutil::Rng;
+use super::KernelCase;
+
+pub fn program(h: usize, c: usize) -> Program {
+    assert_eq!(h % 2, 0);
+    assert_eq!(c % 4, 0);
+    let oh = h / 2;
+    let mut b = ProgramBuilder::new("maxpool");
+    let i_buf = b.input("I", Elem::F32, h * h * c);
+    let o_buf = b.output("O", Elem::F32, oh * oh * c);
+
+    b.loop_(0, oh as i64, 1, |b, oy| {
+        b.loop_(0, oh as i64, 1, |b, ox| {
+            b.loop_(0, c as i64, 4, |b, ci| {
+                let at = |dy: i64, dx: i64| {
+                    AddrExpr::s(oy)
+                        .mul(2)
+                        .addk(dy)
+                        .mul((h * c) as i64)
+                        .add(AddrExpr::s(ox).mul(2).addk(dx).mul(c as i64))
+                        .add(AddrExpr::s(ci))
+                };
+                let v0 = b.vop(Family::Ld1, Elem::F32, true, vec![Arg::mem(i_buf, at(0, 0))]);
+                let v1 = b.vop(Family::Ld1, Elem::F32, true, vec![Arg::mem(i_buf, at(0, 1))]);
+                let v2 = b.vop(Family::Ld1, Elem::F32, true, vec![Arg::mem(i_buf, at(1, 0))]);
+                let v3 = b.vop(Family::Ld1, Elem::F32, true, vec![Arg::mem(i_buf, at(1, 1))]);
+                let m01 = b.vop(Family::Max, Elem::F32, true, vec![Arg::V(v0), Arg::V(v1)]);
+                let m23 = b.vop(Family::Max, Elem::F32, true, vec![Arg::V(v2), Arg::V(v3)]);
+                let m = b.vop(Family::Max, Elem::F32, true, vec![Arg::V(m01), Arg::V(m23)]);
+                let oidx = AddrExpr::s(oy)
+                    .mul(oh as i64)
+                    .add(AddrExpr::s(ox))
+                    .mul(c as i64)
+                    .add(AddrExpr::s(ci));
+                b.vstore(Family::St1, Elem::F32, true, vec![Arg::mem(o_buf, oidx), Arg::V(m)]);
+            });
+        });
+    });
+    b.finish()
+}
+
+pub fn inputs(h: usize, c: usize, seed: u64) -> Inputs {
+    let mut rng = Rng::new(seed);
+    let mut i = Inputs::new();
+    i.insert("I".into(), Buffer::from_f32s(&rng.f32s(h * h * c, -4.0, 4.0)));
+    i
+}
+
+pub fn build(h: usize, c: usize) -> KernelCase {
+    KernelCase {
+        name: "maxpool",
+        description: "2x2 stride-2 max pooling (vmaxq tree)",
+        prog: program(h, c),
+        inputs: inputs(h, c, 0xfeed),
+        sim_tol: 0.0,
+        golden_tol: 0.0,
+    }
+}
+
+/// Figure 2 default: 32x32x16 -> 16x16x16.
+pub fn case() -> KernelCase {
+    build(32, 16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::neon::interp::NeonInterp;
+
+    #[test]
+    fn matches_scalar_reference() {
+        let (h, c) = (8, 8);
+        let case = build(h, c);
+        let oh = h / 2;
+        let i = case.inputs["I"].as_f32s();
+        let out = NeonInterp::new(&case.prog, &case.inputs).unwrap().run().unwrap();
+        let mut want = vec![0f32; oh * oh * c];
+        for oy in 0..oh {
+            for ox in 0..oh {
+                for ch in 0..c {
+                    let v = [
+                        i[(2 * oy * h + 2 * ox) * c + ch],
+                        i[(2 * oy * h + 2 * ox + 1) * c + ch],
+                        i[((2 * oy + 1) * h + 2 * ox) * c + ch],
+                        i[((2 * oy + 1) * h + 2 * ox + 1) * c + ch],
+                    ];
+                    want[(oy * oh + ox) * c + ch] = v.iter().fold(f32::MIN, |a, &x| a.max(x));
+                }
+            }
+        }
+        crate::testutil::assert_close(&out["O"].as_f32s(), &want, 0.0, "maxpool");
+    }
+}

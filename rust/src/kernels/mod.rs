@@ -1,0 +1,117 @@
+//! The paper's §4.2 benchmark workloads: the 10 XNNPACK neural-network
+//! compute functions, written as NEON-intrinsic IR programs that
+//! algorithmically mirror XNNPACK's NEON microkernels (fma accumulators,
+//! rsqrt Newton iterations, exp-based sigmoid/tanh with `vcvtnq` + exponent
+//! reconstruction, compare+bitselect argmax tracking, ...).
+
+pub mod argmaxpool;
+pub mod convhwc;
+pub mod dwconv;
+pub mod expmath;
+pub mod gemm;
+pub mod ibilinear;
+pub mod maxpool;
+pub mod vrelu;
+pub mod vsigmoid;
+pub mod vsqrt;
+pub mod vtanh;
+
+use crate::ir::Program;
+use crate::neon::interp::Inputs;
+
+/// One benchmark case: program + inputs + comparison tolerances.
+pub struct KernelCase {
+    pub name: &'static str,
+    pub description: &'static str,
+    pub prog: Program,
+    pub inputs: Inputs,
+    /// tolerance for RVV-translated vs NEON-interpreted outputs (fused vs
+    /// unfused fma rounding in baseline mode)
+    pub sim_tol: f32,
+    /// tolerance vs the JAX/XLA golden oracle (polynomial approximations
+    /// vs libm transcendentals)
+    pub golden_tol: f32,
+}
+
+/// The Figure 2 suite at the default shapes (see DESIGN.md §6).
+pub fn suite() -> Vec<KernelCase> {
+    vec![
+        gemm::case(),
+        convhwc::case(),
+        dwconv::case(),
+        maxpool::case(),
+        argmaxpool::case(),
+        vrelu::case(),
+        vsqrt::case(),
+        vtanh::case(),
+        vsigmoid::case(),
+        ibilinear::case(),
+    ]
+}
+
+/// Reduced shapes for fast integration tests.
+pub fn suite_small() -> Vec<KernelCase> {
+    vec![
+        gemm::build(8, 8, 8),
+        convhwc::build(6, 4, 8),
+        dwconv::build(6, 8),
+        maxpool::build(8, 8),
+        argmaxpool::build(8, 8),
+        vrelu::build(256),
+        vsqrt::build(256),
+        vtanh::build(256),
+        vsigmoid::build(256),
+        ibilinear::build(5, 4),
+    ]
+}
+
+pub fn by_name(name: &str) -> Option<KernelCase> {
+    suite().into_iter().find(|k| k.name == name)
+}
+
+/// All suite kernel names in Figure 2 order.
+pub const NAMES: [&str; 10] = [
+    "gemm",
+    "convhwc",
+    "dwconv",
+    "maxpool",
+    "argmaxpool",
+    "vrelu",
+    "vsqrt",
+    "vtanh",
+    "vsigmoid",
+    "ibilinear",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::neon::interp::{typecheck, NeonInterp};
+
+    #[test]
+    fn suite_has_ten_kernels_matching_fig2() {
+        let s = suite();
+        assert_eq!(s.len(), 10);
+        for (k, want) in s.iter().zip(NAMES) {
+            assert_eq!(k.name, want);
+        }
+    }
+
+    #[test]
+    fn all_programs_typecheck() {
+        for k in suite().iter().chain(suite_small().iter()) {
+            typecheck(&k.prog).unwrap_or_else(|e| panic!("{}: {e}", k.name));
+        }
+    }
+
+    #[test]
+    fn all_small_programs_interpret() {
+        for k in suite_small() {
+            let out = NeonInterp::new(&k.prog, &k.inputs)
+                .unwrap_or_else(|e| panic!("{}: {e}", k.name))
+                .run()
+                .unwrap_or_else(|e| panic!("{}: {e}", k.name));
+            assert!(!out.is_empty(), "{} produced no outputs", k.name);
+        }
+    }
+}

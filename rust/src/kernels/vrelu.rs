@@ -1,0 +1,61 @@
+//! VRELU: elementwise `max(x, 0)` (XNNPACK vrelu: hoisted zero +
+//! `vmaxq_f32` over a flat array).
+
+use crate::ir::{AddrExpr, Arg, Program, ProgramBuilder};
+use crate::neon::elem::Elem;
+use crate::neon::interp::{Buffer, Inputs};
+use crate::neon::ops::Family;
+use crate::testutil::Rng;
+use super::KernelCase;
+
+pub fn program(n: usize) -> Program {
+    assert_eq!(n % 4, 0);
+    let mut b = ProgramBuilder::new("vrelu");
+    let x_buf = b.input("X", Elem::F32, n);
+    let y_buf = b.output("Y", Elem::F32, n);
+    let zero = b.vop(Family::DupN, Elem::F32, true, vec![Arg::ImmF(0.0)]);
+    b.loop_(0, n as i64, 4, |b, i| {
+        let x = b.vop(Family::Ld1, Elem::F32, true, vec![Arg::mem(x_buf, AddrExpr::s(i))]);
+        let y = b.vop(Family::Max, Elem::F32, true, vec![Arg::V(x), Arg::V(zero)]);
+        b.vstore(Family::St1, Elem::F32, true, vec![Arg::mem(y_buf, AddrExpr::s(i)), Arg::V(y)]);
+    });
+    b.finish()
+}
+
+pub fn inputs(n: usize, seed: u64) -> Inputs {
+    let mut rng = Rng::new(seed);
+    let mut i = Inputs::new();
+    i.insert("X".into(), Buffer::from_f32s(&rng.f32s(n, -4.0, 4.0)));
+    i
+}
+
+pub fn build(n: usize) -> KernelCase {
+    KernelCase {
+        name: "vrelu",
+        description: "elementwise ReLU (vmaxq with hoisted zero)",
+        prog: program(n),
+        inputs: inputs(n, 0x5e1f),
+        sim_tol: 0.0,
+        golden_tol: 0.0,
+    }
+}
+
+/// Figure 2 default: n = 16384.
+pub fn case() -> KernelCase {
+    build(16384)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::neon::interp::NeonInterp;
+
+    #[test]
+    fn matches_scalar_reference() {
+        let case = build(64);
+        let x = case.inputs["X"].as_f32s();
+        let out = NeonInterp::new(&case.prog, &case.inputs).unwrap().run().unwrap();
+        let want: Vec<f32> = x.iter().map(|v| v.max(0.0)).collect();
+        crate::testutil::assert_close(&out["Y"].as_f32s(), &want, 0.0, "vrelu");
+    }
+}

@@ -1,0 +1,97 @@
+//! VSIGMOID: elementwise logistic function, XNNPACK rr2-p5 pattern:
+//! `sigmoid(x) = e / (1 + e)` with `e = exp(-|x|)`, reciprocal by
+//! `vrecpeq` Newton, and a final compare+bitselect to mirror the
+//! positive half (`sigmoid(x) = 1 - sigmoid(-x)`).
+
+use crate::ir::{AddrExpr, Arg, Program, ProgramBuilder};
+use crate::neon::elem::Elem;
+use crate::neon::interp::{Buffer, Inputs};
+use crate::neon::ops::Family;
+use crate::testutil::Rng;
+use super::expmath::{emit_exp_neg, emit_recip, ExpConsts};
+use super::KernelCase;
+
+pub fn program(n: usize) -> Program {
+    assert_eq!(n % 4, 0);
+    let f = Elem::F32;
+    let mut b = ProgramBuilder::new("vsigmoid");
+    let x_buf = b.input("X", Elem::F32, n);
+    let y_buf = b.output("Y", Elem::F32, n);
+    // hoisted loop invariants (clang hoists vdupq_n of constants)
+    let k = ExpConsts::hoist(&mut b);
+    let zero = b.vop(Family::DupN, f, true, vec![Arg::ImmF(0.0)]);
+    b.loop_(0, n as i64, 4, |b, i| {
+        let x = b.vop(Family::Ld1, f, true, vec![Arg::mem(x_buf, AddrExpr::s(i))]);
+        let z = b.vop(Family::Abs, f, true, vec![Arg::V(x)]);
+        let e = emit_exp_neg(b, &k, z); // exp(-|x|)
+        // d = 1 + e ; s = e / d  (= sigmoid(-|x|))
+        let one = k.one();
+        let d = b.vop(Family::Add, f, true, vec![Arg::V(e), Arg::V(one)]);
+        let rcp = emit_recip(b, d);
+        let s_neg = b.vop(Family::Mul, f, true, vec![Arg::V(e), Arg::V(rcp)]);
+        // y = x < 0 ? s_neg : 1 - s_neg
+        let s_pos = b.vop(Family::Sub, f, true, vec![Arg::V(one), Arg::V(s_neg)]);
+        let mneg = b.vop(Family::Clt, f, true, vec![Arg::V(x), Arg::V(zero)]);
+        let y = b.vop(Family::Bsl, f, true, vec![Arg::V(mneg), Arg::V(s_neg), Arg::V(s_pos)]);
+        b.vstore(Family::St1, f, true, vec![Arg::mem(y_buf, AddrExpr::s(i)), Arg::V(y)]);
+    });
+    b.finish()
+}
+
+pub fn inputs(n: usize, seed: u64) -> Inputs {
+    let mut rng = Rng::new(seed);
+    let mut i = Inputs::new();
+    i.insert("X".into(), Buffer::from_f32s(&rng.f32s(n, -8.0, 8.0)));
+    i
+}
+
+pub fn build(n: usize) -> KernelCase {
+    KernelCase {
+        name: "vsigmoid",
+        description: "elementwise sigmoid (exp rr2-p5 + vrecpe Newton + bitselect)",
+        prog: program(n),
+        inputs: inputs(n, 0x516),
+        sim_tol: 1e-5,
+        golden_tol: 5e-3,
+    }
+}
+
+/// Figure 2 default: n = 8192.
+pub fn case() -> KernelCase {
+    build(8192)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::neon::interp::NeonInterp;
+    use crate::testutil::max_abs_diff;
+
+    #[test]
+    fn matches_libm_sigmoid() {
+        let case = build(256);
+        let x = case.inputs["X"].as_f32s();
+        let out = NeonInterp::new(&case.prog, &case.inputs).unwrap().run().unwrap();
+        let want: Vec<f32> = x.iter().map(|v| 1.0 / (1.0 + (-v).exp())).collect();
+        let d = max_abs_diff(&out["Y"].as_f32s(), &want);
+        assert!(d < 1e-5, "sigmoid abs err {d}");
+    }
+
+    #[test]
+    fn symmetry() {
+        // sigmoid(x) + sigmoid(-x) == 1 by construction of the bitselect
+        let mut inputs = Inputs::new();
+        let xs: Vec<f32> = (0..64).map(|i| (i as f32 - 32.0) / 4.0).collect();
+        inputs.insert("X".into(), Buffer::from_f32s(&xs));
+        let p = program(64);
+        let out = NeonInterp::new(&p, &inputs).unwrap().run().unwrap();
+        let y = out["Y"].as_f32s();
+        for i in 0..32 {
+            let a = y[i];
+            let b = y[63 - i + 1 - 1];
+            if (xs[i] + xs[63 - i]).abs() < 1e-6 {
+                assert!((a + b - 1.0).abs() < 1e-5);
+            }
+        }
+    }
+}

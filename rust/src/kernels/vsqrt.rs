@@ -1,0 +1,74 @@
+//! VSQRT: elementwise square root via `vrsqrteq_f32` estimate + two
+//! `vrsqrtsq_f32` Newton steps + final multiply — exactly XNNPACK's
+//! neon-rsqrt pattern (A32 NEON has no vector sqrt instruction).
+
+use crate::ir::{AddrExpr, Arg, Program, ProgramBuilder};
+use crate::neon::elem::Elem;
+use crate::neon::interp::{Buffer, Inputs};
+use crate::neon::ops::Family;
+use crate::testutil::Rng;
+use super::KernelCase;
+
+pub fn program(n: usize) -> Program {
+    assert_eq!(n % 4, 0);
+    let mut b = ProgramBuilder::new("vsqrt");
+    let x_buf = b.input("X", Elem::F32, n);
+    let y_buf = b.output("Y", Elem::F32, n);
+    b.loop_(0, n as i64, 4, |b, i| {
+        let x = b.vop(Family::Ld1, Elem::F32, true, vec![Arg::mem(x_buf, AddrExpr::s(i))]);
+        // t ~= 1/sqrt(x)
+        let mut t = b.vop(Family::Rsqrte, Elem::F32, true, vec![Arg::V(x)]);
+        for _ in 0..2 {
+            // t *= (3 - x*t*t) / 2
+            let u = b.vop(Family::Mul, Elem::F32, true, vec![Arg::V(x), Arg::V(t)]);
+            let s = b.vop(Family::Rsqrts, Elem::F32, true, vec![Arg::V(u), Arg::V(t)]);
+            t = b.vop(Family::Mul, Elem::F32, true, vec![Arg::V(t), Arg::V(s)]);
+        }
+        // sqrt(x) = x * rsqrt(x)
+        let y = b.vop(Family::Mul, Elem::F32, true, vec![Arg::V(x), Arg::V(t)]);
+        b.vstore(Family::St1, Elem::F32, true, vec![Arg::mem(y_buf, AddrExpr::s(i)), Arg::V(y)]);
+    });
+    b.finish()
+}
+
+/// Inputs strictly positive (XNNPACK vsqrt assumes non-negative input; we
+/// keep away from 0 so the rsqrt path needs no zero-select).
+pub fn inputs(n: usize, seed: u64) -> Inputs {
+    let mut rng = Rng::new(seed);
+    let mut i = Inputs::new();
+    i.insert("X".into(), Buffer::from_f32s(&rng.f32s(n, 0.01, 100.0)));
+    i
+}
+
+pub fn build(n: usize) -> KernelCase {
+    KernelCase {
+        name: "vsqrt",
+        description: "elementwise sqrt (vrsqrte + 2 Newton steps)",
+        prog: program(n),
+        inputs: inputs(n, 0x5a4d),
+        sim_tol: 1e-5,
+        golden_tol: 1e-3,
+    }
+}
+
+/// Figure 2 default: n = 16384.
+pub fn case() -> KernelCase {
+    build(16384)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::neon::interp::NeonInterp;
+    use crate::testutil::max_rel_diff;
+
+    #[test]
+    fn converges_to_sqrt() {
+        let case = build(256);
+        let x = case.inputs["X"].as_f32s();
+        let out = NeonInterp::new(&case.prog, &case.inputs).unwrap().run().unwrap();
+        let want: Vec<f32> = x.iter().map(|v| v.sqrt()).collect();
+        let rel = max_rel_diff(&out["Y"].as_f32s(), &want);
+        assert!(rel < 1e-5, "rel err {rel}");
+    }
+}

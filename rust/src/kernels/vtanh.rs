@@ -1,0 +1,92 @@
+//! VTANH: elementwise hyperbolic tangent, XNNPACK expm1-style:
+//! `tanh(|x|) = (1 - t) / (1 + t)` with `t = exp(-2|x|)`, sign restored by
+//! a sign-bit `vbslq` (mask 0x80000000) — compare + select free.
+
+use crate::ir::{AddrExpr, Arg, Program, ProgramBuilder};
+use crate::neon::elem::Elem;
+use crate::neon::interp::{Buffer, Inputs};
+use crate::neon::ops::Family;
+use crate::testutil::Rng;
+use super::expmath::{emit_exp_neg, emit_recip, ExpConsts};
+use super::KernelCase;
+
+pub fn program(n: usize) -> Program {
+    assert_eq!(n % 4, 0);
+    let f = Elem::F32;
+    let mut b = ProgramBuilder::new("vtanh");
+    let x_buf = b.input("X", Elem::F32, n);
+    let y_buf = b.output("Y", Elem::F32, n);
+    // hoisted constants (clang hoists vdupq_n of loop invariants)
+    let sign_mask = b.vop(Family::DupN, Elem::U32, true, vec![Arg::Imm(0x8000_0000)]);
+    let two = b.vop(Family::DupN, f, true, vec![Arg::ImmF(2.0)]);
+    let k = ExpConsts::hoist(&mut b);
+    b.loop_(0, n as i64, 4, |b, i| {
+        let x = b.vop(Family::Ld1, f, true, vec![Arg::mem(x_buf, AddrExpr::s(i))]);
+        let a = b.vop(Family::Abs, f, true, vec![Arg::V(x)]);
+        let z = b.vop(Family::Mul, f, true, vec![Arg::V(a), Arg::V(two)]);
+        let t = emit_exp_neg(b, &k, z); // exp(-2|x|) in (0, 1]
+        // tanh(|x|) = (1 - t) / (1 + t)
+        let one = k.one();
+        let num = b.vop(Family::Sub, f, true, vec![Arg::V(one), Arg::V(t)]);
+        let den = b.vop(Family::Add, f, true, vec![Arg::V(one), Arg::V(t)]);
+        let rcp = emit_recip(b, den);
+        let th = b.vop(Family::Mul, f, true, vec![Arg::V(num), Arg::V(rcp)]);
+        // restore sign: take the sign bit from x, magnitude from th
+        let y = b.vop(Family::Bsl, f, true, vec![Arg::V(sign_mask), Arg::V(x), Arg::V(th)]);
+        b.vstore(Family::St1, f, true, vec![Arg::mem(y_buf, AddrExpr::s(i)), Arg::V(y)]);
+    });
+    b.finish()
+}
+
+pub fn inputs(n: usize, seed: u64) -> Inputs {
+    let mut rng = Rng::new(seed);
+    let mut i = Inputs::new();
+    i.insert("X".into(), Buffer::from_f32s(&rng.f32s(n, -5.0, 5.0)));
+    i
+}
+
+pub fn build(n: usize) -> KernelCase {
+    KernelCase {
+        name: "vtanh",
+        description: "elementwise tanh (exp(-2|x|) + Newton reciprocal + sign bitselect)",
+        prog: program(n),
+        inputs: inputs(n, 0x7a17),
+        sim_tol: 1e-5,
+        golden_tol: 5e-3,
+    }
+}
+
+/// Figure 2 default: n = 8192.
+pub fn case() -> KernelCase {
+    build(8192)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::neon::interp::NeonInterp;
+    use crate::testutil::max_abs_diff;
+
+    #[test]
+    fn matches_libm_tanh() {
+        let case = build(256);
+        let x = case.inputs["X"].as_f32s();
+        let out = NeonInterp::new(&case.prog, &case.inputs).unwrap().run().unwrap();
+        let want: Vec<f32> = x.iter().map(|v| v.tanh()).collect();
+        let d = max_abs_diff(&out["Y"].as_f32s(), &want);
+        assert!(d < 1e-5, "tanh abs err {d}");
+    }
+
+    #[test]
+    fn odd_symmetry_and_sign() {
+        let xs: Vec<f32> = vec![-3.0, -1.0, -0.25, 0.0, 0.25, 1.0, 3.0, 5.0];
+        let mut inputs = Inputs::new();
+        inputs.insert("X".into(), Buffer::from_f32s(&xs));
+        let p = program(8);
+        let out = NeonInterp::new(&p, &inputs).unwrap().run().unwrap();
+        let y = out["Y"].as_f32s();
+        assert!((y[0] + y[6]).abs() < 1e-6, "tanh odd symmetry");
+        assert!(y[3].abs() < 1e-6);
+        assert!(y[0] < 0.0 && y[7] > 0.0);
+    }
+}

@@ -1,0 +1,40 @@
+//! # simde-rvv
+//!
+//! A reproduction of *"SIMD Everywhere Optimization from ARM NEON to RISC-V
+//! Vector Extensions"* (CS.DC 2023) as a three-layer Rust + JAX/Pallas
+//! system.
+//!
+//! The library contains:
+//!
+//! - [`neon`] — an executable ARM NEON semantic model (the migration
+//!   *source* ISA) plus the full-surface intrinsic catalog (paper Table 1);
+//! - [`rvv`] — a vector-length-agnostic RISC-V Vector semantic model (the
+//!   migration *target* ISA);
+//! - [`ir`] — the intrinsic-program IR kernels are written in;
+//! - [`simde`] — the paper's contribution: the SIMDe-style translation
+//!   engine with Table 2 type mapping and per-intrinsic conversion rules;
+//! - [`sim`] — a Spike-like functional simulator producing the paper's
+//!   dynamic-instruction-count metric;
+//! - [`kernels`] — the 10 XNNPACK benchmark kernels in NEON IR (Figure 2);
+//! - [`runtime`] — the JAX/XLA golden oracle loaded via PJRT;
+//! - [`coordinator`] — the migration/benchmark pipeline;
+//! - [`report`] — Table 1 / Table 2 / Figure 2 emitters.
+
+pub mod benchlib;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod ir;
+pub mod kernels;
+pub mod neon;
+pub mod rvv;
+pub mod sim;
+pub mod report;
+pub mod runtime;
+pub mod simde;
+pub mod testutil;
+
+/// Crate version string.
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,183 @@
+//! `simde-rvv` — leader binary for the NEON->RVV migration pipeline.
+//!
+//! Subcommands:
+//!   report table1|table2|methods      regenerate the paper's tables
+//!   bench [--vlen N] [--threads N]    Figure 2 speedup table
+//!   verify [--kernel K] [--artifacts DIR] [--no-golden]
+//!                                     validate both modes vs NEON + XLA
+//!   translate --kernel K [--mode baseline|custom]
+//!                                     dump the translated RVV stream
+//!   sweep [--vlens 128,256,512]       VLA scaling ablation (A1)
+//!   catalog [--grep PAT]              dump the NEON intrinsic catalog
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use simde_rvv::cli::Args;
+use simde_rvv::config::{Config, Settings};
+use simde_rvv::coordinator::{self, verify_kernel};
+use simde_rvv::kernels;
+use simde_rvv::neon::catalog;
+use simde_rvv::report;
+use simde_rvv::runtime::GoldenOracle;
+use simde_rvv::rvv::machine::RvvConfig;
+use simde_rvv::simde::{Mode, Translator};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn settings(args: &Args) -> Result<Settings> {
+    let mut s = match args.get("config") {
+        Some(path) => Settings::from_config(&Config::load(Path::new(path))?)?,
+        None => Settings::default(),
+    };
+    s.vlen = args.get_u32("vlen", s.vlen)?;
+    s.threads = args.get_usize("threads", s.threads)?;
+    if let Some(dir) = args.get("artifacts") {
+        s.artifacts = dir.to_string();
+    }
+    Ok(s)
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    match args.subcommand.as_deref() {
+        Some("report") => report_cmd(&args),
+        Some("bench") => bench_cmd(&args),
+        Some("verify") => verify_cmd(&args),
+        Some("translate") => translate_cmd(&args),
+        Some("sweep") => sweep_cmd(&args),
+        Some("catalog") => catalog_cmd(&args),
+        Some(other) => bail!("unknown subcommand '{other}' (try: report/bench/verify/translate/sweep/catalog)"),
+        None => {
+            println!("simde-rvv {} — SIMD Everywhere NEON->RVV migration pipeline", simde_rvv::version());
+            println!("subcommands: report bench verify translate sweep catalog");
+            Ok(())
+        }
+    }
+}
+
+fn report_cmd(args: &Args) -> Result<()> {
+    let s = settings(args)?;
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("table1") => print!("{}", report::table1_markdown()),
+        Some("table2") => {
+            print!("{}", report::table2_markdown(true));
+            println!();
+            print!("{}", report::table2_markdown(false));
+        }
+        Some("methods") => print!("{}", report::methods_markdown(s.rvv())),
+        _ => bail!("usage: report table1|table2|methods"),
+    }
+    Ok(())
+}
+
+fn bench_cmd(args: &Args) -> Result<()> {
+    let s = settings(args)?;
+    let rows = coordinator::figure2(s.vlen, s.threads)?;
+    if args.has("csv") {
+        print!("{}", report::fig2_csv(&rows));
+    } else {
+        print!("{}", report::fig2_markdown(&rows, s.vlen));
+    }
+    Ok(())
+}
+
+fn verify_cmd(args: &Args) -> Result<()> {
+    let s = settings(args)?;
+    let oracle = if args.has("no-golden") {
+        None
+    } else {
+        Some(GoldenOracle::load(Path::new(&s.artifacts)).context(
+            "loading golden artifacts (use --no-golden to skip, or run `make artifacts`)",
+        )?)
+    };
+    if let Some(o) = &oracle {
+        println!("golden oracle: {} ops on {}", o.ops().len(), o.platform());
+    }
+    let cases: Vec<_> = match args.get("kernel") {
+        Some(k) => vec![kernels::by_name(k).with_context(|| format!("unknown kernel '{k}'"))?],
+        None => kernels::suite(),
+    };
+    let mut all_ok = true;
+    for case in &cases {
+        let out = verify_kernel(case, s.vlen, oracle.as_ref())?;
+        let status = if out.passed { "OK " } else { "FAIL" };
+        all_ok &= out.passed;
+        println!("[{status}] {}", case.name);
+        for (mode, name, d) in &out.vs_neon {
+            println!("       {:<11} {:<4} vs NEON  max|d|={d:.2e}", format!("{mode:?}"), name);
+        }
+        for (name, d) in &out.vs_golden {
+            println!("       NEON        {:<4} vs XLA   max|d|={d:.2e}", name);
+        }
+    }
+    if !all_ok {
+        bail!("verification failed");
+    }
+    println!("all {} kernels verified", cases.len());
+    Ok(())
+}
+
+fn translate_cmd(args: &Args) -> Result<()> {
+    let s = settings(args)?;
+    let k = args.get("kernel").context("--kernel required")?;
+    let case = kernels::by_name(k).with_context(|| format!("unknown kernel '{k}'"))?;
+    let mode = match args.get("mode").unwrap_or("custom") {
+        "baseline" => Mode::Baseline,
+        "custom" | "rvv-custom" => Mode::RvvCustom,
+        other => bail!("bad --mode '{other}'"),
+    };
+    let tr = Translator::new(mode, RvvConfig::new(s.vlen));
+    let (rp, rep) = tr.translate(&case.prog)?;
+    println!("; {} translated with mode={} vlen={}", case.name, mode.name(), s.vlen);
+    println!("; {} static RVV ops, methods: {:?}", rp.static_ops(), rep.count_by_method());
+    print!("{}", rp.disasm());
+    Ok(())
+}
+
+fn sweep_cmd(args: &Args) -> Result<()> {
+    let s = settings(args)?;
+    let vlens = args.get_u32_list("vlens", &[128, 256, 512])?;
+    println!("## A1 — vlen sweep (speedup = baseline/custom dynamic icount)\n");
+    print!("| kernel |");
+    for v in &vlens {
+        print!(" vlen={v} |");
+    }
+    println!();
+    print!("|---|");
+    for _ in &vlens {
+        print!("---:|");
+    }
+    println!();
+    let per_vlen: Vec<_> = vlens
+        .iter()
+        .map(|&v| coordinator::figure2(v, s.threads))
+        .collect::<Result<Vec<_>>>()?;
+    for (i, name) in kernels::NAMES.iter().enumerate() {
+        print!("| {name} |");
+        for rows in &per_vlen {
+            print!(" {:.2}x |", rows[i].speedup);
+        }
+        println!();
+    }
+    Ok(())
+}
+
+fn catalog_cmd(args: &Args) -> Result<()> {
+    let pat = args.get("grep");
+    let mut n = 0;
+    for e in catalog::generate() {
+        if pat.map_or(true, |p| e.name.contains(p)) {
+            println!("{:<40} {}", e.name, e.ret.name());
+            n += 1;
+        }
+    }
+    eprintln!("{n} intrinsics");
+    Ok(())
+}

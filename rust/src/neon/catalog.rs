@@ -1,0 +1,690 @@
+//! Full-surface NEON intrinsic catalog for reproducing the paper's Table 1
+//! ("Categorization of Neon Intrinsics with types": 4344 intrinsics split
+//! by return base type).
+//!
+//! The catalog is generated from a data-driven specification of the ACLE
+//! surface — op bases × register forms × element grids × variant suffixes —
+//! rather than a hand-typed list of 4344 names. The paper's counts come
+//! from ARM's official ACLE list; ours come from this generator, so
+//! EXPERIMENTS.md reports both with per-class deltas.
+
+use std::collections::BTreeMap;
+
+use super::elem::{BaseClass, Elem};
+
+/// One catalogued intrinsic name with its return base class.
+#[derive(Debug, Clone)]
+pub struct CatalogEntry {
+    pub name: String,
+    pub ret: BaseClass,
+}
+
+// Element grids ---------------------------------------------------------------
+
+const INTS: [Elem; 4] = [Elem::I8, Elem::I16, Elem::I32, Elem::I64];
+const UINTS: [Elem; 4] = [Elem::U8, Elem::U16, Elem::U32, Elem::U64];
+const FLOATS: [Elem; 3] = [Elem::F16, Elem::F32, Elem::F64];
+const POLYS: [Elem; 3] = [Elem::P8, Elem::P16, Elem::P64];
+const NARROW_INTS: [Elem; 3] = [Elem::I8, Elem::I16, Elem::I32];
+const NARROW_UINTS: [Elem; 3] = [Elem::U8, Elem::U16, Elem::U32];
+const WIDE_INTS: [Elem; 3] = [Elem::I16, Elem::I32, Elem::I64];
+const WIDE_UINTS: [Elem; 3] = [Elem::U16, Elem::U32, Elem::U64];
+
+/// Which element grid an op spec instantiates over.
+#[derive(Debug, Clone, Copy)]
+enum Grid {
+    /// signed + unsigned + float
+    Iuf,
+    /// signed + unsigned
+    Iu,
+    /// signed + unsigned, 8/16/32 only (widening sources)
+    IuNarrow,
+    /// signed + unsigned, 16/32/64 only (narrowing sources)
+    IuWide,
+    /// floats only
+    F,
+    /// f32/f64 only (A64 float ops)
+    F3264,
+    /// signed only
+    I,
+    /// everything incl. poly
+    All,
+    /// poly only
+    P,
+    /// 8-bit only (s8/u8/p8)
+    Byte,
+}
+
+fn grid_elems(g: Grid) -> Vec<Elem> {
+    match g {
+        Grid::Iuf => INTS.iter().chain(&UINTS).chain(&FLOATS).copied().collect(),
+        Grid::Iu => INTS.iter().chain(&UINTS).copied().collect(),
+        Grid::IuNarrow => NARROW_INTS.iter().chain(&NARROW_UINTS).copied().collect(),
+        Grid::IuWide => WIDE_INTS.iter().chain(&WIDE_UINTS).copied().collect(),
+        Grid::F => FLOATS.to_vec(),
+        Grid::F3264 => vec![Elem::F32, Elem::F64],
+        Grid::I => INTS.to_vec(),
+        Grid::All => INTS
+            .iter()
+            .chain(&UINTS)
+            .chain(&FLOATS)
+            .chain(&POLYS)
+            .copied()
+            .collect(),
+        Grid::P => POLYS.to_vec(),
+        Grid::Byte => vec![Elem::I8, Elem::U8, Elem::P8],
+    }
+}
+
+/// How the return base class derives from the element.
+#[derive(Debug, Clone, Copy)]
+enum Ret {
+    /// same class as the element
+    Same,
+    /// unsigned of same width (comparisons, tst)
+    Uint,
+    /// widened same-class (vmovl, vmull: poly widens to poly)
+    SameWide,
+    /// float (conversions to float)
+    Float,
+    /// signed int (float->int conversions, vcvt_s*)
+    Int,
+}
+
+fn ret_class(r: Ret, e: Elem) -> BaseClass {
+    match r {
+        Ret::Same | Ret::SameWide => e.base_class(),
+        Ret::Uint => BaseClass::Uint,
+        Ret::Float => BaseClass::Float,
+        Ret::Int => BaseClass::Int,
+    }
+}
+
+/// Register/variant forms an op base instantiates.
+#[derive(Debug, Clone, Copy)]
+enum Form {
+    /// `v<base>_<t>` (64-bit)
+    D,
+    /// `v<base>q_<t>` (128-bit)
+    Q,
+    /// `v<base>_n_<t>`
+    DN,
+    /// `v<base>q_n_<t>`
+    QN,
+    /// `v<base>_lane_<t>`
+    DLane,
+    /// `v<base>q_lane_<t>`
+    QLane,
+    /// `v<base>_laneq_<t>`
+    DLaneq,
+    /// `v<base>q_laneq_<t>`
+    QLaneq,
+    /// `v<base>_high_<t>` (A64 high-half form)
+    High,
+}
+
+fn form_name(base: &str, f: Form, e: Elem) -> String {
+    let s = e.suffix();
+    match f {
+        Form::D => format!("v{base}_{s}"),
+        Form::Q => format!("v{base}q_{s}"),
+        Form::DN => format!("v{base}_n_{s}"),
+        Form::QN => format!("v{base}q_n_{s}"),
+        Form::DLane => format!("v{base}_lane_{s}"),
+        Form::QLane => format!("v{base}q_lane_{s}"),
+        Form::DLaneq => format!("v{base}_laneq_{s}"),
+        Form::QLaneq => format!("v{base}q_laneq_{s}"),
+        Form::High => format!("v{base}_high_{s}"),
+    }
+}
+
+const DQ: &[Form] = &[Form::D, Form::Q];
+const DQN: &[Form] = &[Form::D, Form::Q, Form::DN, Form::QN];
+const ALL_LANES: &[Form] = &[
+    Form::D,
+    Form::Q,
+    Form::DLane,
+    Form::QLane,
+    Form::DLaneq,
+    Form::QLaneq,
+];
+const ARITH_FULL: &[Form] = &[
+    Form::D,
+    Form::Q,
+    Form::DN,
+    Form::QN,
+    Form::DLane,
+    Form::QLane,
+    Form::DLaneq,
+    Form::QLaneq,
+];
+const DHIGH: &[Form] = &[Form::D, Form::High];
+const DONLY: &[Form] = &[Form::D];
+
+struct Spec {
+    base: &'static str,
+    grid: Grid,
+    forms: &'static [Form],
+    ret: Ret,
+}
+
+const fn sp(base: &'static str, grid: Grid, forms: &'static [Form], ret: Ret) -> Spec {
+    Spec { base, grid, forms, ret }
+}
+
+/// The ACLE surface specification. Comments give the op group.
+fn specs() -> Vec<Spec> {
+    vec![
+        // basic arithmetic
+        sp("add", Grid::All, DQ, Ret::Same),
+        sp("sub", Grid::Iuf, DQ, Ret::Same),
+        sp("mul", Grid::Iuf, ARITH_FULL, Ret::Same),
+        sp("mul", Grid::P, DQ, Ret::Same),
+        sp("div", Grid::F3264, DQ, Ret::Same),
+        sp("mla", Grid::Iuf, ARITH_FULL, Ret::Same),
+        sp("mls", Grid::Iuf, ARITH_FULL, Ret::Same),
+        sp("fma", Grid::F, ALL_LANES, Ret::Same),
+        sp("fms", Grid::F, ALL_LANES, Ret::Same),
+        sp("abs", Grid::I, DQ, Ret::Same),
+        sp("abs", Grid::F, DQ, Ret::Same),
+        sp("qabs", Grid::I, DQ, Ret::Same),
+        sp("neg", Grid::I, DQ, Ret::Same),
+        sp("neg", Grid::F, DQ, Ret::Same),
+        sp("qneg", Grid::I, DQ, Ret::Same),
+        sp("min", Grid::Iuf, DQ, Ret::Same),
+        sp("max", Grid::Iuf, DQ, Ret::Same),
+        sp("minnm", Grid::F, DQ, Ret::Same),
+        sp("maxnm", Grid::F, DQ, Ret::Same),
+        sp("abd", Grid::Iuf, DQ, Ret::Same),
+        sp("aba", Grid::IuNarrow, DQ, Ret::Same),
+        // halving / saturating
+        sp("hadd", Grid::IuNarrow, DQ, Ret::Same),
+        sp("rhadd", Grid::IuNarrow, DQ, Ret::Same),
+        sp("hsub", Grid::IuNarrow, DQ, Ret::Same),
+        sp("qadd", Grid::Iu, DQ, Ret::Same),
+        sp("qsub", Grid::Iu, DQ, Ret::Same),
+        sp("uqadd", Grid::I, DQ, Ret::Same),
+        sp("sqadd", Grid::Iu, DQ, Ret::Uint),
+        // pairwise
+        sp("padd", Grid::Iuf, DONLY, Ret::Same),
+        sp("paddq", Grid::Iuf, DONLY, Ret::Same), // vpaddq (A64), D slot reused
+        sp("pmin", Grid::Iuf, DONLY, Ret::Same),
+        sp("pmax", Grid::Iuf, DONLY, Ret::Same),
+        sp("pminq", Grid::Iuf, DONLY, Ret::Same),
+        sp("pmaxq", Grid::Iuf, DONLY, Ret::Same),
+        sp("pminnm", Grid::F3264, DQ, Ret::Same),
+        sp("pmaxnm", Grid::F3264, DQ, Ret::Same),
+        sp("paddl", Grid::IuNarrow, DQ, Ret::SameWide),
+        sp("padal", Grid::IuNarrow, DQ, Ret::SameWide),
+        // widening/narrowing arith
+        sp("addl", Grid::IuNarrow, DHIGH, Ret::SameWide),
+        sp("addw", Grid::IuNarrow, DHIGH, Ret::SameWide),
+        sp("subl", Grid::IuNarrow, DHIGH, Ret::SameWide),
+        sp("subw", Grid::IuNarrow, DHIGH, Ret::SameWide),
+        sp("addhn", Grid::IuWide, DHIGH, Ret::Same),
+        sp("raddhn", Grid::IuWide, DHIGH, Ret::Same),
+        sp("subhn", Grid::IuWide, DHIGH, Ret::Same),
+        sp("rsubhn", Grid::IuWide, DHIGH, Ret::Same),
+        sp("mull", Grid::IuNarrow, &[Form::D, Form::High, Form::DN, Form::DLane, Form::DLaneq], Ret::SameWide),
+        sp("mull", Grid::P, DHIGH, Ret::SameWide),
+        sp("mlal", Grid::IuNarrow, &[Form::D, Form::High, Form::DN, Form::DLane, Form::DLaneq], Ret::SameWide),
+        sp("mlsl", Grid::IuNarrow, &[Form::D, Form::High, Form::DN, Form::DLane, Form::DLaneq], Ret::SameWide),
+        // saturating doubling multiplies
+        sp("qdmulh", Grid::I, ARITH_FULL, Ret::Same),
+        sp("qrdmulh", Grid::I, ARITH_FULL, Ret::Same),
+        sp("qrdmlah", Grid::I, ALL_LANES, Ret::Same),
+        sp("qrdmlsh", Grid::I, ALL_LANES, Ret::Same),
+        sp("qdmull", Grid::I, &[Form::D, Form::High, Form::DN, Form::DLane, Form::DLaneq], Ret::SameWide),
+        sp("qdmlal", Grid::I, &[Form::D, Form::High, Form::DN, Form::DLane, Form::DLaneq], Ret::SameWide),
+        sp("qdmlsl", Grid::I, &[Form::D, Form::High, Form::DN, Form::DLane, Form::DLaneq], Ret::SameWide),
+        // comparisons -> uint masks
+        sp("ceq", Grid::All, DQ, Ret::Uint),
+        sp("ceqz", Grid::Iuf, DQ, Ret::Uint),
+        sp("cge", Grid::Iuf, DQ, Ret::Uint),
+        sp("cgez", Grid::I, DQ, Ret::Uint),
+        sp("cgt", Grid::Iuf, DQ, Ret::Uint),
+        sp("cgtz", Grid::I, DQ, Ret::Uint),
+        sp("cle", Grid::Iuf, DQ, Ret::Uint),
+        sp("clez", Grid::I, DQ, Ret::Uint),
+        sp("clt", Grid::Iuf, DQ, Ret::Uint),
+        sp("cltz", Grid::I, DQ, Ret::Uint),
+        sp("cage", Grid::F, DQ, Ret::Uint),
+        sp("cagt", Grid::F, DQ, Ret::Uint),
+        sp("cale", Grid::F, DQ, Ret::Uint),
+        sp("calt", Grid::F, DQ, Ret::Uint),
+        sp("tst", Grid::Iu, DQ, Ret::Uint),
+        sp("tst", Grid::Byte, DONLY, Ret::Uint),
+        // bitwise
+        sp("and", Grid::Iu, DQ, Ret::Same),
+        sp("orr", Grid::Iu, DQ, Ret::Same),
+        sp("eor", Grid::Iu, DQ, Ret::Same),
+        sp("bic", Grid::Iu, DQ, Ret::Same),
+        sp("orn", Grid::Iu, DQ, Ret::Same),
+        sp("mvn", Grid::Iu, DQ, Ret::Same),
+        sp("mvn", Grid::Byte, DQ, Ret::Same),
+        sp("bsl", Grid::All, DQ, Ret::Same),
+        // shifts
+        sp("shl", Grid::Iu, DQN, Ret::Same),
+        sp("qshl", Grid::Iu, DQN, Ret::Same),
+        sp("qshlu", Grid::I, &[Form::DN, Form::QN], Ret::Uint),
+        sp("rshl", Grid::Iu, DQ, Ret::Same),
+        sp("qrshl", Grid::Iu, DQ, Ret::Same),
+        sp("shr", Grid::Iu, &[Form::DN, Form::QN], Ret::Same),
+        sp("rshr", Grid::Iu, &[Form::DN, Form::QN], Ret::Same),
+        sp("sra", Grid::Iu, &[Form::DN, Form::QN], Ret::Same),
+        sp("rsra", Grid::Iu, &[Form::DN, Form::QN], Ret::Same),
+        sp("sli", Grid::Iu, &[Form::DN, Form::QN], Ret::Same),
+        sp("sli", Grid::P, &[Form::DN, Form::QN], Ret::Same),
+        sp("sri", Grid::Iu, &[Form::DN, Form::QN], Ret::Same),
+        sp("sri", Grid::P, &[Form::DN, Form::QN], Ret::Same),
+        sp("shll", Grid::IuNarrow, &[Form::DN], Ret::SameWide),
+        sp("shrn", Grid::IuWide, &[Form::DN, Form::High], Ret::Same),
+        sp("rshrn", Grid::IuWide, &[Form::DN, Form::High], Ret::Same),
+        sp("qshrn", Grid::IuWide, &[Form::DN, Form::High], Ret::Same),
+        sp("qrshrn", Grid::IuWide, &[Form::DN, Form::High], Ret::Same),
+        sp("qshrun", Grid::IuWide, &[Form::DN, Form::High], Ret::Uint),
+        sp("qrshrun", Grid::IuWide, &[Form::DN, Form::High], Ret::Uint),
+        // permutes
+        sp("get_low", Grid::All, DONLY, Ret::Same),
+        sp("get_high", Grid::All, DONLY, Ret::Same),
+        sp("combine", Grid::All, DONLY, Ret::Same),
+        sp("ext", Grid::All, DQ, Ret::Same),
+        sp("rev64", Grid::IuNarrow, DQ, Ret::Same),
+        sp("rev64", Grid::Byte, DQ, Ret::Same),
+        sp("rev32", Grid::Byte, DQ, Ret::Same),
+        sp("rev16", Grid::Byte, DQ, Ret::Same),
+        sp("zip1", Grid::Iuf, DQ, Ret::Same),
+        sp("zip2", Grid::Iuf, DQ, Ret::Same),
+        sp("uzp1", Grid::Iuf, DQ, Ret::Same),
+        sp("uzp2", Grid::Iuf, DQ, Ret::Same),
+        sp("trn1", Grid::Iuf, DQ, Ret::Same),
+        sp("trn2", Grid::Iuf, DQ, Ret::Same),
+        sp("zip", Grid::IuNarrow, DONLY, Ret::Same),
+        sp("uzp", Grid::IuNarrow, DONLY, Ret::Same),
+        sp("trn", Grid::IuNarrow, DONLY, Ret::Same),
+        sp("dup", Grid::All, &[Form::DN, Form::QN, Form::DLane, Form::QLane, Form::DLaneq, Form::QLaneq], Ret::Same),
+        sp("mov", Grid::All, &[Form::DN, Form::QN], Ret::Same),
+        sp("create", Grid::All, DONLY, Ret::Same),
+        sp("get", Grid::All, &[Form::DLane, Form::QLane], Ret::Same),
+        sp("set", Grid::All, &[Form::DLane, Form::QLane], Ret::Same),
+        // table lookups
+        sp("tbl1", Grid::Byte, DONLY, Ret::Same),
+        sp("tbl2", Grid::Byte, DONLY, Ret::Same),
+        sp("tbl3", Grid::Byte, DONLY, Ret::Same),
+        sp("tbl4", Grid::Byte, DONLY, Ret::Same),
+        sp("tbx1", Grid::Byte, DONLY, Ret::Same),
+        sp("tbx2", Grid::Byte, DONLY, Ret::Same),
+        sp("tbx3", Grid::Byte, DONLY, Ret::Same),
+        sp("tbx4", Grid::Byte, DONLY, Ret::Same),
+        sp("qtbl1", Grid::Byte, DQ, Ret::Same),
+        sp("qtbl2", Grid::Byte, DQ, Ret::Same),
+        sp("qtbl3", Grid::Byte, DQ, Ret::Same),
+        sp("qtbl4", Grid::Byte, DQ, Ret::Same),
+        sp("qtbx1", Grid::Byte, DQ, Ret::Same),
+        sp("qtbx2", Grid::Byte, DQ, Ret::Same),
+        sp("qtbx3", Grid::Byte, DQ, Ret::Same),
+        sp("qtbx4", Grid::Byte, DQ, Ret::Same),
+        // widen/narrow moves
+        sp("movl", Grid::IuNarrow, DHIGH, Ret::SameWide),
+        sp("movn", Grid::IuWide, DHIGH, Ret::Same),
+        sp("qmovn", Grid::IuWide, DHIGH, Ret::Same),
+        sp("qmovun", Grid::IuWide, DHIGH, Ret::Uint),
+        // conversions
+        sp("cvt_f32", Grid::Iu, DQN, Ret::Float),
+        sp("cvt_s32", Grid::F, DQN, Ret::Int),
+        sp("cvt_u32", Grid::F, DQN, Ret::Uint),
+        sp("cvta_s32", Grid::F, DQ, Ret::Int),
+        sp("cvta_u32", Grid::F, DQ, Ret::Uint),
+        sp("cvtm_s32", Grid::F, DQ, Ret::Int),
+        sp("cvtm_u32", Grid::F, DQ, Ret::Uint),
+        sp("cvtn_s32", Grid::F, DQ, Ret::Int),
+        sp("cvtn_u32", Grid::F, DQ, Ret::Uint),
+        sp("cvtp_s32", Grid::F, DQ, Ret::Int),
+        sp("cvtp_u32", Grid::F, DQ, Ret::Uint),
+        // float rounding / estimates
+        sp("rnd", Grid::F, DQ, Ret::Same),
+        sp("rnda", Grid::F, DQ, Ret::Same),
+        sp("rndi", Grid::F, DQ, Ret::Same),
+        sp("rndm", Grid::F, DQ, Ret::Same),
+        sp("rndn", Grid::F, DQ, Ret::Same),
+        sp("rndp", Grid::F, DQ, Ret::Same),
+        sp("rndx", Grid::F, DQ, Ret::Same),
+        sp("sqrt", Grid::F, DQ, Ret::Same),
+        sp("recpe", Grid::F, DQ, Ret::Same),
+        sp("recps", Grid::F, DQ, Ret::Same),
+        sp("rsqrte", Grid::F, DQ, Ret::Same),
+        sp("rsqrts", Grid::F, DQ, Ret::Same),
+        // bit manipulation
+        sp("rbit", Grid::Byte, DQ, Ret::Same),
+        sp("cls", Grid::IuNarrow, DQ, Ret::Int),
+        sp("clz", Grid::IuNarrow, DQ, Ret::Same),
+        sp("cnt", Grid::Byte, DQ, Ret::Same),
+        // reductions (A64)
+        sp("addv", Grid::Iuf, DQ, Ret::Same),
+        sp("addlv", Grid::IuNarrow, DQ, Ret::SameWide),
+        sp("maxv", Grid::Iuf, DQ, Ret::Same),
+        sp("minv", Grid::Iuf, DQ, Ret::Same),
+        sp("maxnmv", Grid::F, DQ, Ret::Same),
+        sp("minnmv", Grid::F, DQ, Ret::Same),
+        // dot products (Armv8.2)
+        sp("dot", Grid::Byte, &[Form::D, Form::Q, Form::DLane, Form::QLane, Form::DLaneq, Form::QLaneq], Ret::Same),
+        // A64 element-copy and extended-multiply families
+        sp("copy_lane", Grid::All, DONLY, Ret::Same),
+        sp("copyq_lane", Grid::All, DONLY, Ret::Same),
+        sp("copy_laneq", Grid::All, DONLY, Ret::Same),
+        sp("copyq_laneq", Grid::All, DONLY, Ret::Same),
+        sp("mulx", Grid::F, ALL_LANES, Ret::Same),
+        sp("recpx", Grid::F, DQ, Ret::Same),
+    ]
+}
+
+/// ACLE scalar-form intrinsics (the `b`/`h`/`s`/`d`-suffixed per-lane
+/// operations, e.g. `vqaddb_s8`, `vaddh_f16`, `vrshld_s64`): a large part
+/// of the official 4344 count the paper's Table 1 tallies.
+fn scalar_form_entries() -> Vec<CatalogEntry> {
+    let mut out = Vec::new();
+    let widths: [(&str, Elem, Elem); 4] = [
+        ("b", Elem::I8, Elem::U8),
+        ("h", Elem::I16, Elem::U16),
+        ("s", Elem::I32, Elem::U32),
+        ("d", Elem::I64, Elem::U64),
+    ];
+    // integer scalar saturating/shift/narrow ops
+    let int_bases = [
+        "qadd", "qsub", "qshl", "qrshl", "qshlu", "qabs", "qneg", "qdmulh",
+        "qrdmulh", "qmovn", "qmovun", "uqadd", "sqadd",
+    ];
+    for base in int_bases {
+        for (suf, se, ue) in widths {
+            out.push(CatalogEntry {
+                name: format!("v{base}{suf}_{}", se.suffix()),
+                ret: se.base_class(),
+            });
+            if !matches!(base, "qmovun" | "qshlu" | "qabs" | "qneg") {
+                out.push(CatalogEntry {
+                    name: format!("v{base}{suf}_{}", ue.suffix()),
+                    ret: ue.base_class(),
+                });
+            }
+        }
+    }
+    // d-form plain shifts/adds (A64 scalar)
+    for base in ["shl", "rshl", "sra", "rsra", "shl_n", "add", "sub", "tst", "sli_n", "sri_n"] {
+        out.push(CatalogEntry { name: format!("v{base}d_s64"), ret: BaseClass::Int });
+        out.push(CatalogEntry { name: format!("v{base}d_u64"), ret: BaseClass::Uint });
+    }
+    // f16 scalar `h` forms (Armv8.2 fp16 scalar arithmetic)
+    let h_bases = [
+        "abs", "add", "sub", "mul", "mulx", "div", "fma", "fms", "neg",
+        "recpe", "recps", "recpx", "rsqrte", "rsqrts", "sqrt", "rnd", "rnda",
+        "rndi", "rndm", "rndn", "rndp", "rndx", "maxnm", "minnm", "cvth_f16_s16",
+        "cvth_f16_u16", "ceq", "cge", "cgt", "cle", "clt", "ceqz", "cgez",
+        "cgtz", "clez", "cltz", "cage", "cagt", "cale", "calt",
+    ];
+    for base in h_bases {
+        let ret = if base.starts_with('c') && !base.starts_with("cvt") {
+            BaseClass::Uint
+        } else {
+            BaseClass::Float
+        };
+        out.push(CatalogEntry { name: format!("v{base}h_f16"), ret });
+    }
+    // f32/f64 scalar forms
+    for base in ["mulx", "recpe", "recps", "recpx", "rsqrte", "rsqrts", "abd", "cvtn_s32", "cvtn_u32", "cvta_s32", "cvta_u32", "cvtm_s32", "cvtp_s32", "rndn_32", "cage", "cagt"] {
+        for (suf, e) in [("s", Elem::F32), ("d", Elem::F64)] {
+            let ret = if base.starts_with("cvtn_s") || base.starts_with("cvta_s")
+                || base.starts_with("cvtm") || base.starts_with("cvtp")
+            {
+                BaseClass::Int
+            } else if base.starts_with("cvt") || base.starts_with("cage") || base.starts_with("cagt") {
+                BaseClass::Uint
+            } else {
+                BaseClass::Float
+            };
+            out.push(CatalogEntry { name: format!("v{base}{suf}_{}", e.suffix()), ret });
+        }
+    }
+    // crypto (uint8x16 domain)
+    for (base, ret) in [
+        ("aeseq_u8", BaseClass::Uint), ("aesdq_u8", BaseClass::Uint),
+        ("aesmcq_u8", BaseClass::Uint), ("aesimcq_u8", BaseClass::Uint),
+        ("sha1cq_u32", BaseClass::Uint), ("sha1pq_u32", BaseClass::Uint),
+        ("sha1mq_u32", BaseClass::Uint), ("sha1su0q_u32", BaseClass::Uint),
+        ("sha1su1q_u32", BaseClass::Uint), ("sha1h_u32", BaseClass::Uint),
+        ("sha256hq_u32", BaseClass::Uint), ("sha256h2q_u32", BaseClass::Uint),
+        ("sha256su0q_u32", BaseClass::Uint), ("sha256su1q_u32", BaseClass::Uint),
+    ] {
+        out.push(CatalogEntry { name: format!("v{base}"), ret });
+    }
+    // scalar lane extract/insert across the full grid
+    for e in [
+        Elem::I8, Elem::I16, Elem::I32, Elem::I64, Elem::U8, Elem::U16,
+        Elem::U32, Elem::U64, Elem::F16, Elem::F32, Elem::F64, Elem::P8,
+        Elem::P16, Elem::P64,
+    ] {
+        for q in ["", "q"] {
+            out.push(CatalogEntry {
+                name: format!("vget{q}_lane_{}", e.suffix()),
+                ret: e.base_class(),
+            });
+            out.push(CatalogEntry {
+                name: format!("vset{q}_lane_{}", e.suffix()),
+                ret: e.base_class(),
+            });
+        }
+    }
+    // scalar reductions (vaddv h-suffixed results already counted in grid;
+    // these are the A64 `v` scalar-result duplicates with across-lane
+    // suffixes)
+    for base in ["paddd_s64", "paddd_u64", "addvq_s64", "addvq_u64"] {
+        let ret = if base.contains("_u") { BaseClass::Uint } else { BaseClass::Int };
+        out.push(CatalogEntry { name: format!("v{base}"), ret });
+    }
+    out
+}
+
+/// Hand-listed intrinsics whose names do not follow the
+/// base×form×elem grid: bfloat16 (Armv8.6), u32 estimate forms, poly64
+/// crypto multiplies, and scalar `h`-suffix helpers.
+fn raw_entries() -> Vec<CatalogEntry> {
+    use BaseClass::*;
+    let mut out = Vec::new();
+    let mut push = |names: &[&str], ret: BaseClass| {
+        for n in names {
+            out.push(CatalogEntry { name: n.to_string(), ret });
+        }
+    };
+    // u32 reciprocal estimate forms
+    push(&["vrecpe_u32", "vrecpeq_u32", "vrsqrte_u32", "vrsqrteq_u32"], Uint);
+    // poly64 widening multiply (crypto)
+    push(&["vmull_p64", "vmull_high_p64"], Poly);
+    // bfloat16 compute (~Armv8.6 surface)
+    push(
+        &[
+            "vbfdot_f32", "vbfdotq_f32", "vbfdot_lane_f32", "vbfdotq_lane_f32",
+            "vbfdot_laneq_f32", "vbfdotq_laneq_f32", "vbfmmlaq_f32",
+            "vbfmlalbq_f32", "vbfmlalbq_lane_f32", "vbfmlalbq_laneq_f32",
+            "vbfmlaltq_f32", "vbfmlaltq_lane_f32", "vbfmlaltq_laneq_f32",
+            "vcvtah_f32_bf16",
+        ],
+        Float,
+    );
+    push(
+        &[
+            "vcvt_bf16_f32", "vcvtq_low_bf16_f32", "vcvtq_high_bf16_f32",
+            "vcvth_bf16_f32", "vdup_n_bf16", "vdupq_n_bf16", "vdup_lane_bf16",
+            "vdupq_lane_bf16", "vdup_laneq_bf16", "vdupq_laneq_bf16",
+            "vduph_lane_bf16", "vduph_laneq_bf16", "vget_lane_bf16",
+            "vgetq_lane_bf16", "vset_lane_bf16", "vsetq_lane_bf16",
+            "vcreate_bf16", "vcombine_bf16", "vget_low_bf16", "vget_high_bf16",
+            "vld1_bf16", "vld1q_bf16", "vld1_dup_bf16", "vld1q_dup_bf16",
+            "vld1_lane_bf16", "vld1q_lane_bf16", "vld1_bf16_x2",
+            "vld1q_bf16_x2", "vld1_bf16_x3", "vld1q_bf16_x3", "vld1_bf16_x4",
+            "vld1q_bf16_x4", "vld2_bf16", "vld2q_bf16", "vld2_dup_bf16",
+            "vld2q_dup_bf16", "vld2_lane_bf16", "vld2q_lane_bf16",
+            "vld3_bf16", "vld3q_bf16", "vld3_dup_bf16", "vld3q_dup_bf16",
+            "vld3_lane_bf16", "vld3q_lane_bf16", "vld4_bf16", "vld4q_bf16",
+            "vld4_dup_bf16", "vld4q_dup_bf16", "vld4_lane_bf16",
+            "vld4q_lane_bf16",
+        ],
+        Bfloat,
+    );
+    push(
+        &[
+            "vst1_bf16", "vst1q_bf16", "vst1_lane_bf16", "vst1q_lane_bf16",
+            "vst1_bf16_x2", "vst1q_bf16_x2", "vst1_bf16_x3", "vst1q_bf16_x3",
+            "vst1_bf16_x4", "vst1q_bf16_x4", "vst2_bf16", "vst2q_bf16",
+            "vst2_lane_bf16", "vst2q_lane_bf16", "vst3_bf16", "vst3q_bf16",
+            "vst3_lane_bf16", "vst3q_lane_bf16", "vst4_bf16", "vst4q_bf16",
+            "vst4_lane_bf16", "vst4q_lane_bf16",
+        ],
+        Void,
+    );
+    out
+}
+
+/// Generate the full catalog.
+pub fn generate() -> Vec<CatalogEntry> {
+    let mut out = raw_entries();
+    out.extend(scalar_form_entries());
+    for s in specs() {
+        for e in grid_elems(s.grid) {
+            for &f in s.forms {
+                let name = form_name(s.base, f, e);
+                // bf16 pseudo-grid specs already carry their element in the
+                // base name; skip re-suffixing artefacts by keeping as-is.
+                let ret = ret_class(s.ret, e);
+                out.push(CatalogEntry { name, ret });
+            }
+        }
+    }
+    // memory ops: vld1..vld4 / vst1..vst4 with dup/lane/x-struct variants
+    let mem_elems: Vec<Elem> = INTS
+        .iter()
+        .chain(&UINTS)
+        .chain(&FLOATS)
+        .chain(&POLYS)
+        .copied()
+        .collect();
+    for n in 1..=4u32 {
+        for &e in &mem_elems {
+            for q in ["", "q"] {
+                let s = e.suffix();
+                out.push(CatalogEntry { name: format!("vld{n}{q}_{s}"), ret: e.base_class() });
+                out.push(CatalogEntry { name: format!("vld{n}{q}_dup_{s}"), ret: e.base_class() });
+                out.push(CatalogEntry { name: format!("vld{n}{q}_lane_{s}"), ret: e.base_class() });
+                out.push(CatalogEntry { name: format!("vst{n}{q}_{s}"), ret: BaseClass::Void });
+                out.push(CatalogEntry { name: format!("vst{n}{q}_lane_{s}"), ret: BaseClass::Void });
+            }
+        }
+    }
+    // vld1x2/x3/x4 and vst1x2/x3/x4 struct-of-arrays forms
+    for x in 2..=4u32 {
+        for &e in &mem_elems {
+            for q in ["", "q"] {
+                let s = e.suffix();
+                out.push(CatalogEntry { name: format!("vld1{q}_{s}_x{x}"), ret: e.base_class() });
+                out.push(CatalogEntry { name: format!("vst1{q}_{s}_x{x}"), ret: BaseClass::Void });
+            }
+        }
+    }
+    // reinterprets: dst x src over the full grid (excluding identity)
+    let re_elems: Vec<Elem> = INTS
+        .iter()
+        .chain(&UINTS)
+        .chain(&FLOATS)
+        .chain(&POLYS)
+        .chain([Elem::BF16].iter())
+        .copied()
+        .collect();
+    for q in ["", "q"] {
+        for &dst in &re_elems {
+            for &src in &re_elems {
+                if dst == src {
+                    continue;
+                }
+                out.push(CatalogEntry {
+                    name: format!("vreinterpret{q}_{}_{}", dst.suffix(), src.suffix()),
+                    ret: dst.base_class(),
+                });
+            }
+        }
+    }
+    out.sort_by(|a, b| a.name.cmp(&b.name));
+    out.dedup_by(|a, b| a.name == b.name);
+    out
+}
+
+/// Table 1: counts by return base class.
+pub fn counts_by_class() -> BTreeMap<BaseClass, usize> {
+    let mut m = BTreeMap::new();
+    for e in generate() {
+        *m.entry(e.ret).or_insert(0) += 1;
+    }
+    m
+}
+
+/// The paper's Table 1 reference values.
+pub fn paper_table1() -> Vec<(BaseClass, usize)> {
+    vec![
+        (BaseClass::Int, 1279),
+        (BaseClass::Uint, 1448),
+        (BaseClass::Float, 834),
+        (BaseClass::Poly, 371),
+        (BaseClass::Void, 331),
+        (BaseClass::Bfloat, 81),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_is_deduplicated_and_large() {
+        let cat = generate();
+        assert!(cat.len() > 2500, "catalog too small: {}", cat.len());
+        let mut names: Vec<&str> = cat.iter().map(|e| e.name.as_str()).collect();
+        let n = names.len();
+        names.dedup();
+        assert_eq!(names.len(), n, "duplicate names in catalog");
+    }
+
+    #[test]
+    fn class_ordering_matches_paper() {
+        // paper Table 1: uint > int > float > poly > void > bfloat
+        let c = counts_by_class();
+        let get = |b: BaseClass| *c.get(&b).unwrap_or(&0);
+        assert!(get(BaseClass::Uint) > get(BaseClass::Int));
+        assert!(get(BaseClass::Int) > get(BaseClass::Float));
+        assert!(get(BaseClass::Float) > get(BaseClass::Poly));
+        assert!(get(BaseClass::Poly) > get(BaseClass::Bfloat));
+        assert!(get(BaseClass::Void) > get(BaseClass::Bfloat));
+    }
+
+    #[test]
+    fn known_names_present() {
+        let cat = generate();
+        for want in [
+            "vaddq_s32",
+            "vget_high_s32",
+            "vceqq_s32",
+            "vrbitq_u8",
+            "vst1q_s32",
+            "vld1q_f32",
+            "vreinterpretq_u8_s32",
+            "vfmaq_lane_f32",
+        ] {
+            assert!(cat.iter().any(|e| e.name == want), "missing {want}");
+        }
+    }
+
+    #[test]
+    fn comparisons_return_uint() {
+        let cat = generate();
+        let e = cat.iter().find(|e| e.name == "vceqq_s32").unwrap();
+        assert_eq!(e.ret, BaseClass::Uint);
+        let e = cat.iter().find(|e| e.name == "vst1q_s32").unwrap();
+        assert_eq!(e.ret, BaseClass::Void);
+    }
+}

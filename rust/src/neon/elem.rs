@@ -1,0 +1,453 @@
+//! Element (lane) types shared by the NEON and RVV semantic models.
+//!
+//! Lane values are stored as raw bit patterns (`u64`, low bits significant)
+//! and interpreted through [`Elem`]: signed/unsigned integers of 8..64 bits,
+//! IEEE binary16/32/64, bfloat16, and the NEON polynomial types (`p8`/`p16`/
+//! `p64`, carry-less multiply domain — bit patterns only).
+
+/// Lane element type. Mirrors the NEON base-type vocabulary of the paper's
+/// Table 1 (`int`, `uint`, `float`, `poly`, `bfloat`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Elem {
+    I8,
+    I16,
+    I32,
+    I64,
+    U8,
+    U16,
+    U32,
+    U64,
+    F16,
+    F32,
+    F64,
+    P8,
+    P16,
+    P64,
+    BF16,
+}
+
+/// Return-base-type class used by the paper's Table 1 categorisation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum BaseClass {
+    Int,
+    Uint,
+    Float,
+    Poly,
+    Void,
+    Bfloat,
+}
+
+impl BaseClass {
+    pub fn name(self) -> &'static str {
+        match self {
+            BaseClass::Int => "int",
+            BaseClass::Uint => "uint",
+            BaseClass::Float => "float",
+            BaseClass::Poly => "poly",
+            BaseClass::Void => "void",
+            BaseClass::Bfloat => "bfloat",
+        }
+    }
+}
+
+impl Elem {
+    pub const ALL: [Elem; 15] = [
+        Elem::I8,
+        Elem::I16,
+        Elem::I32,
+        Elem::I64,
+        Elem::U8,
+        Elem::U16,
+        Elem::U32,
+        Elem::U64,
+        Elem::F16,
+        Elem::F32,
+        Elem::F64,
+        Elem::P8,
+        Elem::P16,
+        Elem::P64,
+        Elem::BF16,
+    ];
+
+    /// Lane width in bits.
+    pub fn bits(self) -> u32 {
+        match self {
+            Elem::I8 | Elem::U8 | Elem::P8 => 8,
+            Elem::I16 | Elem::U16 | Elem::F16 | Elem::P16 | Elem::BF16 => 16,
+            Elem::I32 | Elem::U32 | Elem::F32 => 32,
+            Elem::I64 | Elem::U64 | Elem::F64 | Elem::P64 => 64,
+        }
+    }
+
+    pub fn bytes(self) -> u32 {
+        self.bits() / 8
+    }
+
+    pub fn is_float(self) -> bool {
+        matches!(self, Elem::F16 | Elem::F32 | Elem::F64 | Elem::BF16)
+    }
+
+    pub fn is_signed(self) -> bool {
+        matches!(self, Elem::I8 | Elem::I16 | Elem::I32 | Elem::I64)
+    }
+
+    pub fn is_unsigned(self) -> bool {
+        matches!(self, Elem::U8 | Elem::U16 | Elem::U32 | Elem::U64)
+    }
+
+    pub fn is_poly(self) -> bool {
+        matches!(self, Elem::P8 | Elem::P16 | Elem::P64)
+    }
+
+    /// NEON type-suffix, e.g. `s32` in `vaddq_s32`.
+    pub fn suffix(self) -> &'static str {
+        match self {
+            Elem::I8 => "s8",
+            Elem::I16 => "s16",
+            Elem::I32 => "s32",
+            Elem::I64 => "s64",
+            Elem::U8 => "u8",
+            Elem::U16 => "u16",
+            Elem::U32 => "u32",
+            Elem::U64 => "u64",
+            Elem::F16 => "f16",
+            Elem::F32 => "f32",
+            Elem::F64 => "f64",
+            Elem::P8 => "p8",
+            Elem::P16 => "p16",
+            Elem::P64 => "p64",
+            Elem::BF16 => "bf16",
+        }
+    }
+
+    /// NEON C type name, e.g. `int32` in `int32x4_t`.
+    pub fn ctype(self) -> &'static str {
+        match self {
+            Elem::I8 => "int8",
+            Elem::I16 => "int16",
+            Elem::I32 => "int32",
+            Elem::I64 => "int64",
+            Elem::U8 => "uint8",
+            Elem::U16 => "uint16",
+            Elem::U32 => "uint32",
+            Elem::U64 => "uint64",
+            Elem::F16 => "float16",
+            Elem::F32 => "float32",
+            Elem::F64 => "float64",
+            Elem::P8 => "poly8",
+            Elem::P16 => "poly16",
+            Elem::P64 => "poly64",
+            Elem::BF16 => "bfloat16",
+        }
+    }
+
+    /// Table 1 categorisation class.
+    pub fn base_class(self) -> BaseClass {
+        match self {
+            Elem::I8 | Elem::I16 | Elem::I32 | Elem::I64 => BaseClass::Int,
+            Elem::U8 | Elem::U16 | Elem::U32 | Elem::U64 => BaseClass::Uint,
+            Elem::F16 | Elem::F32 | Elem::F64 => BaseClass::Float,
+            Elem::P8 | Elem::P16 | Elem::P64 => BaseClass::Poly,
+            Elem::BF16 => BaseClass::Bfloat,
+        }
+    }
+
+    /// The unsigned integer element of the same width.
+    pub fn as_unsigned(self) -> Elem {
+        match self.bits() {
+            8 => Elem::U8,
+            16 => Elem::U16,
+            32 => Elem::U32,
+            _ => Elem::U64,
+        }
+    }
+
+    /// The signed integer element of the same width.
+    pub fn as_signed(self) -> Elem {
+        match self.bits() {
+            8 => Elem::I8,
+            16 => Elem::I16,
+            32 => Elem::I32,
+            _ => Elem::I64,
+        }
+    }
+
+    /// Widened element (for `vmovl`/`vmull`): same signedness, double width.
+    pub fn widened(self) -> Option<Elem> {
+        Some(match self {
+            Elem::I8 => Elem::I16,
+            Elem::I16 => Elem::I32,
+            Elem::I32 => Elem::I64,
+            Elem::U8 => Elem::U16,
+            Elem::U16 => Elem::U32,
+            Elem::U32 => Elem::U64,
+            Elem::F16 => Elem::F32,
+            Elem::F32 => Elem::F64,
+            _ => return None,
+        })
+    }
+
+    /// Narrowed element (for `vmovn`): same signedness, half width.
+    pub fn narrowed(self) -> Option<Elem> {
+        Some(match self {
+            Elem::I16 => Elem::I8,
+            Elem::I32 => Elem::I16,
+            Elem::I64 => Elem::I32,
+            Elem::U16 => Elem::U8,
+            Elem::U32 => Elem::U16,
+            Elem::U64 => Elem::U32,
+            Elem::F32 => Elem::F16,
+            Elem::F64 => Elem::F32,
+            _ => return None,
+        })
+    }
+
+    /// Mask of the significant low bits of a raw lane value.
+    pub fn lane_mask(self) -> u64 {
+        match self.bits() {
+            64 => u64::MAX,
+            b => (1u64 << b) - 1,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Typed lane interpretation over raw bits.
+// ---------------------------------------------------------------------------
+
+/// Sign-extend the low `bits` of `raw` to i64.
+pub fn sext(raw: u64, bits: u32) -> i64 {
+    let sh = 64 - bits;
+    ((raw << sh) as i64) >> sh
+}
+
+/// Interpret raw bits as a signed integer lane value.
+pub fn to_i64(e: Elem, raw: u64) -> i64 {
+    debug_assert!(!e.is_float());
+    if e.is_signed() {
+        sext(raw & e.lane_mask(), e.bits())
+    } else {
+        (raw & e.lane_mask()) as i64
+    }
+}
+
+/// Interpret raw bits as an unsigned integer lane value.
+pub fn to_u64(e: Elem, raw: u64) -> u64 {
+    raw & e.lane_mask()
+}
+
+/// Interpret raw bits as a float lane value (f16/bf16 promoted to f64 via f32).
+pub fn to_f64(e: Elem, raw: u64) -> f64 {
+    match e {
+        Elem::F16 => f16_to_f32((raw & 0xffff) as u16) as f64,
+        Elem::BF16 => bf16_to_f32((raw & 0xffff) as u16) as f64,
+        Elem::F32 => f32::from_bits(raw as u32) as f64,
+        Elem::F64 => f64::from_bits(raw),
+        _ => panic!("to_f64 on non-float elem {e:?}"),
+    }
+}
+
+/// Encode a float value into the raw bits of a float lane.
+pub fn from_f64(e: Elem, v: f64) -> u64 {
+    match e {
+        Elem::F16 => f32_to_f16(v as f32) as u64,
+        Elem::BF16 => f32_to_bf16(v as f32) as u64,
+        Elem::F32 => (v as f32).to_bits() as u64,
+        Elem::F64 => v.to_bits(),
+        _ => panic!("from_f64 on non-float elem {e:?}"),
+    }
+}
+
+/// Encode an integer value into raw lane bits (two's complement truncation).
+pub fn from_i64(e: Elem, v: i64) -> u64 {
+    (v as u64) & e.lane_mask()
+}
+
+/// Saturate `v` into the representable range of integer elem `e`.
+pub fn saturate(e: Elem, v: i128) -> u64 {
+    let bits = e.bits();
+    if e.is_signed() {
+        let max = (1i128 << (bits - 1)) - 1;
+        let min = -(1i128 << (bits - 1));
+        from_i64(e, v.clamp(min, max) as i64)
+    } else {
+        let max = (1i128 << bits) - 1;
+        (v.clamp(0, max) as u64) & e.lane_mask()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Software binary16 / bfloat16.
+// ---------------------------------------------------------------------------
+
+/// IEEE binary16 -> binary32 (bit-exact, handles subnormals/inf/nan).
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h >> 15) & 1) as u32;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let frac = (h & 0x3ff) as u32;
+    let bits = if exp == 0 {
+        if frac == 0 {
+            sign << 31
+        } else {
+            // subnormal: normalise
+            let mut e = 127 - 15 + 1;
+            let mut f = frac;
+            while f & 0x400 == 0 {
+                f <<= 1;
+                e -= 1;
+            }
+            (sign << 31) | ((e as u32) << 23) | ((f & 0x3ff) << 13)
+        }
+    } else if exp == 0x1f {
+        (sign << 31) | (0xff << 23) | (frac << 13)
+    } else {
+        (sign << 31) | ((exp + 127 - 15) << 23) | (frac << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// binary32 -> IEEE binary16 with round-to-nearest-even.
+pub fn f32_to_f16(f: f32) -> u16 {
+    let bits = f.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let frac = bits & 0x7f_ffff;
+    if exp == 0xff {
+        // inf / nan
+        return sign | 0x7c00 | if frac != 0 { 0x200 } else { 0 };
+    }
+    let e = exp - 127 + 15;
+    if e >= 0x1f {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if e <= 0 {
+        if e < -10 {
+            return sign; // underflow -> zero
+        }
+        // subnormal result
+        let m = frac | 0x80_0000;
+        let shift = (14 - e) as u32;
+        let half = m >> shift;
+        let rem = m & ((1 << shift) - 1);
+        let round = (rem > (1 << (shift - 1)))
+            || (rem == (1 << (shift - 1)) && (half & 1) == 1);
+        return sign | (half as u16 + round as u16);
+    }
+    let half = ((e as u32) << 10) | (frac >> 13);
+    let rem = frac & 0x1fff;
+    let round = (rem > 0x1000) || (rem == 0x1000 && (half & 1) == 1);
+    sign | (half as u16 + round as u16)
+}
+
+/// bfloat16 -> binary32 (truncation inverse: hi 16 bits).
+pub fn bf16_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// binary32 -> bfloat16 with round-to-nearest-even.
+pub fn f32_to_bf16(f: f32) -> u16 {
+    let bits = f.to_bits();
+    if f.is_nan() {
+        return ((bits >> 16) as u16) | 0x40; // quiet the nan
+    }
+    let round_bit = 0x8000u32;
+    let lsb = (bits >> 16) & 1;
+    let rounded = bits.wrapping_add(0x7fff + lsb);
+    // overflow of the low half carries into the exponent, which is correct RNE
+    let _ = round_bit;
+    (rounded >> 16) as u16
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn widths() {
+        assert_eq!(Elem::I8.bits(), 8);
+        assert_eq!(Elem::F16.bits(), 16);
+        assert_eq!(Elem::P64.bits(), 64);
+        for e in Elem::ALL {
+            assert_eq!(e.bytes() * 8, e.bits());
+        }
+    }
+
+    #[test]
+    fn classes() {
+        assert_eq!(Elem::I32.base_class(), BaseClass::Int);
+        assert_eq!(Elem::U8.base_class(), BaseClass::Uint);
+        assert_eq!(Elem::F32.base_class(), BaseClass::Float);
+        assert_eq!(Elem::P8.base_class(), BaseClass::Poly);
+        assert_eq!(Elem::BF16.base_class(), BaseClass::Bfloat);
+    }
+
+    #[test]
+    fn sign_extension() {
+        assert_eq!(to_i64(Elem::I8, 0xff), -1);
+        assert_eq!(to_i64(Elem::I8, 0x7f), 127);
+        assert_eq!(to_i64(Elem::I16, 0x8000), -32768);
+        assert_eq!(to_i64(Elem::U8, 0xff), 255);
+    }
+
+    #[test]
+    fn saturation() {
+        assert_eq!(to_i64(Elem::I8, saturate(Elem::I8, 300)), 127);
+        assert_eq!(to_i64(Elem::I8, saturate(Elem::I8, -300)), -128);
+        assert_eq!(to_u64(Elem::U8, saturate(Elem::U8, 300)), 255);
+        assert_eq!(to_u64(Elem::U8, saturate(Elem::U8, -4)), 0);
+        assert_eq!(to_i64(Elem::I16, saturate(Elem::I16, 12)), 12);
+    }
+
+    #[test]
+    fn f16_roundtrip() {
+        // (1e-5 is subnormal in binary16 — covered by f16_subnormals below)
+        for v in [0.0f32, 1.0, -1.0, 0.5, 65504.0, -2.25, 3.140625] {
+            let h = f32_to_f16(v);
+            let back = f16_to_f32(h);
+            let rel = if v == 0.0 {
+                (back - v).abs()
+            } else {
+                ((back - v) / v).abs()
+            };
+            assert!(rel < 1e-3, "v={v} back={back}");
+        }
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+        assert_eq!(f16_to_f32(f32_to_f16(f32::INFINITY)), f32::INFINITY);
+        // overflow saturates to inf
+        assert_eq!(f16_to_f32(f32_to_f16(1e30)), f32::INFINITY);
+    }
+
+    #[test]
+    fn f16_subnormals() {
+        // smallest positive binary16 subnormal = 2^-24
+        let tiny = 2.0f32.powi(-24);
+        assert_eq!(f16_to_f32(f32_to_f16(tiny)), tiny);
+        let h = f32_to_f16(2.0f32.powi(-25) * 1.5);
+        assert!(f16_to_f32(h) > 0.0);
+    }
+
+    #[test]
+    fn bf16_roundtrip() {
+        for v in [0.0f32, 1.0, -3.5, 1234.0, 1e30, -1e-20] {
+            let b = f32_to_bf16(v);
+            let back = bf16_to_f32(b);
+            let rel = if v == 0.0 {
+                (back - v).abs()
+            } else {
+                ((back - v) / v).abs()
+            };
+            assert!(rel < 1e-2, "v={v} back={back}");
+        }
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn widen_narrow() {
+        assert_eq!(Elem::I8.widened(), Some(Elem::I16));
+        assert_eq!(Elem::U32.widened(), Some(Elem::U64));
+        assert_eq!(Elem::I64.widened(), None);
+        assert_eq!(Elem::I16.narrowed(), Some(Elem::I8));
+        assert_eq!(Elem::F64.narrowed(), Some(Elem::F32));
+        assert_eq!(Elem::I8.narrowed(), None);
+    }
+}

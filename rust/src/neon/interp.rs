@@ -1,0 +1,469 @@
+//! NEON interpreter: executes an IR program directly under NEON semantics.
+//! This is the golden reference every translated RVV program is checked
+//! against (the role SIMDe's native-ARM path plays in the paper's
+//! validation workflow).
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::elem::Elem;
+use super::ops::{ArgTy, Family};
+use super::semantics::{eval_pure, Value};
+use super::vreg::{VReg, VecTy};
+use crate::ir::{Arg, BufDecl, BufKind, NeonCall, Program, Stmt};
+#[cfg(test)]
+use crate::ir::AddrExpr;
+
+/// Raw byte memory for one buffer.
+#[derive(Debug, Clone)]
+pub struct Buffer {
+    pub elem: Elem,
+    pub data: Vec<u8>,
+}
+
+impl Buffer {
+    pub fn zeros(elem: Elem, len: usize) -> Buffer {
+        Buffer { elem, data: vec![0; len * elem.bytes() as usize] }
+    }
+
+    pub fn from_f32s(vals: &[f32]) -> Buffer {
+        let mut data = Vec::with_capacity(vals.len() * 4);
+        for v in vals {
+            data.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        Buffer { elem: Elem::F32, data }
+    }
+
+    pub fn from_i32s(vals: &[i32]) -> Buffer {
+        let mut data = Vec::with_capacity(vals.len() * 4);
+        for v in vals {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Buffer { elem: Elem::I32, data }
+    }
+
+    pub fn from_u8s(vals: &[u8]) -> Buffer {
+        Buffer { elem: Elem::U8, data: vals.to_vec() }
+    }
+
+    pub fn from_u32s(vals: &[u32]) -> Buffer {
+        let mut data = Vec::with_capacity(vals.len() * 4);
+        for v in vals {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Buffer { elem: Elem::U32, data }
+    }
+
+    pub fn len_elems(&self) -> usize {
+        self.data.len() / self.elem.bytes() as usize
+    }
+
+    pub fn read_elem(&self, idx: usize) -> u64 {
+        let w = self.elem.bytes() as usize;
+        let off = idx * w;
+        let mut buf = [0u8; 8];
+        buf[..w].copy_from_slice(&self.data[off..off + w]);
+        u64::from_le_bytes(buf)
+    }
+
+    pub fn write_elem(&mut self, idx: usize, raw: u64) {
+        let w = self.elem.bytes() as usize;
+        let off = idx * w;
+        self.data[off..off + w].copy_from_slice(&raw.to_le_bytes()[..w]);
+    }
+
+    pub fn as_f32s(&self) -> Vec<f32> {
+        assert_eq!(self.elem, Elem::F32);
+        (0..self.len_elems())
+            .map(|i| f32::from_bits(self.read_elem(i) as u32))
+            .collect()
+    }
+
+    pub fn as_i32s(&self) -> Vec<i32> {
+        (0..self.len_elems()).map(|i| self.read_elem(i) as i32).collect()
+    }
+
+    pub fn as_u32s(&self) -> Vec<u32> {
+        (0..self.len_elems()).map(|i| self.read_elem(i) as u32).collect()
+    }
+}
+
+/// Named input set for a program run.
+pub type Inputs = HashMap<String, Buffer>;
+
+/// Execution statistics from a NEON interpretation.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NeonStats {
+    /// Dynamic count of NEON intrinsic invocations.
+    pub intrinsic_execs: u64,
+    /// Dynamic count of scalar (address) assignments.
+    pub scalar_execs: u64,
+    /// Dynamic loop iterations.
+    pub loop_iters: u64,
+}
+
+/// Interpreter state over one program.
+pub struct NeonInterp<'p> {
+    prog: &'p Program,
+    bufs: Vec<Buffer>,
+    vregs: Vec<Option<VReg>>,
+    sregs: Vec<i64>,
+    pub stats: NeonStats,
+}
+
+impl<'p> NeonInterp<'p> {
+    pub fn new(prog: &'p Program, inputs: &Inputs) -> Result<NeonInterp<'p>> {
+        let mut bufs = Vec::with_capacity(prog.bufs.len());
+        for decl in &prog.bufs {
+            bufs.push(materialise(decl, inputs)?);
+        }
+        Ok(NeonInterp {
+            prog,
+            bufs,
+            vregs: vec![None; prog.n_vregs],
+            sregs: vec![0; prog.n_sregs],
+            stats: NeonStats::default(),
+        })
+    }
+
+    /// Run to completion; returns output buffers by name.
+    pub fn run(mut self) -> Result<HashMap<String, Buffer>> {
+        let body = &self.prog.body;
+        self.exec_block(body)?;
+        let mut out = HashMap::new();
+        for (decl, buf) in self.prog.bufs.iter().zip(self.bufs) {
+            if decl.kind == BufKind::Output {
+                out.insert(decl.name.clone(), buf);
+            }
+        }
+        Ok(out)
+    }
+
+    fn exec_block(&mut self, stmts: &'p [Stmt]) -> Result<()> {
+        for s in stmts {
+            match s {
+                Stmt::VOp { dst, call } => {
+                    let v = self.exec_call(call)?.expect("VOp must produce a value");
+                    self.vregs[*dst as usize] = Some(v);
+                    self.stats.intrinsic_execs += 1;
+                }
+                Stmt::VStore { call } => {
+                    let r = self.exec_call(call)?;
+                    debug_assert!(r.is_none());
+                    self.stats.intrinsic_execs += 1;
+                }
+                Stmt::SSet { dst, expr } => {
+                    self.sregs[*dst as usize] = expr.eval(&self.sregs);
+                    self.stats.scalar_execs += 1;
+                }
+                Stmt::Loop { ivar, start, end, step, body } => {
+                    let mut i = *start;
+                    while i < *end {
+                        self.sregs[*ivar as usize] = i;
+                        self.stats.loop_iters += 1;
+                        self.exec_block(body)?;
+                        i += step;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn vreg(&self, r: u32) -> Result<VReg> {
+        self.vregs[r as usize]
+            .clone()
+            .with_context(|| format!("read of undefined vreg v{r}"))
+    }
+
+    /// Execute one intrinsic call: memory families here, pure families via
+    /// [`eval_pure`].
+    fn exec_call(&mut self, call: &NeonCall) -> Result<Option<VReg>> {
+        let op = call.op;
+        match op.family {
+            Family::Ld1 => {
+                let (buf, idx) = self.resolve_mem(&call.args[0])?;
+                let vt = op.vt();
+                let v = self.load_vec(buf, idx, vt)?;
+                Ok(Some(v))
+            }
+            Family::Ld1Dup => {
+                let (buf, idx) = self.resolve_mem(&call.args[0])?;
+                let raw = self.checked_read(buf, idx, 1)?[0];
+                Ok(Some(VReg::splat_raw(op.vt(), raw)))
+            }
+            Family::Ld1Lane => {
+                let (buf, idx) = self.resolve_mem(&call.args[0])?;
+                let mut v = self.vreg(arg_v(&call.args[1])?)?;
+                let lane = arg_imm(&call.args[2])? as usize;
+                let raw = self.checked_read(buf, idx, 1)?[0];
+                v.set_lane(lane, raw);
+                Ok(Some(v))
+            }
+            Family::St1 => {
+                let (buf, idx) = self.resolve_mem(&call.args[0])?;
+                let v = self.vreg(arg_v(&call.args[1])?)?;
+                self.store_vec(buf, idx, &v)?;
+                Ok(None)
+            }
+            Family::St1Lane => {
+                let (buf, idx) = self.resolve_mem(&call.args[0])?;
+                let v = self.vreg(arg_v(&call.args[1])?)?;
+                let lane = arg_imm(&call.args[2])? as usize;
+                self.checked_write(buf, idx, &[v.lane(lane)])?;
+                Ok(None)
+            }
+            _ => {
+                // pure op: materialise arguments and evaluate
+                let mut vals = Vec::with_capacity(call.args.len());
+                for a in &call.args {
+                    vals.push(match a {
+                        Arg::V(r) => Value::V(self.vreg(*r)?),
+                        Arg::S(r) => Value::Imm(self.sregs[*r as usize]),
+                        Arg::Imm(i) => Value::Imm(*i),
+                        Arg::ImmF(f) => Value::F(*f),
+                        Arg::Mem { .. } => bail!("{} takes no memory operand", op.name()),
+                    });
+                }
+                Ok(Some(eval_pure(op, &vals)))
+            }
+        }
+    }
+
+    fn resolve_mem(&self, a: &Arg) -> Result<(usize, usize)> {
+        match a {
+            Arg::Mem { buf, index } => {
+                let idx = index.eval(&self.sregs);
+                if idx < 0 {
+                    bail!("negative buffer index {idx}");
+                }
+                Ok((*buf as usize, idx as usize))
+            }
+            _ => bail!("expected memory operand"),
+        }
+    }
+
+    fn checked_read(&self, buf: usize, idx: usize, n: usize) -> Result<Vec<u64>> {
+        let b = &self.bufs[buf];
+        if idx + n > b.len_elems() {
+            bail!(
+                "OOB read of {}[{}..{}] (len {})",
+                self.prog.bufs[buf].name,
+                idx,
+                idx + n,
+                b.len_elems()
+            );
+        }
+        Ok((idx..idx + n).map(|i| b.read_elem(i)).collect())
+    }
+
+    fn checked_write(&mut self, buf: usize, idx: usize, vals: &[u64]) -> Result<()> {
+        let b = &mut self.bufs[buf];
+        if idx + vals.len() > b.len_elems() {
+            bail!(
+                "OOB write of {}[{}..{}] (len {})",
+                self.prog.bufs[buf].name,
+                idx,
+                idx + vals.len(),
+                b.len_elems()
+            );
+        }
+        for (i, &v) in vals.iter().enumerate() {
+            b.write_elem(idx + i, v);
+        }
+        Ok(())
+    }
+
+    fn load_vec(&self, buf: usize, idx: usize, vt: VecTy) -> Result<VReg> {
+        let raws = self.checked_read(buf, idx, vt.lanes as usize)?;
+        Ok(VReg::from_raw(vt, raws))
+    }
+
+    fn store_vec(&mut self, buf: usize, idx: usize, v: &VReg) -> Result<()> {
+        self.checked_write(buf, idx, &v.lanes.clone())
+    }
+}
+
+fn materialise(decl: &BufDecl, inputs: &Inputs) -> Result<Buffer> {
+    match decl.kind {
+        BufKind::Input => {
+            let b = inputs
+                .get(&decl.name)
+                .with_context(|| format!("missing input buffer '{}'", decl.name))?;
+            if b.elem != decl.elem || b.len_elems() != decl.len {
+                bail!(
+                    "input '{}' mismatch: want {:?}x{}, got {:?}x{}",
+                    decl.name,
+                    decl.elem,
+                    decl.len,
+                    b.elem,
+                    b.len_elems()
+                );
+            }
+            Ok(b.clone())
+        }
+        BufKind::Output | BufKind::Scratch => Ok(Buffer::zeros(decl.elem, decl.len)),
+    }
+}
+
+fn arg_v(a: &Arg) -> Result<u32> {
+    match a {
+        Arg::V(r) => Ok(*r),
+        _ => bail!("expected vector register argument"),
+    }
+}
+
+fn arg_imm(a: &Arg) -> Result<i64> {
+    match a {
+        Arg::Imm(i) => Ok(*i),
+        _ => bail!("expected immediate argument"),
+    }
+}
+
+/// Validate that every intrinsic call in a program matches its signature —
+/// the IR-level analogue of C type checking against `<arm_neon.h>`.
+pub fn typecheck(prog: &Program) -> Result<()> {
+    fn check_block(prog: &Program, stmts: &[Stmt]) -> Result<()> {
+        for s in stmts {
+            match s {
+                Stmt::VOp { call, .. } | Stmt::VStore { call } => {
+                    let sig = call.op.sig();
+                    if sig.args.len() != call.args.len() {
+                        bail!(
+                            "{}: arity mismatch ({} args, want {})",
+                            call.op.name(),
+                            call.args.len(),
+                            sig.args.len()
+                        );
+                    }
+                    for (at, a) in sig.args.iter().zip(&call.args) {
+                        let ok = matches!(
+                            (at, a),
+                            (ArgTy::V(_), Arg::V(_))
+                                | (ArgTy::Ptr(_), Arg::Mem { .. })
+                                | (ArgTy::Imm, Arg::Imm(_))
+                                | (ArgTy::ScalarInt, Arg::Imm(_))
+                                | (ArgTy::ScalarInt, Arg::ImmF(_))
+                                | (ArgTy::ScalarInt, Arg::S(_))
+                        );
+                        if !ok {
+                            bail!("{}: argument kind mismatch ({at:?} vs {a:?})", call.op.name());
+                        }
+                        if let (ArgTy::Ptr(e), Arg::Mem { buf, .. }) = (at, a) {
+                            let decl = &prog.bufs[*buf as usize];
+                            if decl.elem.bits() != e.bits() {
+                                bail!(
+                                    "{}: pointer elem width mismatch (buf '{}' is {:?}, op wants {:?})",
+                                    call.op.name(),
+                                    decl.name,
+                                    decl.elem,
+                                    e
+                                );
+                            }
+                        }
+                    }
+                }
+                Stmt::Loop { body, .. } => check_block(prog, body)?,
+                Stmt::SSet { .. } => {}
+            }
+        }
+        Ok(())
+    }
+    check_block(prog, &prog.body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::ProgramBuilder;
+    use crate::neon::ops::Family;
+
+    fn vadd_program() -> Program {
+        let mut b = ProgramBuilder::new("vadd");
+        let a = b.input("A", Elem::I32, 4);
+        let bb = b.input("B", Elem::I32, 4);
+        let o = b.output("O", Elem::I32, 4);
+        let va = b.vop(Family::Ld1, Elem::I32, true, vec![Arg::mem(a, AddrExpr::k(0))]);
+        let vb = b.vop(Family::Ld1, Elem::I32, true, vec![Arg::mem(bb, AddrExpr::k(0))]);
+        let vc = b.vop(Family::Add, Elem::I32, true, vec![Arg::V(va), Arg::V(vb)]);
+        b.vstore(Family::St1, Elem::I32, true, vec![Arg::mem(o, AddrExpr::k(0)), Arg::V(vc)]);
+        b.finish()
+    }
+
+    #[test]
+    fn listing9_vector_add() {
+        // the paper's Listing 9 example: {0,1,2,3} + {4,5,6,7}
+        let p = vadd_program();
+        typecheck(&p).unwrap();
+        let mut inputs = Inputs::new();
+        inputs.insert("A".into(), Buffer::from_i32s(&[0, 1, 2, 3]));
+        inputs.insert("B".into(), Buffer::from_i32s(&[4, 5, 6, 7]));
+        let out = NeonInterp::new(&p, &inputs).unwrap().run().unwrap();
+        assert_eq!(out["O"].as_i32s(), vec![4, 6, 8, 10]);
+    }
+
+    #[test]
+    fn looped_relu() {
+        let n = 32usize;
+        let mut b = ProgramBuilder::new("relu");
+        let x = b.input("X", Elem::F32, n);
+        let y = b.output("Y", Elem::F32, n);
+        let zero = b.vop(Family::DupN, Elem::F32, true, vec![Arg::Imm(0)]);
+        b.loop_(0, n as i64, 4, |b, i| {
+            let v = b.vop(Family::Ld1, Elem::F32, true, vec![Arg::mem(x, AddrExpr::s(i))]);
+            let r = b.vop(Family::Max, Elem::F32, true, vec![Arg::V(v), Arg::V(zero)]);
+            b.vstore(Family::St1, Elem::F32, true, vec![Arg::mem(y, AddrExpr::s(i)), Arg::V(r)]);
+        });
+        let p = b.finish();
+        typecheck(&p).unwrap();
+
+        let xs: Vec<f32> = (0..n).map(|i| i as f32 - 16.0).collect();
+        let mut inputs = Inputs::new();
+        inputs.insert("X".into(), Buffer::from_f32s(&xs));
+        let interp = NeonInterp::new(&p, &inputs).unwrap();
+        let out = interp.run().unwrap();
+        let ys = out["Y"].as_f32s();
+        for (x, y) in xs.iter().zip(&ys) {
+            assert_eq!(*y, x.max(0.0));
+        }
+    }
+
+    #[test]
+    fn oob_read_is_an_error() {
+        let mut b = ProgramBuilder::new("oob");
+        let a = b.input("A", Elem::I32, 3); // too small for a q load
+        let _ = b.vop(Family::Ld1, Elem::I32, true, vec![Arg::mem(a, AddrExpr::k(0))]);
+        let p = b.finish();
+        let mut inputs = Inputs::new();
+        inputs.insert("A".into(), Buffer::from_i32s(&[1, 2, 3]));
+        let r = NeonInterp::new(&p, &inputs).unwrap().run();
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn undefined_vreg_is_an_error() {
+        let mut b = ProgramBuilder::new("undef");
+        let o = b.output("O", Elem::I32, 4);
+        let dangling = b.fresh_vreg();
+        b.vstore(Family::St1, Elem::I32, true, vec![Arg::mem(o, AddrExpr::k(0)), Arg::V(dangling)]);
+        let p = b.finish();
+        let r = NeonInterp::new(&p, &Inputs::new()).unwrap().run();
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn stats_count_dynamic_execs() {
+        let p = vadd_program();
+        let mut inputs = Inputs::new();
+        inputs.insert("A".into(), Buffer::from_i32s(&[0; 4]));
+        inputs.insert("B".into(), Buffer::from_i32s(&[0; 4]));
+        let interp = NeonInterp::new(&p, &inputs).unwrap();
+        let stats_holder = {
+            let mut i = interp;
+            i.exec_block(&p.body).unwrap();
+            i.stats
+        };
+        assert_eq!(stats_holder.intrinsic_execs, 4);
+    }
+}

@@ -1,0 +1,10 @@
+//! ARM NEON semantic model: element/vector types, the intrinsic family
+//! grid, executable lane semantics, the golden-reference interpreter, and
+//! the full-surface catalog behind the paper's Table 1.
+
+pub mod catalog;
+pub mod elem;
+pub mod interp;
+pub mod ops;
+pub mod semantics;
+pub mod vreg;

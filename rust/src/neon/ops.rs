@@ -1,0 +1,812 @@
+//! NEON intrinsic *families* and their instantiation grid.
+//!
+//! A concrete NEON intrinsic (e.g. `vaddq_s32`) is a [`NeonOp`]: a
+//! [`Family`] (`Add`) instantiated at an element type (`s32`) and a register
+//! width (`q` = 128-bit). Families carry their signature schema so the
+//! interpreter, the translation engine, and the catalog generator all agree
+//! on argument/return types.
+
+use super::elem::Elem;
+use super::vreg::VecTy;
+
+/// Intrinsic family. Names follow the ACLE `v<base>{q}_<type>` convention.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Family {
+    // -- memory ------------------------------------------------------------
+    /// `vld1{q}_T(ptr)` — contiguous load.
+    Ld1,
+    /// `vld1{q}_dup_T(ptr)` — load one element, broadcast.
+    Ld1Dup,
+    /// `vld1{q}_lane_T(ptr, v, lane)` — load one element into a lane.
+    Ld1Lane,
+    /// `vst1{q}_T(ptr, v)` — contiguous store.
+    St1,
+    /// `vst1{q}_lane_T(ptr, v, lane)` — store one lane.
+    St1Lane,
+
+    // -- arithmetic ---------------------------------------------------------
+    Add,
+    Sub,
+    Mul,
+    /// `vmla{q}` — `a + b*c`, not fused.
+    Mla,
+    /// `vmls{q}` — `a - b*c`, not fused.
+    Mls,
+    /// `vfma{q}` — fused multiply-add (float only).
+    Fma,
+    /// `vfms{q}` — fused multiply-subtract (float only).
+    Fms,
+    /// `vdiv{q}` — float divide (A64).
+    Div,
+    Abs,
+    Neg,
+    Min,
+    Max,
+    /// pairwise min/max/add over concatenated inputs (D-form binary).
+    Pmin,
+    Pmax,
+    Padd,
+    /// halving add `(a+b)>>1` without overflow.
+    Hadd,
+    /// rounding halving add `(a+b+1)>>1`.
+    Rhadd,
+    /// saturating add/sub.
+    Qadd,
+    Qsub,
+    /// absolute difference `|a-b|`.
+    Abd,
+
+    // -- by-lane forms (gemm microkernels) -----------------------------------
+    /// `vmul{q}_lane_T(a, b, lane)`.
+    MulLane,
+    /// `vmla{q}_lane_T(acc, a, b, lane)`.
+    MlaLane,
+    /// `vfma{q}_lane_T(acc, a, b, lane)` (float, fused).
+    FmaLane,
+
+    // -- widening multiplies --------------------------------------------------
+    /// `vmull_T(d, d) -> q` widening multiply.
+    Mull,
+    /// `vmlal_T(qacc, d, d) -> q` widening multiply-accumulate.
+    Mlal,
+
+    // -- comparisons (result: all-ones / all-zeros unsigned lanes) -----------
+    Ceq,
+    Cge,
+    Cgt,
+    Cle,
+    Clt,
+    /// `vceqz{q}` — compare equal to zero.
+    Ceqz,
+    /// `vtst{q}` — `(a & b) != 0`.
+    Tst,
+
+    // -- bitwise -------------------------------------------------------------
+    And,
+    Orr,
+    Eor,
+    /// `vbic{q}` — `a & ~b`.
+    Bic,
+    /// `vorn{q}` — `a | ~b`.
+    Orn,
+    Mvn,
+    /// `vbsl{q}(mask, a, b)` — bit select.
+    Bsl,
+
+    // -- shifts ---------------------------------------------------------------
+    /// `vshl{q}_n` — left shift by immediate.
+    ShlN,
+    /// `vshr{q}_n` — right shift by immediate (arithmetic for signed).
+    ShrN,
+    /// `vsli{q}_n` — shift left and insert.
+    SliN,
+    /// `vsri{q}_n` — shift right and insert.
+    SriN,
+    /// `vshl{q}` — shift by signed vector (negative = right).
+    Sshl,
+    /// `vshrn_n` — narrowing right shift (q source, d result).
+    ShrnN,
+
+    // -- permutes --------------------------------------------------------------
+    /// `vget_low_T(q) -> d`.
+    GetLow,
+    /// `vget_high_T(q) -> d` (paper Listing 5).
+    GetHigh,
+    /// `vcombine_T(d, d) -> q`.
+    Combine,
+    /// `vext{q}_T(a, b, n)` — extract window.
+    Ext,
+    Rev64,
+    Rev32,
+    Rev16,
+    Zip1,
+    Zip2,
+    Uzp1,
+    Uzp2,
+    Trn1,
+    Trn2,
+    /// `vdup{q}_lane_T(d, lane)` — broadcast a lane of a D vector.
+    DupLane,
+    /// `vdup{q}_n_T(scalar)` — broadcast an (integer-typed IR) scalar/imm.
+    DupN,
+    /// `vtbl1_u8(table, idx)` — byte table lookup (D form).
+    Tbl1,
+
+    // -- widen / narrow -----------------------------------------------------
+    /// `vmovl_T(d) -> q` widen.
+    Movl,
+    /// `vmovn_T(q) -> d` narrow (truncate).
+    Movn,
+    /// saturating narrow.
+    Qmovn,
+    /// saturating narrow signed->unsigned.
+    Qmovun,
+
+    // -- conversions -----------------------------------------------------------
+    /// `vcvt{q}_f32_s32` etc. — int -> float (elem = source int type).
+    CvtIF,
+    /// `vcvt{q}_s32_f32` etc. — float -> int, truncate toward zero.
+    CvtFI,
+    /// `vcvtn{q}_s32_f32` — float -> int, round to nearest even (A64).
+    CvtnFI,
+    /// `vreinterpret{q}` — bit cast (elem = destination type; src in args).
+    Reinterpret,
+
+    // -- float estimates / rounding -----------------------------------------
+    /// `vrecpe{q}` — reciprocal estimate.
+    Recpe,
+    /// `vrecps{q}` — reciprocal Newton step `2 - a*b`.
+    Recps,
+    /// `vrsqrte{q}` — reciprocal sqrt estimate.
+    Rsqrte,
+    /// `vrsqrts{q}` — rsqrt Newton step `(3 - a*b)/2`.
+    Rsqrts,
+    /// `vsqrt{q}` — exact sqrt (A64).
+    Sqrt,
+    /// `vrndn{q}` — round to nearest even.
+    Rndn,
+
+    // -- misc bit ops (paper Listing 7) ---------------------------------------
+    /// `vrbit{q}` — reverse bits within each byte... NEON semantics:
+    /// reverses the bits of each 8-bit element (defined on 8-bit types).
+    Rbit,
+    /// count leading zeros per lane.
+    Clz,
+    /// popcount per lane (8-bit types).
+    Cnt,
+}
+
+/// Argument type schema for one concrete intrinsic.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ArgTy {
+    /// Vector argument of the given type.
+    V(VecTy),
+    /// Pointer to elements of the given type (loads/stores).
+    Ptr(Elem),
+    /// Integer immediate (lane index, shift amount, ext offset).
+    Imm,
+    /// Integer scalar from an IR scalar register (vdupq_n of loop-derived
+    /// values); float `_n_` forms are expressed via `Ld1Dup` instead.
+    ScalarInt,
+}
+
+/// Full signature of a concrete intrinsic.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Sig {
+    pub args: Vec<ArgTy>,
+    pub ret: Option<VecTy>,
+}
+
+/// A concrete NEON intrinsic: family × element type × register width.
+///
+/// `elem`/`q` describe the *name suffix*: e.g. `vmovn_s16` has
+/// `elem = I16` (the source type) and the signature derives the rest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct NeonOp {
+    pub family: Family,
+    pub elem: Elem,
+    pub q: bool,
+}
+
+impl NeonOp {
+    pub fn new(family: Family, elem: Elem, q: bool) -> NeonOp {
+        NeonOp { family, elem, q }
+    }
+
+    /// Register width in bits of the *named* type.
+    pub fn bits(self) -> u32 {
+        if self.q {
+            128
+        } else {
+            64
+        }
+    }
+
+    /// The vector type named by the suffix (e.g. `int32x4_t` for `..q_s32`).
+    pub fn vt(self) -> VecTy {
+        VecTy::of_bits(self.elem, self.bits())
+    }
+
+    /// ACLE-style rendered name, e.g. `vaddq_s32`, `vget_high_s32`,
+    /// `vcvtq_f32_s32`.
+    pub fn name(self) -> String {
+        let q = if self.q { "q" } else { "" };
+        let s = self.elem.suffix();
+        match self.family {
+            Family::Ld1 => format!("vld1{q}_{s}"),
+            Family::Ld1Dup => format!("vld1{q}_dup_{s}"),
+            Family::Ld1Lane => format!("vld1{q}_lane_{s}"),
+            Family::St1 => format!("vst1{q}_{s}"),
+            Family::St1Lane => format!("vst1{q}_lane_{s}"),
+            Family::Add => format!("vadd{q}_{s}"),
+            Family::Sub => format!("vsub{q}_{s}"),
+            Family::Mul => format!("vmul{q}_{s}"),
+            Family::Mla => format!("vmla{q}_{s}"),
+            Family::Mls => format!("vmls{q}_{s}"),
+            Family::Fma => format!("vfma{q}_{s}"),
+            Family::Fms => format!("vfms{q}_{s}"),
+            Family::Div => format!("vdiv{q}_{s}"),
+            Family::Abs => format!("vabs{q}_{s}"),
+            Family::Neg => format!("vneg{q}_{s}"),
+            Family::Min => format!("vmin{q}_{s}"),
+            Family::Max => format!("vmax{q}_{s}"),
+            Family::Pmin => format!("vpmin_{s}"),
+            Family::Pmax => format!("vpmax_{s}"),
+            Family::Padd => format!("vpadd_{s}"),
+            Family::Hadd => format!("vhadd{q}_{s}"),
+            Family::Rhadd => format!("vrhadd{q}_{s}"),
+            Family::Qadd => format!("vqadd{q}_{s}"),
+            Family::Qsub => format!("vqsub{q}_{s}"),
+            Family::Abd => format!("vabd{q}_{s}"),
+            Family::MulLane => format!("vmul{q}_lane_{s}"),
+            Family::MlaLane => format!("vmla{q}_lane_{s}"),
+            Family::FmaLane => format!("vfma{q}_lane_{s}"),
+            Family::Mull => format!("vmull_{s}"),
+            Family::Mlal => format!("vmlal_{s}"),
+            Family::Ceq => format!("vceq{q}_{s}"),
+            Family::Cge => format!("vcge{q}_{s}"),
+            Family::Cgt => format!("vcgt{q}_{s}"),
+            Family::Cle => format!("vcle{q}_{s}"),
+            Family::Clt => format!("vclt{q}_{s}"),
+            Family::Ceqz => format!("vceqz{q}_{s}"),
+            Family::Tst => format!("vtst{q}_{s}"),
+            Family::And => format!("vand{q}_{s}"),
+            Family::Orr => format!("vorr{q}_{s}"),
+            Family::Eor => format!("veor{q}_{s}"),
+            Family::Bic => format!("vbic{q}_{s}"),
+            Family::Orn => format!("vorn{q}_{s}"),
+            Family::Mvn => format!("vmvn{q}_{s}"),
+            Family::Bsl => format!("vbsl{q}_{s}"),
+            Family::ShlN => format!("vshl{q}_n_{s}"),
+            Family::ShrN => format!("vshr{q}_n_{s}"),
+            Family::SliN => format!("vsli{q}_n_{s}"),
+            Family::SriN => format!("vsri{q}_n_{s}"),
+            Family::Sshl => format!("vshl{q}_{s}"),
+            Family::ShrnN => format!("vshrn_n_{s}"),
+            Family::GetLow => format!("vget_low_{s}"),
+            Family::GetHigh => format!("vget_high_{s}"),
+            Family::Combine => format!("vcombine_{s}"),
+            Family::Ext => format!("vext{q}_{s}"),
+            Family::Rev64 => format!("vrev64{q}_{s}"),
+            Family::Rev32 => format!("vrev32{q}_{s}"),
+            Family::Rev16 => format!("vrev16{q}_{s}"),
+            Family::Zip1 => format!("vzip1{q}_{s}"),
+            Family::Zip2 => format!("vzip2{q}_{s}"),
+            Family::Uzp1 => format!("vuzp1{q}_{s}"),
+            Family::Uzp2 => format!("vuzp2{q}_{s}"),
+            Family::Trn1 => format!("vtrn1{q}_{s}"),
+            Family::Trn2 => format!("vtrn2{q}_{s}"),
+            Family::DupLane => format!("vdup{q}_lane_{s}"),
+            Family::DupN => format!("vdup{q}_n_{s}"),
+            Family::Tbl1 => format!("vtbl1_{s}"),
+            Family::Movl => format!("vmovl_{s}"),
+            Family::Movn => format!("vmovn_{s}"),
+            Family::Qmovn => format!("vqmovn_{s}"),
+            Family::Qmovun => format!("vqmovun_{s}"),
+            Family::CvtIF => {
+                let fs = self.float_of_same_width().suffix();
+                format!("vcvt{q}_{fs}_{s}")
+            }
+            Family::CvtFI => {
+                let is = self.int_of_same_width().suffix();
+                format!("vcvt{q}_{is}_{s}")
+            }
+            Family::CvtnFI => {
+                let is = self.int_of_same_width().suffix();
+                format!("vcvtn{q}_{is}_{s}")
+            }
+            Family::Reinterpret => format!("vreinterpret{q}_{s}"),
+            Family::Recpe => format!("vrecpe{q}_{s}"),
+            Family::Recps => format!("vrecps{q}_{s}"),
+            Family::Rsqrte => format!("vrsqrte{q}_{s}"),
+            Family::Rsqrts => format!("vrsqrts{q}_{s}"),
+            Family::Sqrt => format!("vsqrt{q}_{s}"),
+            Family::Rndn => format!("vrndn{q}_{s}"),
+            Family::Rbit => format!("vrbit{q}_{s}"),
+            Family::Clz => format!("vclz{q}_{s}"),
+            Family::Cnt => format!("vcnt{q}_{s}"),
+        }
+    }
+
+    /// For `CvtIF` (elem = int source): the float elem of the same width.
+    pub fn float_of_same_width(self) -> Elem {
+        match self.elem.bits() {
+            16 => Elem::F16,
+            32 => Elem::F32,
+            64 => Elem::F64,
+            b => panic!("no float of width {b}"),
+        }
+    }
+
+    /// For `CvtFI`/`CvtnFI` (elem = float source): signed int of same width.
+    pub fn int_of_same_width(self) -> Elem {
+        self.elem.as_signed()
+    }
+
+    /// Signature of this concrete intrinsic. Panics if the instantiation is
+    /// invalid (checked by [`NeonOp::is_valid`]).
+    pub fn sig(self) -> Sig {
+        use ArgTy::*;
+        let vt = self.vt();
+        let d = VecTy::d(self.elem);
+        let v2 = |n| vec![V(vt); n];
+        let bin = Sig { args: v2(2), ret: Some(vt) };
+        let un = Sig { args: v2(1), ret: Some(vt) };
+        let cmp_ret = VecTy::of_bits(self.elem.as_unsigned(), self.bits());
+        match self.family {
+            Family::Ld1 | Family::Ld1Dup => {
+                Sig { args: vec![Ptr(self.elem)], ret: Some(vt) }
+            }
+            Family::Ld1Lane => {
+                Sig { args: vec![Ptr(self.elem), V(vt), Imm], ret: Some(vt) }
+            }
+            Family::St1 => Sig { args: vec![Ptr(self.elem), V(vt)], ret: None },
+            Family::St1Lane => {
+                Sig { args: vec![Ptr(self.elem), V(vt), Imm], ret: None }
+            }
+            Family::Add
+            | Family::Sub
+            | Family::Mul
+            | Family::Div
+            | Family::Min
+            | Family::Max
+            | Family::Hadd
+            | Family::Rhadd
+            | Family::Qadd
+            | Family::Qsub
+            | Family::Abd
+            | Family::And
+            | Family::Orr
+            | Family::Eor
+            | Family::Bic
+            | Family::Orn
+            | Family::Sshl
+            | Family::Recps
+            | Family::Rsqrts
+            | Family::Pmin
+            | Family::Pmax
+            | Family::Padd => bin,
+            Family::Mla | Family::Mls | Family::Fma | Family::Fms => {
+                Sig { args: v2(3), ret: Some(vt) }
+            }
+            Family::Abs
+            | Family::Neg
+            | Family::Mvn
+            | Family::Rev64
+            | Family::Rev32
+            | Family::Rev16
+            | Family::Recpe
+            | Family::Rsqrte
+            | Family::Sqrt
+            | Family::Rndn
+            | Family::Rbit
+            | Family::Clz
+            | Family::Cnt => un,
+            Family::MulLane => {
+                Sig { args: vec![V(vt), V(d), Imm], ret: Some(vt) }
+            }
+            Family::MlaLane | Family::FmaLane => {
+                Sig { args: vec![V(vt), V(vt), V(d), Imm], ret: Some(vt) }
+            }
+            Family::Mull => {
+                let wide = VecTy::q(self.elem.widened().unwrap());
+                Sig { args: vec![V(d), V(d)], ret: Some(wide) }
+            }
+            Family::Mlal => {
+                let wide = VecTy::q(self.elem.widened().unwrap());
+                Sig { args: vec![V(wide), V(d), V(d)], ret: Some(wide) }
+            }
+            Family::Ceq | Family::Cge | Family::Cgt | Family::Cle
+            | Family::Clt | Family::Tst => {
+                Sig { args: v2(2), ret: Some(cmp_ret) }
+            }
+            Family::Ceqz => Sig { args: v2(1), ret: Some(cmp_ret) },
+            Family::Bsl => {
+                // mask is unsigned of same layout
+                Sig { args: vec![V(cmp_ret), V(vt), V(vt)], ret: Some(vt) }
+            }
+            Family::ShlN | Family::ShrN | Family::SliN | Family::SriN => {
+                let mut args = v2(1);
+                if matches!(self.family, Family::SliN | Family::SriN) {
+                    args = v2(2);
+                }
+                args.push(Imm);
+                Sig { args, ret: Some(vt) }
+            }
+            Family::ShrnN => {
+                let src = VecTy::q(self.elem);
+                let narrow = VecTy::d(self.elem.narrowed().unwrap());
+                Sig { args: vec![V(src), Imm], ret: Some(narrow) }
+            }
+            Family::GetLow | Family::GetHigh => {
+                Sig { args: vec![V(VecTy::q(self.elem))], ret: Some(d) }
+            }
+            Family::Combine => {
+                Sig { args: vec![V(d), V(d)], ret: Some(VecTy::q(self.elem)) }
+            }
+            Family::Ext => Sig { args: vec![V(vt), V(vt), Imm], ret: Some(vt) },
+            Family::Zip1 | Family::Zip2 | Family::Uzp1 | Family::Uzp2
+            | Family::Trn1 | Family::Trn2 => bin,
+            Family::DupLane => Sig { args: vec![V(d), Imm], ret: Some(vt) },
+            Family::DupN => Sig { args: vec![ScalarInt], ret: Some(vt) },
+            Family::Tbl1 => {
+                let du8 = VecTy::d(Elem::U8);
+                Sig { args: vec![V(du8), V(du8)], ret: Some(du8) }
+            }
+            Family::Movl => {
+                let wide = VecTy::q(self.elem.widened().unwrap());
+                Sig { args: vec![V(d)], ret: Some(wide) }
+            }
+            Family::Movn | Family::Qmovn => {
+                let src = VecTy::q(self.elem);
+                let narrow = VecTy::d(self.elem.narrowed().unwrap());
+                Sig { args: vec![V(src)], ret: Some(narrow) }
+            }
+            Family::Qmovun => {
+                let src = VecTy::q(self.elem);
+                let narrow = VecTy::d(self.elem.narrowed().unwrap().as_unsigned());
+                Sig { args: vec![V(src)], ret: Some(narrow) }
+            }
+            Family::CvtIF => {
+                let f = VecTy::of_bits(self.float_of_same_width(), self.bits());
+                Sig { args: vec![V(vt)], ret: Some(f) }
+            }
+            Family::CvtFI | Family::CvtnFI => {
+                let to = if self.elem.is_float() {
+                    self.int_of_same_width()
+                } else {
+                    panic!("CvtFI elem must be float")
+                };
+                Sig { args: vec![V(vt)], ret: Some(VecTy::of_bits(to, self.bits())) }
+            }
+            Family::Reinterpret => {
+                // source type supplied by the IR; nominal arg is same width
+                Sig { args: vec![V(vt)], ret: Some(vt) }
+            }
+        }
+    }
+
+    /// Whether (family, elem, q) is a meaningful NEON intrinsic.
+    pub fn is_valid(self) -> bool {
+        let e = self.elem;
+        match self.family {
+            Family::Fma | Family::Fms | Family::Div | Family::Sqrt
+            | Family::Rndn | Family::Recpe | Family::Recps | Family::Rsqrte
+            | Family::Rsqrts | Family::FmaLane => {
+                matches!(e, Elem::F16 | Elem::F32 | Elem::F64)
+            }
+            Family::CvtFI | Family::CvtnFI => matches!(e, Elem::F32 | Elem::F64 | Elem::F16),
+            Family::CvtIF => {
+                matches!(e, Elem::I16 | Elem::I32 | Elem::I64 | Elem::U16 | Elem::U32 | Elem::U64)
+            }
+            Family::Mla | Family::Mls | Family::Mul => {
+                !e.is_poly() && e != Elem::BF16 && !matches!(e, Elem::I64 | Elem::U64)
+                    || matches!(e, Elem::F64)
+            }
+            Family::MulLane | Family::MlaLane => {
+                matches!(e, Elem::I16 | Elem::I32 | Elem::U16 | Elem::U32 | Elem::F32 | Elem::F16)
+            }
+            Family::Mull | Family::Mlal => {
+                matches!(e, Elem::I8 | Elem::I16 | Elem::I32 | Elem::U8 | Elem::U16 | Elem::U32)
+            }
+            Family::Movl => matches!(
+                e,
+                Elem::I8 | Elem::I16 | Elem::I32 | Elem::U8 | Elem::U16 | Elem::U32
+            ),
+            Family::Movn | Family::Qmovn => matches!(
+                e,
+                Elem::I16 | Elem::I32 | Elem::I64 | Elem::U16 | Elem::U32 | Elem::U64
+            ),
+            Family::Qmovun => matches!(e, Elem::I16 | Elem::I32 | Elem::I64),
+            Family::Hadd | Family::Rhadd => {
+                matches!(e, Elem::I8 | Elem::I16 | Elem::I32 | Elem::U8 | Elem::U16 | Elem::U32)
+            }
+            Family::Qadd | Family::Qsub => !e.is_float() && !e.is_poly() && e != Elem::BF16,
+            Family::Abd => {
+                matches!(e, Elem::I8 | Elem::I16 | Elem::I32 | Elem::U8 | Elem::U16 | Elem::U32 | Elem::F32 | Elem::F16)
+            }
+            Family::Abs | Family::Neg => e.is_signed() || e.is_float(),
+            Family::Min | Family::Max => {
+                !e.is_poly() && e != Elem::BF16 && !matches!(e, Elem::I64 | Elem::U64)
+                    || matches!(e, Elem::F64)
+            }
+            // D-form pairwise: a 64-bit register must hold at least one
+            // *pair*, so 64-bit elements are invalid
+            Family::Pmin | Family::Pmax | Family::Padd => {
+                !e.is_poly() && e != Elem::BF16 && e.bits() < 64 && !self.q
+            }
+            Family::And | Family::Orr | Family::Eor | Family::Bic
+            | Family::Orn | Family::Mvn | Family::Tst => !e.is_float() && e != Elem::BF16 && !matches!(e, Elem::P16 | Elem::P64),
+            Family::Ceq | Family::Cge | Family::Cgt | Family::Cle
+            | Family::Clt | Family::Ceqz => !e.is_poly() && e != Elem::BF16,
+            Family::Bsl => e != Elem::BF16,
+            Family::ShlN | Family::ShrN | Family::Sshl => !e.is_float() && !e.is_poly() && e != Elem::BF16,
+            Family::SliN | Family::SriN => !e.is_float() && e != Elem::BF16 && !matches!(e, Elem::P16 | Elem::P64),
+            Family::ShrnN => {
+                matches!(e, Elem::I16 | Elem::I32 | Elem::I64 | Elem::U16 | Elem::U32 | Elem::U64)
+            }
+            Family::Rev64 => e.bits() < 64,
+            Family::Rev32 => e.bits() < 32,
+            Family::Rev16 => e.bits() < 16,
+            Family::Rbit | Family::Cnt => matches!(e, Elem::I8 | Elem::U8 | Elem::P8),
+            Family::Clz => {
+                matches!(e, Elem::I8 | Elem::I16 | Elem::I32 | Elem::U8 | Elem::U16 | Elem::U32)
+            }
+            Family::Tbl1 => matches!(e, Elem::U8) && !self.q,
+            // interleaves need at least one pair per register
+            Family::Zip1 | Family::Zip2 | Family::Uzp1 | Family::Uzp2
+            | Family::Trn1 | Family::Trn2 => {
+                e != Elem::BF16 && !e.is_poly() && (self.q || e.bits() < 64)
+            }
+            Family::GetLow | Family::GetHigh | Family::Combine => e != Elem::BF16,
+            Family::Ld1Lane | Family::St1Lane | Family::DupLane => e != Elem::BF16,
+            _ => true,
+        }
+    }
+
+    /// Broad category, used by rule tables and the cost model.
+    pub fn category(self) -> Category {
+        use Family::*;
+        match self.family {
+            Ld1 | Ld1Dup | Ld1Lane | St1 | St1Lane => Category::Memory,
+            Add | Sub | Mul | Mla | Mls | Fma | Fms | Div | Abs | Neg | Min
+            | Max | Hadd | Rhadd | Abd | MulLane | MlaLane | FmaLane => {
+                Category::Arith
+            }
+            Pmin | Pmax | Padd => Category::Pairwise,
+            Qadd | Qsub | Qmovn | Qmovun => Category::Saturating,
+            Mull | Mlal | Movl | Movn | ShrnN => Category::WidenNarrow,
+            Ceq | Cge | Cgt | Cle | Clt | Ceqz | Tst => Category::Compare,
+            And | Orr | Eor | Bic | Orn | Mvn | Bsl => Category::Bitwise,
+            ShlN | ShrN | SliN | SriN | Sshl => Category::Shift,
+            GetLow | GetHigh | Combine | Ext | Rev64 | Rev32 | Rev16 | Zip1
+            | Zip2 | Uzp1 | Uzp2 | Trn1 | Trn2 | DupLane | DupN | Tbl1 => {
+                Category::Permute
+            }
+            CvtIF | CvtFI | CvtnFI | Reinterpret => Category::Convert,
+            Recpe | Recps | Rsqrte | Rsqrts | Sqrt | Rndn => Category::FloatEst,
+            Rbit | Clz | Cnt => Category::BitManip,
+        }
+    }
+}
+
+/// Conversion-relevant intrinsic category (drives rule tables and the
+/// baseline cost model, §3.3 of the paper).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Category {
+    Memory,
+    Arith,
+    Pairwise,
+    Saturating,
+    WidenNarrow,
+    Compare,
+    Bitwise,
+    Shift,
+    Permute,
+    Convert,
+    FloatEst,
+    BitManip,
+}
+
+/// All families, for grid enumeration.
+pub const ALL_FAMILIES: [Family; 83] = [
+    Family::Ld1,
+    Family::Ld1Dup,
+    Family::Ld1Lane,
+    Family::St1,
+    Family::St1Lane,
+    Family::Add,
+    Family::Sub,
+    Family::Mul,
+    Family::Mla,
+    Family::Mls,
+    Family::Fma,
+    Family::Fms,
+    Family::Div,
+    Family::Abs,
+    Family::Neg,
+    Family::Min,
+    Family::Max,
+    Family::Pmin,
+    Family::Pmax,
+    Family::Padd,
+    Family::Hadd,
+    Family::Rhadd,
+    Family::Qadd,
+    Family::Qsub,
+    Family::Abd,
+    Family::MulLane,
+    Family::MlaLane,
+    Family::FmaLane,
+    Family::Mull,
+    Family::Mlal,
+    Family::Ceq,
+    Family::Cge,
+    Family::Cgt,
+    Family::Cle,
+    Family::Clt,
+    Family::Ceqz,
+    Family::Tst,
+    Family::And,
+    Family::Orr,
+    Family::Eor,
+    Family::Bic,
+    Family::Orn,
+    Family::Mvn,
+    Family::Bsl,
+    Family::ShlN,
+    Family::ShrN,
+    Family::SliN,
+    Family::SriN,
+    Family::Sshl,
+    Family::ShrnN,
+    Family::GetLow,
+    Family::GetHigh,
+    Family::Combine,
+    Family::Ext,
+    Family::Rev64,
+    Family::Rev32,
+    Family::Rev16,
+    Family::Zip1,
+    Family::Zip2,
+    Family::Uzp1,
+    Family::Uzp2,
+    Family::Trn1,
+    Family::Trn2,
+    Family::DupLane,
+    Family::DupN,
+    Family::Tbl1,
+    Family::Movl,
+    Family::Movn,
+    Family::Qmovn,
+    Family::Qmovun,
+    Family::CvtIF,
+    Family::CvtFI,
+    Family::CvtnFI,
+    Family::Reinterpret,
+    Family::Recpe,
+    Family::Recps,
+    Family::Rsqrte,
+    Family::Rsqrts,
+    Family::Sqrt,
+    Family::Rndn,
+    Family::Rbit,
+    Family::Clz,
+    Family::Cnt,
+];
+
+/// The integer/float element grid commonly instantiated by NEON.
+pub const COMMON_ELEMS: [Elem; 11] = [
+    Elem::I8,
+    Elem::I16,
+    Elem::I32,
+    Elem::I64,
+    Elem::U8,
+    Elem::U16,
+    Elem::U32,
+    Elem::U64,
+    Elem::F16,
+    Elem::F32,
+    Elem::F64,
+];
+
+/// Enumerate every valid concrete instantiation of the implemented families.
+pub fn enumerate_implemented() -> Vec<NeonOp> {
+    let mut out = Vec::new();
+    for &f in ALL_FAMILIES.iter() {
+        for &e in COMMON_ELEMS.iter().chain([Elem::P8].iter()) {
+            for q in [false, true] {
+                let op = NeonOp::new(f, e, q);
+                if op.is_valid() {
+                    // D-only families ignore q=true duplicates
+                    if matches!(
+                        f,
+                        Family::Pmin
+                            | Family::Pmax
+                            | Family::Padd
+                            | Family::Tbl1
+                            | Family::Mull
+                            | Family::Mlal
+                            | Family::Movl
+                            | Family::Movn
+                            | Family::Qmovn
+                            | Family::Qmovun
+                            | Family::ShrnN
+                            | Family::GetLow
+                            | Family::GetHigh
+                            | Family::Combine
+                    ) && q
+                    {
+                        continue;
+                    }
+                    out.push(op);
+                }
+            }
+        }
+    }
+    out.sort_by_key(|o| o.name());
+    out.dedup_by_key(|o| o.name());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_match_acle() {
+        assert_eq!(NeonOp::new(Family::Add, Elem::I32, true).name(), "vaddq_s32");
+        assert_eq!(NeonOp::new(Family::Add, Elem::I32, false).name(), "vadd_s32");
+        assert_eq!(NeonOp::new(Family::GetHigh, Elem::I32, false).name(), "vget_high_s32");
+        assert_eq!(NeonOp::new(Family::Ld1, Elem::F32, true).name(), "vld1q_f32");
+        assert_eq!(NeonOp::new(Family::St1, Elem::I32, true).name(), "vst1q_s32");
+        assert_eq!(NeonOp::new(Family::Ceq, Elem::I32, true).name(), "vceqq_s32");
+        assert_eq!(NeonOp::new(Family::CvtIF, Elem::I32, true).name(), "vcvtq_f32_s32");
+        assert_eq!(NeonOp::new(Family::CvtFI, Elem::F32, true).name(), "vcvtq_s32_f32");
+        assert_eq!(NeonOp::new(Family::Rbit, Elem::U8, true).name(), "vrbitq_u8");
+        assert_eq!(NeonOp::new(Family::Fma, Elem::F32, true).name(), "vfmaq_f32");
+    }
+
+    #[test]
+    fn signatures() {
+        let add = NeonOp::new(Family::Add, Elem::I32, true).sig();
+        assert_eq!(add.ret, Some(VecTy::q(Elem::I32)));
+        assert_eq!(add.args.len(), 2);
+
+        let gh = NeonOp::new(Family::GetHigh, Elem::I32, false).sig();
+        assert_eq!(gh.ret, Some(VecTy::d(Elem::I32)));
+        assert_eq!(gh.args, vec![ArgTy::V(VecTy::q(Elem::I32))]);
+
+        let ceq = NeonOp::new(Family::Ceq, Elem::I32, true).sig();
+        assert_eq!(ceq.ret, Some(VecTy::q(Elem::U32)));
+
+        let mull = NeonOp::new(Family::Mull, Elem::I16, false).sig();
+        assert_eq!(mull.ret, Some(VecTy::q(Elem::I32)));
+
+        let st = NeonOp::new(Family::St1, Elem::F32, true).sig();
+        assert_eq!(st.ret, None);
+    }
+
+    #[test]
+    fn validity() {
+        assert!(NeonOp::new(Family::Fma, Elem::F32, true).is_valid());
+        assert!(!NeonOp::new(Family::Fma, Elem::I32, true).is_valid());
+        assert!(!NeonOp::new(Family::Rbit, Elem::I32, true).is_valid());
+        assert!(NeonOp::new(Family::Rbit, Elem::U8, true).is_valid());
+        assert!(!NeonOp::new(Family::Rev16, Elem::I16, true).is_valid());
+        assert!(NeonOp::new(Family::Rev16, Elem::I8, true).is_valid());
+    }
+
+    #[test]
+    fn enumeration_is_substantial() {
+        let ops = enumerate_implemented();
+        // the paper implements 1520 conversions; our implemented surface is a
+        // large subset instantiated over the common grid
+        assert!(ops.len() > 700, "got {}", ops.len());
+        // all enumerated ops have coherent signatures
+        for op in &ops {
+            let _ = op.sig();
+            let _ = op.name();
+        }
+    }
+}

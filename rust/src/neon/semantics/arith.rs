@@ -1,0 +1,359 @@
+//! Arithmetic family semantics: add/sub/mul, multiply-accumulate (fused and
+//! unfused), halving/saturating adds, absolute difference, by-lane forms,
+//! widening multiplies, and pairwise ops.
+
+use super::{fop2, iop2, map1, map2, map3, uop2, Value};
+use crate::neon::elem::{self, Elem};
+use crate::neon::ops::{Family, NeonOp};
+use crate::neon::vreg::{VReg, VecTy};
+
+pub fn eval(op: NeonOp, args: &[Value]) -> VReg {
+    let e = op.elem;
+    let ret = op.sig().ret.expect("arith ops return a vector");
+    match op.family {
+        Family::Add => binary(ret, e, args, |a, b| a.wrapping_add(b), |a, b| a + b),
+        Family::Sub => binary(ret, e, args, |a, b| a.wrapping_sub(b), |a, b| a - b),
+        Family::Mul => binary(ret, e, args, |a, b| a.wrapping_mul(b), |a, b| a * b),
+        Family::Div => {
+            assert!(e.is_float(), "vdiv is float-only");
+            map2(ret, args[0].v(), args[1].v(), fop2(e, |a, b| a / b))
+        }
+        Family::Mla => mla(ret, e, args, false, false),
+        Family::Mls => mla(ret, e, args, true, false),
+        Family::Fma => mla(ret, e, args, false, true),
+        Family::Fms => mla(ret, e, args, true, true),
+        Family::Abs => {
+            if e.is_float() {
+                map1(ret, args[0].v(), super::fop1(e, f64::abs))
+            } else {
+                map1(ret, args[0].v(), move |x| {
+                    elem::from_i64(e, elem::to_i64(e, x).wrapping_abs())
+                })
+            }
+        }
+        Family::Neg => {
+            if e.is_float() {
+                map1(ret, args[0].v(), super::fop1(e, |a| -a))
+            } else {
+                map1(ret, args[0].v(), move |x| {
+                    elem::from_i64(e, elem::to_i64(e, x).wrapping_neg())
+                })
+            }
+        }
+        Family::Min => minmax(ret, e, args, true),
+        Family::Max => minmax(ret, e, args, false),
+        Family::Pmin => pairwise(ret, e, args, PairKind::Min),
+        Family::Pmax => pairwise(ret, e, args, PairKind::Max),
+        Family::Padd => pairwise(ret, e, args, PairKind::Add),
+        Family::Hadd => {
+            // (a + b) >> 1 computed without intermediate overflow
+            if e.is_signed() {
+                map2(ret, args[0].v(), args[1].v(), iop2(e, |a, b| (a + b) >> 1))
+            } else {
+                map2(ret, args[0].v(), args[1].v(), uop2(e, |a, b| (a + b) >> 1))
+            }
+        }
+        Family::Rhadd => {
+            if e.is_signed() {
+                map2(ret, args[0].v(), args[1].v(), iop2(e, |a, b| (a + b + 1) >> 1))
+            } else {
+                map2(ret, args[0].v(), args[1].v(), uop2(e, |a, b| (a + b + 1) >> 1))
+            }
+        }
+        Family::Qadd => saturating(ret, e, args, false),
+        Family::Qsub => saturating(ret, e, args, true),
+        Family::Abd => {
+            if e.is_float() {
+                map2(ret, args[0].v(), args[1].v(), fop2(e, |a, b| (a - b).abs()))
+            } else if e.is_signed() {
+                map2(ret, args[0].v(), args[1].v(), iop2(e, |a, b| (a - b).abs()))
+            } else {
+                map2(ret, args[0].v(), args[1].v(), uop2(e, |a, b| a.abs_diff(b)))
+            }
+        }
+        Family::MulLane => {
+            let lane = args[2].imm() as usize;
+            let b = args[1].v().lane(lane);
+            let bv = VReg::splat_raw(args[0].v().ty, b);
+            eval(NeonOp::new(Family::Mul, e, op.q), &[args[0].clone(), Value::V(bv)])
+        }
+        Family::MlaLane => {
+            let lane = args[3].imm() as usize;
+            let c = args[2].v().lane(lane);
+            let cv = VReg::splat_raw(args[1].v().ty, c);
+            mla(ret, e, &[args[0].clone(), args[1].clone(), Value::V(cv)], false, false)
+        }
+        Family::FmaLane => {
+            let lane = args[3].imm() as usize;
+            let c = args[2].v().lane(lane);
+            let cv = VReg::splat_raw(args[1].v().ty, c);
+            mla(ret, e, &[args[0].clone(), args[1].clone(), Value::V(cv)], false, true)
+        }
+        Family::Mull => {
+            let (a, b) = (args[0].v(), args[1].v());
+            let wide = ret.elem;
+            let lanes = a
+                .lanes
+                .iter()
+                .zip(&b.lanes)
+                .map(|(&x, &y)| {
+                    if e.is_signed() {
+                        elem::from_i64(wide, elem::to_i64(e, x).wrapping_mul(elem::to_i64(e, y)))
+                    } else {
+                        (elem::to_u64(e, x).wrapping_mul(elem::to_u64(e, y))) & wide.lane_mask()
+                    }
+                })
+                .collect();
+            VReg::from_raw(ret, lanes)
+        }
+        Family::Mlal => {
+            let (acc, a, b) = (args[0].v(), args[1].v(), args[2].v());
+            let wide = ret.elem;
+            let lanes = acc
+                .lanes
+                .iter()
+                .zip(a.lanes.iter().zip(&b.lanes))
+                .map(|(&s, (&x, &y))| {
+                    if e.is_signed() {
+                        let p = elem::to_i64(e, x).wrapping_mul(elem::to_i64(e, y));
+                        elem::from_i64(wide, elem::to_i64(wide, s).wrapping_add(p))
+                    } else {
+                        let p = elem::to_u64(e, x).wrapping_mul(elem::to_u64(e, y));
+                        (elem::to_u64(wide, s).wrapping_add(p)) & wide.lane_mask()
+                    }
+                })
+                .collect();
+            VReg::from_raw(ret, lanes)
+        }
+        f => panic!("arith::eval got non-arith family {f:?}"),
+    }
+}
+
+fn binary(
+    ret: VecTy,
+    e: Elem,
+    args: &[Value],
+    fi: impl Fn(i64, i64) -> i64,
+    ff: impl Fn(f64, f64) -> f64,
+) -> VReg {
+    let (a, b) = (args[0].v(), args[1].v());
+    if e.is_float() {
+        map2(ret, a, b, fop2(e, ff))
+    } else {
+        map2(ret, a, b, iop2(e, fi))
+    }
+}
+
+/// `acc ± a*b`; `fused` selects single-rounding FMA (vfma) vs separate
+/// multiply-then-add (vmla).
+fn mla(ret: VecTy, e: Elem, args: &[Value], sub: bool, fused: bool) -> VReg {
+    let (acc, a, b) = (args[0].v(), args[1].v(), args[2].v());
+    if e.is_float() {
+        map3(ret, acc, a, b, move |s, x, y| {
+            let (s, x, y) = (elem::to_f64(e, s), elem::to_f64(e, x), elem::to_f64(e, y));
+            let x = if sub { -x } else { x };
+            let r = if fused {
+                // emulate single rounding at lane precision
+                match e {
+                    Elem::F32 => {
+                        ((x as f32).mul_add(y as f32, s as f32)) as f64
+                    }
+                    _ => x.mul_add(y, s),
+                }
+            } else {
+                // two roundings at lane precision
+                match e {
+                    Elem::F32 => ((x as f32 * y as f32) + s as f32) as f64,
+                    Elem::F16 | Elem::BF16 => {
+                        // round the product through the half type
+                        let p = elem::to_f64(e, elem::from_f64(e, x * y));
+                        p + s
+                    }
+                    _ => x * y + s,
+                }
+            };
+            elem::from_f64(e, r)
+        })
+    } else {
+        map3(ret, acc, a, b, move |s, x, y| {
+            let p = elem::to_i64(e, x).wrapping_mul(elem::to_i64(e, y));
+            let p = if sub { -p } else { p };
+            elem::from_i64(e, elem::to_i64(e, s).wrapping_add(p))
+        })
+    }
+}
+
+fn minmax(ret: VecTy, e: Elem, args: &[Value], is_min: bool) -> VReg {
+    let (a, b) = (args[0].v(), args[1].v());
+    if e.is_float() {
+        map2(ret, a, b, fop2(e, move |x, y| {
+            // NEON fmin/fmax propagate NaN
+            if x.is_nan() || y.is_nan() {
+                f64::NAN
+            } else if is_min {
+                x.min(y)
+            } else {
+                x.max(y)
+            }
+        }))
+    } else if e.is_signed() {
+        map2(ret, a, b, iop2(e, move |x, y| if is_min { x.min(y) } else { x.max(y) }))
+    } else {
+        map2(ret, a, b, uop2(e, move |x, y| if is_min { x.min(y) } else { x.max(y) }))
+    }
+}
+
+enum PairKind {
+    Min,
+    Max,
+    Add,
+}
+
+/// D-form pairwise ops: result lane i comes from input pair (2i, 2i+1) of
+/// the concatenation [a, b].
+fn pairwise(ret: VecTy, e: Elem, args: &[Value], kind: PairKind) -> VReg {
+    let (a, b) = (args[0].v(), args[1].v());
+    let cat: Vec<u64> = a.lanes.iter().chain(&b.lanes).copied().collect();
+    let lanes = (0..ret.lanes as usize)
+        .map(|i| {
+            let (x, y) = (cat[2 * i], cat[2 * i + 1]);
+            match kind {
+                PairKind::Add => {
+                    if e.is_float() {
+                        elem::from_f64(e, elem::to_f64(e, x) + elem::to_f64(e, y))
+                    } else {
+                        elem::from_i64(e, elem::to_i64(e, x).wrapping_add(elem::to_i64(e, y)))
+                    }
+                }
+                PairKind::Min | PairKind::Max => {
+                    let is_min = matches!(kind, PairKind::Min);
+                    if e.is_float() {
+                        let (fx, fy) = (elem::to_f64(e, x), elem::to_f64(e, y));
+                        elem::from_f64(e, if is_min { fx.min(fy) } else { fx.max(fy) })
+                    } else if e.is_signed() {
+                        let (ix, iy) = (elem::to_i64(e, x), elem::to_i64(e, y));
+                        elem::from_i64(e, if is_min { ix.min(iy) } else { ix.max(iy) })
+                    } else {
+                        let (ux, uy) = (elem::to_u64(e, x), elem::to_u64(e, y));
+                        if is_min {
+                            ux.min(uy)
+                        } else {
+                            ux.max(uy)
+                        }
+                    }
+                }
+            }
+        })
+        .collect();
+    VReg::from_raw(ret, lanes)
+}
+
+fn saturating(ret: VecTy, e: Elem, args: &[Value], sub: bool) -> VReg {
+    let (a, b) = (args[0].v(), args[1].v());
+    map2(ret, a, b, move |x, y| {
+        let (xi, yi) = if e.is_signed() {
+            (elem::to_i64(e, x) as i128, elem::to_i64(e, y) as i128)
+        } else {
+            (elem::to_u64(e, x) as i128, elem::to_u64(e, y) as i128)
+        };
+        let r = if sub { xi - yi } else { xi + yi };
+        elem::saturate(e, r)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::neon::vreg::VecTy;
+
+    fn q32(v: &[i64]) -> Value {
+        Value::V(VReg::from_i64s(VecTy::q(Elem::I32), v))
+    }
+
+    fn qf(v: &[f32]) -> Value {
+        Value::V(VReg::from_f32s(VecTy::q(Elem::F32), v))
+    }
+
+    #[test]
+    fn vaddq_s32() {
+        let op = NeonOp::new(Family::Add, Elem::I32, true);
+        let r = eval(op, &[q32(&[1, 2, 3, 4]), q32(&[10, 20, 30, i32::MAX as i64])]);
+        assert_eq!(r.as_i64s(), vec![11, 22, 33, (i32::MAX as i64 + 4) as i32 as i64]);
+    }
+
+    #[test]
+    fn vfmaq_f32_is_fused() {
+        let op = NeonOp::new(Family::Fma, Elem::F32, true);
+        let acc = qf(&[1.0, 0.0, 0.0, 0.0]);
+        let a = qf(&[1.0 + 1e-7, 2.0, 3.0, 4.0]);
+        let b = qf(&[1.0 + 1e-7, 2.0, 3.0, 4.0]);
+        let r = eval(op, &[acc, a, b]);
+        let exact = (1.0f32 + 1e-7).mul_add(1.0 + 1e-7, 1.0);
+        assert_eq!(r.as_f64s()[0] as f32, exact);
+    }
+
+    #[test]
+    fn vqaddq_s8_saturates() {
+        let op = NeonOp::new(Family::Qadd, Elem::I8, true);
+        let a = VReg::from_i64s(VecTy::q(Elem::I8), &[100; 16]);
+        let b = VReg::from_i64s(VecTy::q(Elem::I8), &[100; 16]);
+        let r = eval(op, &[Value::V(a), Value::V(b)]);
+        assert!(r.as_i64s().iter().all(|&x| x == 127));
+    }
+
+    #[test]
+    fn vqsubq_u8_floors_at_zero() {
+        let op = NeonOp::new(Family::Qsub, Elem::U8, true);
+        let a = VReg::from_i64s(VecTy::q(Elem::U8), &[5; 16]);
+        let b = VReg::from_i64s(VecTy::q(Elem::U8), &[9; 16]);
+        let r = eval(op, &[Value::V(a), Value::V(b)]);
+        assert!(r.as_u64s().iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn vpadd_s32() {
+        let op = NeonOp::new(Family::Padd, Elem::I32, false);
+        let a = VReg::from_i64s(VecTy::d(Elem::I32), &[1, 2]);
+        let b = VReg::from_i64s(VecTy::d(Elem::I32), &[30, 40]);
+        let r = eval(op, &[Value::V(a), Value::V(b)]);
+        assert_eq!(r.as_i64s(), vec![3, 70]);
+    }
+
+    #[test]
+    fn vmull_s16_widens() {
+        let op = NeonOp::new(Family::Mull, Elem::I16, false);
+        let a = VReg::from_i64s(VecTy::d(Elem::I16), &[-300, 2, 3, 4]);
+        let b = VReg::from_i64s(VecTy::d(Elem::I16), &[300, 2, 3, 4]);
+        let r = eval(op, &[Value::V(a), Value::V(b)]);
+        assert_eq!(r.ty, VecTy::q(Elem::I32));
+        assert_eq!(r.as_i64s(), vec![-90000, 4, 9, 16]);
+    }
+
+    #[test]
+    fn vfmaq_lane_broadcasts() {
+        let op = NeonOp::new(Family::FmaLane, Elem::F32, true);
+        let acc = qf(&[0.0; 4]);
+        let a = qf(&[1.0, 2.0, 3.0, 4.0]);
+        let lane_src = Value::V(VReg::from_f32s(VecTy::d(Elem::F32), &[10.0, 20.0]));
+        let r = eval(op, &[acc, a, lane_src, Value::Imm(1)]);
+        assert_eq!(r.as_f64s(), vec![20.0, 40.0, 60.0, 80.0]);
+    }
+
+    #[test]
+    fn vhaddq_no_overflow() {
+        let op = NeonOp::new(Family::Hadd, Elem::I32, true);
+        let a = q32(&[i32::MAX as i64; 4]);
+        let b = q32(&[i32::MAX as i64; 4]);
+        let r = eval(op, &[a, b]);
+        assert_eq!(r.as_i64s(), vec![i32::MAX as i64; 4]);
+    }
+
+    #[test]
+    fn vabdq_u8() {
+        let op = NeonOp::new(Family::Abd, Elem::U8, true);
+        let a = VReg::from_i64s(VecTy::q(Elem::U8), &[10; 16]);
+        let b = VReg::from_i64s(VecTy::q(Elem::U8), &[250; 16]);
+        let r = eval(op, &[Value::V(a), Value::V(b)]);
+        assert!(r.as_u64s().iter().all(|&x| x == 240));
+    }
+}

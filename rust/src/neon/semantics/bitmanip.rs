@@ -1,0 +1,97 @@
+//! Bit-manipulation family semantics: `vrbit` (the paper's Listing 7
+//! binary-magic-numbers example), count-leading-zeros, and popcount.
+
+use super::{map1, Value};
+use crate::neon::ops::{Family, NeonOp};
+use crate::neon::vreg::VReg;
+
+/// Reverse the low `bits` bits of `x` via the Dr. Dobb's 1983
+/// binary-magic-numbers swaps — the exact algorithm the paper's customized
+/// RVV conversion vectorises (Listing 7).
+pub fn bit_reverse(x: u64, bits: u32) -> u64 {
+    let mut v = x;
+    // swap odd and even bits
+    v = ((v >> 1) & 0x5555_5555_5555_5555) | ((v & 0x5555_5555_5555_5555) << 1);
+    // swap consecutive pairs
+    v = ((v >> 2) & 0x3333_3333_3333_3333) | ((v & 0x3333_3333_3333_3333) << 2);
+    // swap nibbles
+    v = ((v >> 4) & 0x0f0f_0f0f_0f0f_0f0f) | ((v & 0x0f0f_0f0f_0f0f_0f0f) << 4);
+    if bits > 8 {
+        v = ((v >> 8) & 0x00ff_00ff_00ff_00ff) | ((v & 0x00ff_00ff_00ff_00ff) << 8);
+    }
+    if bits > 16 {
+        v = ((v >> 16) & 0x0000_ffff_0000_ffff) | ((v & 0x0000_ffff_0000_ffff) << 16);
+    }
+    if bits > 32 {
+        v = (v >> 32) | (v << 32);
+    }
+    v & if bits == 64 { u64::MAX } else { (1 << bits) - 1 }
+}
+
+pub fn eval(op: NeonOp, args: &[Value]) -> VReg {
+    let e = op.elem;
+    let ret = op.sig().ret.expect("bitmanip ops return a vector");
+    let bits = e.bits();
+    match op.family {
+        Family::Rbit => map1(ret, args[0].v(), move |x| bit_reverse(x, bits)),
+        Family::Clz => map1(ret, args[0].v(), move |x| {
+            let masked = x & e.lane_mask();
+            (masked << (64 - bits)).leading_zeros().min(bits) as u64
+        }),
+        Family::Cnt => map1(ret, args[0].v(), move |x| {
+            (x & e.lane_mask()).count_ones() as u64
+        }),
+        f => panic!("bitmanip::eval got family {f:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::neon::elem::Elem;
+    use crate::neon::vreg::VecTy;
+
+    #[test]
+    fn bit_reverse_u8() {
+        assert_eq!(bit_reverse(0b0000_0001, 8), 0b1000_0000);
+        assert_eq!(bit_reverse(0b1010_0000, 8), 0b0000_0101);
+        assert_eq!(bit_reverse(0xff, 8), 0xff);
+        assert_eq!(bit_reverse(0, 8), 0);
+    }
+
+    #[test]
+    fn bit_reverse_involution() {
+        for bits in [8u32, 16, 32] {
+            for x in [0u64, 1, 0xa5, 0x1234, 0xdead_beef] {
+                let x = x & if bits == 64 { u64::MAX } else { (1 << bits) - 1 };
+                assert_eq!(bit_reverse(bit_reverse(x, bits), bits), x, "bits={bits} x={x:#x}");
+            }
+        }
+    }
+
+    #[test]
+    fn vrbitq_u8() {
+        let op = NeonOp::new(Family::Rbit, Elem::U8, true);
+        let a = Value::V(VReg::from_i64s(VecTy::q(Elem::U8), &[
+            0x01, 0x80, 0xa5, 0x3c, 0, 0xff, 0x0f, 0xf0, 1, 2, 3, 4, 5, 6, 7, 8,
+        ]));
+        let r = eval(op, &[a]);
+        assert_eq!(r.as_u64s()[..8], [0x80, 0x01, 0xa5, 0x3c, 0, 0xff, 0xf0, 0x0f]);
+    }
+
+    #[test]
+    fn vclzq_s32() {
+        let op = NeonOp::new(Family::Clz, Elem::I32, true);
+        let a = Value::V(VReg::from_i64s(VecTy::q(Elem::I32), &[1, 0, -1, 0x0000_8000]));
+        let r = eval(op, &[a]);
+        assert_eq!(r.as_i64s(), vec![31, 32, 0, 16]);
+    }
+
+    #[test]
+    fn vcntq_u8() {
+        let op = NeonOp::new(Family::Cnt, Elem::U8, true);
+        let a = Value::V(VReg::from_i64s(VecTy::q(Elem::U8), &[0xff, 0, 0x0f, 0xa5, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12]));
+        let r = eval(op, &[a]);
+        assert_eq!(r.as_u64s()[..4], [8, 0, 4, 4]);
+    }
+}

@@ -1,0 +1,147 @@
+//! Comparison (all-ones/all-zeros masks) and bitwise family semantics.
+//!
+//! NEON comparisons produce unsigned vectors whose lanes are all-ones where
+//! the predicate holds — the paper's Listing 6 shows the RVV equivalent
+//! (`vmv` + `vmseq` + `vmerge`).
+
+use super::{map1, map2, map3, ones, Value};
+use crate::neon::elem::{self};
+use crate::neon::ops::{Family, NeonOp};
+use crate::neon::vreg::VReg;
+
+pub fn eval(op: NeonOp, args: &[Value]) -> VReg {
+    let e = op.elem;
+    let ret = op.sig().ret.expect("cmp/bit ops return a vector");
+    match op.family {
+        Family::Ceq => cmp(op, args, |o| o == std::cmp::Ordering::Equal),
+        Family::Cge => cmp(op, args, |o| o != std::cmp::Ordering::Less),
+        Family::Cgt => cmp(op, args, |o| o == std::cmp::Ordering::Greater),
+        Family::Cle => cmp(op, args, |o| o != std::cmp::Ordering::Greater),
+        Family::Clt => cmp(op, args, |o| o == std::cmp::Ordering::Less),
+        Family::Ceqz => {
+            let a = args[0].v();
+            let zero = VReg::zero(a.ty);
+            cmp(op, &[args[0].clone(), Value::V(zero)], |o| o == std::cmp::Ordering::Equal)
+        }
+        Family::Tst => {
+            let m = ones(e);
+            map2(ret, args[0].v(), args[1].v(), move |x, y| {
+                if x & y != 0 {
+                    m
+                } else {
+                    0
+                }
+            })
+        }
+        Family::And => map2(ret, args[0].v(), args[1].v(), |x, y| x & y),
+        Family::Orr => map2(ret, args[0].v(), args[1].v(), |x, y| x | y),
+        Family::Eor => map2(ret, args[0].v(), args[1].v(), |x, y| x ^ y),
+        Family::Bic => map2(ret, args[0].v(), args[1].v(), |x, y| x & !y),
+        Family::Orn => map2(ret, args[0].v(), args[1].v(), |x, y| x | !y),
+        Family::Mvn => map1(ret, args[0].v(), |x| !x),
+        Family::Bsl => {
+            // (mask & a) | (~mask & b), bitwise
+            map3(ret, args[0].v(), args[1].v(), args[2].v(), |m, a, b| {
+                (m & a) | (!m & b)
+            })
+        }
+        f => panic!("cmp_bit::eval got family {f:?}"),
+    }
+}
+
+fn cmp(op: NeonOp, args: &[Value], pred: impl Fn(std::cmp::Ordering) -> bool) -> VReg {
+    let e = op.elem;
+    let ret = op.sig().ret.unwrap();
+    let m = ones(ret.elem);
+    map2(ret, args[0].v(), args[1].v(), move |x, y| {
+        let ord = if e.is_float() {
+            let (fx, fy) = (elem::to_f64(e, x), elem::to_f64(e, y));
+            match fx.partial_cmp(&fy) {
+                Some(o) => o,
+                None => return 0, // NaN compares false on every predicate
+            }
+        } else if e.is_signed() {
+            elem::to_i64(e, x).cmp(&elem::to_i64(e, y))
+        } else {
+            elem::to_u64(e, x).cmp(&elem::to_u64(e, y))
+        };
+        if pred(ord) {
+            m
+        } else {
+            0
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::neon::elem::Elem;
+    use crate::neon::vreg::VecTy;
+
+    fn q32(v: &[i64]) -> Value {
+        Value::V(VReg::from_i64s(VecTy::q(Elem::I32), v))
+    }
+
+    #[test]
+    fn vceqq_s32_all_ones_pattern() {
+        // paper Listing 6 semantics
+        let op = NeonOp::new(Family::Ceq, Elem::I32, true);
+        let r = eval(op, &[q32(&[1, 2, 3, 4]), q32(&[1, 0, 3, 0])]);
+        assert_eq!(r.ty, VecTy::q(Elem::U32));
+        assert_eq!(r.as_u64s(), vec![0xffff_ffff, 0, 0xffff_ffff, 0]);
+    }
+
+    #[test]
+    fn vcltq_f32_nan_is_false() {
+        let op = NeonOp::new(Family::Clt, Elem::F32, true);
+        let a = Value::V(VReg::from_f32s(VecTy::q(Elem::F32), &[1.0, f32::NAN, -1.0, 0.0]));
+        let b = Value::V(VReg::from_f32s(VecTy::q(Elem::F32), &[2.0, 2.0, 2.0, f32::NAN]));
+        let r = eval(op, &[a, b]);
+        assert_eq!(r.as_u64s(), vec![0xffff_ffff, 0, 0xffff_ffff, 0]);
+    }
+
+    #[test]
+    fn vcgeq_u32_unsigned_order() {
+        let op = NeonOp::new(Family::Cge, Elem::U32, true);
+        let a = Value::V(VReg::from_i64s(VecTy::q(Elem::U32), &[0xffff_ffff, 1, 5, 0]));
+        let b = Value::V(VReg::from_i64s(VecTy::q(Elem::U32), &[1, 0xffff_ffff, 5, 0]));
+        let r = eval(op, &[a, b]);
+        assert_eq!(r.as_u64s(), vec![0xffff_ffff, 0, 0xffff_ffff, 0xffff_ffff]);
+    }
+
+    #[test]
+    fn vbslq_bit_granularity() {
+        let op = NeonOp::new(Family::Bsl, Elem::U32, true);
+        let m = Value::V(VReg::from_i64s(VecTy::q(Elem::U32), &[0x0f0f_0f0f, 0, 0xffff_ffff, 0xff00_ff00]));
+        let a = Value::V(VReg::from_i64s(VecTy::q(Elem::U32), &[0xaaaa_aaaa; 4]));
+        let b = Value::V(VReg::from_i64s(VecTy::q(Elem::U32), &[0x5555_5555; 4]));
+        let r = eval(op, &[m, a, b]);
+        assert_eq!(
+            r.as_u64s(),
+            vec![0x5a5a_5a5a, 0x5555_5555, 0xaaaa_aaaa, 0xaa55_aa55]
+        );
+    }
+
+    #[test]
+    fn vtstq_s32() {
+        let op = NeonOp::new(Family::Tst, Elem::I32, true);
+        let r = eval(op, &[q32(&[1, 2, 4, 0]), q32(&[1, 1, 6, 7])]);
+        assert_eq!(r.as_u64s(), vec![0xffff_ffff, 0, 0xffff_ffff, 0]);
+    }
+
+    #[test]
+    fn vmvnq_u8() {
+        let op = NeonOp::new(Family::Mvn, Elem::U8, true);
+        let a = Value::V(VReg::from_i64s(VecTy::q(Elem::U8), &[0x0f; 16]));
+        let r = eval(op, &[a]);
+        assert!(r.as_u64s().iter().all(|&x| x == 0xf0));
+    }
+
+    #[test]
+    fn vceqzq_s32() {
+        let op = NeonOp::new(Family::Ceqz, Elem::I32, true);
+        let r = eval(op, &[q32(&[0, 5, 0, -1])]);
+        assert_eq!(r.as_u64s(), vec![0xffff_ffff, 0, 0xffff_ffff, 0]);
+    }
+}

@@ -1,0 +1,204 @@
+//! Widen/narrow and conversion family semantics: `vmovl`/`vmovn`, saturating
+//! narrows, int<->float conversions (truncating and round-to-nearest), and
+//! `vreinterpret` bit casts.
+
+use super::Value;
+use crate::neon::elem::{self};
+use crate::neon::ops::{Family, NeonOp};
+use crate::neon::vreg::VReg;
+
+pub fn eval(op: NeonOp, args: &[Value]) -> VReg {
+    let e = op.elem;
+    let ret = op.sig().ret.expect("convert ops return a vector");
+    match op.family {
+        Family::Movl => {
+            let a = args[0].v();
+            let lanes = a
+                .lanes
+                .iter()
+                .map(|&x| {
+                    if e.is_signed() {
+                        elem::from_i64(ret.elem, elem::to_i64(e, x))
+                    } else {
+                        elem::to_u64(e, x)
+                    }
+                })
+                .collect();
+            VReg::from_raw(ret, lanes)
+        }
+        Family::Movn => {
+            let a = args[0].v();
+            let lanes = a.lanes.iter().map(|&x| x & ret.elem.lane_mask()).collect();
+            VReg::from_raw(ret, lanes)
+        }
+        Family::Qmovn => {
+            let a = args[0].v();
+            let lanes = a
+                .lanes
+                .iter()
+                .map(|&x| {
+                    let v = if e.is_signed() {
+                        elem::to_i64(e, x) as i128
+                    } else {
+                        elem::to_u64(e, x) as i128
+                    };
+                    elem::saturate(ret.elem, v)
+                })
+                .collect();
+            VReg::from_raw(ret, lanes)
+        }
+        Family::Qmovun => {
+            // signed wide -> unsigned narrow with saturation
+            let a = args[0].v();
+            let lanes = a
+                .lanes
+                .iter()
+                .map(|&x| elem::saturate(ret.elem, elem::to_i64(e, x) as i128))
+                .collect();
+            VReg::from_raw(ret, lanes)
+        }
+        Family::CvtIF => {
+            let a = args[0].v();
+            let fe = ret.elem;
+            let lanes = a
+                .lanes
+                .iter()
+                .map(|&x| {
+                    let v = if e.is_signed() {
+                        elem::to_i64(e, x) as f64
+                    } else {
+                        elem::to_u64(e, x) as f64
+                    };
+                    elem::from_f64(fe, v)
+                })
+                .collect();
+            VReg::from_raw(ret, lanes)
+        }
+        Family::CvtFI => cvt_float_int(op, args, RoundMode::TowardZero),
+        Family::CvtnFI => cvt_float_int(op, args, RoundMode::NearestEven),
+        Family::Reinterpret => {
+            // the IR supplies a source vector; reinterpret to the named type
+            args[0].v().reinterpret(ret)
+        }
+        f => panic!("convert::eval got family {f:?}"),
+    }
+}
+
+enum RoundMode {
+    TowardZero,
+    NearestEven,
+}
+
+fn cvt_float_int(op: NeonOp, args: &[Value], mode: RoundMode) -> VReg {
+    let e = op.elem;
+    let ret = op.sig().ret.unwrap();
+    let a = args[0].v();
+    let bits = ret.elem.bits();
+    let (lo, hi) = (-(2f64.powi(bits as i32 - 1)), 2f64.powi(bits as i32 - 1) - 1.0);
+    let lanes = a
+        .lanes
+        .iter()
+        .map(|&x| {
+            let f = elem::to_f64(e, x);
+            let r = match mode {
+                RoundMode::TowardZero => f.trunc(),
+                RoundMode::NearestEven => round_ties_even(f),
+            };
+            // NEON saturates out-of-range conversions; NaN -> 0
+            let r = if r.is_nan() { 0.0 } else { r.clamp(lo, hi) };
+            elem::from_i64(ret.elem, r as i64)
+        })
+        .collect();
+    VReg::from_raw(ret, lanes)
+}
+
+fn round_ties_even(f: f64) -> f64 {
+    let r = f.round(); // rounds half away from zero
+    if (f - f.trunc()).abs() == 0.5 {
+        // tie: pick the even neighbour
+        let down = f.floor();
+        let up = f.ceil();
+        if (down as i64) % 2 == 0 {
+            down
+        } else {
+            up
+        }
+    } else {
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::neon::elem::Elem;
+    use crate::neon::vreg::VecTy;
+
+    #[test]
+    fn vmovl_s8_sign_extends() {
+        let op = NeonOp::new(Family::Movl, Elem::I8, false);
+        let a = Value::V(VReg::from_i64s(VecTy::d(Elem::I8), &[-1, 127, -128, 0, 1, 2, 3, 4]));
+        let r = eval(op, &[a]);
+        assert_eq!(r.ty, VecTy::q(Elem::I16));
+        assert_eq!(r.as_i64s(), vec![-1, 127, -128, 0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn vmovn_s16_truncates() {
+        let op = NeonOp::new(Family::Movn, Elem::I16, false);
+        let a = Value::V(VReg::from_i64s(VecTy::q(Elem::I16), &[0x1ff, -1, 300, 0, 1, 2, 3, 4]));
+        let r = eval(op, &[a]);
+        assert_eq!(r.ty, VecTy::d(Elem::I8));
+        assert_eq!(r.as_i64s(), vec![-1, -1, 44, 0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn vqmovn_s16_saturates() {
+        let op = NeonOp::new(Family::Qmovn, Elem::I16, false);
+        let a = Value::V(VReg::from_i64s(VecTy::q(Elem::I16), &[300, -300, 100, 0, 1, 2, 3, 4]));
+        let r = eval(op, &[a]);
+        assert_eq!(r.as_i64s(), vec![127, -128, 100, 0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn vqmovun_s16_clamps_negative() {
+        let op = NeonOp::new(Family::Qmovun, Elem::I16, false);
+        let a = Value::V(VReg::from_i64s(VecTy::q(Elem::I16), &[-5, 300, 100, 0, 1, 2, 3, 4]));
+        let r = eval(op, &[a]);
+        assert_eq!(r.ty, VecTy::d(Elem::U8));
+        assert_eq!(r.as_u64s(), vec![0, 255, 100, 0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn vcvtq_f32_s32() {
+        let op = NeonOp::new(Family::CvtIF, Elem::I32, true);
+        let a = Value::V(VReg::from_i64s(VecTy::q(Elem::I32), &[-2, 0, 7, 100]));
+        let r = eval(op, &[a]);
+        assert_eq!(r.ty, VecTy::q(Elem::F32));
+        assert_eq!(r.as_f64s(), vec![-2.0, 0.0, 7.0, 100.0]);
+    }
+
+    #[test]
+    fn vcvtq_s32_f32_truncates_and_saturates() {
+        let op = NeonOp::new(Family::CvtFI, Elem::F32, true);
+        let a = Value::V(VReg::from_f32s(VecTy::q(Elem::F32), &[-2.9, 2.9, 3e10, -3e10]));
+        let r = eval(op, &[a]);
+        assert_eq!(r.as_i64s(), vec![-2, 2, i32::MAX as i64, i32::MIN as i64]);
+    }
+
+    #[test]
+    fn vcvtnq_s32_f32_rne() {
+        let op = NeonOp::new(Family::CvtnFI, Elem::F32, true);
+        let a = Value::V(VReg::from_f32s(VecTy::q(Elem::F32), &[0.5, 1.5, 2.5, -0.5]));
+        let r = eval(op, &[a]);
+        assert_eq!(r.as_i64s(), vec![0, 2, 2, 0]);
+    }
+
+    #[test]
+    fn reinterpret_s32_u8() {
+        let op = NeonOp::new(Family::Reinterpret, Elem::U8, true);
+        let a = Value::V(VReg::from_i64s(VecTy::q(Elem::I32), &[0x01020304, 0, 0, 0]));
+        let r = eval(op, &[a]);
+        assert_eq!(r.as_u64s()[..4], [4, 3, 2, 1]);
+    }
+}

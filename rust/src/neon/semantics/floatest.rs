@@ -1,0 +1,149 @@
+//! Float estimate / rounding family semantics: `vrecpe`/`vrecps`,
+//! `vrsqrte`/`vrsqrts` (XNNPACK's Newton-iteration sqrt path), exact sqrt,
+//! and round-to-nearest.
+//!
+//! Estimate precision note: real NEON gives an 8-bit mantissa estimate and
+//! RVV's `vfrec7`/`vfrsqrt7` give 7 bits, via different lookup tables. To
+//! keep the NEON-interpreted golden outputs bit-comparable with translated
+//! RVV runs, both semantic models use the same deterministic estimate
+//! (mantissa truncated to 8 fraction bits); Newton steps are exact ops so
+//! kernels converge to full precision the same way on both paths (see
+//! DESIGN.md §2).
+
+use super::{fop1, fop2, map1, map2, Value};
+use crate::neon::elem::Elem;
+use crate::neon::ops::{Family, NeonOp};
+use crate::neon::vreg::VReg;
+
+/// Shared 8-fraction-bit reciprocal estimate.
+pub fn recip_estimate(x: f64) -> f64 {
+    if x == 0.0 {
+        return f64::INFINITY.copysign(x);
+    }
+    if x.is_infinite() {
+        return 0.0f64.copysign(x);
+    }
+    truncate_mantissa(1.0 / x)
+}
+
+/// Shared 8-fraction-bit reciprocal square-root estimate.
+pub fn rsqrt_estimate(x: f64) -> f64 {
+    if x < 0.0 {
+        return f64::NAN;
+    }
+    if x == 0.0 {
+        return f64::INFINITY;
+    }
+    truncate_mantissa(1.0 / x.sqrt())
+}
+
+fn truncate_mantissa(v: f64) -> f64 {
+    // keep 8 fraction bits of the f64 mantissa (52 -> 8)
+    let bits = v.to_bits();
+    f64::from_bits(bits & !((1u64 << 44) - 1))
+}
+
+pub fn eval(op: NeonOp, args: &[Value]) -> VReg {
+    let e = op.elem;
+    assert!(matches!(e, Elem::F16 | Elem::F32 | Elem::F64));
+    let ret = op.sig().ret.expect("float-est ops return a vector");
+    match op.family {
+        Family::Recpe => map1(ret, args[0].v(), fop1(e, recip_estimate)),
+        Family::Recps => {
+            // Newton step for reciprocal: 2 - a*b (result feeds b*step)
+            map2(ret, args[0].v(), args[1].v(), fop2(e, |a, b| 2.0 - a * b))
+        }
+        Family::Rsqrte => map1(ret, args[0].v(), fop1(e, rsqrt_estimate)),
+        Family::Rsqrts => {
+            // Newton step for rsqrt: (3 - a*b) / 2
+            map2(ret, args[0].v(), args[1].v(), fop2(e, |a, b| (3.0 - a * b) / 2.0))
+        }
+        Family::Sqrt => map1(ret, args[0].v(), fop1(e, f64::sqrt)),
+        Family::Rndn => map1(ret, args[0].v(), fop1(e, |x| {
+            // round half to even
+            let r = x.round();
+            if (x - x.trunc()).abs() == 0.5 {
+                if (x.floor() as i64) % 2 == 0 {
+                    x.floor()
+                } else {
+                    x.ceil()
+                }
+            } else {
+                r
+            }
+        })),
+        f => panic!("floatest::eval got family {f:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::neon::vreg::VecTy;
+
+    fn qf(v: &[f32]) -> Value {
+        Value::V(VReg::from_f32s(VecTy::q(Elem::F32), v))
+    }
+
+    #[test]
+    fn vsqrtq_f32() {
+        let op = NeonOp::new(Family::Sqrt, Elem::F32, true);
+        let r = eval(op, &[qf(&[4.0, 9.0, 2.0, 0.0])]);
+        let v = r.as_f64s();
+        assert_eq!(v[0], 2.0);
+        assert_eq!(v[1], 3.0);
+        assert!((v[2] - 2f64.sqrt()).abs() < 1e-6);
+        assert_eq!(v[3], 0.0);
+    }
+
+    #[test]
+    fn rsqrte_newton_converges() {
+        // two Newton iterations reach < 1e-6 relative error (XNNPACK pattern)
+        for x in [0.5f64, 1.0, 2.0, 100.0, 12345.678] {
+            let mut y = rsqrt_estimate(x);
+            for _ in 0..2 {
+                let step = (3.0 - x * y * y) / 2.0;
+                y *= step;
+            }
+            let exact = 1.0 / x.sqrt();
+            assert!(((y - exact) / exact).abs() < 1e-6, "x={x} y={y}");
+        }
+    }
+
+    #[test]
+    fn recpe_newton_converges() {
+        for x in [0.5f64, 3.0, 7.7, 1e4] {
+            let mut y = recip_estimate(x);
+            for _ in 0..2 {
+                y *= 2.0 - x * y;
+            }
+            assert!(((y - 1.0 / x) * x).abs() < 1e-6, "x={x}");
+        }
+    }
+
+    #[test]
+    fn estimate_initial_accuracy() {
+        // estimates are within 2^-8 relative error
+        for x in [1.0f64, 1.5, 2.0, 3.75, 1000.0] {
+            let r = recip_estimate(x);
+            assert!(((r - 1.0 / x) * x).abs() < 1.0 / 256.0 + 1e-12, "x={x}");
+            let s = rsqrt_estimate(x);
+            assert!(((s - 1.0 / x.sqrt()) * x.sqrt()).abs() < 1.0 / 256.0 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn vrndnq_f32_ties_to_even() {
+        let op = NeonOp::new(Family::Rndn, Elem::F32, true);
+        let r = eval(op, &[qf(&[0.5, 1.5, -2.5, 3.3])]);
+        assert_eq!(r.as_f64s(), vec![0.0, 2.0, -2.0, 3.0]);
+    }
+
+    #[test]
+    fn recpe_edge_cases() {
+        assert_eq!(recip_estimate(0.0), f64::INFINITY);
+        assert_eq!(recip_estimate(f64::INFINITY), 0.0);
+        assert!(rsqrt_estimate(-1.0).is_nan());
+        assert_eq!(rsqrt_estimate(0.0), f64::INFINITY);
+    }
+}

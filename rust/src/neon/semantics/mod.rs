@@ -1,0 +1,138 @@
+//! Executable semantics for every implemented NEON intrinsic family.
+//!
+//! [`eval_pure`] evaluates non-memory intrinsics over concrete vector
+//! values; memory families (`ld1*`/`st1*`) are handled by the interpreter,
+//! which resolves addresses first. These semantics are the *golden
+//! reference* for the whole pipeline: translated RVV programs must
+//! reproduce them.
+
+mod arith;
+mod bitmanip;
+mod cmp_bit;
+mod convert;
+pub mod floatest;
+mod permute;
+mod shift;
+
+use super::ops::{Family, NeonOp};
+use super::vreg::VReg;
+
+/// A concrete argument to a pure intrinsic evaluation.
+#[derive(Debug, Clone)]
+pub enum Value {
+    V(VReg),
+    Imm(i64),
+    /// Float immediate (for float `vdup_n`).
+    F(f64),
+}
+
+impl Value {
+    pub fn v(&self) -> &VReg {
+        match self {
+            Value::V(v) => v,
+            other => panic!("expected vector, got {other:?}"),
+        }
+    }
+
+    pub fn imm(&self) -> i64 {
+        match self {
+            Value::Imm(i) => *i,
+            _ => panic!("expected imm"),
+        }
+    }
+
+    pub fn fimm(&self) -> f64 {
+        match self {
+            Value::F(f) => *f,
+            Value::Imm(i) => *i as f64,
+            Value::V(_) => panic!("expected float imm, got vector"),
+        }
+    }
+}
+
+/// Evaluate a pure (non-memory) NEON intrinsic.
+pub fn eval_pure(op: NeonOp, args: &[Value]) -> VReg {
+    use Family::*;
+    match op.family {
+        Add | Sub | Mul | Mla | Mls | Fma | Fms | Div | Abs | Neg | Min
+        | Max | Hadd | Rhadd | Qadd | Qsub | Abd | MulLane | MlaLane
+        | FmaLane | Mull | Mlal | Pmin | Pmax | Padd => arith::eval(op, args),
+        Ceq | Cge | Cgt | Cle | Clt | Ceqz | Tst | And | Orr | Eor | Bic
+        | Orn | Mvn | Bsl => cmp_bit::eval(op, args),
+        ShlN | ShrN | SliN | SriN | Sshl | ShrnN => shift::eval(op, args),
+        GetLow | GetHigh | Combine | Ext | Rev64 | Rev32 | Rev16 | Zip1
+        | Zip2 | Uzp1 | Uzp2 | Trn1 | Trn2 | DupLane | DupN | Tbl1 => {
+            permute::eval(op, args)
+        }
+        Movl | Movn | Qmovn | Qmovun | CvtIF | CvtFI | CvtnFI | Reinterpret => {
+            convert::eval(op, args)
+        }
+        Recpe | Recps | Rsqrte | Rsqrts | Sqrt | Rndn => floatest::eval(op, args),
+        Rbit | Clz | Cnt => bitmanip::eval(op, args),
+        Ld1 | Ld1Dup | Ld1Lane | St1 | St1Lane => {
+            panic!("memory intrinsic {} must be handled by the interpreter", op.name())
+        }
+    }
+}
+
+// -- shared lane helpers ----------------------------------------------------
+
+use super::elem::{self, Elem};
+use super::vreg::VecTy;
+
+/// Elementwise unary over raw lanes.
+pub(crate) fn map1(ret: VecTy, a: &VReg, f: impl Fn(u64) -> u64) -> VReg {
+    VReg::from_raw(ret, a.lanes.iter().map(|&x| f(x)).collect())
+}
+
+/// Elementwise binary over raw lanes.
+pub(crate) fn map2(ret: VecTy, a: &VReg, b: &VReg, f: impl Fn(u64, u64) -> u64) -> VReg {
+    VReg::from_raw(
+        ret,
+        a.lanes.iter().zip(&b.lanes).map(|(&x, &y)| f(x, y)).collect(),
+    )
+}
+
+/// Elementwise ternary over raw lanes.
+pub(crate) fn map3(
+    ret: VecTy,
+    a: &VReg,
+    b: &VReg,
+    c: &VReg,
+    f: impl Fn(u64, u64, u64) -> u64,
+) -> VReg {
+    VReg::from_raw(
+        ret,
+        a.lanes
+            .iter()
+            .zip(&b.lanes)
+            .zip(&c.lanes)
+            .map(|((&x, &y), &z)| f(x, y, z))
+            .collect(),
+    )
+}
+
+/// Float unary on elem `e`.
+pub(crate) fn fop1(e: Elem, f: impl Fn(f64) -> f64) -> impl Fn(u64) -> u64 {
+    move |x| elem::from_f64(e, f(elem::to_f64(e, x)))
+}
+
+/// Float binary on elem `e`.
+pub(crate) fn fop2(e: Elem, f: impl Fn(f64, f64) -> f64) -> impl Fn(u64, u64) -> u64 {
+    move |x, y| elem::from_f64(e, f(elem::to_f64(e, x), elem::to_f64(e, y)))
+}
+
+/// Signed-integer binary on elem `e` (wrapping into lane width).
+pub(crate) fn iop2(e: Elem, f: impl Fn(i64, i64) -> i64) -> impl Fn(u64, u64) -> u64 {
+    move |x, y| elem::from_i64(e, f(elem::to_i64(e, x), elem::to_i64(e, y)))
+}
+
+/// Unsigned-integer binary on elem `e`.
+pub(crate) fn uop2(e: Elem, f: impl Fn(u64, u64) -> u64) -> impl Fn(u64, u64) -> u64 {
+    move |x, y| f(elem::to_u64(e, x), elem::to_u64(e, y)) & e.lane_mask()
+}
+
+/// All-ones lane pattern for comparison results.
+pub(crate) fn ones(e: Elem) -> u64 {
+    e.lane_mask()
+}

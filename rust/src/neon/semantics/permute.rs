@@ -1,0 +1,204 @@
+//! Permute family semantics: half extraction (`vget_high`, paper Listing 5),
+//! combine, window extract, reversals, zips/unzips/transposes, broadcasts,
+//! and byte table lookup.
+
+use super::Value;
+use crate::neon::elem::{self, Elem};
+use crate::neon::ops::{Family, NeonOp};
+use crate::neon::vreg::{VReg, VecTy};
+
+pub fn eval(op: NeonOp, args: &[Value]) -> VReg {
+    let ret = op.sig().ret.expect("permute ops return a vector");
+    match op.family {
+        Family::GetLow => {
+            let a = args[0].v();
+            VReg::from_raw(ret, a.lanes[..ret.lanes as usize].to_vec())
+        }
+        Family::GetHigh => {
+            // paper Listing 5: RVV equivalent is vslidedown by N/2
+            let a = args[0].v();
+            let half = a.lanes.len() / 2;
+            VReg::from_raw(ret, a.lanes[half..].to_vec())
+        }
+        Family::Combine => {
+            let (lo, hi) = (args[0].v(), args[1].v());
+            let lanes = lo.lanes.iter().chain(&hi.lanes).copied().collect();
+            VReg::from_raw(ret, lanes)
+        }
+        Family::Ext => {
+            // result = concat(a, b)[n .. n+lanes]
+            let (a, b) = (args[0].v(), args[1].v());
+            let n = args[2].imm() as usize;
+            let cat: Vec<u64> = a.lanes.iter().chain(&b.lanes).copied().collect();
+            VReg::from_raw(ret, cat[n..n + ret.lanes as usize].to_vec())
+        }
+        Family::Rev64 | Family::Rev32 | Family::Rev16 => {
+            let group_bits = match op.family {
+                Family::Rev64 => 64,
+                Family::Rev32 => 32,
+                _ => 16,
+            };
+            let a = args[0].v();
+            let per = (group_bits / op.elem.bits()) as usize;
+            let mut lanes = a.lanes.clone();
+            for chunk in lanes.chunks_mut(per) {
+                chunk.reverse();
+            }
+            VReg::from_raw(ret, lanes)
+        }
+        Family::Zip1 | Family::Zip2 => {
+            let (a, b) = (args[0].v(), args[1].v());
+            let half = a.lanes.len() / 2;
+            let off = if op.family == Family::Zip2 { half } else { 0 };
+            let mut lanes = Vec::with_capacity(a.lanes.len());
+            for i in 0..half {
+                lanes.push(a.lanes[off + i]);
+                lanes.push(b.lanes[off + i]);
+            }
+            VReg::from_raw(ret, lanes)
+        }
+        Family::Uzp1 | Family::Uzp2 => {
+            let (a, b) = (args[0].v(), args[1].v());
+            let off = if op.family == Family::Uzp2 { 1 } else { 0 };
+            let lanes = a
+                .lanes
+                .iter()
+                .chain(&b.lanes)
+                .copied()
+                .skip(off)
+                .step_by(2)
+                .collect();
+            VReg::from_raw(ret, lanes)
+        }
+        Family::Trn1 | Family::Trn2 => {
+            let (a, b) = (args[0].v(), args[1].v());
+            let off = if op.family == Family::Trn2 { 1 } else { 0 };
+            let mut lanes = Vec::with_capacity(a.lanes.len());
+            for i in (0..a.lanes.len()).step_by(2) {
+                lanes.push(a.lanes[i + off]);
+                lanes.push(b.lanes[i + off]);
+            }
+            VReg::from_raw(ret, lanes)
+        }
+        Family::DupLane => {
+            let a = args[0].v();
+            let lane = args[1].imm() as usize;
+            VReg::splat_raw(ret, a.lane(lane))
+        }
+        Family::DupN => {
+            let raw = if op.elem.is_float() {
+                elem::from_f64(op.elem, args[0].fimm())
+            } else {
+                elem::from_i64(op.elem, args[0].imm())
+            };
+            VReg::splat_raw(ret, raw)
+        }
+        Family::Tbl1 => {
+            // byte table lookup: out[i] = idx[i] < 8 ? table[idx[i]] : 0
+            let (table, idx) = (args[0].v(), args[1].v());
+            let lanes = idx
+                .lanes
+                .iter()
+                .map(|&i| {
+                    let i = elem::to_u64(Elem::U8, i) as usize;
+                    if i < table.lanes.len() {
+                        table.lanes[i]
+                    } else {
+                        0
+                    }
+                })
+                .collect();
+            VReg::from_raw(VecTy::d(Elem::U8), lanes)
+        }
+        f => panic!("permute::eval got family {f:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn q32(v: &[i64]) -> Value {
+        Value::V(VReg::from_i64s(VecTy::q(Elem::I32), v))
+    }
+
+    fn d32(v: &[i64]) -> Value {
+        Value::V(VReg::from_i64s(VecTy::d(Elem::I32), v))
+    }
+
+    #[test]
+    fn vget_high_s32_listing5() {
+        let op = NeonOp::new(Family::GetHigh, Elem::I32, false);
+        let r = eval(op, &[q32(&[1, 2, 3, 4])]);
+        assert_eq!(r.ty, VecTy::d(Elem::I32));
+        assert_eq!(r.as_i64s(), vec![3, 4]);
+    }
+
+    #[test]
+    fn vget_low_and_combine_roundtrip() {
+        let lo = eval(NeonOp::new(Family::GetLow, Elem::I32, false), &[q32(&[1, 2, 3, 4])]);
+        let hi = eval(NeonOp::new(Family::GetHigh, Elem::I32, false), &[q32(&[1, 2, 3, 4])]);
+        let back = eval(
+            NeonOp::new(Family::Combine, Elem::I32, false),
+            &[Value::V(lo), Value::V(hi)],
+        );
+        assert_eq!(back.as_i64s(), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn vextq_s32_window() {
+        let op = NeonOp::new(Family::Ext, Elem::I32, true);
+        let r = eval(op, &[q32(&[1, 2, 3, 4]), q32(&[5, 6, 7, 8]), Value::Imm(3)]);
+        assert_eq!(r.as_i64s(), vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn vrev64q_s32() {
+        let op = NeonOp::new(Family::Rev64, Elem::I32, true);
+        let r = eval(op, &[q32(&[1, 2, 3, 4])]);
+        assert_eq!(r.as_i64s(), vec![2, 1, 4, 3]);
+    }
+
+    #[test]
+    fn vzip1q_vzip2q() {
+        let z1 = eval(NeonOp::new(Family::Zip1, Elem::I32, true), &[q32(&[1, 2, 3, 4]), q32(&[5, 6, 7, 8])]);
+        assert_eq!(z1.as_i64s(), vec![1, 5, 2, 6]);
+        let z2 = eval(NeonOp::new(Family::Zip2, Elem::I32, true), &[q32(&[1, 2, 3, 4]), q32(&[5, 6, 7, 8])]);
+        assert_eq!(z2.as_i64s(), vec![3, 7, 4, 8]);
+    }
+
+    #[test]
+    fn vuzp_vtrn() {
+        let u1 = eval(NeonOp::new(Family::Uzp1, Elem::I32, true), &[q32(&[1, 2, 3, 4]), q32(&[5, 6, 7, 8])]);
+        assert_eq!(u1.as_i64s(), vec![1, 3, 5, 7]);
+        let u2 = eval(NeonOp::new(Family::Uzp2, Elem::I32, true), &[q32(&[1, 2, 3, 4]), q32(&[5, 6, 7, 8])]);
+        assert_eq!(u2.as_i64s(), vec![2, 4, 6, 8]);
+        let t1 = eval(NeonOp::new(Family::Trn1, Elem::I32, true), &[q32(&[1, 2, 3, 4]), q32(&[5, 6, 7, 8])]);
+        assert_eq!(t1.as_i64s(), vec![1, 5, 3, 7]);
+        let t2 = eval(NeonOp::new(Family::Trn2, Elem::I32, true), &[q32(&[1, 2, 3, 4]), q32(&[5, 6, 7, 8])]);
+        assert_eq!(t2.as_i64s(), vec![2, 6, 4, 8]);
+    }
+
+    #[test]
+    fn vdupq_lane_s32() {
+        let op = NeonOp::new(Family::DupLane, Elem::I32, true);
+        let r = eval(op, &[d32(&[7, 9]), Value::Imm(1)]);
+        assert_eq!(r.as_i64s(), vec![9, 9, 9, 9]);
+    }
+
+    #[test]
+    fn vdupq_n_s32() {
+        let op = NeonOp::new(Family::DupN, Elem::I32, true);
+        let r = eval(op, &[Value::Imm(-3)]);
+        assert_eq!(r.as_i64s(), vec![-3; 4]);
+    }
+
+    #[test]
+    fn vtbl1_u8_out_of_range_is_zero() {
+        let op = NeonOp::new(Family::Tbl1, Elem::U8, false);
+        let table = Value::V(VReg::from_i64s(VecTy::d(Elem::U8), &[10, 11, 12, 13, 14, 15, 16, 17]));
+        let idx = Value::V(VReg::from_i64s(VecTy::d(Elem::U8), &[0, 7, 3, 200, 1, 8, 2, 5]));
+        let r = eval(op, &[table, idx]);
+        assert_eq!(r.as_u64s(), vec![10, 17, 13, 0, 11, 0, 12, 15]);
+    }
+}

@@ -1,0 +1,169 @@
+//! Shift family semantics: immediate shifts, shift-and-insert (`vsli`/
+//! `vsri`, used by XNNPACK's exp reconstruction), vector shifts, and
+//! narrowing shifts.
+
+use super::{map1, map2, Value};
+use crate::neon::elem::{self};
+use crate::neon::ops::{Family, NeonOp};
+use crate::neon::vreg::VReg;
+
+pub fn eval(op: NeonOp, args: &[Value]) -> VReg {
+    let e = op.elem;
+    let ret = op.sig().ret.expect("shift ops return a vector");
+    let bits = e.bits();
+    match op.family {
+        Family::ShlN => {
+            let n = args[1].imm() as u32;
+            assert!(n < bits, "vshl_n shift {n} out of range for {bits}-bit lanes");
+            map1(ret, args[0].v(), move |x| x << n)
+        }
+        Family::ShrN => {
+            let n = args[1].imm() as u32;
+            assert!(n >= 1 && n <= bits, "vshr_n shift {n} out of range");
+            if e.is_signed() {
+                map1(ret, args[0].v(), move |x| {
+                    elem::from_i64(e, elem::to_i64(e, x) >> n.min(63))
+                })
+            } else {
+                map1(ret, args[0].v(), move |x| {
+                    if n >= bits {
+                        0
+                    } else {
+                        elem::to_u64(e, x) >> n
+                    }
+                })
+            }
+        }
+        Family::SliN => {
+            // vsli: (b << n) inserted into a keeping a's low n bits
+            let n = args[2].imm() as u32;
+            let keep = if n == 0 { 0 } else { (1u64 << n) - 1 };
+            map2(ret, args[0].v(), args[1].v(), move |a, b| {
+                ((b << n) & !keep) | (a & keep)
+            })
+        }
+        Family::SriN => {
+            // vsri: (b >> n) inserted into a keeping a's high n bits
+            let n = args[2].imm() as u32;
+            let keep_hi = if n == 0 {
+                0
+            } else {
+                let m = elem::Elem::lane_mask(e);
+                m & !(m >> n)
+            };
+            map2(ret, args[0].v(), args[1].v(), move |a, b| {
+                ((elem::to_u64(e, b) >> n) & !keep_hi) | (a & keep_hi)
+            })
+        }
+        Family::Sshl => {
+            // shift by signed per-lane amount: positive left, negative right
+            map2(ret, args[0].v(), args[1].v(), move |x, s| {
+                let sh = elem::to_i64(e.as_signed(), s);
+                if sh >= 0 {
+                    let sh = (sh as u32).min(63);
+                    if sh >= bits {
+                        0
+                    } else {
+                        x << sh
+                    }
+                } else {
+                    let sh = ((-sh) as u32).min(63);
+                    if e.is_signed() {
+                        elem::from_i64(e, elem::to_i64(e, x) >> sh.min(bits - 1))
+                    } else if sh >= bits {
+                        0
+                    } else {
+                        elem::to_u64(e, x) >> sh
+                    }
+                }
+            })
+        }
+        Family::ShrnN => {
+            // narrowing shift right: q source, d result, truncate to half width
+            let n = args[1].imm() as u32;
+            let src = args[0].v();
+            let narrow = ret.elem;
+            let lanes = src
+                .lanes
+                .iter()
+                .map(|&x| {
+                    let shifted = if e.is_signed() {
+                        (elem::to_i64(e, x) >> n) as u64
+                    } else {
+                        elem::to_u64(e, x) >> n
+                    };
+                    shifted & narrow.lane_mask()
+                })
+                .collect();
+            VReg::from_raw(ret, lanes)
+        }
+        f => panic!("shift::eval got family {f:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::neon::elem::Elem;
+    use crate::neon::vreg::VecTy;
+
+    #[test]
+    fn vshlq_n_s32() {
+        let op = NeonOp::new(Family::ShlN, Elem::I32, true);
+        let a = Value::V(VReg::from_i64s(VecTy::q(Elem::I32), &[1, -1, 3, 1 << 30]));
+        let r = eval(op, &[a, Value::Imm(2)]);
+        assert_eq!(r.as_i64s(), vec![4, -4, 12, 0]);
+    }
+
+    #[test]
+    fn vshrq_n_signed_vs_unsigned() {
+        let s = NeonOp::new(Family::ShrN, Elem::I32, true);
+        let a = Value::V(VReg::from_i64s(VecTy::q(Elem::I32), &[-8, 8, -1, 0]));
+        let r = eval(s, &[a, Value::Imm(2)]);
+        assert_eq!(r.as_i64s(), vec![-2, 2, -1, 0]);
+
+        let u = NeonOp::new(Family::ShrN, Elem::U32, true);
+        let a = Value::V(VReg::from_i64s(VecTy::q(Elem::U32), &[0xffff_fff8, 8, 1, 0]));
+        let r = eval(u, &[a, Value::Imm(2)]);
+        assert_eq!(r.as_u64s(), vec![0x3fff_fffe, 2, 0, 0]);
+    }
+
+    #[test]
+    fn vsliq_n_inserts() {
+        // used by XNNPACK exp: insert exponent bits
+        let op = NeonOp::new(Family::SliN, Elem::I32, true);
+        let a = Value::V(VReg::from_i64s(VecTy::q(Elem::I32), &[0b11, 0b01, 0, 0b10]));
+        let b = Value::V(VReg::from_i64s(VecTy::q(Elem::I32), &[1, 2, 3, 4]));
+        let r = eval(op, &[a, b, Value::Imm(2)]);
+        assert_eq!(r.as_i64s(), vec![0b111, 0b1001, 0b1100, 0b10010]);
+    }
+
+    #[test]
+    fn vsriq_n_keeps_high() {
+        let op = NeonOp::new(Family::SriN, Elem::U8, true);
+        let a = Value::V(VReg::from_i64s(VecTy::q(Elem::U8), &[0x80; 16]));
+        let b = Value::V(VReg::from_i64s(VecTy::q(Elem::U8), &[0xff; 16]));
+        let r = eval(op, &[a, b, Value::Imm(1)]);
+        // keep a's top bit (0x80), insert 0xff>>1 = 0x7f into low 7
+        assert!(r.as_u64s().iter().all(|&x| x == 0xff));
+    }
+
+    #[test]
+    fn vshlq_s32_vector_negative_is_right() {
+        let op = NeonOp::new(Family::Sshl, Elem::I32, true);
+        let a = Value::V(VReg::from_i64s(VecTy::q(Elem::I32), &[16, 16, -16, 1]));
+        let s = Value::V(VReg::from_i64s(VecTy::q(Elem::I32), &[1, -2, -2, 40]));
+        let r = eval(op, &[a, s]);
+        assert_eq!(r.as_i64s(), vec![32, 4, -4, 0]);
+    }
+
+    #[test]
+    fn vshrn_n_s32() {
+        let op = NeonOp::new(Family::ShrnN, Elem::I32, false);
+        let a = Value::V(VReg::from_i64s(VecTy::q(Elem::I32), &[0x12345678, -256, 0xffff, 1]));
+        let r = eval(op, &[a, Value::Imm(8)]);
+        assert_eq!(r.ty, VecTy::d(Elem::I16));
+        // 0x123456 truncated to 16 bits = 0x3456
+        assert_eq!(r.as_i64s(), vec![0x3456, -1, 0xff, 0]);
+    }
+}

@@ -1,0 +1,176 @@
+//! NEON vector register values: fixed 64-bit (`D`) or 128-bit (`Q`) vectors
+//! of typed lanes, stored as raw bit patterns.
+
+use super::elem::{self, Elem};
+
+/// A NEON vector *type*: element type + lane count. Total width must be 64
+/// or 128 bits (the paper's §3.2: "Neon Intrinsics types have lengths of 64
+/// bits and 128 bits").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct VecTy {
+    pub elem: Elem,
+    pub lanes: u8,
+}
+
+impl VecTy {
+    pub fn new(elem: Elem, lanes: u8) -> VecTy {
+        let t = VecTy { elem, lanes };
+        debug_assert!(t.bits() == 64 || t.bits() == 128, "bad NEON vector {t:?}");
+        t
+    }
+
+    /// 64-bit ("doubleword") vector of `elem`.
+    pub fn d(elem: Elem) -> VecTy {
+        VecTy::new(elem, (64 / elem.bits()) as u8)
+    }
+
+    /// 128-bit ("quadword") vector of `elem`.
+    pub fn q(elem: Elem) -> VecTy {
+        VecTy::new(elem, (128 / elem.bits()) as u8)
+    }
+
+    /// `elem` vector of the given register width in bits.
+    pub fn of_bits(elem: Elem, bits: u32) -> VecTy {
+        match bits {
+            64 => VecTy::d(elem),
+            128 => VecTy::q(elem),
+            _ => panic!("NEON vectors are 64 or 128 bits, got {bits}"),
+        }
+    }
+
+    pub fn bits(self) -> u32 {
+        self.elem.bits() * self.lanes as u32
+    }
+
+    pub fn is_q(self) -> bool {
+        self.bits() == 128
+    }
+
+    /// NEON C type name, e.g. `int32x4_t`.
+    pub fn name(self) -> String {
+        format!("{}x{}_t", self.elem.ctype(), self.lanes)
+    }
+}
+
+/// A NEON vector *value*: lanes as raw bits (low `elem.bits()` significant).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VReg {
+    pub ty: VecTy,
+    pub lanes: Vec<u64>,
+}
+
+impl VReg {
+    pub fn zero(ty: VecTy) -> VReg {
+        VReg { ty, lanes: vec![0; ty.lanes as usize] }
+    }
+
+    pub fn from_raw(ty: VecTy, lanes: Vec<u64>) -> VReg {
+        assert_eq!(lanes.len(), ty.lanes as usize);
+        let mask = ty.elem.lane_mask();
+        VReg { ty, lanes: lanes.into_iter().map(|l| l & mask).collect() }
+    }
+
+    pub fn splat_raw(ty: VecTy, raw: u64) -> VReg {
+        VReg::from_raw(ty, vec![raw; ty.lanes as usize])
+    }
+
+    pub fn from_f32s(ty: VecTy, vals: &[f32]) -> VReg {
+        assert_eq!(ty.elem, Elem::F32);
+        VReg::from_raw(ty, vals.iter().map(|v| v.to_bits() as u64).collect())
+    }
+
+    pub fn from_i64s(ty: VecTy, vals: &[i64]) -> VReg {
+        VReg::from_raw(ty, vals.iter().map(|&v| elem::from_i64(ty.elem, v)).collect())
+    }
+
+    pub fn lane(&self, i: usize) -> u64 {
+        self.lanes[i]
+    }
+
+    pub fn set_lane(&mut self, i: usize, raw: u64) {
+        self.lanes[i] = raw & self.ty.elem.lane_mask();
+    }
+
+    pub fn as_f64s(&self) -> Vec<f64> {
+        self.lanes.iter().map(|&l| elem::to_f64(self.ty.elem, l)).collect()
+    }
+
+    pub fn as_i64s(&self) -> Vec<i64> {
+        self.lanes.iter().map(|&l| elem::to_i64(self.ty.elem, l)).collect()
+    }
+
+    pub fn as_u64s(&self) -> Vec<u64> {
+        self.lanes.iter().map(|&l| elem::to_u64(self.ty.elem, l)).collect()
+    }
+
+    /// Serialise to little-endian bytes (the in-memory layout of st1).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let w = self.ty.elem.bytes() as usize;
+        let mut out = Vec::with_capacity(self.ty.bits() as usize / 8);
+        for &l in &self.lanes {
+            out.extend_from_slice(&l.to_le_bytes()[..w]);
+        }
+        out
+    }
+
+    /// Deserialise from little-endian bytes (the in-memory layout of ld1).
+    pub fn from_bytes(ty: VecTy, bytes: &[u8]) -> VReg {
+        let w = ty.elem.bytes() as usize;
+        assert_eq!(bytes.len(), ty.lanes as usize * w);
+        let lanes = bytes
+            .chunks_exact(w)
+            .map(|c| {
+                let mut buf = [0u8; 8];
+                buf[..w].copy_from_slice(c);
+                u64::from_le_bytes(buf)
+            })
+            .collect();
+        VReg { ty, lanes }
+    }
+
+    /// Reinterpret the same 64/128 bits as a different lane layout
+    /// (`vreinterpret`).
+    pub fn reinterpret(&self, to: VecTy) -> VReg {
+        assert_eq!(self.ty.bits(), to.bits(), "reinterpret width mismatch");
+        VReg::from_bytes(to, &self.to_bytes())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vecty_names() {
+        assert_eq!(VecTy::q(Elem::I32).name(), "int32x4_t");
+        assert_eq!(VecTy::d(Elem::I32).name(), "int32x2_t");
+        assert_eq!(VecTy::q(Elem::U8).name(), "uint8x16_t");
+        assert_eq!(VecTy::q(Elem::F16).name(), "float16x8_t");
+        assert_eq!(VecTy::d(Elem::P64).name(), "poly64x1_t");
+    }
+
+    #[test]
+    fn lane_roundtrip() {
+        let v = VReg::from_i64s(VecTy::q(Elem::I32), &[1, -2, 3, -4]);
+        assert_eq!(v.as_i64s(), vec![1, -2, 3, -4]);
+        let b = v.to_bytes();
+        assert_eq!(b.len(), 16);
+        assert_eq!(VReg::from_bytes(VecTy::q(Elem::I32), &b), v);
+    }
+
+    #[test]
+    fn reinterpret_preserves_bits() {
+        let v = VReg::from_i64s(VecTy::q(Elem::I32), &[0x01020304, 0, -1, 7]);
+        let u8v = v.reinterpret(VecTy::q(Elem::U8));
+        assert_eq!(u8v.as_u64s()[..4], [4, 3, 2, 1]);
+        let back = u8v.reinterpret(VecTy::q(Elem::I32));
+        assert_eq!(back, v);
+    }
+
+    #[test]
+    #[should_panic]
+    fn reinterpret_width_mismatch_panics() {
+        let v = VReg::zero(VecTy::d(Elem::I8));
+        let _ = v.reinterpret(VecTy::q(Elem::I8));
+    }
+}

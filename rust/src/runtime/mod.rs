@@ -1,0 +1,176 @@
+//! JAX/XLA golden oracle: loads the AOT-compiled HLO-text artifacts
+//! produced by `make artifacts` and executes them on the PJRT CPU client.
+//!
+//! This is the only place python-originated code runs — at build time it
+//! was lowered to HLO; at run time the Rust binary is self-contained.
+//! Pattern from /opt/xla-example/load_hlo (HLO *text* interchange; see
+//! that README for why serialized protos are rejected).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::neon::elem::Elem;
+use crate::neon::interp::Buffer;
+
+/// Parsed manifest row: op name + input/output shapes.
+#[derive(Debug, Clone)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub inputs: Vec<(String, Vec<i64>)>,
+    pub outputs: Vec<(String, Vec<i64>)>,
+}
+
+fn parse_shape(s: &str) -> Result<(String, Vec<i64>)> {
+    // "f32[64,64]" or "uint32[16,16,16]"
+    let (dtype, rest) = s.split_once('[').context("missing '[' in shape")?;
+    let dims = rest
+        .trim_end_matches(']')
+        .split(',')
+        .filter(|d| !d.is_empty())
+        .map(|d| d.parse::<i64>().context("bad dim"))
+        .collect::<Result<Vec<_>>>()?;
+    Ok((dtype.to_string(), dims))
+}
+
+/// Parse `artifacts/manifest.txt`.
+pub fn parse_manifest(path: &Path) -> Result<Vec<ManifestEntry>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+    let mut out = Vec::new();
+    for line in text.lines().filter(|l| !l.trim().is_empty()) {
+        let parts: Vec<&str> = line.split(';').collect();
+        if parts.len() != 5 {
+            bail!("bad manifest line: {line}");
+        }
+        let inputs = parts[3].split('+').map(parse_shape).collect::<Result<Vec<_>>>()?;
+        let outputs = parts[4].split('+').map(parse_shape).collect::<Result<Vec<_>>>()?;
+        out.push(ManifestEntry { name: parts[0].to_string(), inputs, outputs });
+    }
+    Ok(out)
+}
+
+/// The oracle: one compiled executable per golden op.
+pub struct GoldenOracle {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    manifest: HashMap<String, ManifestEntry>,
+    dir: PathBuf,
+}
+
+impl GoldenOracle {
+    /// Load and compile every artifact listed in the manifest.
+    pub fn load(dir: &Path) -> Result<GoldenOracle> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let entries = parse_manifest(&dir.join("manifest.txt"))?;
+        let mut exes = HashMap::new();
+        let mut manifest = HashMap::new();
+        for e in entries {
+            let path = dir.join(format!("{}.hlo.txt", e.name));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).with_context(|| format!("compiling {}", e.name))?;
+            exes.insert(e.name.clone(), exe);
+            manifest.insert(e.name.clone(), e);
+        }
+        Ok(GoldenOracle { client, exes, manifest, dir: dir.to_path_buf() })
+    }
+
+    pub fn ops(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.exes.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    pub fn manifest(&self, op: &str) -> Option<&ManifestEntry> {
+        self.manifest.get(op)
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute a golden op on positional input buffers, returning output
+    /// buffers (f32 or u32 per the manifest).
+    pub fn run(&self, op: &str, inputs: &[&Buffer]) -> Result<Vec<Buffer>> {
+        let exe = self.exes.get(op).with_context(|| format!("unknown golden op '{op}'"))?;
+        let entry = &self.manifest[op];
+        if inputs.len() != entry.inputs.len() {
+            bail!("{op}: {} inputs given, manifest wants {}", inputs.len(), entry.inputs.len());
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (buf, (dtype, dims)) in inputs.iter().zip(&entry.inputs) {
+            if dtype != "f32" {
+                bail!("{op}: non-f32 input in manifest ({dtype})");
+            }
+            let want: i64 = dims.iter().product();
+            if buf.len_elems() as i64 != want {
+                bail!("{op}: input has {} elems, manifest wants {want}", buf.len_elems());
+            }
+            let lit = xla::Literal::vec1(&buf.as_f32s()).reshape(dims)?;
+            literals.push(lit);
+        }
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?
+            .to_tuple()?;
+        if result.len() != entry.outputs.len() {
+            bail!("{op}: got {} outputs, manifest wants {}", result.len(), entry.outputs.len());
+        }
+        let mut out = Vec::with_capacity(result.len());
+        for (lit, (dtype, _)) in result.into_iter().zip(&entry.outputs) {
+            match dtype.as_str() {
+                "float32" | "f32" => {
+                    out.push(Buffer::from_f32s(&lit.to_vec::<f32>()?));
+                }
+                "uint32" | "u32" => {
+                    out.push(Buffer::from_u32s(&lit.to_vec::<u32>()?));
+                }
+                other => bail!("{op}: unsupported output dtype {other}"),
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl std::fmt::Debug for GoldenOracle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("GoldenOracle")
+            .field("ops", &self.ops())
+            .field("dir", &self.dir)
+            .finish()
+    }
+}
+
+/// Map a golden output dtype string to our buffer elem (for checks).
+pub fn dtype_elem(dtype: &str) -> Option<Elem> {
+    match dtype {
+        "float32" | "f32" => Some(Elem::F32),
+        "uint32" | "u32" => Some(Elem::U32),
+        "int32" | "i32" => Some(Elem::I32),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_shape_parser() {
+        let (d, dims) = parse_shape("f32[64,64]").unwrap();
+        assert_eq!(d, "f32");
+        assert_eq!(dims, vec![64, 64]);
+        let (d, dims) = parse_shape("uint32[16,16,16]").unwrap();
+        assert_eq!(d, "uint32");
+        assert_eq!(dims, vec![16, 16, 16]);
+        assert!(parse_shape("garbage").is_err());
+    }
+}

@@ -1,0 +1,930 @@
+//! Execution semantics for each [`RvvKind`] per the riscv-v-spec 1.0.
+//!
+//! Masked-off and tail lanes are left undisturbed (a legal ta/ma
+//! implementation), which preserves the NEON values that live in the low
+//! 64/128 bits of each virtual register after translation.
+
+use anyhow::{bail, Result};
+
+use crate::neon::elem::{self, Elem};
+use crate::neon::semantics::floatest;
+use super::machine::RvvMachine;
+use super::ops::{Dst, RvvInst, RvvKind, Src};
+use super::vtype::Sew;
+
+fn float_elem(sew: Sew) -> Elem {
+    match sew {
+        Sew::E16 => Elem::F16,
+        Sew::E32 => Elem::F32,
+        Sew::E64 => Elem::F64,
+        Sew::E8 => panic!("no e8 float"),
+    }
+}
+
+fn int_elem(sew: Sew, signed: bool) -> Elem {
+    let e = match sew {
+        Sew::E8 => Elem::I8,
+        Sew::E16 => Elem::I16,
+        Sew::E32 => Elem::I32,
+        Sew::E64 => Elem::I64,
+    };
+    if signed {
+        e
+    } else {
+        e.as_unsigned()
+    }
+}
+
+/// Resolve a scalar-capable source operand to a raw lane value at `sew`.
+fn scalar_val(m: &RvvMachine, s: &Src, sew: Sew, float: bool) -> u64 {
+    match s {
+        Src::ImmI(i) => elem::from_i64(int_elem(sew, true), *i),
+        Src::ImmF(f) => elem::from_f64(float_elem(sew), *f),
+        Src::SReg(r) => {
+            let v = m.sregs[*r as usize];
+            if float {
+                elem::from_f64(float_elem(sew), v as f64)
+            } else {
+                elem::from_i64(int_elem(sew, true), v)
+            }
+        }
+        _ => panic!("operand is not scalar"),
+    }
+}
+
+/// Per-lane value of a source operand (vector lane or broadcast scalar).
+fn src_lane(m: &RvvMachine, s: &Src, sew: Sew, lane: u32, float: bool) -> u64 {
+    match s {
+        Src::V(r) => m.read_lane(*r, sew, lane),
+        _ => scalar_val(m, s, sew, float),
+    }
+}
+
+/// Execute one RVV instruction. `mem_byte_off` must be pre-resolved for
+/// loads/stores (the simulator evaluates the `MemRef` address expression).
+pub fn exec(m: &mut RvvMachine, inst: &RvvInst, mem_byte_off: Option<i64>) -> Result<()> {
+    use RvvKind::*;
+    let sew = inst.sew;
+    let vl = inst.vl;
+    let k = inst.kind;
+
+    // loads/stores
+    if k.is_load() || k.is_store() {
+        let base = mem_byte_off.expect("memory op without resolved address");
+        let mref = inst.mem.as_ref().unwrap();
+        // P2 fast path: unit-stride unmasked ops are a single bulk copy
+        if inst.mask.is_none() && mref.stride == 1 {
+            let n = (vl * sew.bytes()) as usize;
+            match (k, inst.dst, inst.srcs.first()) {
+                (Vle, Dst::V(dst), _) => return m.load_bulk(mref.buf, base, n, dst),
+                (Vse, Dst::None, Some(Src::V(src))) => {
+                    return m.store_bulk(mref.buf, base, n, *src)
+                }
+                _ => {}
+            }
+        }
+        let stride = mref.stride * sew.bytes() as i64;
+        match k {
+            Vle | Vlse => {
+                let Dst::V(dst) = inst.dst else { bail!("load without vreg dst") };
+                for i in 0..vl {
+                    if let Some(mk) = inst.mask {
+                        if !m.mask_bit(mk, i) {
+                            continue;
+                        }
+                    }
+                    let v = m.load_at(mref.buf, base + i as i64 * stride, sew)?;
+                    m.write_lane(dst, sew, i, v);
+                }
+            }
+            Vse | Vsse => {
+                let Some(Src::V(src)) = inst.srcs.first() else {
+                    bail!("store without vreg src")
+                };
+                for i in 0..vl {
+                    if let Some(mk) = inst.mask {
+                        if !m.mask_bit(mk, i) {
+                            continue;
+                        }
+                    }
+                    let v = m.read_lane(*src, sew, i);
+                    m.store_at(mref.buf, base + i as i64 * stride, sew, v)?;
+                }
+            }
+            _ => unreachable!(),
+        }
+        return Ok(());
+    }
+
+    // mask-register logical ops
+    if matches!(k, Vmand | Vmor | Vmxor | Vmnand) {
+        let Dst::M(dst) = inst.dst else { bail!("mask op without mask dst") };
+        let (Src::M(a), Src::M(b)) = (&inst.srcs[0], &inst.srcs[1]) else {
+            bail!("mask op without mask srcs")
+        };
+        for i in 0..vl {
+            let (x, y) = (m.mask_bit(*a, i), m.mask_bit(*b, i));
+            let r = match k {
+                Vmand => x && y,
+                Vmor => x || y,
+                Vmxor => x ^ y,
+                Vmnand => !(x && y),
+                _ => unreachable!(),
+            };
+            m.write_mask_bit(dst, i, r);
+        }
+        return Ok(());
+    }
+
+    // compares -> mask destination
+    if k.writes_mask() {
+        let Dst::M(dst) = inst.dst else { bail!("compare without mask dst") };
+        let a = &inst.srcs[0];
+        let b = &inst.srcs[1];
+        let float = matches!(k, Vmfeq | Vmfne | Vmflt | Vmfle | Vmfgt | Vmfge);
+        for i in 0..vl {
+            if let Some(mk) = inst.mask {
+                if !m.mask_bit(mk, i) {
+                    continue;
+                }
+            }
+            let x = src_lane(m, a, sew, i, float);
+            let y = src_lane(m, b, sew, i, float);
+            let r = if float {
+                let fe = float_elem(sew);
+                let (fx, fy) = (elem::to_f64(fe, x), elem::to_f64(fe, y));
+                match k {
+                    Vmfeq => fx == fy,
+                    Vmfne => fx != fy,
+                    Vmflt => fx < fy,
+                    Vmfle => fx <= fy,
+                    Vmfgt => fx > fy,
+                    Vmfge => fx >= fy,
+                    _ => unreachable!(),
+                }
+            } else {
+                let se = int_elem(sew, true);
+                let ue = int_elem(sew, false);
+                let (sx, sy) = (elem::to_i64(se, x), elem::to_i64(se, y));
+                let (ux, uy) = (elem::to_u64(ue, x), elem::to_u64(ue, y));
+                match k {
+                    Vmseq => x & se.lane_mask() == y & se.lane_mask(),
+                    Vmsne => x & se.lane_mask() != y & se.lane_mask(),
+                    Vmslt => sx < sy,
+                    Vmsle => sx <= sy,
+                    Vmsgt => sx > sy,
+                    Vmsltu => ux < uy,
+                    Vmsleu => ux <= uy,
+                    Vmsgtu => ux > uy,
+                    _ => unreachable!(),
+                }
+            };
+            m.write_mask_bit(dst, i, r);
+        }
+        return Ok(());
+    }
+
+    // reductions: dst[0] = fold(init = srcs[1][0], over srcs[0][0..vl])
+    if matches!(k, Vredsum | Vredmax | Vredmaxu | Vredmin | Vredminu | Vfredusum | Vfredmax | Vfredmin) {
+        let Dst::V(dst) = inst.dst else { bail!("reduction without vreg dst") };
+        let Src::V(vs2) = inst.srcs[0] else { bail!("reduction src0 must be vreg") };
+        let Src::V(vs1) = inst.srcs[1] else { bail!("reduction src1 must be vreg") };
+        let init = m.read_lane(vs1, sew, 0);
+        let fe = if matches!(k, Vfredusum | Vfredmax | Vfredmin) {
+            Some(float_elem(sew))
+        } else {
+            None
+        };
+        let mut acc_f = fe.map(|e| elem::to_f64(e, init));
+        let mut acc_i = elem::to_i64(int_elem(sew, true), init);
+        let mut acc_u = elem::to_u64(int_elem(sew, false), init);
+        for i in 0..vl {
+            if let Some(mk) = inst.mask {
+                if !m.mask_bit(mk, i) {
+                    continue;
+                }
+            }
+            let x = m.read_lane(vs2, sew, i);
+            if let Some(e) = fe {
+                let fx = elem::to_f64(e, x);
+                let a = acc_f.as_mut().unwrap();
+                *a = match k {
+                    Vfredusum => *a + fx,
+                    Vfredmax => a.max(fx),
+                    Vfredmin => a.min(fx),
+                    _ => unreachable!(),
+                };
+            } else {
+                let sx = elem::to_i64(int_elem(sew, true), x);
+                let ux = elem::to_u64(int_elem(sew, false), x);
+                match k {
+                    Vredsum => acc_i = acc_i.wrapping_add(sx),
+                    Vredmax => acc_i = acc_i.max(sx),
+                    Vredmin => acc_i = acc_i.min(sx),
+                    Vredmaxu => acc_u = acc_u.max(ux),
+                    Vredminu => acc_u = acc_u.min(ux),
+                    _ => unreachable!(),
+                }
+            }
+        }
+        let out = if let Some(e) = fe {
+            elem::from_f64(e, acc_f.unwrap())
+        } else if matches!(k, Vredmaxu | Vredminu) {
+            acc_u
+        } else {
+            elem::from_i64(int_elem(sew, true), acc_i)
+        };
+        m.write_lane(dst, sew, 0, out);
+        return Ok(());
+    }
+
+    // permutation ops with cross-lane reads: snapshot sources first
+    if matches!(k, Vslideup | Vslidedown | Vslide1down | Vrgather | Vcompress | Vid) {
+        let Dst::V(dst) = inst.dst else { bail!("permute without vreg dst") };
+        let vlmax = m.cfg.vlen / sew.bits();
+        match k {
+            Vid => {
+                for i in 0..vl {
+                    m.write_lane(dst, sew, i, i as u64);
+                }
+            }
+            Vslideup => {
+                let Src::V(src) = inst.srcs[0] else { bail!("vslideup src") };
+                let off = match &inst.srcs[1] {
+                    Src::ImmI(i) => *i as u32,
+                    Src::SReg(r) => m.sregs[*r as usize] as u32,
+                    _ => bail!("vslideup offset"),
+                };
+                let snap = m.read_lanes(src, sew, vlmax.min(vl + off));
+                for i in off..vl {
+                    m.write_lane(dst, sew, i, snap[(i - off) as usize]);
+                }
+            }
+            Vslidedown => {
+                let Src::V(src) = inst.srcs[0] else { bail!("vslidedown src") };
+                let off = match &inst.srcs[1] {
+                    Src::ImmI(i) => *i as u32,
+                    Src::SReg(r) => m.sregs[*r as usize] as u32,
+                    _ => bail!("vslidedown offset"),
+                };
+                let snap = m.read_lanes(src, sew, vlmax);
+                for i in 0..vl {
+                    let j = i + off;
+                    let v = if j < vlmax { snap[j as usize] } else { 0 };
+                    m.write_lane(dst, sew, i, v);
+                }
+            }
+            Vslide1down => {
+                let Src::V(src) = inst.srcs[0] else { bail!("vslide1down src") };
+                let x = scalar_val(m, &inst.srcs[1], sew, false);
+                let snap = m.read_lanes(src, sew, vl);
+                for i in 0..vl.saturating_sub(1) {
+                    m.write_lane(dst, sew, i, snap[(i + 1) as usize]);
+                }
+                if vl > 0 {
+                    m.write_lane(dst, sew, vl - 1, x);
+                }
+            }
+            Vrgather => {
+                let Src::V(src) = inst.srcs[0] else { bail!("vrgather src") };
+                let snap = m.read_lanes(src, sew, vlmax);
+                for i in 0..vl {
+                    let idx = match &inst.srcs[1] {
+                        Src::V(ir) => m.read_lane(*ir, sew, i),
+                        s => scalar_val(m, s, sew, false),
+                    };
+                    let v = if (idx as u32) < vlmax { snap[idx as usize] } else { 0 };
+                    m.write_lane(dst, sew, i, v);
+                }
+            }
+            Vcompress => {
+                let Src::V(src) = inst.srcs[0] else { bail!("vcompress src") };
+                let Src::M(mk) = inst.srcs[1] else { bail!("vcompress mask") };
+                let snap = m.read_lanes(src, sew, vl);
+                let mut j = 0;
+                for i in 0..vl {
+                    if m.mask_bit(mk, i) {
+                        m.write_lane(dst, sew, j, snap[i as usize]);
+                        j += 1;
+                    }
+                }
+            }
+            _ => unreachable!(),
+        }
+        return Ok(());
+    }
+
+    // everything else: elementwise
+    let Dst::V(dst) = inst.dst else { bail!("{k:?} without vreg dst") };
+
+    // P4 fast path: vmv.v.v is a bulk register copy (vl*sew bytes)
+    if k == VmvVV && inst.mask.is_none() {
+        if let Src::V(src) = inst.srcs[0] {
+            let n = (vl * sew.bytes()) as usize;
+            if src != dst {
+                let (a, b) = (src.min(dst) as usize, src.max(dst) as usize);
+                // split_at_mut to copy between two registers
+                let regs = m.regs_pair_mut(a, b);
+                if src < dst {
+                    regs.1[..n].copy_from_slice(&regs.0[..n]);
+                } else {
+                    regs.0[..n].copy_from_slice(&regs.1[..n]);
+                }
+            }
+            return Ok(());
+        }
+    }
+
+    // P3 fast path: unmasked e32 float vv-ops compute directly in f32
+    // (skips the per-lane Elem dispatch + f64 round trip)
+    if inst.mask.is_none() && sew == Sew::E32 {
+        if let Some(done) = exec_f32_fast(m, inst, dst)? {
+            if done {
+                return Ok(());
+            }
+        }
+        // P4: direct-u32 integer ops (exp reconstruction mix)
+        if exec_i32_fast(m, inst, dst) {
+            return Ok(());
+        }
+    }
+
+    for i in 0..vl {
+        if let Some(mk) = inst.mask {
+            if !m.mask_bit(mk, i) && !matches!(k, Vmerge | Vfmerge) {
+                continue;
+            }
+        }
+        let out = exec_lane(m, inst, i)?;
+        let dsew = dst_sew(k, sew);
+        m.write_lane(dst, dsew, i, out);
+    }
+    Ok(())
+}
+
+/// Destination EEW for widening ops. Convention: for the vw* arithmetic
+/// ops `inst.sew` is the *source* SEW (dest doubles); for vzext/vsext the
+/// `inst.sew` is already the *destination* SEW (source halves).
+fn dst_sew(k: RvvKind, sew: Sew) -> Sew {
+    use RvvKind::*;
+    match k {
+        Vwmul | Vwmulu | Vwadd | Vwaddu | Vwmacc | Vwmaccu | VfwcvtFF => {
+            Sew::of_bits(sew.bits() * 2)
+        }
+        _ => sew,
+    }
+}
+
+fn exec_lane(m: &RvvMachine, inst: &RvvInst, i: u32) -> Result<u64> {
+    use RvvKind::*;
+    let sew = inst.sew;
+    let k = inst.kind;
+    let fe = || float_elem(sew);
+    let se = int_elem(sew, true);
+    let ue = int_elem(sew, false);
+    let a = inst.srcs.first().map(|s| src_lane(m, s, sew, i, is_float_op(k)));
+    let b = inst.srcs.get(1).map(|s| src_lane(m, s, sew, i, is_float_op(k)));
+
+    Ok(match k {
+        Vadd => elem::from_i64(se, elem::to_i64(se, a.unwrap()).wrapping_add(elem::to_i64(se, b.unwrap()))),
+        Vsub => elem::from_i64(se, elem::to_i64(se, a.unwrap()).wrapping_sub(elem::to_i64(se, b.unwrap()))),
+        Vrsub => elem::from_i64(se, elem::to_i64(se, b.unwrap()).wrapping_sub(elem::to_i64(se, a.unwrap()))),
+        Vmul => elem::from_i64(se, elem::to_i64(se, a.unwrap()).wrapping_mul(elem::to_i64(se, b.unwrap()))),
+        Vmulh => {
+            let p = (elem::to_i64(se, a.unwrap()) as i128) * (elem::to_i64(se, b.unwrap()) as i128);
+            elem::from_i64(se, (p >> sew.bits()) as i64)
+        }
+        Vmulhu => {
+            let p = (elem::to_u64(ue, a.unwrap()) as u128) * (elem::to_u64(ue, b.unwrap()) as u128);
+            ((p >> sew.bits()) as u64) & ue.lane_mask()
+        }
+        Vwmul => {
+            let wide = int_elem(dst_sew(k, sew), true);
+            elem::from_i64(wide, elem::to_i64(se, a.unwrap()).wrapping_mul(elem::to_i64(se, b.unwrap())))
+        }
+        Vwmulu => {
+            let wide = int_elem(dst_sew(k, sew), false);
+            (elem::to_u64(ue, a.unwrap()).wrapping_mul(elem::to_u64(ue, b.unwrap()))) & wide.lane_mask()
+        }
+        Vwadd => {
+            let wide = int_elem(dst_sew(k, sew), true);
+            elem::from_i64(wide, elem::to_i64(se, a.unwrap()) + elem::to_i64(se, b.unwrap()))
+        }
+        Vwaddu => elem::to_u64(ue, a.unwrap()) + elem::to_u64(ue, b.unwrap()),
+        Vmacc | Vnmsac => {
+            let Dst::V(dr) = inst.dst else { bail!("vmacc dst") };
+            let acc = elem::to_i64(se, m.read_lane(dr, sew, i));
+            let p = elem::to_i64(se, a.unwrap()).wrapping_mul(elem::to_i64(se, b.unwrap()));
+            let r = if k == Vmacc { acc.wrapping_add(p) } else { acc.wrapping_sub(p) };
+            elem::from_i64(se, r)
+        }
+        Vwmacc => {
+            let wide = int_elem(dst_sew(k, sew), true);
+            let Dst::V(dr) = inst.dst else { bail!("vwmacc dst") };
+            let acc = elem::to_i64(wide, m.read_lane(dr, dst_sew(k, sew), i));
+            let p = elem::to_i64(se, a.unwrap()).wrapping_mul(elem::to_i64(se, b.unwrap()));
+            elem::from_i64(wide, acc.wrapping_add(p))
+        }
+        Vwmaccu => {
+            let wide = int_elem(dst_sew(k, sew), false);
+            let Dst::V(dr) = inst.dst else { bail!("vwmaccu dst") };
+            let acc = elem::to_u64(wide, m.read_lane(dr, dst_sew(k, sew), i));
+            let p = elem::to_u64(ue, a.unwrap()).wrapping_mul(elem::to_u64(ue, b.unwrap()));
+            (acc.wrapping_add(p)) & wide.lane_mask()
+        }
+        Vmin => elem::from_i64(se, elem::to_i64(se, a.unwrap()).min(elem::to_i64(se, b.unwrap()))),
+        Vmax => elem::from_i64(se, elem::to_i64(se, a.unwrap()).max(elem::to_i64(se, b.unwrap()))),
+        Vminu => elem::to_u64(ue, a.unwrap()).min(elem::to_u64(ue, b.unwrap())),
+        Vmaxu => elem::to_u64(ue, a.unwrap()).max(elem::to_u64(ue, b.unwrap())),
+        Vsadd => elem::saturate(se, elem::to_i64(se, a.unwrap()) as i128 + elem::to_i64(se, b.unwrap()) as i128),
+        Vssub => elem::saturate(se, elem::to_i64(se, a.unwrap()) as i128 - elem::to_i64(se, b.unwrap()) as i128),
+        Vsaddu => elem::saturate(ue, elem::to_u64(ue, a.unwrap()) as i128 + elem::to_u64(ue, b.unwrap()) as i128),
+        Vssubu => elem::saturate(ue, elem::to_u64(ue, a.unwrap()) as i128 - elem::to_u64(ue, b.unwrap()) as i128),
+        Vand => a.unwrap() & b.unwrap(),
+        Vor => a.unwrap() | b.unwrap(),
+        Vxor => a.unwrap() ^ b.unwrap(),
+        Vsll => {
+            let sh = (b.unwrap() & (sew.bits() as u64 - 1)) as u32;
+            (a.unwrap() << sh) & ue.lane_mask()
+        }
+        Vsrl => {
+            let sh = (b.unwrap() & (sew.bits() as u64 - 1)) as u32;
+            elem::to_u64(ue, a.unwrap()) >> sh
+        }
+        Vsra => {
+            let sh = (b.unwrap() & (sew.bits() as u64 - 1)) as u32;
+            elem::from_i64(se, elem::to_i64(se, a.unwrap()) >> sh)
+        }
+        Vnsrl => {
+            // source EEW = 2*sew
+            let wide = int_elem(Sew::of_bits(sew.bits() * 2), false);
+            let Src::V(src) = inst.srcs[0] else { bail!("vnsrl src") };
+            let x = m.read_lane(src, Sew::of_bits(sew.bits() * 2), i);
+            let sh = match &inst.srcs[1] {
+                Src::ImmI(n) => *n as u32,
+                s => scalar_val(m, s, sew, false) as u32,
+            };
+            (elem::to_u64(wide, x) >> sh) & ue.lane_mask()
+        }
+        Vnsra => {
+            let wide = int_elem(Sew::of_bits(sew.bits() * 2), true);
+            let Src::V(src) = inst.srcs[0] else { bail!("vnsra src") };
+            let x = m.read_lane(src, Sew::of_bits(sew.bits() * 2), i);
+            let sh = match &inst.srcs[1] {
+                Src::ImmI(n) => *n as u32,
+                s => scalar_val(m, s, sew, false) as u32,
+            };
+            ((elem::to_i64(wide, x) >> sh) as u64) & ue.lane_mask()
+        }
+        VmvVV => a.unwrap(),
+        VmvVX | VfmvVF => scalar_val(m, &inst.srcs[0], sew, k == VfmvVF),
+        Vmerge | Vfmerge => {
+            // srcs: [false_src(vector), true_src(vector|scalar), mask]
+            let Src::M(mk) = inst.srcs[2] else { bail!("vmerge needs mask src") };
+            if m.mask_bit(mk, i) {
+                b.unwrap()
+            } else {
+                a.unwrap()
+            }
+        }
+        Vzext2 => {
+            let half = Sew::of_bits(sew.bits() / 2);
+            let Src::V(src) = inst.srcs[0] else { bail!("vzext src") };
+            elem::to_u64(int_elem(half, false), m.read_lane(src, half, i))
+        }
+        Vsext2 => {
+            let half = Sew::of_bits(sew.bits() / 2);
+            let Src::V(src) = inst.srcs[0] else { bail!("vsext src") };
+            elem::from_i64(se, elem::to_i64(int_elem(half, true), m.read_lane(src, half, i)))
+        }
+        Vfadd => fbin(fe(), a.unwrap(), b.unwrap(), |x, y| x + y),
+        Vfsub => fbin(fe(), a.unwrap(), b.unwrap(), |x, y| x - y),
+        Vfrsub => fbin(fe(), a.unwrap(), b.unwrap(), |x, y| y - x),
+        Vfmul => fbin(fe(), a.unwrap(), b.unwrap(), |x, y| x * y),
+        Vfdiv => fbin(fe(), a.unwrap(), b.unwrap(), |x, y| x / y),
+        Vfrdiv => fbin(fe(), a.unwrap(), b.unwrap(), |x, y| y / x),
+        Vfmacc | Vfnmacc | Vfmsac | Vfnmsac => {
+            // vd = ±(vs1 * vs2) ± vd ; srcs = [multiplier_a, multiplier_b],
+            // accumulator is the destination register
+            let Dst::V(dr) = inst.dst else { bail!("fma dst") };
+            let acc = m.read_lane(dr, sew, i);
+            let e = fe();
+            let (x, y, s) = (elem::to_f64(e, a.unwrap()), elem::to_f64(e, b.unwrap()), elem::to_f64(e, acc));
+            let r = match (k, e) {
+                // single-rounding fused at lane precision
+                (Vfmacc, Elem::F32) => ((x as f32).mul_add(y as f32, s as f32)) as f64,
+                (Vfmacc, _) => x.mul_add(y, s),
+                (Vfnmacc, Elem::F32) => ((-(x as f32)).mul_add(y as f32, -(s as f32))) as f64,
+                (Vfnmacc, _) => (-x).mul_add(y, -s),
+                (Vfmsac, Elem::F32) => ((x as f32).mul_add(y as f32, -(s as f32))) as f64,
+                (Vfmsac, _) => x.mul_add(y, -s),
+                (Vfnmsac, Elem::F32) => ((-(x as f32)).mul_add(y as f32, s as f32)) as f64,
+                (Vfnmsac, _) => (-x).mul_add(y, s),
+                _ => unreachable!(),
+            };
+            elem::from_f64(e, r)
+        }
+        Vfmin => fbin(fe(), a.unwrap(), b.unwrap(), |x, y| {
+            if x.is_nan() || y.is_nan() { f64::NAN } else { x.min(y) }
+        }),
+        Vfmax => fbin(fe(), a.unwrap(), b.unwrap(), |x, y| {
+            if x.is_nan() || y.is_nan() { f64::NAN } else { x.max(y) }
+        }),
+        Vfsqrt => funary(fe(), a.unwrap(), f64::sqrt),
+        Vfrec7 => funary(fe(), a.unwrap(), floatest::recip_estimate),
+        Vfrsqrt7 => funary(fe(), a.unwrap(), floatest::rsqrt_estimate),
+        Vfsgnj => fsgn(fe(), a.unwrap(), b.unwrap(), |_, sb| sb),
+        Vfsgnjn => fsgn(fe(), a.unwrap(), b.unwrap(), |_, sb| !sb),
+        Vfsgnjx => fsgn(fe(), a.unwrap(), b.unwrap(), |sa, sb| sa ^ sb),
+        VfcvtXF => {
+            let f = elem::to_f64(fe(), a.unwrap());
+            let r = round_ties_even(f);
+            saturate_f2i(r, sew, true)
+        }
+        VfcvtRtzXF => saturate_f2i(elem::to_f64(fe(), a.unwrap()).trunc(), sew, true),
+        VfcvtRtzXuF => saturate_f2i(elem::to_f64(fe(), a.unwrap()).trunc(), sew, false),
+        VfcvtFX => elem::from_f64(fe(), elem::to_i64(se, a.unwrap()) as f64),
+        VfcvtFXu => elem::from_f64(fe(), elem::to_u64(ue, a.unwrap()) as f64),
+        VfwcvtFF => {
+            let half = Sew::of_bits(sew.bits()); // src EEW = sew, dst = 2*sew
+            let Src::V(src) = inst.srcs[0] else { bail!("vfwcvt src") };
+            let x = m.read_lane(src, half, i);
+            elem::from_f64(float_elem(dst_sew(k, sew)), elem::to_f64(float_elem(half), x))
+        }
+        VfncvtFF => {
+            // src EEW = 2*sew, dst = sew
+            let wide = Sew::of_bits(sew.bits() * 2);
+            let Src::V(src) = inst.srcs[0] else { bail!("vfncvt src") };
+            let x = m.read_lane(src, wide, i);
+            elem::from_f64(fe(), elem::to_f64(float_elem(wide), x))
+        }
+        _ => bail!("exec_lane: unhandled kind {k:?}"),
+    })
+}
+
+/// P4: direct-u32 execution for unmasked e32 integer vv/vx ops.
+/// Returns true when handled.
+fn exec_i32_fast(m: &mut RvvMachine, inst: &RvvInst, dst: u32) -> bool {
+    use RvvKind::*;
+    if !matches!(inst.kind, Vadd | Vsub | Vand | Vor | Vxor | Vsll | Vsrl | Vsra | VmvVX) {
+        return false;
+    }
+    #[inline(always)]
+    fn g(m: &RvvMachine, s: &Src, i: u32) -> Option<u32> {
+        match s {
+            Src::V(r) => Some(m.read_lane(*r, Sew::E32, i) as u32),
+            Src::ImmI(v) => Some(*v as u32),
+            _ => None,
+        }
+    }
+    // reject operand kinds the fast path doesn't cover
+    if inst.srcs.iter().any(|s| !matches!(s, Src::V(_) | Src::ImmI(_))) {
+        return false;
+    }
+    for i in 0..inst.vl {
+        let a = match g(m, &inst.srcs[0], i) {
+            Some(v) => v,
+            None => return false,
+        };
+        let r = if inst.kind == VmvVX {
+            a
+        } else {
+            let b = match inst.srcs.get(1).and_then(|s| g(m, s, i)) {
+                Some(v) => v,
+                None => return false,
+            };
+            match inst.kind {
+                Vadd => a.wrapping_add(b),
+                Vsub => a.wrapping_sub(b),
+                Vand => a & b,
+                Vor => a | b,
+                Vxor => a ^ b,
+                Vsll => a << (b & 31),
+                Vsrl => a >> (b & 31),
+                Vsra => ((a as i32) >> (b & 31)) as u32,
+                _ => unreachable!(),
+            }
+        };
+        m.write_lane(dst, Sew::E32, i, r as u64);
+    }
+    true
+}
+
+/// P3: direct-f32 execution for the hot float ops at SEW=e32.
+/// Returns Some(true) when handled.
+fn exec_f32_fast(m: &mut RvvMachine, inst: &RvvInst, dst: u32) -> Result<Option<bool>> {
+    use RvvKind::*;
+    #[inline(always)]
+    fn f(m: &RvvMachine, s: &Src, i: u32) -> f32 {
+        match s {
+            Src::V(r) => f32::from_bits(m.read_lane(*r, Sew::E32, i) as u32),
+            Src::ImmF(v) => *v as f32,
+            Src::ImmI(v) => f32::from_bits(*v as u32),
+            Src::SReg(_) | Src::M(_) => f32::NAN, // not handled here
+        }
+    }
+    let handled = matches!(
+        inst.kind,
+        Vfadd | Vfsub | Vfrsub | Vfmul | Vfdiv | Vfmacc | Vfnmsac | Vfmin | Vfmax
+    );
+    if !handled || inst.srcs.iter().any(|s| matches!(s, Src::SReg(_) | Src::M(_))) {
+        return Ok(None);
+    }
+    for i in 0..inst.vl {
+        let a = f(m, &inst.srcs[0], i);
+        let b = inst.srcs.get(1).map(|s| f(m, s, i)).unwrap_or(0.0);
+        let r = match inst.kind {
+            Vfadd => a + b,
+            Vfsub => a - b,
+            Vfrsub => b - a,
+            Vfmul => a * b,
+            Vfdiv => a / b,
+            Vfmacc => {
+                let acc = f32::from_bits(m.read_lane(dst, Sew::E32, i) as u32);
+                a.mul_add(b, acc)
+            }
+            Vfnmsac => {
+                let acc = f32::from_bits(m.read_lane(dst, Sew::E32, i) as u32);
+                (-a).mul_add(b, acc)
+            }
+            Vfmin => {
+                if a.is_nan() || b.is_nan() { f32::NAN } else { a.min(b) }
+            }
+            Vfmax => {
+                if a.is_nan() || b.is_nan() { f32::NAN } else { a.max(b) }
+            }
+            _ => unreachable!(),
+        };
+        m.write_lane(dst, Sew::E32, i, r.to_bits() as u64);
+    }
+    Ok(Some(true))
+}
+
+fn is_float_op(k: RvvKind) -> bool {
+    use RvvKind::*;
+    matches!(
+        k,
+        Vfadd | Vfsub | Vfrsub | Vfmul | Vfdiv | Vfrdiv | Vfmacc | Vfnmacc
+            | Vfmsac | Vfnmsac | Vfmin | Vfmax | Vfsqrt | Vfrec7 | Vfrsqrt7
+            | Vfsgnj | Vfsgnjn | Vfsgnjx | VfmvVF | Vfmerge | Vmfeq | Vmfne
+            | Vmflt | Vmfle | Vmfgt | Vmfge
+    )
+}
+
+fn fbin(e: Elem, a: u64, b: u64, f: impl Fn(f64, f64) -> f64) -> u64 {
+    elem::from_f64(e, f(elem::to_f64(e, a), elem::to_f64(e, b)))
+}
+
+fn funary(e: Elem, a: u64, f: impl Fn(f64) -> f64) -> u64 {
+    elem::from_f64(e, f(elem::to_f64(e, a)))
+}
+
+fn fsgn(e: Elem, a: u64, b: u64, pick: impl Fn(bool, bool) -> bool) -> u64 {
+    let sign_bit = 1u64 << (e.bits() - 1);
+    let (sa, sb) = (a & sign_bit != 0, b & sign_bit != 0);
+    let s = pick(sa, sb);
+    (a & !sign_bit) | if s { sign_bit } else { 0 }
+}
+
+fn saturate_f2i(r: f64, sew: Sew, signed: bool) -> u64 {
+    let bits = sew.bits();
+    if r.is_nan() {
+        return 0;
+    }
+    if signed {
+        let (lo, hi) = (-(2f64.powi(bits as i32 - 1)), 2f64.powi(bits as i32 - 1) - 1.0);
+        elem::from_i64(int_elem(sew, true), r.clamp(lo, hi) as i64)
+    } else {
+        let hi = 2f64.powi(bits as i32) - 1.0;
+        (r.clamp(0.0, hi) as u64) & int_elem(sew, false).lane_mask()
+    }
+}
+
+fn round_ties_even(f: f64) -> f64 {
+    if (f - f.trunc()).abs() == 0.5 {
+        if (f.floor() as i64) % 2 == 0 {
+            f.floor()
+        } else {
+            f.ceil()
+        }
+    } else {
+        f.round()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::AddrExpr;
+    use crate::neon::interp::Buffer;
+    use crate::rvv::machine::RvvConfig;
+    use crate::rvv::ops::MemRef;
+
+    fn mk_machine() -> RvvMachine {
+        RvvMachine::new(RvvConfig::new(128), 8, 4, 4, vec![Buffer::from_i32s(&[1, 2, 3, 4, 5, 6, 7, 8])])
+    }
+
+    fn vinst(kind: RvvKind, dst: Dst, srcs: Vec<Src>) -> RvvInst {
+        RvvInst { kind, sew: Sew::E32, vl: 4, dst, srcs, mask: None, mem: None }
+    }
+
+    fn load(m: &mut RvvMachine, dst: u32, byte_off: i64) {
+        let inst = RvvInst {
+            kind: RvvKind::Vle,
+            sew: Sew::E32,
+            vl: 4,
+            dst: Dst::V(dst),
+            srcs: vec![],
+            mask: None,
+            mem: Some(MemRef { buf: 0, index: AddrExpr::k(0), stride: 1 }),
+        };
+        exec(m, &inst, Some(byte_off)).unwrap();
+    }
+
+    #[test]
+    fn vle_vadd_vse_roundtrip() {
+        // the Listing 10 instruction sequence
+        let mut m = mk_machine();
+        load(&mut m, 0, 0);
+        load(&mut m, 1, 16);
+        exec(&mut m, &vinst(RvvKind::Vadd, Dst::V(2), vec![Src::V(0), Src::V(1)]), None).unwrap();
+        let st = RvvInst {
+            kind: RvvKind::Vse,
+            sew: Sew::E32,
+            vl: 4,
+            dst: Dst::None,
+            srcs: vec![Src::V(2)],
+            mask: None,
+            mem: Some(MemRef { buf: 0, index: AddrExpr::k(0), stride: 1 }),
+        };
+        exec(&mut m, &st, Some(0)).unwrap();
+        assert_eq!(m.bufs[0].as_i32s(), vec![6, 8, 10, 12, 5, 6, 7, 8]);
+    }
+
+    #[test]
+    fn vmseq_vmerge_ceq_pattern() {
+        // paper Listing 6: vmv + vmseq + vmerge implements vceqq
+        let mut m = mk_machine();
+        load(&mut m, 0, 0); // [1,2,3,4]
+        exec(&mut m, &vinst(RvvKind::VmvVX, Dst::V(1), vec![Src::ImmI(3)]), None).unwrap();
+        exec(&mut m, &vinst(RvvKind::VmvVX, Dst::V(2), vec![Src::ImmI(0)]), None).unwrap();
+        exec(&mut m, &vinst(RvvKind::Vmseq, Dst::M(0), vec![Src::V(0), Src::V(1)]), None).unwrap();
+        exec(&mut m, &vinst(RvvKind::Vmerge, Dst::V(3), vec![Src::V(2), Src::ImmI(-1), Src::M(0)]), None).unwrap();
+        let out: Vec<u64> = m.read_lanes(3, Sew::E32, 4);
+        assert_eq!(out, vec![0, 0, 0xffff_ffff, 0]);
+    }
+
+    #[test]
+    fn vslidedown_get_high_pattern() {
+        // paper Listing 5: vget_high via vslidedown
+        let mut m = mk_machine();
+        load(&mut m, 0, 0); // [1,2,3,4]
+        exec(&mut m, &vinst(RvvKind::Vslidedown, Dst::V(1), vec![Src::V(0), Src::ImmI(2)]), None).unwrap();
+        assert_eq!(m.read_lanes(1, Sew::E32, 2), vec![3, 4]);
+    }
+
+    #[test]
+    fn vfmacc_accumulates_into_dst() {
+        let mut m = mk_machine();
+        for (lane, v) in [2.0f32, 3.0, 4.0, 5.0].iter().enumerate() {
+            m.write_lane(0, Sew::E32, lane as u32, v.to_bits() as u64);
+            m.write_lane(1, Sew::E32, lane as u32, 10f32.to_bits() as u64);
+            m.write_lane(2, Sew::E32, lane as u32, 1f32.to_bits() as u64);
+        }
+        exec(&mut m, &vinst(RvvKind::Vfmacc, Dst::V(2), vec![Src::V(0), Src::V(1)]), None).unwrap();
+        let out: Vec<f32> = (0..4).map(|i| f32::from_bits(m.read_lane(2, Sew::E32, i) as u32)).collect();
+        assert_eq!(out, vec![21.0, 31.0, 41.0, 51.0]);
+    }
+
+    #[test]
+    fn masked_op_leaves_lanes_undisturbed() {
+        let mut m = mk_machine();
+        load(&mut m, 0, 0);
+        exec(&mut m, &vinst(RvvKind::VmvVX, Dst::V(1), vec![Src::ImmI(100)]), None).unwrap();
+        m.write_mask_bit(0, 0, true);
+        m.write_mask_bit(0, 2, true);
+        let mut add = vinst(RvvKind::Vadd, Dst::V(1), vec![Src::V(0), Src::ImmI(1)]);
+        add.mask = Some(0);
+        exec(&mut m, &add, None).unwrap();
+        assert_eq!(m.read_lanes(1, Sew::E32, 4), vec![2, 100, 4, 100]);
+    }
+
+    #[test]
+    fn vid_and_vrgather_reverse() {
+        let mut m = mk_machine();
+        load(&mut m, 0, 0);
+        exec(&mut m, &vinst(RvvKind::Vid, Dst::V(1), vec![]), None).unwrap();
+        // idx = 3 - vid
+        exec(&mut m, &vinst(RvvKind::Vrsub, Dst::V(2), vec![Src::V(1), Src::ImmI(3)]), None).unwrap();
+        exec(&mut m, &vinst(RvvKind::Vrgather, Dst::V(3), vec![Src::V(0), Src::V(2)]), None).unwrap();
+        assert_eq!(m.read_lanes(3, Sew::E32, 4), vec![4, 3, 2, 1]);
+    }
+
+    #[test]
+    fn vwmul_widens() {
+        let mut m = mk_machine();
+        let mut inst = vinst(RvvKind::Vwmul, Dst::V(1), vec![Src::V(0), Src::V(0)]);
+        inst.sew = Sew::E16;
+        inst.vl = 4;
+        for (i, v) in [-300i64, 2, 3, 4].iter().enumerate() {
+            m.write_lane(0, Sew::E16, i as u32, (*v as u64) & 0xffff);
+        }
+        exec(&mut m, &inst, None).unwrap();
+        let out: Vec<i64> = (0..4)
+            .map(|i| elem::to_i64(Elem::I32, m.read_lane(1, Sew::E32, i)))
+            .collect();
+        assert_eq!(out, vec![90000, 4, 9, 16]);
+    }
+
+    #[test]
+    fn vfrsqrt7_matches_shared_estimate() {
+        let mut m = mk_machine();
+        m.write_lane(0, Sew::E32, 0, 4f32.to_bits() as u64);
+        exec(&mut m, &vinst(RvvKind::Vfrsqrt7, Dst::V(1), vec![Src::V(0)]), None).unwrap();
+        let got = f32::from_bits(m.read_lane(1, Sew::E32, 0) as u32);
+        assert!((got as f64 - 0.5).abs() < 1.0 / 256.0);
+    }
+
+    #[test]
+    fn vredsum_folds() {
+        let mut m = mk_machine();
+        load(&mut m, 0, 0); // [1,2,3,4]
+        exec(&mut m, &vinst(RvvKind::VmvVX, Dst::V(1), vec![Src::ImmI(10)]), None).unwrap();
+        exec(&mut m, &vinst(RvvKind::Vredsum, Dst::V(2), vec![Src::V(0), Src::V(1)]), None).unwrap();
+        assert_eq!(m.read_lane(2, Sew::E32, 0), 20);
+    }
+
+    #[test]
+    fn vlse_stride_zero_broadcasts() {
+        // the custom vld1q_dup lowering: stride-0 strided load
+        let mut m = mk_machine();
+        let inst = RvvInst {
+            kind: RvvKind::Vlse,
+            sew: Sew::E32,
+            vl: 4,
+            dst: Dst::V(0),
+            srcs: vec![],
+            mask: None,
+            mem: Some(MemRef { buf: 0, index: AddrExpr::k(0), stride: 0 }),
+        };
+        exec(&mut m, &inst, Some(8)).unwrap(); // element 2 (= 3)
+        assert_eq!(m.read_lanes(0, Sew::E32, 4), vec![3, 3, 3, 3]);
+    }
+
+    #[test]
+    fn vsse_strided_store() {
+        let mut m = mk_machine();
+        for i in 0..2 {
+            m.write_lane(0, Sew::E32, i, 99 + i as u64);
+        }
+        let inst = RvvInst {
+            kind: RvvKind::Vsse,
+            sew: Sew::E32,
+            vl: 2,
+            dst: Dst::None,
+            srcs: vec![Src::V(0)],
+            mask: None,
+            mem: Some(MemRef { buf: 0, index: AddrExpr::k(0), stride: 2 }),
+        };
+        exec(&mut m, &inst, Some(0)).unwrap();
+        assert_eq!(m.bufs[0].as_i32s(), vec![99, 2, 100, 4, 5, 6, 7, 8]);
+    }
+
+    #[test]
+    fn bulk_fast_path_matches_slow_path_semantics() {
+        // masked load forces the per-lane path; unmasked takes the bulk
+        // path — same bytes either way
+        let mut m1 = mk_machine();
+        let mut m2 = mk_machine();
+        let fast = RvvInst {
+            kind: RvvKind::Vle,
+            sew: Sew::E32,
+            vl: 4,
+            dst: Dst::V(0),
+            srcs: vec![],
+            mask: None,
+            mem: Some(MemRef { buf: 0, index: AddrExpr::k(0), stride: 1 }),
+        };
+        exec(&mut m1, &fast, Some(4)).unwrap();
+        let mut slow = fast.clone();
+        slow.mask = Some(0);
+        for i in 0..4 {
+            m2.write_mask_bit(0, i, true);
+        }
+        exec(&mut m2, &slow, Some(4)).unwrap();
+        assert_eq!(m1.read_lanes(0, Sew::E32, 4), m2.read_lanes(0, Sew::E32, 4));
+    }
+
+    #[test]
+    fn vnsrl_narrows() {
+        let mut m = mk_machine();
+        m.write_lane(0, Sew::E32, 0, 0x0001_0002);
+        m.write_lane(0, Sew::E32, 1, 0xffff_0000);
+        let mut inst = vinst(RvvKind::Vnsrl, Dst::V(1), vec![Src::V(0), Src::ImmI(16)]);
+        inst.sew = Sew::E16;
+        inst.vl = 2;
+        exec(&mut m, &inst, None).unwrap();
+        assert_eq!(m.read_lane(1, Sew::E16, 0), 1);
+        assert_eq!(m.read_lane(1, Sew::E16, 1), 0xffff);
+    }
+}

@@ -1,0 +1,230 @@
+//! The RVV virtual machine state: a VLEN-parameterised vector register
+//! file, mask registers, scalar registers, and byte-addressed buffers.
+//!
+//! Register files are *virtual* (sized by the program, like post-regalloc
+//! SSA): the simulator counts instructions, it does not model register
+//! pressure — matching the paper's functional-simulation methodology.
+
+use anyhow::{bail, Result};
+
+use crate::neon::interp::Buffer;
+use super::vtype::Sew;
+
+/// Machine configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RvvConfig {
+    /// Vector register length in bits (the paper's `vlen`, compile-time
+    /// fixed via `__riscv_v_fixed_vlen`).
+    pub vlen: u32,
+    /// Zvfh extension (f16 vectors) enabled — gates Table 2 f16 rows.
+    pub zvfh: bool,
+}
+
+impl Default for RvvConfig {
+    fn default() -> Self {
+        RvvConfig { vlen: 128, zvfh: true }
+    }
+}
+
+impl RvvConfig {
+    pub fn new(vlen: u32) -> RvvConfig {
+        assert!(vlen.is_power_of_two() && (32..=65536).contains(&vlen), "bad VLEN {vlen}");
+        RvvConfig { vlen, zvfh: true }
+    }
+
+    pub fn vlen_bytes(self) -> usize {
+        self.vlen as usize / 8
+    }
+}
+
+/// Machine state.
+pub struct RvvMachine {
+    pub cfg: RvvConfig,
+    /// vector registers: raw little-endian bytes, VLEN/8 each
+    vregs: Vec<Vec<u8>>,
+    /// mask registers: one bool per element position (up to VLEN at e8/m8)
+    masks: Vec<Vec<bool>>,
+    /// scalar registers
+    pub sregs: Vec<i64>,
+    /// memory buffers (layout shared with the source IR program)
+    pub bufs: Vec<Buffer>,
+}
+
+impl RvvMachine {
+    pub fn new(cfg: RvvConfig, n_vregs: usize, n_mregs: usize, n_sregs: usize, bufs: Vec<Buffer>) -> RvvMachine {
+        RvvMachine {
+            cfg,
+            // 2x VLEN storage per virtual register: widening ops (vwadd,
+            // vwmul, vzext) write LMUL=2 results, i.e. a register *pair* —
+            // modelled as one double-width virtual register (instruction
+            // counts are unaffected)
+            vregs: vec![vec![0; cfg.vlen_bytes() * 2]; n_vregs],
+            masks: vec![vec![false; cfg.vlen as usize]; n_mregs],
+            sregs: vec![0; n_sregs],
+            bufs,
+        }
+    }
+
+    // -- vector lane access ---------------------------------------------------
+
+    pub fn read_lane(&self, reg: u32, sew: Sew, lane: u32) -> u64 {
+        let w = sew.bytes() as usize;
+        let off = lane as usize * w;
+        let data = &self.vregs[reg as usize];
+        debug_assert!(off + w <= data.len(), "lane {lane} at {sew:?} exceeds VLEN");
+        let mut buf = [0u8; 8];
+        buf[..w].copy_from_slice(&data[off..off + w]);
+        u64::from_le_bytes(buf)
+    }
+
+    pub fn write_lane(&mut self, reg: u32, sew: Sew, lane: u32, raw: u64) {
+        let w = sew.bytes() as usize;
+        let off = lane as usize * w;
+        let data = &mut self.vregs[reg as usize];
+        debug_assert!(off + w <= data.len(), "lane {lane} at {sew:?} exceeds VLEN");
+        data[off..off + w].copy_from_slice(&raw.to_le_bytes()[..w]);
+    }
+
+    /// Read `vl` lanes.
+    pub fn read_lanes(&self, reg: u32, sew: Sew, vl: u32) -> Vec<u64> {
+        (0..vl).map(|i| self.read_lane(reg, sew, i)).collect()
+    }
+
+    /// Raw bytes of a vreg (for reinterpret-style moves).
+    pub fn reg_bytes(&self, reg: u32) -> &[u8] {
+        &self.vregs[reg as usize]
+    }
+
+    pub fn reg_bytes_mut(&mut self, reg: u32) -> &mut Vec<u8> {
+        &mut self.vregs[reg as usize]
+    }
+
+    /// Mutable access to two distinct registers (a < b) for bulk copies.
+    pub fn regs_pair_mut(&mut self, a: usize, b: usize) -> (&mut [u8], &mut [u8]) {
+        debug_assert!(a < b);
+        let (lo, hi) = self.vregs.split_at_mut(b);
+        (&mut lo[a], &mut hi[0])
+    }
+
+    // -- mask access -----------------------------------------------------------
+
+    pub fn read_mask(&self, reg: u32, vl: u32) -> Vec<bool> {
+        self.masks[reg as usize][..vl as usize].to_vec()
+    }
+
+    pub fn mask_bit(&self, reg: u32, lane: u32) -> bool {
+        self.masks[reg as usize][lane as usize]
+    }
+
+    pub fn write_mask_bit(&mut self, reg: u32, lane: u32, v: bool) {
+        self.masks[reg as usize][lane as usize] = v;
+    }
+
+    // -- memory -----------------------------------------------------------------
+
+    /// Load `sew.bytes()` at a *byte* offset — RVV memory is untyped; the
+    /// simulator converts the IR's element indices to byte addresses.
+    pub fn load_at(&self, buf: u32, byte_off: i64, sew: Sew) -> Result<u64> {
+        let b = &self.bufs[buf as usize];
+        let w = sew.bytes() as usize;
+        if byte_off < 0 {
+            bail!("negative byte offset {byte_off}");
+        }
+        let off = byte_off as usize;
+        if off + w > b.data.len() {
+            bail!("OOB load at byte {off} (+{w}) of buf{buf} ({} bytes)", b.data.len());
+        }
+        let mut raw = [0u8; 8];
+        raw[..w].copy_from_slice(&b.data[off..off + w]);
+        Ok(u64::from_le_bytes(raw))
+    }
+
+    /// Bulk load: copy `n` bytes from buffer memory into the low bytes of
+    /// a register (unit-stride unmasked vle fast path — P2).
+    pub fn load_bulk(&mut self, buf: u32, byte_off: i64, n: usize, reg: u32) -> Result<()> {
+        if byte_off < 0 {
+            bail!("negative byte offset {byte_off}");
+        }
+        let off = byte_off as usize;
+        let b = &self.bufs[buf as usize];
+        if off + n > b.data.len() {
+            bail!("OOB load at byte {off} (+{n}) of buf{buf} ({} bytes)", b.data.len());
+        }
+        self.vregs[reg as usize][..n].copy_from_slice(&b.data[off..off + n]);
+        Ok(())
+    }
+
+    /// Bulk store: copy the low `n` bytes of a register into buffer memory
+    /// (unit-stride unmasked vse fast path — P2).
+    pub fn store_bulk(&mut self, buf: u32, byte_off: i64, n: usize, reg: u32) -> Result<()> {
+        if byte_off < 0 {
+            bail!("negative byte offset {byte_off}");
+        }
+        let off = byte_off as usize;
+        // split borrows: registers and buffers are separate fields
+        let reg_data = &self.vregs[reg as usize][..n] as *const [u8];
+        let b = &mut self.bufs[buf as usize];
+        if off + n > b.data.len() {
+            bail!("OOB store at byte {off} (+{n}) of buf{buf} ({} bytes)", b.data.len());
+        }
+        // SAFETY: vregs and bufs are disjoint fields; no aliasing
+        b.data[off..off + n].copy_from_slice(unsafe { &*reg_data });
+        Ok(())
+    }
+
+    /// Store `sew.bytes()` at a *byte* offset.
+    pub fn store_at(&mut self, buf: u32, byte_off: i64, sew: Sew, val: u64) -> Result<()> {
+        let b = &mut self.bufs[buf as usize];
+        let w = sew.bytes() as usize;
+        if byte_off < 0 {
+            bail!("negative byte offset {byte_off}");
+        }
+        let off = byte_off as usize;
+        if off + w > b.data.len() {
+            bail!("OOB store at byte {off} (+{w}) of buf{buf} ({} bytes)", b.data.len());
+        }
+        b.data[off..off + w].copy_from_slice(&val.to_le_bytes()[..w]);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::neon::elem::Elem;
+
+    #[test]
+    fn lane_rw_by_sew() {
+        let cfg = RvvConfig::new(128);
+        let mut m = RvvMachine::new(cfg, 2, 1, 0, vec![]);
+        m.write_lane(0, Sew::E32, 0, 0xdead_beef);
+        m.write_lane(0, Sew::E32, 3, 7);
+        assert_eq!(m.read_lane(0, Sew::E32, 0), 0xdead_beef);
+        assert_eq!(m.read_lane(0, Sew::E32, 3), 7);
+        // byte view overlaps
+        assert_eq!(m.read_lane(0, Sew::E8, 0), 0xef);
+        assert_eq!(m.read_lane(0, Sew::E8, 3), 0xde);
+    }
+
+    #[test]
+    fn byte_addressed_memory() {
+        // an i32 buffer accessed at e32 and e8
+        let cfg = RvvConfig::new(128);
+        let buf = Buffer::from_i32s(&[1, -1, 3, 4]);
+        let mut m = RvvMachine::new(cfg, 1, 0, 0, vec![buf]);
+        assert_eq!(m.load_at(0, 4, Sew::E32).unwrap(), 0xffff_ffff);
+        assert_eq!(m.load_at(0, 4, Sew::E8).unwrap(), 0xff);
+        m.store_at(0, 8, Sew::E32, 42).unwrap();
+        assert_eq!(m.bufs[0].as_i32s(), vec![1, -1, 42, 4]);
+        assert!(m.load_at(0, 16, Sew::E32).is_err());
+        assert!(m.load_at(0, -1, Sew::E8).is_err());
+    }
+
+    #[test]
+    fn vlen_scales_register_file() {
+        // 2x VLEN storage for LMUL=2 widening results
+        let m = RvvMachine::new(RvvConfig::new(512), 1, 0, 0, vec![]);
+        assert_eq!(m.reg_bytes(0).len(), 128);
+        let _ = Elem::F32; // silence unused import in some cfgs
+    }
+}

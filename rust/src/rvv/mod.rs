@@ -1,0 +1,15 @@
+//! RISC-V Vector extension (RVV 1.0) semantic model: the vector-length-
+//! agnostic target ISA of the migration. Configurable VLEN, `vtype`
+//! (SEW/LMUL) and `vl` semantics per the riscv-v-spec, an executable op
+//! set, and the RVV program representation the SIMDe engine lowers into.
+
+pub mod exec;
+pub mod machine;
+pub mod ops;
+pub mod program;
+pub mod vtype;
+
+pub use machine::RvvMachine;
+pub use ops::{Dst, MemRef, RvvInst, RvvKind, Src};
+pub use program::{RStmt, RvvProgram, ScalarBlock};
+pub use vtype::{Sew, VType};

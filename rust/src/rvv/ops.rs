@@ -1,0 +1,405 @@
+//! The RVV instruction set modelled by the simulator: opcode kinds,
+//! operands, and assembly rendering (used by the quickstart example to
+//! print the Listing-10-style instruction stream).
+
+use crate::ir::AddrExpr;
+use super::vtype::Sew;
+
+/// RVV opcode kind. Grouped per riscv-v-spec chapters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RvvKind {
+    // loads/stores (unit-stride)
+    Vle,
+    Vse,
+    /// strided load/store (rs2 = byte stride)
+    Vlse,
+    Vsse,
+    // integer arithmetic
+    Vadd,
+    Vsub,
+    Vrsub,
+    Vmul,
+    Vmulh,
+    Vmulhu,
+    Vwmul,
+    Vwmulu,
+    Vwadd,
+    Vwaddu,
+    /// integer multiply-add: vd += vs1 * vs2
+    Vmacc,
+    /// integer multiply-sub: vd -= vs1 * vs2
+    Vnmsac,
+    /// widening multiply-accumulate: vd(2*sew) += vs1 * vs2
+    Vwmacc,
+    Vwmaccu,
+    Vminu,
+    Vmin,
+    Vmaxu,
+    Vmax,
+    // saturating
+    Vsadd,
+    Vsaddu,
+    Vssub,
+    Vssubu,
+    // bitwise / shifts
+    Vand,
+    Vor,
+    Vxor,
+    Vsll,
+    Vsrl,
+    Vsra,
+    Vnsrl,
+    Vnsra,
+    // moves / merges
+    VmvVV,
+    VmvVX,
+    VfmvVF,
+    Vmerge,
+    Vfmerge,
+    // integer compares -> mask
+    Vmseq,
+    Vmsne,
+    Vmsltu,
+    Vmslt,
+    Vmsleu,
+    Vmsle,
+    Vmsgtu,
+    Vmsgt,
+    // float compares -> mask
+    Vmfeq,
+    Vmfne,
+    Vmflt,
+    Vmfle,
+    Vmfgt,
+    Vmfge,
+    // float arithmetic
+    Vfadd,
+    Vfsub,
+    Vfrsub,
+    Vfmul,
+    Vfdiv,
+    Vfrdiv,
+    Vfmacc,
+    Vfnmacc,
+    Vfmsac,
+    Vfnmsac,
+    Vfmin,
+    Vfmax,
+    Vfsqrt,
+    /// 7-bit reciprocal estimate (modelled with the shared 8-bit estimate,
+    /// see `neon::semantics::floatest`)
+    Vfrec7,
+    Vfrsqrt7,
+    Vfsgnj,
+    Vfsgnjn,
+    Vfsgnjx,
+    // conversions
+    /// float -> signed int, round-to-nearest-even
+    VfcvtXF,
+    /// float -> signed int, truncate
+    VfcvtRtzXF,
+    /// signed int -> float
+    VfcvtFX,
+    /// unsigned int -> float
+    VfcvtFXu,
+    /// float -> unsigned int rtz
+    VfcvtRtzXuF,
+    /// widening float->float (f16->f32, f32->f64)
+    VfwcvtFF,
+    /// narrowing float->float
+    VfncvtFF,
+    // widening/narrowing integer converts
+    Vzext2,
+    Vsext2,
+    // permutation
+    Vslideup,
+    Vslidedown,
+    Vslide1down,
+    Vrgather,
+    Vid,
+    Vcompress,
+    // mask ops
+    Vmand,
+    Vmor,
+    Vmxor,
+    Vmnand,
+    // reductions (scalar result in lane 0 of dst)
+    Vredsum,
+    Vredmax,
+    Vredmaxu,
+    Vredmin,
+    Vredminu,
+    Vfredusum,
+    Vfredmax,
+    Vfredmin,
+}
+
+impl RvvKind {
+    /// Assembly mnemonic (without operand-form suffix).
+    pub fn mnemonic(self) -> &'static str {
+        use RvvKind::*;
+        match self {
+            Vle => "vle",
+            Vse => "vse",
+            Vlse => "vlse",
+            Vsse => "vsse",
+            Vadd => "vadd",
+            Vsub => "vsub",
+            Vrsub => "vrsub",
+            Vmul => "vmul",
+            Vmulh => "vmulh",
+            Vmulhu => "vmulhu",
+            Vwmul => "vwmul",
+            Vwmulu => "vwmulu",
+            Vwadd => "vwadd",
+            Vwaddu => "vwaddu",
+            Vmacc => "vmacc",
+            Vnmsac => "vnmsac",
+            Vwmacc => "vwmacc",
+            Vwmaccu => "vwmaccu",
+            Vminu => "vminu",
+            Vmin => "vmin",
+            Vmaxu => "vmaxu",
+            Vmax => "vmax",
+            Vsadd => "vsadd",
+            Vsaddu => "vsaddu",
+            Vssub => "vssub",
+            Vssubu => "vssubu",
+            Vand => "vand",
+            Vor => "vor",
+            Vxor => "vxor",
+            Vsll => "vsll",
+            Vsrl => "vsrl",
+            Vsra => "vsra",
+            Vnsrl => "vnsrl",
+            Vnsra => "vnsra",
+            VmvVV => "vmv.v.v",
+            VmvVX => "vmv.v.x",
+            VfmvVF => "vfmv.v.f",
+            Vmerge => "vmerge",
+            Vfmerge => "vfmerge",
+            Vmseq => "vmseq",
+            Vmsne => "vmsne",
+            Vmsltu => "vmsltu",
+            Vmslt => "vmslt",
+            Vmsleu => "vmsleu",
+            Vmsle => "vmsle",
+            Vmsgtu => "vmsgtu",
+            Vmsgt => "vmsgt",
+            Vmfeq => "vmfeq",
+            Vmfne => "vmfne",
+            Vmflt => "vmflt",
+            Vmfle => "vmfle",
+            Vmfgt => "vmfgt",
+            Vmfge => "vmfge",
+            Vfadd => "vfadd",
+            Vfsub => "vfsub",
+            Vfrsub => "vfrsub",
+            Vfmul => "vfmul",
+            Vfdiv => "vfdiv",
+            Vfrdiv => "vfrdiv",
+            Vfmacc => "vfmacc",
+            Vfnmacc => "vfnmacc",
+            Vfmsac => "vfmsac",
+            Vfnmsac => "vfnmsac",
+            Vfmin => "vfmin",
+            Vfmax => "vfmax",
+            Vfsqrt => "vfsqrt.v",
+            Vfrec7 => "vfrec7.v",
+            Vfrsqrt7 => "vfrsqrt7.v",
+            Vfsgnj => "vfsgnj",
+            Vfsgnjn => "vfsgnjn",
+            Vfsgnjx => "vfsgnjx",
+            VfcvtXF => "vfcvt.x.f.v",
+            VfcvtRtzXF => "vfcvt.rtz.x.f.v",
+            VfcvtFX => "vfcvt.f.x.v",
+            VfcvtFXu => "vfcvt.f.xu.v",
+            VfcvtRtzXuF => "vfcvt.rtz.xu.f.v",
+            VfwcvtFF => "vfwcvt.f.f.v",
+            VfncvtFF => "vfncvt.f.f.w",
+            Vzext2 => "vzext.vf2",
+            Vsext2 => "vsext.vf2",
+            Vslideup => "vslideup",
+            Vslidedown => "vslidedown",
+            Vslide1down => "vslide1down.vx",
+            Vrgather => "vrgather",
+            Vid => "vid.v",
+            Vcompress => "vcompress.vm",
+            Vmand => "vmand.mm",
+            Vmor => "vmor.mm",
+            Vmxor => "vmxor.mm",
+            Vmnand => "vmnand.mm",
+            Vredsum => "vredsum.vs",
+            Vredmax => "vredmax.vs",
+            Vredmaxu => "vredmaxu.vs",
+            Vredmin => "vredmin.vs",
+            Vredminu => "vredminu.vs",
+            Vfredusum => "vfredusum.vs",
+            Vfredmax => "vfredmax.vs",
+            Vfredmin => "vfredmin.vs",
+        }
+    }
+
+    pub fn is_load(self) -> bool {
+        matches!(self, RvvKind::Vle | RvvKind::Vlse)
+    }
+
+    pub fn is_store(self) -> bool {
+        matches!(self, RvvKind::Vse | RvvKind::Vsse)
+    }
+
+    /// Whether the destination is a mask register.
+    pub fn writes_mask(self) -> bool {
+        use RvvKind::*;
+        matches!(
+            self,
+            Vmseq | Vmsne | Vmsltu | Vmslt | Vmsleu | Vmsle | Vmsgtu | Vmsgt
+                | Vmfeq | Vmfne | Vmflt | Vmfle | Vmfgt | Vmfge | Vmand | Vmor
+                | Vmxor | Vmnand
+        )
+    }
+}
+
+/// Source operand of an RVV instruction.
+#[derive(Debug, Clone)]
+pub enum Src {
+    /// Vector register.
+    V(u32),
+    /// Mask register (for vmerge / masked ops / mask-mask ops).
+    M(u32),
+    /// Integer scalar immediate (`.vx`/`.vi` forms with a constant).
+    ImmI(i64),
+    /// Float scalar immediate (`.vf` form with a constant in `fa`).
+    ImmF(f64),
+    /// Integer scalar from an IR scalar register (loop-derived `.vx`).
+    SReg(u32),
+}
+
+/// Destination operand.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dst {
+    V(u32),
+    M(u32),
+    None,
+}
+
+/// Memory reference for loads/stores: buffer id + element index expression
+/// (+ optional element stride for vlse/vsse).
+#[derive(Debug, Clone)]
+pub struct MemRef {
+    pub buf: u32,
+    pub index: AddrExpr,
+    /// element (not byte) stride for strided ops; 1 = unit stride
+    pub stride: i64,
+}
+
+/// One RVV instruction instance.
+#[derive(Debug, Clone)]
+pub struct RvvInst {
+    pub kind: RvvKind,
+    pub sew: Sew,
+    /// number of elements processed (AVL == vl; our lowerings pin vl)
+    pub vl: u32,
+    pub dst: Dst,
+    pub srcs: Vec<Src>,
+    /// `vm` mask (v0.t) — executes only where mask bit set, else dst lane
+    /// is undisturbed
+    pub mask: Option<u32>,
+    pub mem: Option<MemRef>,
+}
+
+impl RvvInst {
+    /// Assembly-like rendering for traces and the quickstart example, e.g.
+    /// `vadd.vv v2, v0, v1` or `vle32.v v0, (A+0)`.
+    pub fn asm(&self) -> String {
+        let mn = self.kind.mnemonic();
+        let dst = match self.dst {
+            Dst::V(r) => format!("v{r}"),
+            Dst::M(r) => format!("vm{r}"),
+            Dst::None => String::new(),
+        };
+        if self.kind.is_load() || self.kind.is_store() {
+            let mem = self.mem.as_ref().expect("mem op without MemRef");
+            let v = match (self.dst, self.srcs.first()) {
+                (Dst::V(r), _) => format!("v{r}"),
+                (Dst::None, Some(Src::V(r))) => format!("v{r}"),
+                _ => "v?".into(),
+            };
+            return format!("{mn}{}.v {v}, (buf{}+{:?})", self.sew.bits(), mem.buf, mem.index);
+        }
+        let mut parts = Vec::new();
+        if !dst.is_empty() {
+            parts.push(dst);
+        }
+        let mut suffix = String::new();
+        for s in &self.srcs {
+            match s {
+                Src::V(r) => {
+                    parts.push(format!("v{r}"));
+                    suffix.push('v');
+                }
+                Src::M(m) => {
+                    parts.push(format!("vm{m}"));
+                    suffix.push('m');
+                }
+                Src::ImmI(i) => {
+                    parts.push(format!("{i}"));
+                    suffix.push(if (-16..16).contains(i) { 'i' } else { 'x' });
+                }
+                Src::ImmF(f) => {
+                    parts.push(format!("{f}"));
+                    suffix.push('f');
+                }
+                Src::SReg(r) => {
+                    parts.push(format!("s{r}"));
+                    suffix.push('x');
+                }
+            }
+        }
+        let mn = if mn.contains('.') {
+            mn.to_string()
+        } else {
+            format!("{mn}.{suffix}")
+        };
+        let mask = if self.mask.is_some() { ", v0.t" } else { "" };
+        format!("{mn} {}{mask}", parts.join(", "))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn asm_rendering() {
+        let add = RvvInst {
+            kind: RvvKind::Vadd,
+            sew: Sew::E32,
+            vl: 4,
+            dst: Dst::V(2),
+            srcs: vec![Src::V(0), Src::V(1)],
+            mask: None,
+            mem: None,
+        };
+        assert_eq!(add.asm(), "vadd.vv v2, v0, v1");
+
+        let merge = RvvInst {
+            kind: RvvKind::Vmerge,
+            sew: Sew::E32,
+            vl: 4,
+            dst: Dst::V(3),
+            srcs: vec![Src::V(1), Src::ImmI(-1), Src::M(0)],
+            mask: None,
+            mem: None,
+        };
+        assert_eq!(merge.asm(), "vmerge.vim v3, v1, -1, vm0");
+    }
+
+    #[test]
+    fn mask_writers() {
+        assert!(RvvKind::Vmseq.writes_mask());
+        assert!(RvvKind::Vmfeq.writes_mask());
+        assert!(!RvvKind::Vadd.writes_mask());
+        assert!(!RvvKind::Vmerge.writes_mask());
+    }
+}

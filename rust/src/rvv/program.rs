@@ -1,0 +1,117 @@
+//! RVV program representation — what the SIMDe translation engine lowers
+//! IR programs into, and what the Spike-like simulator executes.
+
+use crate::ir::{AddrExpr, BufDecl, NeonCall};
+use super::ops::RvvInst;
+
+/// A scalar fallback block: SIMDe's private-union per-lane loop for an
+/// intrinsic with no custom RVV conversion and no auto-vectorizable body
+/// (§3.3 method 4 failing, leaving scalar code).
+///
+/// Numerically it executes the reference NEON semantics (the scalar C loop
+/// computes the same math); its *cost* is modelled explicitly:
+/// `spill_ops + lanes * per_lane_cost + reload_ops` scalar instructions,
+/// calibrated against what clang -O3 emits for SIMDe's generic loops (see
+/// `simde::costs`).
+#[derive(Debug, Clone)]
+pub struct ScalarBlock {
+    /// The NEON call to execute with reference semantics. Vector-register
+    /// ids refer to the *RVV* virtual registers holding the NEON values in
+    /// their low 64/128 bits.
+    pub call: NeonCall,
+    /// Destination RVV vreg (None for stores).
+    pub dst: Option<u32>,
+    /// Modelled dynamic scalar-instruction cost of the whole block.
+    pub scalar_cost: u64,
+    /// Modelled loads/stores within the block (subset of `scalar_cost`
+    /// accounting, reported separately).
+    pub mem_ops: u64,
+    /// Pure cost annotation: the values were already computed by preceding
+    /// ops; only count, do not execute.
+    pub cost_only: bool,
+}
+
+/// RVV program statement.
+#[derive(Debug, Clone)]
+pub enum RStmt {
+    /// One RVV instruction (one dynamic instruction when executed; the
+    /// simulator inserts+counts `vsetvli` on vtype/vl change).
+    Op(RvvInst),
+    /// Scalar ALU statement (address arithmetic) — counted as one scalar
+    /// instruction.
+    SSet { dst: u32, expr: AddrExpr },
+    /// Counted loop (adds modelled loop-overhead instructions per
+    /// iteration).
+    Loop {
+        ivar: u32,
+        start: i64,
+        end: i64,
+        step: i64,
+        body: Vec<RStmt>,
+    },
+    /// SIMDe generic-path scalar fallback (baseline mode only).
+    Scalar(ScalarBlock),
+}
+
+/// A complete translated program.
+#[derive(Debug, Clone)]
+pub struct RvvProgram {
+    pub name: String,
+    /// Buffer declarations, shared layout with the source IR program.
+    pub bufs: Vec<BufDecl>,
+    pub body: Vec<RStmt>,
+    pub n_vregs: usize,
+    pub n_mregs: usize,
+    pub n_sregs: usize,
+}
+
+impl RvvProgram {
+    /// Static count of RVV instructions (not dynamic; loops uncounted).
+    pub fn static_ops(&self) -> usize {
+        fn walk(stmts: &[RStmt]) -> usize {
+            stmts
+                .iter()
+                .map(|s| match s {
+                    RStmt::Op(_) => 1,
+                    RStmt::Loop { body, .. } => walk(body),
+                    _ => 0,
+                })
+                .sum()
+        }
+        walk(&self.body)
+    }
+
+    /// Flat listing of the instruction stream (loops annotated), for the
+    /// quickstart example's Listing-10-style dump.
+    pub fn disasm(&self) -> String {
+        fn walk(stmts: &[RStmt], indent: usize, out: &mut String) {
+            let pad = "  ".repeat(indent);
+            for s in stmts {
+                match s {
+                    RStmt::Op(i) => {
+                        out.push_str(&format!("{pad}{}\n", i.asm()));
+                    }
+                    RStmt::SSet { dst, expr } => {
+                        out.push_str(&format!("{pad}s{dst} = {expr:?}\n"));
+                    }
+                    RStmt::Loop { ivar, start, end, step, body } => {
+                        out.push_str(&format!(
+                            "{pad}loop s{ivar} = {start}..{end} step {step}:\n"
+                        ));
+                        walk(body, indent + 1, out);
+                    }
+                    RStmt::Scalar(b) => {
+                        out.push_str(&format!(
+                            "{pad}scalar_loop {} (cost {} scalar insts)\n",
+                            b.call.op.name(),
+                            b.scalar_cost
+                        ));
+                    }
+                }
+            }
+        }
+        let mut out = String::new();
+        walk(&self.body, 0, &mut out);
+        out
+    }
+}

@@ -1,0 +1,142 @@
+//! `vtype` state: selected element width (SEW), register grouping (LMUL),
+//! and the `vsetvli` configuration model.
+//!
+//! The paper's type-conversion strategy (§3.2) targets LMUL=1 fixed-size
+//! types (LLVM D145088), so LMUL=1 is the common case here; fractional and
+//! grouped LMULs are modelled for completeness and the vlen-sweep ablation.
+
+use crate::neon::elem::Elem;
+
+/// Selected element width.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Sew {
+    E8,
+    E16,
+    E32,
+    E64,
+}
+
+impl Sew {
+    pub fn bits(self) -> u32 {
+        match self {
+            Sew::E8 => 8,
+            Sew::E16 => 16,
+            Sew::E32 => 32,
+            Sew::E64 => 64,
+        }
+    }
+
+    pub fn bytes(self) -> u32 {
+        self.bits() / 8
+    }
+
+    pub fn of_bits(bits: u32) -> Sew {
+        match bits {
+            8 => Sew::E8,
+            16 => Sew::E16,
+            32 => Sew::E32,
+            64 => Sew::E64,
+            _ => panic!("no SEW of {bits} bits"),
+        }
+    }
+
+    pub fn of_elem(e: Elem) -> Sew {
+        Sew::of_bits(e.bits())
+    }
+
+    /// Assembly rendering, e.g. `e32`.
+    pub fn asm(self) -> &'static str {
+        match self {
+            Sew::E8 => "e8",
+            Sew::E16 => "e16",
+            Sew::E32 => "e32",
+            Sew::E64 => "e64",
+        }
+    }
+}
+
+/// Register grouping multiplier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Lmul {
+    MF2,
+    M1,
+    M2,
+    M4,
+    M8,
+}
+
+impl Lmul {
+    /// Numerator/denominator representation.
+    pub fn ratio(self) -> (u32, u32) {
+        match self {
+            Lmul::MF2 => (1, 2),
+            Lmul::M1 => (1, 1),
+            Lmul::M2 => (2, 1),
+            Lmul::M4 => (4, 1),
+            Lmul::M8 => (8, 1),
+        }
+    }
+
+    pub fn asm(self) -> &'static str {
+        match self {
+            Lmul::MF2 => "mf2",
+            Lmul::M1 => "m1",
+            Lmul::M2 => "m2",
+            Lmul::M4 => "m4",
+            Lmul::M8 => "m8",
+        }
+    }
+}
+
+/// A `vtype` configuration (tail/mask agnosticism fixed at ta,ma like
+/// compiler-generated code; the machine executes tail-undisturbed which is
+/// a legal ta implementation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct VType {
+    pub sew: Sew,
+    pub lmul: Lmul,
+}
+
+impl VType {
+    pub fn m1(sew: Sew) -> VType {
+        VType { sew, lmul: Lmul::M1 }
+    }
+
+    /// VLMAX for this vtype at a given VLEN (bits).
+    pub fn vlmax(self, vlen: u32) -> u32 {
+        let (n, d) = self.lmul.ratio();
+        vlen / self.sew.bits() * n / d
+    }
+
+    /// `vsetvli` asm rendering: `vsetvli zero, a0, e32, m1, ta, ma`.
+    pub fn asm(self) -> String {
+        format!("{}, {}, ta, ma", self.sew.asm(), self.lmul.asm())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vlmax_by_vlen() {
+        assert_eq!(VType::m1(Sew::E32).vlmax(128), 4);
+        assert_eq!(VType::m1(Sew::E32).vlmax(256), 8);
+        assert_eq!(VType::m1(Sew::E8).vlmax(128), 16);
+        assert_eq!(VType::m1(Sew::E64).vlmax(64), 1);
+        assert_eq!(VType { sew: Sew::E32, lmul: Lmul::M2 }.vlmax(128), 8);
+        assert_eq!(VType { sew: Sew::E16, lmul: Lmul::MF2 }.vlmax(128), 4);
+    }
+
+    #[test]
+    fn sew_of_elem() {
+        assert_eq!(Sew::of_elem(Elem::F32), Sew::E32);
+        assert_eq!(Sew::of_elem(Elem::U8), Sew::E8);
+        assert_eq!(Sew::of_elem(Elem::P64), Sew::E64);
+    }
+
+    #[test]
+    fn asm_rendering() {
+        assert_eq!(VType::m1(Sew::E32).asm(), "e32, m1, ta, ma");
+    }
+}

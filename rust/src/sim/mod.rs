@@ -1,0 +1,8 @@
+//! Spike-like functional simulator: executes translated RVV programs
+//! and reports the dynamic instruction counts behind Figure 2.
+
+pub mod cpu;
+pub mod stats;
+
+pub use cpu::Simulator;
+pub use stats::SimStats;

@@ -1,0 +1,139 @@
+//! Dynamic instruction-count statistics — the paper's performance metric
+//! ("Since Spike is a functional model rather than a cycle-accurate
+//! simulator, we employed dynamic instruction count", §4.2).
+
+use std::collections::BTreeMap;
+
+/// Modelled loop overhead per iteration (induction increment + branch),
+/// identical for both translation modes.
+pub const LOOP_OVERHEAD: u64 = 2;
+
+/// Upper bound on RvvKind discriminants (fieldless enum).
+const MAX_KINDS: usize = 128;
+
+/// Dynamic instruction counts from one simulated run.
+///
+/// The per-opcode histogram is a flat array indexed by the opcode
+/// discriminant — a BTreeMap entry per *dynamic* instruction was the
+/// simulator's top hot spot (see EXPERIMENTS.md §Perf P1).
+#[derive(Debug, Clone)]
+pub struct SimStats {
+    /// RVV vector-arithmetic/permute/mask instructions.
+    pub vector_ops: u64,
+    /// RVV vector loads + stores.
+    pub vector_mem: u64,
+    /// `vsetvli` instructions (inserted on vtype/vl change).
+    pub vsetvli: u64,
+    /// Scalar ALU instructions (address arithmetic, loop overhead,
+    /// scalar-fallback compute).
+    pub scalar_ops: u64,
+    /// Scalar loads/stores (scalar-fallback element traffic).
+    pub scalar_mem: u64,
+    counts: Box<[u64; MAX_KINDS]>,
+    names: Box<[Option<&'static str>; MAX_KINDS]>,
+}
+
+impl Default for SimStats {
+    fn default() -> SimStats {
+        SimStats {
+            vector_ops: 0,
+            vector_mem: 0,
+            vsetvli: 0,
+            scalar_ops: 0,
+            scalar_mem: 0,
+            counts: Box::new([0; MAX_KINDS]),
+            names: Box::new([None; MAX_KINDS]),
+        }
+    }
+}
+
+impl SimStats {
+    /// Total dynamic instruction count (the Figure 2 metric).
+    pub fn total(&self) -> u64 {
+        self.vector_ops + self.vector_mem + self.vsetvli + self.scalar_ops + self.scalar_mem
+    }
+
+    #[inline]
+    pub fn record_vector(&mut self, kind_idx: usize, mnemonic: &'static str, is_mem: bool) {
+        if is_mem {
+            self.vector_mem += 1;
+        } else {
+            self.vector_ops += 1;
+        }
+        debug_assert!(kind_idx < MAX_KINDS);
+        self.counts[kind_idx] += 1;
+        if self.names[kind_idx].is_none() {
+            self.names[kind_idx] = Some(mnemonic);
+        }
+    }
+
+    /// Per-mnemonic histogram of vector instructions.
+    pub fn histogram(&self) -> BTreeMap<&'static str, u64> {
+        let mut m = BTreeMap::new();
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c > 0 {
+                if let Some(n) = self.names[i] {
+                    *m.entry(n).or_insert(0) += c;
+                }
+            }
+        }
+        m
+    }
+
+    pub fn merge(&mut self, o: &SimStats) {
+        self.vector_ops += o.vector_ops;
+        self.vector_mem += o.vector_mem;
+        self.vsetvli += o.vsetvli;
+        self.scalar_ops += o.scalar_ops;
+        self.scalar_mem += o.scalar_mem;
+        for i in 0..MAX_KINDS {
+            self.counts[i] += o.counts[i];
+            if self.names[i].is_none() {
+                self.names[i] = o.names[i];
+            }
+        }
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "total={} (vec={} vmem={} vsetvli={} scalar={} smem={})",
+            self.total(),
+            self.vector_ops,
+            self.vector_mem,
+            self.vsetvli,
+            self.scalar_ops,
+            self.scalar_mem
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_add_up() {
+        let mut s = SimStats::default();
+        s.record_vector(4, "vadd", false);
+        s.record_vector(0, "vle", true);
+        s.vsetvli += 1;
+        s.scalar_ops += 3;
+        s.scalar_mem += 2;
+        assert_eq!(s.total(), 8);
+        assert_eq!(s.histogram()["vadd"], 1);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = SimStats::default();
+        a.record_vector(4, "vadd", false);
+        let mut b = SimStats::default();
+        b.record_vector(4, "vadd", false);
+        b.record_vector(1, "vse", true);
+        a.merge(&b);
+        assert_eq!(a.vector_ops, 2);
+        assert_eq!(a.vector_mem, 1);
+        assert_eq!(a.histogram()["vadd"], 2);
+    }
+}

@@ -1,0 +1,55 @@
+//! Calibrated instruction-cost constants for the baseline's scalar
+//! fallbacks (SIMDe generic loops that clang's auto-vectorizer rejects).
+//!
+//! Costs approximate what clang -O3 emits on rv64gc for SIMDe's generic
+//! per-lane loops: each lane does `load operand(s); compute; store result`
+//! through the private union on the stack. Libm-call bodies (sqrtf,
+//! roundevenf, ...) additionally pay the call + the scalar routine.
+//! These constants only affect the *baseline* mode, i.e. they calibrate the
+//! denominator of the Figure 2 speedups; EXPERIMENTS.md §Calibration
+//! discusses sensitivity.
+
+/// Per-lane scalar ALU cost of a branchy saturating add/sub body.
+pub const SATURATING_PER_LANE: u64 = 5;
+
+/// Per-lane cost of a saturating-narrow body (clamp + truncate).
+pub const QNARROW_PER_LANE: u64 = 6;
+
+/// Per-lane cost of a libm sqrt (call overhead + fsqrt + errno guard).
+pub const SQRTF_PER_LANE: u64 = 10;
+
+/// Per-lane cost of 1/sqrtf (sqrt + divide).
+pub const RSQRT_PER_LANE: u64 = 12;
+
+/// Per-lane cost of 1/x reciprocal.
+pub const RECIP_PER_LANE: u64 = 6;
+
+/// Per-lane cost of roundevenf/lrintf-style libm rounding.
+pub const ROUNDEVEN_PER_LANE: u64 = 8;
+
+/// Per-lane cost of the binary-magic-numbers scalar bit reverse
+/// (3 swap stages x ~4 ops, Listing 7).
+pub const RBIT_PER_LANE: u64 = 12;
+
+/// Per-lane cost of a scalarised count-leading-zeros.
+pub const CLZ_PER_LANE: u64 = 8;
+
+/// Per-lane cost of a scalarised popcount.
+pub const CNT_PER_LANE: u64 = 6;
+
+/// Per-lane cost of a table-lookup body (bounds check + indexed load).
+pub const TBL_PER_LANE: u64 = 5;
+
+/// Per-lane cost of a pairwise-op body (lane-crossing indexing).
+pub const PAIRWISE_PER_LANE: u64 = 4;
+
+/// Per-lane cost of a variable-shift body (sign test + two shifts).
+pub const SSHL_PER_LANE: u64 = 6;
+
+/// Per-lane memory traffic of a generic scalar loop: operand load(s) +
+/// result store through the union.
+pub const SCALAR_MEM_PER_LANE: u64 = 2;
+
+/// Fixed overhead of entering a scalar fallback: spilling live vector
+/// operands to the union on the stack and reloading the result.
+pub const SCALAR_SPILL_OVERHEAD: u64 = 3;

@@ -1,0 +1,187 @@
+//! Lowering context: register mapping, scratch allocation, and RVV
+//! instruction emit helpers shared by all conversion rules.
+
+use crate::ir::{AddrExpr, Arg, BufDecl};
+use crate::neon::elem::Elem;
+use crate::neon::ops::NeonOp;
+use crate::rvv::machine::RvvConfig;
+use crate::rvv::ops::{Dst, MemRef, RvvInst, RvvKind, Src};
+use crate::rvv::program::RStmt;
+use crate::rvv::vtype::Sew;
+
+/// Context for lowering one IR program. NEON vregs map identity onto RVV
+/// vregs; scratch vector/mask registers are allocated from a pool above
+/// them and recycled per intrinsic (scratch values never live across
+/// statements).
+pub struct Ctx<'a> {
+    pub cfg: RvvConfig,
+    pub bufs: &'a [BufDecl],
+    base_vregs: u32,
+    scratch_next: u32,
+    pub scratch_max: u32,
+    mask_next: u32,
+    pub mask_max: u32,
+    pub out: Vec<RStmt>,
+}
+
+impl<'a> Ctx<'a> {
+    pub fn new(cfg: RvvConfig, bufs: &'a [BufDecl], base_vregs: u32) -> Ctx<'a> {
+        Ctx {
+            cfg,
+            bufs,
+            base_vregs,
+            scratch_next: 0,
+            scratch_max: 0,
+            mask_next: 0,
+            mask_max: 0,
+            out: Vec::new(),
+        }
+    }
+
+    /// RVV vreg for a NEON vreg (identity mapping).
+    pub fn v(&self, neon_reg: u32) -> u32 {
+        neon_reg
+    }
+
+    /// Fresh scratch vector register (valid until `reset_scratch`).
+    pub fn scratch(&mut self) -> u32 {
+        let r = self.base_vregs + self.scratch_next;
+        self.scratch_next += 1;
+        self.scratch_max = self.scratch_max.max(self.scratch_next);
+        r
+    }
+
+    /// Fresh scratch mask register.
+    pub fn mask(&mut self) -> u32 {
+        let m = self.mask_next;
+        self.mask_next += 1;
+        self.mask_max = self.mask_max.max(self.mask_next);
+        m
+    }
+
+    /// Recycle scratch registers between intrinsic lowerings.
+    pub fn reset_scratch(&mut self) {
+        self.scratch_next = 0;
+        self.mask_next = 0;
+    }
+
+    // -- operand helpers ------------------------------------------------------
+
+    /// Vector source operand for an IR vector-register argument.
+    pub fn vsrc(&self, a: &Arg) -> Src {
+        match a {
+            Arg::V(r) => Src::V(self.v(*r)),
+            Arg::Imm(i) => Src::ImmI(*i),
+            Arg::ImmF(f) => Src::ImmF(*f),
+            Arg::S(r) => Src::SReg(*r),
+            Arg::Mem { .. } => panic!("memory arg where vector expected"),
+        }
+    }
+
+    pub fn memref(&self, a: &Arg) -> MemRef {
+        match a {
+            Arg::Mem { buf, index } => MemRef { buf: *buf, index: index.clone(), stride: 1 },
+            _ => panic!("expected memory arg"),
+        }
+    }
+
+    pub fn memref_strided(&self, a: &Arg, stride: i64) -> MemRef {
+        let mut m = self.memref(a);
+        m.stride = stride;
+        m
+    }
+
+    // -- emit helpers -----------------------------------------------------------
+
+    pub fn emit(&mut self, inst: RvvInst) {
+        self.out.push(RStmt::Op(inst));
+    }
+
+    /// Generic op: `dst = kind(srcs)` at (sew, vl).
+    pub fn op(&mut self, kind: RvvKind, sew: Sew, vl: u32, dst: Dst, srcs: Vec<Src>) {
+        self.emit(RvvInst { kind, sew, vl, dst, srcs, mask: None, mem: None });
+    }
+
+    /// Masked op.
+    pub fn op_masked(&mut self, kind: RvvKind, sew: Sew, vl: u32, dst: Dst, srcs: Vec<Src>, mask: u32) {
+        self.emit(RvvInst { kind, sew, vl, dst, srcs, mask: Some(mask), mem: None });
+    }
+
+    /// Unit-stride load into `dst`.
+    pub fn load(&mut self, sew: Sew, vl: u32, dst: u32, mem: MemRef) {
+        self.emit(RvvInst {
+            kind: if mem.stride == 1 { RvvKind::Vle } else { RvvKind::Vlse },
+            sew,
+            vl,
+            dst: Dst::V(dst),
+            srcs: vec![],
+            mask: None,
+            mem: Some(mem),
+        });
+    }
+
+    /// Masked unit-stride load.
+    pub fn load_masked(&mut self, sew: Sew, vl: u32, dst: u32, mem: MemRef, mask: u32) {
+        self.emit(RvvInst {
+            kind: if mem.stride == 1 { RvvKind::Vle } else { RvvKind::Vlse },
+            sew,
+            vl,
+            dst: Dst::V(dst),
+            srcs: vec![],
+            mask: Some(mask),
+            mem: Some(mem),
+        });
+    }
+
+    /// Unit-stride store of `src`.
+    pub fn store(&mut self, sew: Sew, vl: u32, src: u32, mem: MemRef) {
+        self.emit(RvvInst {
+            kind: if mem.stride == 1 { RvvKind::Vse } else { RvvKind::Vsse },
+            sew,
+            vl,
+            dst: Dst::None,
+            srcs: vec![Src::V(src)],
+            mask: None,
+            mem: Some(mem),
+        });
+    }
+
+    /// `vmv.v.v dst, src` unless dst == src. Returns whether an op was
+    /// emitted.
+    pub fn mov_v(&mut self, sew: Sew, vl: u32, dst: u32, src: u32) -> bool {
+        if dst == src {
+            return false;
+        }
+        self.op(RvvKind::VmvVV, sew, vl, Dst::V(dst), vec![Src::V(src)]);
+        true
+    }
+
+    /// Ensure the accumulator value of a fused op sits in `dst` (vfmacc
+    /// accumulates into its destination register).
+    pub fn ensure_acc_in_dst(&mut self, sew: Sew, vl: u32, dst: u32, acc: u32) {
+        self.mov_v(sew, vl, dst, acc);
+    }
+}
+
+/// SEW/vl of the *named* vector type of an op (the common case: all
+/// operands share the suffix type).
+pub fn op_sew_vl(op: NeonOp) -> (Sew, u32) {
+    let vt = op.vt();
+    (Sew::of_elem(vt.elem), vt.lanes as u32)
+}
+
+/// SEW/vl of the op's *return* type.
+pub fn ret_sew_vl(op: NeonOp) -> (Sew, u32) {
+    let vt = op.sig().ret.expect("op returns a vector");
+    (Sew::of_elem(vt.elem), vt.lanes as u32)
+}
+
+/// Whether the element is a float type for RVV op selection.
+pub fn is_float(e: Elem) -> bool {
+    e.is_float()
+}
+
+/// Convenience: an `AddrExpr` constant.
+pub fn k(v: i64) -> AddrExpr {
+    AddrExpr::Const(v)
+}

@@ -1,0 +1,295 @@
+//! Program-level translation: walk an IR program and lower every NEON
+//! intrinsic through the conversion rules, producing an [`RvvProgram`] for
+//! the simulator. This is the SIMDe "preprocessing stage" of the paper's
+//! §4.2 workflow, as a compiler pass instead of C macro expansion.
+
+use anyhow::{bail, Context, Result};
+
+use crate::ir::{Program, Stmt};
+use crate::neon::ops::Category;
+use crate::rvv::machine::RvvConfig;
+use crate::rvv::program::{RStmt, RvvProgram};
+use crate::simde::ctx::Ctx;
+use crate::simde::method::{Method, Mode};
+use crate::simde::rules;
+use crate::simde::types_map::{map_neon_type, Unmappable};
+
+/// The translation engine.
+pub struct Translator {
+    pub mode: Mode,
+    pub cfg: RvvConfig,
+    /// Inject the Listing-4 partial-conversion store bug (baseline only).
+    pub union_store_bug: bool,
+    /// A2 ablation: intrinsic categories forced through the baseline
+    /// (generic) rules even in custom mode — measures each category's
+    /// contribution to the speedup.
+    pub force_baseline: Vec<Category>,
+}
+
+/// Summary of one translation (for reports).
+#[derive(Debug, Clone, Default)]
+pub struct TranslationReport {
+    /// (intrinsic name, method) per lowered call site.
+    pub methods: Vec<(String, Method)>,
+}
+
+impl TranslationReport {
+    pub fn count_by_method(&self) -> std::collections::BTreeMap<&'static str, usize> {
+        let mut m = std::collections::BTreeMap::new();
+        for (_, meth) in &self.methods {
+            *m.entry(meth.name()).or_insert(0) += 1;
+        }
+        m
+    }
+}
+
+impl Translator {
+    pub fn new(mode: Mode, cfg: RvvConfig) -> Translator {
+        Translator { mode, cfg, union_store_bug: false, force_baseline: Vec::new() }
+    }
+
+    pub fn with_union_store_bug(mut self, on: bool) -> Translator {
+        self.union_store_bug = on;
+        self
+    }
+
+    pub fn with_forced_baseline(mut self, cats: Vec<Category>) -> Translator {
+        self.force_baseline = cats;
+        self
+    }
+
+    fn mode_for(&self, call: &crate::ir::NeonCall) -> Mode {
+        if self.mode == Mode::RvvCustom && self.force_baseline.contains(&call.op.category()) {
+            Mode::Baseline
+        } else {
+            self.mode
+        }
+    }
+
+    /// Check the paper's §3.2 type constraints: every vector type the
+    /// program touches must be mappable under (vlen, zvfh) for the custom
+    /// mode to use RVV registers. Returns the unmappable type names.
+    pub fn unmappable_types(&self, prog: &Program) -> Vec<(String, Unmappable)> {
+        let mut out = Vec::new();
+        for op in prog.used_ops() {
+            let vt = op.sig().ret.unwrap_or_else(|| op.vt());
+            if let Err(why) = map_neon_type(vt, self.cfg.vlen, self.cfg.zvfh) {
+                out.push((vt.name(), why));
+            }
+            let it = op.vt();
+            if it != vt {
+                if let Err(why) = map_neon_type(it, self.cfg.vlen, self.cfg.zvfh) {
+                    out.push((it.name(), why));
+                }
+            }
+        }
+        out.sort();
+        out.dedup();
+        out
+    }
+
+    /// Translate a whole program.
+    pub fn translate(&self, prog: &Program) -> Result<(RvvProgram, TranslationReport)> {
+        if self.mode == Mode::RvvCustom {
+            let bad = self.unmappable_types(prog);
+            if !bad.is_empty() {
+                bail!(
+                    "program '{}' uses NEON types unmappable at vlen={} zvfh={}: {:?} \
+                     (paper §3.2: fall back to the generic SIMDe path)",
+                    prog.name,
+                    self.cfg.vlen,
+                    self.cfg.zvfh,
+                    bad
+                );
+            }
+        }
+        let mut report = TranslationReport::default();
+        let mut ctx = Ctx::new(self.cfg, &prog.bufs, prog.n_vregs as u32);
+        let body = self.lower_block(&prog.body, &mut ctx, &mut report)?;
+        let n_vregs = prog.n_vregs + ctx.scratch_max as usize;
+        let n_mregs = ctx.mask_max as usize;
+        Ok((
+            RvvProgram {
+                name: format!("{}@{}", prog.name, self.mode.name()),
+                bufs: prog.bufs.clone(),
+                body,
+                n_vregs,
+                n_mregs,
+                n_sregs: prog.n_sregs,
+            },
+            report,
+        ))
+    }
+
+    fn lower_block(
+        &self,
+        stmts: &[Stmt],
+        ctx: &mut Ctx,
+        report: &mut TranslationReport,
+    ) -> Result<Vec<RStmt>> {
+        let mut out = Vec::new();
+        for s in stmts {
+            match s {
+                Stmt::VOp { dst, call } => {
+                    let method = rules::lower(self.mode_for(call), call, Some(*dst), ctx, self.union_store_bug)
+                        .with_context(|| format!("lowering {}", call.op.name()))?;
+                    report.methods.push((call.op.name(), method));
+                    out.append(&mut ctx.out);
+                }
+                Stmt::VStore { call } => {
+                    let method = rules::lower(self.mode_for(call), call, None, ctx, self.union_store_bug)
+                        .with_context(|| format!("lowering {}", call.op.name()))?;
+                    report.methods.push((call.op.name(), method));
+                    out.append(&mut ctx.out);
+                }
+                Stmt::SSet { dst, expr } => {
+                    out.push(RStmt::SSet { dst: *dst, expr: expr.clone() });
+                }
+                Stmt::Loop { ivar, start, end, step, body } => {
+                    let inner = self.lower_block(body, ctx, report)?;
+                    out.push(RStmt::Loop {
+                        ivar: *ivar,
+                        start: *start,
+                        end: *end,
+                        step: *step,
+                        body: inner,
+                    });
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{AddrExpr, Arg, ProgramBuilder};
+    use crate::neon::elem::Elem;
+    use crate::neon::interp::{Buffer, Inputs, NeonInterp};
+    use crate::neon::ops::Family;
+    use crate::sim::Simulator;
+
+    fn vadd_prog() -> Program {
+        let mut b = ProgramBuilder::new("vadd");
+        let a = b.input("A", Elem::I32, 4);
+        let bb = b.input("B", Elem::I32, 4);
+        let o = b.output("O", Elem::I32, 4);
+        let va = b.vop(Family::Ld1, Elem::I32, true, vec![Arg::mem(a, AddrExpr::k(0))]);
+        let vb = b.vop(Family::Ld1, Elem::I32, true, vec![Arg::mem(bb, AddrExpr::k(0))]);
+        let vc = b.vop(Family::Add, Elem::I32, true, vec![Arg::V(va), Arg::V(vb)]);
+        b.vstore(Family::St1, Elem::I32, true, vec![Arg::mem(o, AddrExpr::k(0)), Arg::V(vc)]);
+        b.finish()
+    }
+
+    fn inputs() -> Inputs {
+        let mut i = Inputs::new();
+        i.insert("A".into(), Buffer::from_i32s(&[0, 1, 2, 3]));
+        i.insert("B".into(), Buffer::from_i32s(&[4, 5, 6, 7]));
+        i
+    }
+
+    #[test]
+    fn listing9_to_listing10_custom() {
+        // the paper's running example end-to-end
+        let p = vadd_prog();
+        let tr = Translator::new(Mode::RvvCustom, RvvConfig::new(128));
+        let (rp, report) = tr.translate(&p).unwrap();
+        // vle32 + vle32 + vadd + vse32, like Listing 10
+        assert_eq!(rp.static_ops(), 4);
+        assert!(report.methods.iter().all(|(_, m)| m.is_custom()));
+
+        let (out, stats) = Simulator::new(&rp, RvvConfig::new(128), &inputs())
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(out["O"].as_i32s(), vec![4, 6, 8, 10]);
+        // 4 instructions + 1 vsetvli
+        assert_eq!(stats.total(), 5);
+    }
+
+    #[test]
+    fn baseline_matches_numerics_but_costs_more() {
+        let p = vadd_prog();
+        let custom = Translator::new(Mode::RvvCustom, RvvConfig::new(128));
+        let base = Translator::new(Mode::Baseline, RvvConfig::new(128));
+        let (rc, _) = custom.translate(&p).unwrap();
+        let (rb, _) = base.translate(&p).unwrap();
+
+        let (oc, sc) = Simulator::new(&rc, RvvConfig::new(128), &inputs()).unwrap().run().unwrap();
+        let (ob, sb) = Simulator::new(&rb, RvvConfig::new(128), &inputs()).unwrap().run().unwrap();
+        assert_eq!(oc["O"].as_i32s(), ob["O"].as_i32s());
+        // the baseline's e8 memcpy traffic churns vsetvli
+        assert!(sb.vsetvli > sc.vsetvli, "baseline {} vs custom {}", sb.vsetvli, sc.vsetvli);
+        assert!(sb.total() > sc.total());
+    }
+
+    #[test]
+    fn both_modes_match_neon_interpreter() {
+        let p = vadd_prog();
+        let golden = NeonInterp::new(&p, &inputs()).unwrap().run().unwrap();
+        for mode in [Mode::RvvCustom, Mode::Baseline] {
+            let tr = Translator::new(mode, RvvConfig::new(128));
+            let (rp, _) = tr.translate(&p).unwrap();
+            let (out, _) = Simulator::new(&rp, RvvConfig::new(128), &inputs()).unwrap().run().unwrap();
+            assert_eq!(out["O"].as_i32s(), golden["O"].as_i32s(), "mode {mode:?}");
+        }
+    }
+
+    #[test]
+    fn zvfh_gates_f16_programs() {
+        // an f16 program translates only when Zvfh is on (paper §3.2 rule 3)
+        let mut b = ProgramBuilder::new("f16add");
+        let x = b.input("X", Elem::F16, 8);
+        let o = b.output("O", Elem::F16, 8);
+        let v = b.vop(Family::Ld1, Elem::F16, true, vec![Arg::mem(x, AddrExpr::k(0))]);
+        let r = b.vop(Family::Add, Elem::F16, true, vec![Arg::V(v), Arg::V(v)]);
+        b.vstore(Family::St1, Elem::F16, true, vec![Arg::mem(o, AddrExpr::k(0)), Arg::V(r)]);
+        let p = b.finish();
+
+        let on = RvvConfig { vlen: 128, zvfh: true };
+        let off = RvvConfig { vlen: 128, zvfh: false };
+        assert!(Translator::new(Mode::RvvCustom, on).translate(&p).is_ok());
+        let err = Translator::new(Mode::RvvCustom, off).translate(&p).unwrap_err();
+        assert!(format!("{err:#}").contains("NeedsZvfh"), "{err:#}");
+        // generic path still available
+        assert!(Translator::new(Mode::Baseline, off).translate(&p).is_ok());
+    }
+
+    #[test]
+    fn disasm_contains_listing10_mnemonics() {
+        let p = vadd_prog();
+        let (rp, _) = Translator::new(Mode::RvvCustom, RvvConfig::new(128)).translate(&p).unwrap();
+        let asm = rp.disasm();
+        assert!(asm.contains("vle32"), "{asm}");
+        assert!(asm.contains("vadd.vv"), "{asm}");
+        assert!(asm.contains("vse32"), "{asm}");
+    }
+
+    #[test]
+    fn forced_baseline_categories_degrade_gracefully() {
+        use crate::neon::ops::Category;
+        let p = vadd_prog();
+        let cfg = RvvConfig::new(128);
+        let (full, _) = Translator::new(Mode::RvvCustom, cfg).translate(&p).unwrap();
+        let (degraded, _) = Translator::new(Mode::RvvCustom, cfg)
+            .with_forced_baseline(vec![Category::Memory])
+            .translate(&p)
+            .unwrap();
+        let (of, sf) = Simulator::new(&full, cfg, &inputs()).unwrap().run().unwrap();
+        let (od, sd) = Simulator::new(&degraded, cfg, &inputs()).unwrap().run().unwrap();
+        assert_eq!(of["O"].as_i32s(), od["O"].as_i32s());
+        assert!(sd.total() > sf.total(), "{} vs {}", sd.total(), sf.total());
+    }
+
+    #[test]
+    fn custom_mode_rejects_small_vlen() {
+        // paper §3.2 rule 2: q types need vlen >= 128
+        let p = vadd_prog();
+        let tr = Translator::new(Mode::RvvCustom, RvvConfig::new(64));
+        assert!(tr.translate(&p).is_err());
+        // baseline still works (generic path)
+        let tr = Translator::new(Mode::Baseline, RvvConfig::new(64));
+        assert!(tr.translate(&p).is_ok());
+    }
+}

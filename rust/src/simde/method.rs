@@ -1,0 +1,75 @@
+//! Conversion methods and translation modes.
+//!
+//! The paper (§3.3) lists five conversion methods used by SIMDe; the two
+//! translation modes select between them per intrinsic:
+//!
+//! - **Baseline** (original SIMDe): no RVV-specific conversions exist, so
+//!   every intrinsic goes through the generic paths — vector attributes
+//!   (method 3) where clang can lower the generic body, otherwise the
+//!   auto-vectorization of the scalar implementation (method 4), which
+//!   fails to vectorize lane-crossing / branchy / libm bodies and leaves a
+//!   scalar loop.
+//! - **RvvCustom** (this paper): customized RVV intrinsic sequences
+//!   (methods 1/5), with vector attributes retained only where they are
+//!   already optimal.
+
+/// Translation mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Mode {
+    /// Original SIMDe: generic union + clang vector attributes +
+    /// auto-vectorization (the paper's comparison baseline).
+    Baseline,
+    /// RVV-enhanced SIMDe: customized RVV intrinsic conversions.
+    RvvCustom,
+}
+
+impl Mode {
+    pub fn name(self) -> &'static str {
+        match self {
+            Mode::Baseline => "baseline",
+            Mode::RvvCustom => "rvv-custom",
+        }
+    }
+}
+
+/// How one intrinsic is converted under a given mode (reported per rule in
+/// the registry; drives the A2 ablation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// Direct 1:1 RVV intrinsic (§3.3 method 1).
+    CustomDirect,
+    /// Combination of a few RVV intrinsics (§3.3 method 5, e.g. Listing 6).
+    CustomCombo,
+    /// Complex algorithmic conversion (e.g. Listing 7 bit reverse).
+    CustomAlgorithmic,
+    /// clang vector attributes lower the generic body well (§3.3 method 3).
+    VectorAttr,
+    /// Auto-vectorization of the scalar body succeeds (§3.3 method 4).
+    ScalarAutovec,
+    /// Generic scalar loop that does NOT vectorize (branchy / libm /
+    /// lane-crossing) — the baseline's weak spot.
+    ScalarLoop,
+    /// Union memcpy path for loads/stores.
+    MemUnion,
+}
+
+impl Method {
+    pub fn name(self) -> &'static str {
+        match self {
+            Method::CustomDirect => "custom-direct",
+            Method::CustomCombo => "custom-combo",
+            Method::CustomAlgorithmic => "custom-algorithmic",
+            Method::VectorAttr => "vector-attr",
+            Method::ScalarAutovec => "scalar-autovec",
+            Method::ScalarLoop => "scalar-loop",
+            Method::MemUnion => "mem-union",
+        }
+    }
+
+    pub fn is_custom(self) -> bool {
+        matches!(
+            self,
+            Method::CustomDirect | Method::CustomCombo | Method::CustomAlgorithmic
+        )
+    }
+}

@@ -1,0 +1,20 @@
+//! The paper's contribution: the SIMDe NEON->RVV translation engine.
+//!
+//! - [`types_map`] — §3.2 type conversion (Table 2): NEON fixed types onto
+//!   fixed-vlen LMUL=1 RVV types, gated by vlen and Zvfh;
+//! - [`rules`] — §3.3 function conversion: customized RVV sequences per
+//!   intrinsic (Listings 4-7) vs the generic baseline paths;
+//! - [`lower`] — program-level translation to [`crate::rvv::RvvProgram`];
+//! - [`registry`] — coverage table over the whole implemented surface;
+//! - [`costs`] — the calibrated baseline cost model.
+
+pub mod costs;
+pub mod ctx;
+pub mod lower;
+pub mod method;
+pub mod registry;
+pub mod rules;
+pub mod types_map;
+
+pub use lower::{TranslationReport, Translator};
+pub use method::{Method, Mode};

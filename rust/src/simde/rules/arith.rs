@@ -1,0 +1,397 @@
+//! Arithmetic conversions: direct 1:1 maps (`vadd` -> `vadd.vv`), fused
+//! multiply-accumulate (`vfmaq` -> `vfmacc.vv`, the gemm hot op), widening
+//! multiplies (`vmull` -> `vwmul.vv`), halving adds via widen+narrow, and
+//! saturating ops (`vqadd` -> `vsadd.vv`) whose SIMDe generic is a branchy
+//! scalar loop — one of the big baseline losses.
+
+use anyhow::{bail, Result};
+
+use crate::ir::{Arg, NeonCall};
+use crate::neon::ops::Family;
+use crate::rvv::ops::{Dst, RvvKind, Src};
+use crate::rvv::vtype::Sew;
+use crate::simde::costs;
+use crate::simde::ctx::{op_sew_vl, Ctx};
+use crate::simde::method::Method;
+
+fn vr(ctx: &Ctx, a: &Arg) -> Result<u32> {
+    match a {
+        Arg::V(r) => Ok(ctx.v(*r)),
+        _ => bail!("expected vector register"),
+    }
+}
+
+/// Pick the signed/unsigned/float variant of a 3-way op family.
+fn pick3(e: crate::neon::elem::Elem, s: RvvKind, u: RvvKind, f: RvvKind) -> RvvKind {
+    if e.is_float() {
+        f
+    } else if e.is_unsigned() {
+        u
+    } else {
+        s
+    }
+}
+
+pub fn custom(call: &NeonCall, dst: Option<u32>, ctx: &mut Ctx) -> Result<Method> {
+    let op = call.op;
+    let e = op.elem;
+    let (sew, vl) = op_sew_vl(op);
+    let d = dst.unwrap();
+    let fam = op.family;
+    match fam {
+        Family::Add | Family::Sub | Family::Mul | Family::Div | Family::Min | Family::Max => {
+            let kind = match fam {
+                Family::Add => pick3(e, RvvKind::Vadd, RvvKind::Vadd, RvvKind::Vfadd),
+                Family::Sub => pick3(e, RvvKind::Vsub, RvvKind::Vsub, RvvKind::Vfsub),
+                Family::Mul => pick3(e, RvvKind::Vmul, RvvKind::Vmul, RvvKind::Vfmul),
+                Family::Div => RvvKind::Vfdiv,
+                Family::Min => pick3(e, RvvKind::Vmin, RvvKind::Vminu, RvvKind::Vfmin),
+                Family::Max => pick3(e, RvvKind::Vmax, RvvKind::Vmaxu, RvvKind::Vfmax),
+                _ => unreachable!(),
+            };
+            let a = ctx.vsrc(&call.args[0]);
+            let b = ctx.vsrc(&call.args[1]);
+            ctx.op(kind, sew, vl, Dst::V(d), vec![a, b]);
+            Ok(Method::CustomDirect)
+        }
+        Family::Mla | Family::Mls | Family::Fma | Family::Fms => {
+            // acc in dst register, then vmacc/vfmacc family
+            let acc = vr(ctx, &call.args[0])?;
+            let a = ctx.vsrc(&call.args[1]);
+            let b = ctx.vsrc(&call.args[2]);
+            ctx.ensure_acc_in_dst(sew, vl, d, acc);
+            let kind = if e.is_float() {
+                if matches!(fam, Family::Mla | Family::Fma) {
+                    RvvKind::Vfmacc
+                } else {
+                    RvvKind::Vfnmsac
+                }
+            } else if matches!(fam, Family::Mla) {
+                RvvKind::Vmacc
+            } else {
+                RvvKind::Vnmsac
+            };
+            ctx.op(kind, sew, vl, Dst::V(d), vec![a, b]);
+            Ok(Method::CustomDirect)
+        }
+        Family::Abs => {
+            let a = ctx.vsrc(&call.args[0]);
+            if e.is_float() {
+                ctx.op(RvvKind::Vfsgnjx, sew, vl, Dst::V(d), vec![a.clone(), a]);
+            } else {
+                let t = ctx.scratch();
+                ctx.op(RvvKind::Vrsub, sew, vl, Dst::V(t), vec![a.clone(), Src::ImmI(0)]);
+                ctx.op(RvvKind::Vmax, sew, vl, Dst::V(d), vec![a, Src::V(t)]);
+            }
+            Ok(Method::CustomCombo)
+        }
+        Family::Neg => {
+            let a = ctx.vsrc(&call.args[0]);
+            if e.is_float() {
+                ctx.op(RvvKind::Vfsgnjn, sew, vl, Dst::V(d), vec![a.clone(), a]);
+            } else {
+                ctx.op(RvvKind::Vrsub, sew, vl, Dst::V(d), vec![a, Src::ImmI(0)]);
+            }
+            Ok(Method::CustomDirect)
+        }
+        Family::Hadd | Family::Rhadd => {
+            // (a + b [+1]) >> 1 via widening add + narrowing shift
+            let a = ctx.vsrc(&call.args[0]);
+            let b = ctx.vsrc(&call.args[1]);
+            let t = ctx.scratch();
+            let wadd = if e.is_unsigned() { RvvKind::Vwaddu } else { RvvKind::Vwadd };
+            ctx.op(wadd, sew, vl, Dst::V(t), vec![a, b]);
+            let wide = Sew::of_bits(sew.bits() * 2);
+            if fam == Family::Rhadd {
+                ctx.op(RvvKind::Vadd, wide, vl, Dst::V(t), vec![Src::V(t), Src::ImmI(1)]);
+            }
+            let nsr = if e.is_unsigned() { RvvKind::Vnsrl } else { RvvKind::Vnsra };
+            ctx.op(nsr, sew, vl, Dst::V(d), vec![Src::V(t), Src::ImmI(1)]);
+            Ok(Method::CustomCombo)
+        }
+        Family::Qadd | Family::Qsub => {
+            let kind = match (fam, e.is_unsigned()) {
+                (Family::Qadd, false) => RvvKind::Vsadd,
+                (Family::Qadd, true) => RvvKind::Vsaddu,
+                (Family::Qsub, false) => RvvKind::Vssub,
+                (Family::Qsub, true) => RvvKind::Vssubu,
+                _ => unreachable!(),
+            };
+            let a = ctx.vsrc(&call.args[0]);
+            let b = ctx.vsrc(&call.args[1]);
+            ctx.op(kind, sew, vl, Dst::V(d), vec![a, b]);
+            Ok(Method::CustomDirect)
+        }
+        Family::Abd => {
+            let a = ctx.vsrc(&call.args[0]);
+            let b = ctx.vsrc(&call.args[1]);
+            if e.is_float() {
+                ctx.op(RvvKind::Vfsub, sew, vl, Dst::V(d), vec![a, b]);
+                ctx.op(RvvKind::Vfsgnjx, sew, vl, Dst::V(d), vec![Src::V(d), Src::V(d)]);
+            } else {
+                // max(a,b) - min(a,b)
+                let (mx, mn) = (ctx.scratch(), ctx.scratch());
+                let (kmax, kmin) = if e.is_unsigned() {
+                    (RvvKind::Vmaxu, RvvKind::Vminu)
+                } else {
+                    (RvvKind::Vmax, RvvKind::Vmin)
+                };
+                ctx.op(kmax, sew, vl, Dst::V(mx), vec![a.clone(), b.clone()]);
+                ctx.op(kmin, sew, vl, Dst::V(mn), vec![a, b]);
+                ctx.op(RvvKind::Vsub, sew, vl, Dst::V(d), vec![Src::V(mx), Src::V(mn)]);
+            }
+            Ok(Method::CustomCombo)
+        }
+        Family::MulLane | Family::MlaLane | Family::FmaLane => {
+            // broadcast the lane with vrgather.vi, then mul / macc
+            let (lane_vec_idx, lane_imm_idx, acc_idx) = match fam {
+                Family::MulLane => (1, 2, None),
+                _ => (2, 3, Some(0)),
+            };
+            let lv = vr(ctx, &call.args[lane_vec_idx])?;
+            let lane = match call.args[lane_imm_idx] {
+                Arg::Imm(i) => i,
+                _ => bail!("lane must be imm"),
+            };
+            let t = ctx.scratch();
+            ctx.op(RvvKind::Vrgather, sew, vl, Dst::V(t), vec![Src::V(lv), Src::ImmI(lane)]);
+            match acc_idx {
+                None => {
+                    let a = ctx.vsrc(&call.args[0]);
+                    let kind = pick3(e, RvvKind::Vmul, RvvKind::Vmul, RvvKind::Vfmul);
+                    ctx.op(kind, sew, vl, Dst::V(d), vec![a, Src::V(t)]);
+                }
+                Some(ai) => {
+                    let acc = vr(ctx, &call.args[ai])?;
+                    let a = ctx.vsrc(&call.args[1]);
+                    ctx.ensure_acc_in_dst(sew, vl, d, acc);
+                    let kind = if e.is_float() { RvvKind::Vfmacc } else { RvvKind::Vmacc };
+                    ctx.op(kind, sew, vl, Dst::V(d), vec![a, Src::V(t)]);
+                }
+            }
+            Ok(Method::CustomCombo)
+        }
+        Family::Mull => {
+            let a = ctx.vsrc(&call.args[0]);
+            let b = ctx.vsrc(&call.args[1]);
+            let kind = if e.is_unsigned() { RvvKind::Vwmulu } else { RvvKind::Vwmul };
+            // vl = number of source (d) lanes
+            let dl = (64 / e.bits()) as u32;
+            ctx.op(kind, sew, dl, Dst::V(d), vec![a, b]);
+            Ok(Method::CustomDirect)
+        }
+        Family::Mlal => {
+            let acc = vr(ctx, &call.args[0])?;
+            let a = ctx.vsrc(&call.args[1]);
+            let b = ctx.vsrc(&call.args[2]);
+            let dl = (64 / e.bits()) as u32;
+            let wide = Sew::of_bits(sew.bits() * 2);
+            ctx.mov_v(wide, dl, d, acc);
+            let kind = if e.is_unsigned() { RvvKind::Vwmaccu } else { RvvKind::Vwmacc };
+            ctx.op(kind, sew, dl, Dst::V(d), vec![a, b]);
+            Ok(Method::CustomDirect)
+        }
+        Family::Pmin | Family::Pmax | Family::Padd => {
+            // concat a,b then even/odd split via vnsrl (sew <= 32)
+            let a = vr(ctx, &call.args[0])?;
+            let b = vr(ctx, &call.args[1])?;
+            let cat = ctx.scratch();
+            // both inputs are d vectors: place a at 0..dl, b at dl..2dl
+            let dl = vl; // d-form lanes
+            ctx.mov_v(sew, dl, cat, a);
+            ctx.op(RvvKind::Vslideup, sew, 2 * dl, Dst::V(cat), vec![Src::V(b), Src::ImmI(dl as i64)]);
+            if sew.bits() > 32 {
+                bail!("pairwise on 64-bit lanes unsupported (NEON has no d-form s64 pairwise)");
+            }
+            let wide = Sew::of_bits(sew.bits() * 2);
+            let (even, odd) = (ctx.scratch(), ctx.scratch());
+            // view pairs as wide elements: evens = low halves, odds = high
+            ctx.op(RvvKind::Vnsrl, sew, dl, Dst::V(even), vec![Src::V(cat), Src::ImmI(0)]);
+            ctx.op(RvvKind::Vnsrl, sew, dl, Dst::V(odd), vec![Src::V(cat), Src::ImmI(sew.bits() as i64)]);
+            let _ = wide;
+            let kind = match fam {
+                Family::Padd => pick3(e, RvvKind::Vadd, RvvKind::Vadd, RvvKind::Vfadd),
+                Family::Pmin => pick3(e, RvvKind::Vmin, RvvKind::Vminu, RvvKind::Vfmin),
+                Family::Pmax => pick3(e, RvvKind::Vmax, RvvKind::Vmaxu, RvvKind::Vfmax),
+                _ => unreachable!(),
+            };
+            ctx.op(kind, sew, dl, Dst::V(d), vec![Src::V(even), Src::V(odd)]);
+            Ok(Method::CustomCombo)
+        }
+        f => bail!("arith::custom got family {f:?}"),
+    }
+}
+
+pub fn baseline(call: &NeonCall, dst: Option<u32>, ctx: &mut Ctx) -> Result<Method> {
+    let op = call.op;
+    let e = op.elem;
+    let (sew, vl) = op_sew_vl(op);
+    let fam = op.family;
+    match fam {
+        // clang vector attributes lower these to the same single op
+        Family::Add | Family::Sub | Family::Mul | Family::Div => {
+            custom(call, dst, ctx)?;
+            Ok(Method::VectorAttr)
+        }
+        // int min/max vector attr (select) folds to vmin/vmax; float NaN
+        // semantics force compare+merge
+        Family::Min | Family::Max => {
+            if e.is_float() {
+                let d = dst.unwrap();
+                let a = ctx.vsrc(&call.args[0]);
+                let b = ctx.vsrc(&call.args[1]);
+                let mk = ctx.mask();
+                let cmp = if fam == Family::Min { RvvKind::Vmflt } else { RvvKind::Vmfgt };
+                ctx.op(cmp, sew, vl, Dst::M(mk), vec![a.clone(), b.clone()]);
+                ctx.op(RvvKind::Vmerge, sew, vl, Dst::V(d), vec![b, a, Src::M(mk)]);
+                Ok(Method::VectorAttr)
+            } else {
+                custom(call, dst, ctx)?;
+                Ok(Method::VectorAttr)
+            }
+        }
+        // a + b*c as two ops (no fusion in the generic body)
+        Family::Mla | Family::Mls | Family::Fma | Family::Fms => {
+            let d = dst.unwrap();
+            let acc = ctx.vsrc(&call.args[0]);
+            let a = ctx.vsrc(&call.args[1]);
+            let b = ctx.vsrc(&call.args[2]);
+            let t = ctx.scratch();
+            let (mul, addsub) = if e.is_float() {
+                (
+                    RvvKind::Vfmul,
+                    if matches!(fam, Family::Mla | Family::Fma) { RvvKind::Vfadd } else { RvvKind::Vfsub },
+                )
+            } else {
+                (
+                    RvvKind::Vmul,
+                    if fam == Family::Mla { RvvKind::Vadd } else { RvvKind::Vsub },
+                )
+            };
+            ctx.op(mul, sew, vl, Dst::V(t), vec![a, b]);
+            ctx.op(addsub, sew, vl, Dst::V(d), vec![acc, Src::V(t)]);
+            Ok(Method::VectorAttr)
+        }
+        // generic abs/neg via sign tricks: 3 ops int, 2 float
+        Family::Abs => {
+            let d = dst.unwrap();
+            let a = ctx.vsrc(&call.args[0]);
+            if e.is_float() {
+                // clang: load sign-mask constant + vand
+                let t = ctx.scratch();
+                let mask = !(1i64 << (sew.bits() - 1));
+                ctx.op(RvvKind::VmvVX, sew, vl, Dst::V(t), vec![Src::ImmI(mask)]);
+                ctx.op(RvvKind::Vand, sew, vl, Dst::V(d), vec![a, Src::V(t)]);
+            } else {
+                // m = a >> (bits-1); (a ^ m) - m
+                let m = ctx.scratch();
+                let x = ctx.scratch();
+                ctx.op(RvvKind::Vsra, sew, vl, Dst::V(m), vec![a.clone(), Src::ImmI(sew.bits() as i64 - 1)]);
+                ctx.op(RvvKind::Vxor, sew, vl, Dst::V(x), vec![a, Src::V(m)]);
+                ctx.op(RvvKind::Vsub, sew, vl, Dst::V(d), vec![Src::V(x), Src::V(m)]);
+            }
+            Ok(Method::VectorAttr)
+        }
+        Family::Neg => {
+            custom(call, dst, ctx)?;
+            Ok(Method::VectorAttr)
+        }
+        // generic bit tricks: floor-avg (a&b)+((a^b)>>1), ceil-avg
+        // (a|b)-((a^b)>>1) — 4 ops either way
+        Family::Hadd | Family::Rhadd => {
+            let d = dst.unwrap();
+            let a = ctx.vsrc(&call.args[0]);
+            let b = ctx.vsrc(&call.args[1]);
+            let (t1, t2) = (ctx.scratch(), ctx.scratch());
+            let first = if fam == Family::Hadd { RvvKind::Vand } else { RvvKind::Vor };
+            ctx.op(first, sew, vl, Dst::V(t1), vec![a.clone(), b.clone()]);
+            ctx.op(RvvKind::Vxor, sew, vl, Dst::V(t2), vec![a, b]);
+            let shr = if e.is_unsigned() { RvvKind::Vsrl } else { RvvKind::Vsra };
+            ctx.op(shr, sew, vl, Dst::V(t2), vec![Src::V(t2), Src::ImmI(1)]);
+            let last = if fam == Family::Hadd { RvvKind::Vadd } else { RvvKind::Vsub };
+            ctx.op(last, sew, vl, Dst::V(d), vec![Src::V(t1), Src::V(t2)]);
+            Ok(Method::VectorAttr)
+        }
+        // branchy scalar loop: does not auto-vectorize
+        Family::Qadd | Family::Qsub => {
+            super::scalar_fallback(call, dst, costs::SATURATING_PER_LANE, costs::SCALAR_MEM_PER_LANE, ctx);
+            Ok(Method::ScalarLoop)
+        }
+        Family::Abd => {
+            let d = dst.unwrap();
+            let a = ctx.vsrc(&call.args[0]);
+            let b = ctx.vsrc(&call.args[1]);
+            if e.is_float() {
+                // fabsf(a-b) vectorizes: sub + sign-mask and
+                let t = ctx.scratch();
+                ctx.op(RvvKind::Vfsub, sew, vl, Dst::V(d), vec![a, b]);
+                let mask = !(1i64 << (sew.bits() - 1));
+                ctx.op(RvvKind::VmvVX, sew, vl, Dst::V(t), vec![Src::ImmI(mask)]);
+                ctx.op(RvvKind::Vand, sew, vl, Dst::V(d), vec![Src::V(d), Src::V(t)]);
+                Ok(Method::ScalarAutovec)
+            } else {
+                custom(call, dst, ctx)?;
+                Ok(Method::VectorAttr)
+            }
+        }
+        // lane forms: splat-shuffle (1 op) + unfused mul/add chain
+        Family::MulLane | Family::MlaLane | Family::FmaLane => {
+            let d = dst.unwrap();
+            let (lane_vec_idx, lane_imm_idx, acc_idx) = match fam {
+                Family::MulLane => (1, 2, None),
+                _ => (2, 3, Some(0usize)),
+            };
+            let lv = vr(ctx, &call.args[lane_vec_idx])?;
+            let lane = match call.args[lane_imm_idx] {
+                Arg::Imm(i) => i,
+                _ => bail!("lane must be imm"),
+            };
+            let t = ctx.scratch();
+            ctx.op(RvvKind::Vrgather, sew, vl, Dst::V(t), vec![Src::V(lv), Src::ImmI(lane)]);
+            let mulk = pick3(e, RvvKind::Vmul, RvvKind::Vmul, RvvKind::Vfmul);
+            match acc_idx {
+                None => {
+                    let a = ctx.vsrc(&call.args[0]);
+                    ctx.op(mulk, sew, vl, Dst::V(d), vec![a, Src::V(t)]);
+                }
+                Some(ai) => {
+                    let acc = ctx.vsrc(&call.args[ai]);
+                    let a = ctx.vsrc(&call.args[1]);
+                    let p = ctx.scratch();
+                    ctx.op(mulk, sew, vl, Dst::V(p), vec![a, Src::V(t)]);
+                    let addk = pick3(e, RvvKind::Vadd, RvvKind::Vadd, RvvKind::Vfadd);
+                    ctx.op(addk, sew, vl, Dst::V(d), vec![acc, Src::V(p)]);
+                }
+            }
+            Ok(Method::VectorAttr)
+        }
+        // widening: convertvector both sides + wide op
+        Family::Mull | Family::Mlal => {
+            let d = dst.unwrap();
+            let wide = Sew::of_bits(sew.bits() * 2);
+            let dl = (64 / e.bits()) as u32;
+            let ext = if e.is_unsigned() { RvvKind::Vzext2 } else { RvvKind::Vsext2 };
+            let (off, has_acc) = if fam == Family::Mlal { (1usize, true) } else { (0, false) };
+            let (wa, wb) = (ctx.scratch(), ctx.scratch());
+            let a = vr(ctx, &call.args[off])?;
+            let b = vr(ctx, &call.args[off + 1])?;
+            ctx.op(ext, wide, dl, Dst::V(wa), vec![Src::V(a)]);
+            ctx.op(ext, wide, dl, Dst::V(wb), vec![Src::V(b)]);
+            if has_acc {
+                let acc = ctx.vsrc(&call.args[0]);
+                let p = ctx.scratch();
+                ctx.op(RvvKind::Vmul, wide, dl, Dst::V(p), vec![Src::V(wa), Src::V(wb)]);
+                ctx.op(RvvKind::Vadd, wide, dl, Dst::V(d), vec![acc, Src::V(p)]);
+            } else {
+                ctx.op(RvvKind::Vmul, wide, dl, Dst::V(d), vec![Src::V(wa), Src::V(wb)]);
+            }
+            Ok(Method::VectorAttr)
+        }
+        // lane-crossing scalar loop
+        Family::Pmin | Family::Pmax | Family::Padd => {
+            super::scalar_fallback(call, dst, costs::PAIRWISE_PER_LANE, costs::SCALAR_MEM_PER_LANE, ctx);
+            Ok(Method::ScalarLoop)
+        }
+        f => bail!("arith::baseline got family {f:?}"),
+    }
+}

@@ -1,0 +1,111 @@
+//! Bit-manipulation rules. `vrbit` is the paper's Listing 7: the binary-
+//! magic-numbers bit reverse vectorised with RVV bitwise ops. Base RVV 1.0
+//! has no clz/popcount vector instructions (those arrive with Zvbb, after
+//! the paper), so `vclz`/`vcnt` are SWAR sequences too.
+
+use anyhow::{bail, Result};
+
+use crate::ir::NeonCall;
+use crate::neon::ops::Family;
+use crate::rvv::ops::{Dst, RvvKind, Src};
+use crate::rvv::vtype::Sew;
+use crate::simde::costs;
+use crate::simde::ctx::{op_sew_vl, Ctx};
+use crate::simde::method::Method;
+
+/// One magic-numbers swap stage: `v = ((v >> s) & m) | ((v & m) << s)`.
+fn swap_stage(ctx: &mut Ctx, sew: Sew, vl: u32, v: u32, s: i64, m: i64) {
+    let (t1, t2) = (ctx.scratch(), ctx.scratch());
+    ctx.op(RvvKind::Vsrl, sew, vl, Dst::V(t1), vec![Src::V(v), Src::ImmI(s)]);
+    ctx.op(RvvKind::Vand, sew, vl, Dst::V(t1), vec![Src::V(t1), Src::ImmI(m)]);
+    ctx.op(RvvKind::Vand, sew, vl, Dst::V(t2), vec![Src::V(v), Src::ImmI(m)]);
+    ctx.op(RvvKind::Vsll, sew, vl, Dst::V(t2), vec![Src::V(t2), Src::ImmI(s)]);
+    ctx.op(RvvKind::Vor, sew, vl, Dst::V(v), vec![Src::V(t1), Src::V(t2)]);
+}
+
+/// SWAR popcount at `sew`, in place. Returns op count emitted.
+fn emit_popcount(ctx: &mut Ctx, sew: Sew, vl: u32, v: u32) {
+    let bits = sew.bits();
+    let rep = |nib: u64| -> i64 {
+        // repeat a byte pattern across the lane width
+        let mut m = 0u64;
+        for _ in 0..(bits / 8).max(1) {
+            m = (m << 8) | nib;
+        }
+        m as i64
+    };
+    let m55 = rep(0x55);
+    let m33 = rep(0x33);
+    let m0f = rep(0x0f);
+    let t = ctx.scratch();
+    // v -= (v >> 1) & 0x55..
+    ctx.op(RvvKind::Vsrl, sew, vl, Dst::V(t), vec![Src::V(v), Src::ImmI(1)]);
+    ctx.op(RvvKind::Vand, sew, vl, Dst::V(t), vec![Src::V(t), Src::ImmI(m55)]);
+    ctx.op(RvvKind::Vsub, sew, vl, Dst::V(v), vec![Src::V(v), Src::V(t)]);
+    // v = (v & 0x33..) + ((v >> 2) & 0x33..)
+    ctx.op(RvvKind::Vsrl, sew, vl, Dst::V(t), vec![Src::V(v), Src::ImmI(2)]);
+    ctx.op(RvvKind::Vand, sew, vl, Dst::V(t), vec![Src::V(t), Src::ImmI(m33)]);
+    ctx.op(RvvKind::Vand, sew, vl, Dst::V(v), vec![Src::V(v), Src::ImmI(m33)]);
+    ctx.op(RvvKind::Vadd, sew, vl, Dst::V(v), vec![Src::V(v), Src::V(t)]);
+    // v = (v + (v >> 4)) & 0x0f..
+    ctx.op(RvvKind::Vsrl, sew, vl, Dst::V(t), vec![Src::V(v), Src::ImmI(4)]);
+    ctx.op(RvvKind::Vadd, sew, vl, Dst::V(v), vec![Src::V(v), Src::V(t)]);
+    ctx.op(RvvKind::Vand, sew, vl, Dst::V(v), vec![Src::V(v), Src::ImmI(m0f)]);
+    if bits > 8 {
+        // fold byte counts: (v * 0x0101..) >> (bits - 8)
+        let ones = rep(0x01);
+        ctx.op(RvvKind::Vmul, sew, vl, Dst::V(v), vec![Src::V(v), Src::ImmI(ones)]);
+        ctx.op(RvvKind::Vsrl, sew, vl, Dst::V(v), vec![Src::V(v), Src::ImmI(bits as i64 - 8)]);
+    }
+}
+
+pub fn custom(call: &NeonCall, dst: Option<u32>, ctx: &mut Ctx) -> Result<Method> {
+    let op = call.op;
+    let (sew, vl) = op_sew_vl(op);
+    let d = dst.unwrap();
+    match op.family {
+        Family::Rbit => {
+            // Listing 7 vectorised: three swap stages reverse each byte
+            let a = ctx.vsrc(&call.args[0]);
+            ctx.op(RvvKind::VmvVV, sew, vl, Dst::V(d), vec![a]);
+            swap_stage(ctx, sew, vl, d, 1, 0x55);
+            swap_stage(ctx, sew, vl, d, 2, 0x33);
+            swap_stage(ctx, sew, vl, d, 4, 0x0f);
+            Ok(Method::CustomAlgorithmic)
+        }
+        Family::Cnt => {
+            let a = ctx.vsrc(&call.args[0]);
+            ctx.op(RvvKind::VmvVV, sew, vl, Dst::V(d), vec![a]);
+            emit_popcount(ctx, sew, vl, d);
+            Ok(Method::CustomAlgorithmic)
+        }
+        Family::Clz => {
+            // smear then popcount the inverse: clz = popcount(~smear(v))
+            let a = ctx.vsrc(&call.args[0]);
+            ctx.op(RvvKind::VmvVV, sew, vl, Dst::V(d), vec![a]);
+            let t = ctx.scratch();
+            let mut k = 1i64;
+            while k < sew.bits() as i64 {
+                ctx.op(RvvKind::Vsrl, sew, vl, Dst::V(t), vec![Src::V(d), Src::ImmI(k)]);
+                ctx.op(RvvKind::Vor, sew, vl, Dst::V(d), vec![Src::V(d), Src::V(t)]);
+                k <<= 1;
+            }
+            ctx.op(RvvKind::Vxor, sew, vl, Dst::V(d), vec![Src::V(d), Src::ImmI(-1)]);
+            emit_popcount(ctx, sew, vl, d);
+            Ok(Method::CustomAlgorithmic)
+        }
+        f => bail!("bitmanip::custom got family {f:?}"),
+    }
+}
+
+pub fn baseline(call: &NeonCall, dst: Option<u32>, ctx: &mut Ctx) -> Result<Method> {
+    let op = call.op;
+    let per_lane = match op.family {
+        Family::Rbit => costs::RBIT_PER_LANE,
+        Family::Clz => costs::CLZ_PER_LANE,
+        Family::Cnt => costs::CNT_PER_LANE,
+        f => bail!("bitmanip::baseline got family {f:?}"),
+    };
+    super::scalar_fallback(call, dst, per_lane, costs::SCALAR_MEM_PER_LANE, ctx);
+    Ok(Method::ScalarLoop)
+}

@@ -1,0 +1,163 @@
+//! Comparison and bitwise conversions. Comparisons use the paper's
+//! Listing 6 pattern: `vmv` (zeros) + `vmseq`-family + `vmerge` with -1.
+
+use anyhow::{bail, Result};
+
+use crate::ir::NeonCall;
+use crate::neon::ops::Family;
+use crate::rvv::ops::{Dst, RvvKind, Src};
+use crate::simde::ctx::{op_sew_vl, Ctx};
+use crate::simde::method::Method;
+
+pub fn custom(call: &NeonCall, dst: Option<u32>, ctx: &mut Ctx) -> Result<Method> {
+    let op = call.op;
+    let e = op.elem;
+    let (sew, vl) = op_sew_vl(op);
+    let d = dst.unwrap();
+    let fam = op.family;
+    match fam {
+        Family::Ceq | Family::Cge | Family::Cgt | Family::Cle | Family::Clt | Family::Ceqz => {
+            let a = ctx.vsrc(&call.args[0]);
+            let b = if fam == Family::Ceqz {
+                Src::ImmI(0)
+            } else {
+                ctx.vsrc(&call.args[1])
+            };
+            let kind = if e.is_float() {
+                match fam {
+                    Family::Ceq => RvvKind::Vmfeq,
+                    Family::Cge => RvvKind::Vmfge,
+                    Family::Cgt => RvvKind::Vmfgt,
+                    Family::Cle => RvvKind::Vmfle,
+                    Family::Clt => RvvKind::Vmflt,
+                    Family::Ceqz => RvvKind::Vmfeq,
+                    _ => unreachable!(),
+                }
+            } else if e.is_unsigned() {
+                match fam {
+                    Family::Ceq | Family::Ceqz => RvvKind::Vmseq,
+                    Family::Cge => RvvKind::Vmsgtu, // a >= b  via swap: use vmsleu(b,a)
+                    Family::Cgt => RvvKind::Vmsgtu,
+                    Family::Cle => RvvKind::Vmsleu,
+                    Family::Clt => RvvKind::Vmsltu,
+                    _ => unreachable!(),
+                }
+            } else {
+                match fam {
+                    Family::Ceq | Family::Ceqz => RvvKind::Vmseq,
+                    Family::Cge => RvvKind::Vmsgt,
+                    Family::Cgt => RvvKind::Vmsgt,
+                    Family::Cle => RvvKind::Vmsle,
+                    Family::Clt => RvvKind::Vmslt,
+                    _ => unreachable!(),
+                }
+            };
+            // Cge on ints: a >= b  <=>  !(a < b); implement as vmsle(b, a)
+            // by operand swap to stay 1 instruction
+            let (x, y, kind) = if !e.is_float() && fam == Family::Cge {
+                (
+                    b,
+                    a,
+                    if e.is_unsigned() { RvvKind::Vmsleu } else { RvvKind::Vmsle },
+                )
+            } else {
+                (a, b, kind)
+            };
+            // float Ceqz compares against 0.0
+            let y = if fam == Family::Ceqz && e.is_float() { Src::ImmF(0.0) } else { y };
+            let mk = ctx.mask();
+            let zeros = ctx.scratch();
+            // Listing 6: vmv (zeros) + compare -> mask + vmerge(-1)
+            ctx.op(RvvKind::VmvVX, sew, vl, Dst::V(zeros), vec![Src::ImmI(0)]);
+            ctx.op(kind, sew, vl, Dst::M(mk), vec![x, y]);
+            ctx.op(RvvKind::Vmerge, sew, vl, Dst::V(d), vec![Src::V(zeros), Src::ImmI(-1), Src::M(mk)]);
+            Ok(Method::CustomCombo)
+        }
+        Family::Tst => {
+            let a = ctx.vsrc(&call.args[0]);
+            let b = ctx.vsrc(&call.args[1]);
+            let t = ctx.scratch();
+            let mk = ctx.mask();
+            let zeros = ctx.scratch();
+            ctx.op(RvvKind::Vand, sew, vl, Dst::V(t), vec![a, b]);
+            ctx.op(RvvKind::VmvVX, sew, vl, Dst::V(zeros), vec![Src::ImmI(0)]);
+            ctx.op(RvvKind::Vmsne, sew, vl, Dst::M(mk), vec![Src::V(t), Src::ImmI(0)]);
+            ctx.op(RvvKind::Vmerge, sew, vl, Dst::V(d), vec![Src::V(zeros), Src::ImmI(-1), Src::M(mk)]);
+            Ok(Method::CustomCombo)
+        }
+        Family::And | Family::Orr | Family::Eor => {
+            let kind = match fam {
+                Family::And => RvvKind::Vand,
+                Family::Orr => RvvKind::Vor,
+                _ => RvvKind::Vxor,
+            };
+            let a = ctx.vsrc(&call.args[0]);
+            let b = ctx.vsrc(&call.args[1]);
+            ctx.op(kind, sew, vl, Dst::V(d), vec![a, b]);
+            Ok(Method::CustomDirect)
+        }
+        Family::Bic | Family::Orn => {
+            // a & ~b / a | ~b (no vandn without Zvkb)
+            let a = ctx.vsrc(&call.args[0]);
+            let b = ctx.vsrc(&call.args[1]);
+            let t = ctx.scratch();
+            ctx.op(RvvKind::Vxor, sew, vl, Dst::V(t), vec![b, Src::ImmI(-1)]);
+            let kind = if fam == Family::Bic { RvvKind::Vand } else { RvvKind::Vor };
+            ctx.op(kind, sew, vl, Dst::V(d), vec![a, Src::V(t)]);
+            Ok(Method::CustomCombo)
+        }
+        Family::Mvn => {
+            let a = ctx.vsrc(&call.args[0]);
+            ctx.op(RvvKind::Vxor, sew, vl, Dst::V(d), vec![a, Src::ImmI(-1)]);
+            Ok(Method::CustomDirect)
+        }
+        Family::Bsl => {
+            // ((a ^ b) & m) ^ b — 3 ops (vs the naive 4-op and/or chain)
+            let m = ctx.vsrc(&call.args[0]);
+            let a = ctx.vsrc(&call.args[1]);
+            let b = ctx.vsrc(&call.args[2]);
+            let t = ctx.scratch();
+            ctx.op(RvvKind::Vxor, sew, vl, Dst::V(t), vec![a, b.clone()]);
+            ctx.op(RvvKind::Vand, sew, vl, Dst::V(t), vec![Src::V(t), m]);
+            ctx.op(RvvKind::Vxor, sew, vl, Dst::V(d), vec![Src::V(t), b]);
+            Ok(Method::CustomCombo)
+        }
+        f => bail!("cmp_bit::custom got family {f:?}"),
+    }
+}
+
+pub fn baseline(call: &NeonCall, dst: Option<u32>, ctx: &mut Ctx) -> Result<Method> {
+    let op = call.op;
+    let (sew, vl) = op_sew_vl(op);
+    let fam = op.family;
+    match fam {
+        // vector-attribute comparisons lower to the same 3-op pattern
+        Family::Ceq | Family::Cge | Family::Cgt | Family::Cle | Family::Clt
+        | Family::Ceqz | Family::Tst => {
+            custom(call, dst, ctx)?;
+            Ok(Method::VectorAttr)
+        }
+        Family::And | Family::Orr | Family::Eor | Family::Mvn => {
+            custom(call, dst, ctx)?;
+            Ok(Method::VectorAttr)
+        }
+        Family::Bic | Family::Orn => {
+            custom(call, dst, ctx)?;
+            Ok(Method::VectorAttr)
+        }
+        // SIMDe generic bsl: (m & a) | (~m & b) — 4 ops
+        Family::Bsl => {
+            let d = dst.unwrap();
+            let m = ctx.vsrc(&call.args[0]);
+            let a = ctx.vsrc(&call.args[1]);
+            let b = ctx.vsrc(&call.args[2]);
+            let (t1, t2) = (ctx.scratch(), ctx.scratch());
+            ctx.op(RvvKind::Vand, sew, vl, Dst::V(t1), vec![m.clone(), a]);
+            ctx.op(RvvKind::Vxor, sew, vl, Dst::V(t2), vec![m, Src::ImmI(-1)]);
+            ctx.op(RvvKind::Vand, sew, vl, Dst::V(t2), vec![Src::V(t2), b]);
+            ctx.op(RvvKind::Vor, sew, vl, Dst::V(d), vec![Src::V(t1), Src::V(t2)]);
+            Ok(Method::VectorAttr)
+        }
+        f => bail!("cmp_bit::baseline got family {f:?}"),
+    }
+}

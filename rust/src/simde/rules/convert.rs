@@ -1,0 +1,117 @@
+//! Widen/narrow and conversion rules. `vmovl`/`vmovn` map to single
+//! `vsext`/`vzext`/`vnsrl`; saturating narrows clamp then narrow; the
+//! round-to-nearest conversions (`vcvtnq`, the hot op in XNNPACK's
+//! exp-based sigmoid/tanh) map to a single `vfcvt.x.f.v` — while the SIMDe
+//! generic is a per-lane `roundevenf` libm loop the auto-vectorizer
+//! rejects.
+
+use anyhow::{bail, Result};
+
+use crate::ir::NeonCall;
+use crate::neon::ops::Family;
+use crate::rvv::ops::{Dst, RvvKind, Src};
+use crate::rvv::vtype::Sew;
+use crate::simde::costs;
+use crate::simde::ctx::{op_sew_vl, ret_sew_vl, Ctx};
+use crate::simde::method::Method;
+
+pub fn custom(call: &NeonCall, dst: Option<u32>, ctx: &mut Ctx) -> Result<Method> {
+    let op = call.op;
+    let e = op.elem;
+    let d = dst.unwrap();
+    match op.family {
+        Family::Movl => {
+            let (wsew, wvl) = ret_sew_vl(op);
+            let a = ctx.vsrc(&call.args[0]);
+            let kind = if e.is_unsigned() { RvvKind::Vzext2 } else { RvvKind::Vsext2 };
+            ctx.op(kind, wsew, wvl, Dst::V(d), vec![a]);
+            Ok(Method::CustomDirect)
+        }
+        Family::Movn => {
+            let (nsew, nvl) = ret_sew_vl(op);
+            let a = ctx.vsrc(&call.args[0]);
+            ctx.op(RvvKind::Vnsrl, nsew, nvl, Dst::V(d), vec![a, Src::ImmI(0)]);
+            Ok(Method::CustomDirect)
+        }
+        Family::Qmovn => {
+            // clamp at wide SEW then narrow
+            let (nsew, nvl) = ret_sew_vl(op);
+            let wsew = Sew::of_bits(nsew.bits() * 2);
+            let a = ctx.vsrc(&call.args[0]);
+            let t = ctx.scratch();
+            if e.is_unsigned() {
+                let hi = (1i64 << nsew.bits()) - 1;
+                ctx.op(RvvKind::Vminu, wsew, nvl, Dst::V(t), vec![a, Src::ImmI(hi)]);
+            } else {
+                let hi = (1i64 << (nsew.bits() - 1)) - 1;
+                let lo = -(1i64 << (nsew.bits() - 1));
+                ctx.op(RvvKind::Vmin, wsew, nvl, Dst::V(t), vec![a, Src::ImmI(hi)]);
+                ctx.op(RvvKind::Vmax, wsew, nvl, Dst::V(t), vec![Src::V(t), Src::ImmI(lo)]);
+            }
+            ctx.op(RvvKind::Vnsrl, nsew, nvl, Dst::V(d), vec![Src::V(t), Src::ImmI(0)]);
+            Ok(Method::CustomCombo)
+        }
+        Family::Qmovun => {
+            // signed wide -> unsigned narrow: clamp [0, 2^n - 1]
+            let (nsew, nvl) = ret_sew_vl(op);
+            let wsew = Sew::of_bits(nsew.bits() * 2);
+            let a = ctx.vsrc(&call.args[0]);
+            let t = ctx.scratch();
+            let hi = (1i64 << nsew.bits()) - 1;
+            ctx.op(RvvKind::Vmax, wsew, nvl, Dst::V(t), vec![a, Src::ImmI(0)]);
+            ctx.op(RvvKind::Vmin, wsew, nvl, Dst::V(t), vec![Src::V(t), Src::ImmI(hi)]);
+            ctx.op(RvvKind::Vnsrl, nsew, nvl, Dst::V(d), vec![Src::V(t), Src::ImmI(0)]);
+            Ok(Method::CustomCombo)
+        }
+        Family::CvtIF => {
+            let (sew, vl) = op_sew_vl(op);
+            let a = ctx.vsrc(&call.args[0]);
+            let kind = if e.is_unsigned() { RvvKind::VfcvtFXu } else { RvvKind::VfcvtFX };
+            ctx.op(kind, sew, vl, Dst::V(d), vec![a]);
+            Ok(Method::CustomDirect)
+        }
+        Family::CvtFI => {
+            let (sew, vl) = op_sew_vl(op);
+            let a = ctx.vsrc(&call.args[0]);
+            ctx.op(RvvKind::VfcvtRtzXF, sew, vl, Dst::V(d), vec![a]);
+            Ok(Method::CustomDirect)
+        }
+        Family::CvtnFI => {
+            let (sew, vl) = op_sew_vl(op);
+            let a = ctx.vsrc(&call.args[0]);
+            ctx.op(RvvKind::VfcvtXF, sew, vl, Dst::V(d), vec![a]);
+            Ok(Method::CustomDirect)
+        }
+        Family::Reinterpret => {
+            // bit cast: register copy (clang emits nothing; we count the
+            // conservative vmv both modes emit)
+            let a = ctx.vsrc(&call.args[0]);
+            let bytes = op.vt().bits() / 8;
+            ctx.op(RvvKind::VmvVV, Sew::E8, bytes, Dst::V(d), vec![a]);
+            Ok(Method::CustomDirect)
+        }
+        f => bail!("convert::custom got family {f:?}"),
+    }
+}
+
+pub fn baseline(call: &NeonCall, dst: Option<u32>, ctx: &mut Ctx) -> Result<Method> {
+    let op = call.op;
+    match op.family {
+        // __builtin_convertvector lowers the same way
+        Family::Movl | Family::Movn | Family::CvtIF | Family::CvtFI | Family::Reinterpret => {
+            custom(call, dst, ctx)?;
+            Ok(Method::VectorAttr)
+        }
+        // branchy clamp loops don't vectorize
+        Family::Qmovn | Family::Qmovun => {
+            super::scalar_fallback(call, dst, costs::QNARROW_PER_LANE, costs::SCALAR_MEM_PER_LANE, ctx);
+            Ok(Method::ScalarLoop)
+        }
+        // per-lane roundevenf libm call: scalarised
+        Family::CvtnFI => {
+            super::scalar_fallback(call, dst, costs::ROUNDEVEN_PER_LANE, costs::SCALAR_MEM_PER_LANE, ctx);
+            Ok(Method::ScalarLoop)
+        }
+        f => bail!("convert::baseline got family {f:?}"),
+    }
+}

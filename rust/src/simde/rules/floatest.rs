@@ -1,0 +1,95 @@
+//! Float-estimate and rounding rules: `vrecpe`/`vrsqrte` map to RVV's
+//! `vfrec7.v`/`vfrsqrt7.v` estimates, Newton steps are 2–3 arithmetic ops,
+//! `vsqrtq` is a single `vfsqrt.v`. The SIMDe generics for all the
+//! estimate/sqrt/rounding ops are per-lane libm loops — the biggest
+//! baseline loss (the paper's vsqrt benchmark).
+
+use anyhow::{bail, Result};
+
+use crate::ir::NeonCall;
+use crate::neon::ops::Family;
+use crate::rvv::ops::{Dst, RvvKind, Src};
+use crate::simde::costs;
+use crate::simde::ctx::{op_sew_vl, Ctx};
+use crate::simde::method::Method;
+
+pub fn custom(call: &NeonCall, dst: Option<u32>, ctx: &mut Ctx) -> Result<Method> {
+    let op = call.op;
+    let (sew, vl) = op_sew_vl(op);
+    let d = dst.unwrap();
+    match op.family {
+        Family::Recpe => {
+            let a = ctx.vsrc(&call.args[0]);
+            ctx.op(RvvKind::Vfrec7, sew, vl, Dst::V(d), vec![a]);
+            Ok(Method::CustomDirect)
+        }
+        Family::Rsqrte => {
+            let a = ctx.vsrc(&call.args[0]);
+            ctx.op(RvvKind::Vfrsqrt7, sew, vl, Dst::V(d), vec![a]);
+            Ok(Method::CustomDirect)
+        }
+        Family::Recps => {
+            // 2 - a*b
+            let a = ctx.vsrc(&call.args[0]);
+            let b = ctx.vsrc(&call.args[1]);
+            let t = ctx.scratch();
+            ctx.op(RvvKind::Vfmul, sew, vl, Dst::V(t), vec![a, b]);
+            ctx.op(RvvKind::Vfrsub, sew, vl, Dst::V(d), vec![Src::V(t), Src::ImmF(2.0)]);
+            Ok(Method::CustomCombo)
+        }
+        Family::Rsqrts => {
+            // (3 - a*b) / 2
+            let a = ctx.vsrc(&call.args[0]);
+            let b = ctx.vsrc(&call.args[1]);
+            let t = ctx.scratch();
+            ctx.op(RvvKind::Vfmul, sew, vl, Dst::V(t), vec![a, b]);
+            ctx.op(RvvKind::Vfrsub, sew, vl, Dst::V(t), vec![Src::V(t), Src::ImmF(3.0)]);
+            ctx.op(RvvKind::Vfmul, sew, vl, Dst::V(d), vec![Src::V(t), Src::ImmF(0.5)]);
+            Ok(Method::CustomCombo)
+        }
+        Family::Sqrt => {
+            let a = ctx.vsrc(&call.args[0]);
+            ctx.op(RvvKind::Vfsqrt, sew, vl, Dst::V(d), vec![a]);
+            Ok(Method::CustomDirect)
+        }
+        Family::Rndn => {
+            // round-to-nearest-even via int round-trip (bounded domain,
+            // exactly XNNPACK's vcvtnq+vcvtq pattern)
+            let a = ctx.vsrc(&call.args[0]);
+            let t = ctx.scratch();
+            ctx.op(RvvKind::VfcvtXF, sew, vl, Dst::V(t), vec![a]);
+            ctx.op(RvvKind::VfcvtFX, sew, vl, Dst::V(d), vec![Src::V(t)]);
+            Ok(Method::CustomCombo)
+        }
+        f => bail!("floatest::custom got family {f:?}"),
+    }
+}
+
+pub fn baseline(call: &NeonCall, dst: Option<u32>, ctx: &mut Ctx) -> Result<Method> {
+    let op = call.op;
+    match op.family {
+        // pure-arithmetic Newton steps vectorize fine
+        Family::Recps | Family::Rsqrts => {
+            custom(call, dst, ctx)?;
+            Ok(Method::VectorAttr)
+        }
+        // per-lane libm loops: errno blocks vectorization
+        Family::Sqrt => {
+            super::scalar_fallback(call, dst, costs::SQRTF_PER_LANE, costs::SCALAR_MEM_PER_LANE, ctx);
+            Ok(Method::ScalarLoop)
+        }
+        Family::Rsqrte => {
+            super::scalar_fallback(call, dst, costs::RSQRT_PER_LANE, costs::SCALAR_MEM_PER_LANE, ctx);
+            Ok(Method::ScalarLoop)
+        }
+        Family::Recpe => {
+            super::scalar_fallback(call, dst, costs::RECIP_PER_LANE, costs::SCALAR_MEM_PER_LANE, ctx);
+            Ok(Method::ScalarLoop)
+        }
+        Family::Rndn => {
+            super::scalar_fallback(call, dst, costs::ROUNDEVEN_PER_LANE, costs::SCALAR_MEM_PER_LANE, ctx);
+            Ok(Method::ScalarLoop)
+        }
+        f => bail!("floatest::baseline got family {f:?}"),
+    }
+}

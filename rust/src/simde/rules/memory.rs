@@ -1,0 +1,121 @@
+//! Memory-intrinsic conversions (`vld1*`/`vst1*`).
+//!
+//! Custom mode issues typed unit-stride RVV loads/stores with the exact
+//! element count — the paper's Listing 4 fix ("Ensure that we save the
+//! correct number of elements into memory").
+//!
+//! Baseline mode models SIMDe's generic path: `memcpy` through the private
+//! union, which clang lowers to byte-granular vector memory ops (`vle8`/
+//! `vse8` of the register width). Semantically identical on little-endian,
+//! but the `e8` configuration churns `vsetvli` against the typed compute
+//! around it. With the (optional) partial-conversion bug enabled, stores
+//! copy `sizeof(union)` bytes — more than the NEON value — reproducing the
+//! Listing 4 overrun.
+
+use anyhow::{bail, Result};
+
+use crate::ir::NeonCall;
+use crate::neon::ops::Family;
+use crate::rvv::ops::{Dst, RvvKind, Src};
+use crate::rvv::vtype::Sew;
+use crate::simde::ctx::{op_sew_vl, Ctx};
+use crate::simde::method::Method;
+use crate::simde::types_map::union_size_bytes;
+
+pub fn custom(call: &NeonCall, dst: Option<u32>, ctx: &mut Ctx) -> Result<Method> {
+    let op = call.op;
+    let (sew, vl) = op_sew_vl(op);
+    match op.family {
+        Family::Ld1 => {
+            ctx.load(sew, vl, dst.unwrap(), ctx.memref(&call.args[0]));
+            Ok(Method::CustomDirect)
+        }
+        Family::Ld1Dup => {
+            // stride-0 broadcast load
+            ctx.load(sew, vl, dst.unwrap(), ctx.memref_strided(&call.args[0], 0));
+            Ok(Method::CustomDirect)
+        }
+        Family::Ld1Lane => {
+            // vid + vmseq -> lane mask; masked stride-0 load leaves the
+            // other lanes undisturbed
+            let d = dst.unwrap();
+            let src = match call.args[1] {
+                crate::ir::Arg::V(r) => ctx.v(r),
+                _ => bail!("vld1_lane expects vector arg"),
+            };
+            let lane = match call.args[2] {
+                crate::ir::Arg::Imm(i) => i,
+                _ => bail!("vld1_lane expects imm lane"),
+            };
+            ctx.mov_v(sew, vl, d, src);
+            let t = ctx.scratch();
+            let mk = ctx.mask();
+            ctx.op(RvvKind::Vid, sew, vl, Dst::V(t), vec![]);
+            ctx.op(RvvKind::Vmseq, sew, vl, Dst::M(mk), vec![Src::V(t), Src::ImmI(lane)]);
+            ctx.load_masked(sew, vl, d, ctx.memref_strided(&call.args[0], 0), mk);
+            Ok(Method::CustomCombo)
+        }
+        Family::St1 => {
+            let src = match call.args[1] {
+                crate::ir::Arg::V(r) => ctx.v(r),
+                _ => bail!("vst1 expects vector arg"),
+            };
+            ctx.store(sew, vl, src, ctx.memref(&call.args[0]));
+            Ok(Method::CustomDirect)
+        }
+        Family::St1Lane => {
+            let src = match call.args[1] {
+                crate::ir::Arg::V(r) => ctx.v(r),
+                _ => bail!("vst1_lane expects vector arg"),
+            };
+            let lane = match call.args[2] {
+                crate::ir::Arg::Imm(i) => i,
+                _ => bail!("vst1_lane expects imm lane"),
+            };
+            let t = ctx.scratch();
+            ctx.op(RvvKind::Vslidedown, sew, 1, Dst::V(t), vec![Src::V(src), Src::ImmI(lane)]);
+            ctx.store(sew, 1, t, ctx.memref(&call.args[0]));
+            Ok(Method::CustomCombo)
+        }
+        f => bail!("memory::custom got family {f:?}"),
+    }
+}
+
+pub fn baseline(call: &NeonCall, dst: Option<u32>, ctx: &mut Ctx, union_store_bug: bool) -> Result<Method> {
+    let op = call.op;
+    let (sew, vl) = op_sew_vl(op);
+    let bytes = op.vt().bits() / 8;
+    match op.family {
+        Family::Ld1 => {
+            // memcpy(&union, ptr, bytes) -> vle8 of the register width
+            ctx.load(Sew::E8, bytes, dst.unwrap(), ctx.memref(&call.args[0]));
+            Ok(Method::MemUnion)
+        }
+        Family::Ld1Dup => {
+            // scalar load + generic dup, clang lowers to a broadcast; same
+            // instruction shape as custom but in the e8/compute churn
+            ctx.load(sew, vl, dst.unwrap(), ctx.memref_strided(&call.args[0], 0));
+            Ok(Method::ScalarAutovec)
+        }
+        Family::Ld1Lane | Family::St1Lane => {
+            // per-lane memcpy through the union -> scalar fallback
+            super::scalar_fallback(call, dst, 2, 3, ctx);
+            Ok(Method::ScalarLoop)
+        }
+        Family::St1 => {
+            let src = match call.args[1] {
+                crate::ir::Arg::V(r) => ctx.v(r),
+                _ => bail!("vst1 expects vector arg"),
+            };
+            let store_bytes = if union_store_bug {
+                // Listing 4 bug: memcpy(ptr, &union, sizeof(union))
+                union_size_bytes(op.vt(), ctx.cfg.vlen, ctx.cfg.zvfh)
+            } else {
+                bytes
+            };
+            ctx.store(Sew::E8, store_bytes, src, ctx.memref(&call.args[0]));
+            Ok(Method::MemUnion)
+        }
+        f => bail!("memory::baseline got family {f:?}"),
+    }
+}

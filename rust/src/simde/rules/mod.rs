@@ -1,0 +1,141 @@
+//! Conversion-rule registry: per-category custom (RVV-enhanced) and
+//! baseline (original SIMDe) lowerings of every implemented NEON intrinsic.
+
+mod arith;
+mod bitmanip;
+mod cmp_bit;
+mod convert;
+mod floatest;
+mod memory;
+mod permute;
+mod shift;
+
+use anyhow::Result;
+
+use crate::ir::NeonCall;
+use crate::neon::ops::Category;
+use crate::rvv::program::{RStmt, ScalarBlock};
+use crate::simde::costs;
+use crate::simde::ctx::Ctx;
+use crate::simde::method::{Method, Mode};
+
+/// Lower one intrinsic call under the given mode. Returns the conversion
+/// method used (for reporting and the A2 ablation).
+pub fn lower(
+    mode: Mode,
+    call: &NeonCall,
+    dst: Option<u32>,
+    ctx: &mut Ctx,
+    union_store_bug: bool,
+) -> Result<Method> {
+    let method = lower_inner(mode, call, dst, ctx, union_store_bug)?;
+    if mode == Mode::Baseline && matches!(method, Method::VectorAttr | Method::ScalarAutovec) {
+        // SIMDe generic functions round-trip operands through the private
+        // union (`to_private`/`from_private`); at -O3 clang removes most of
+        // it but per-call residual stack traffic remains — the source of
+        // the paper's ~1.5x floor on purely arithmetic kernels.
+        ctx.out.push(RStmt::Scalar(ScalarBlock {
+            call: NeonCall { op: call.op, args: vec![] },
+            dst: None,
+            scalar_cost: 1,
+            mem_ops: 1,
+            cost_only: true,
+        }));
+    }
+    Ok(method)
+}
+
+fn lower_inner(
+    mode: Mode,
+    call: &NeonCall,
+    dst: Option<u32>,
+    ctx: &mut Ctx,
+    union_store_bug: bool,
+) -> Result<Method> {
+    ctx.reset_scratch();
+    let cat = call.op.category();
+    match (mode, cat) {
+        (Mode::RvvCustom, Category::Memory) => memory::custom(call, dst, ctx),
+        (Mode::Baseline, Category::Memory) => memory::baseline(call, dst, ctx, union_store_bug),
+        (Mode::RvvCustom, Category::Arith | Category::Pairwise | Category::Saturating) => {
+            if matches!(
+                call.op.family,
+                crate::neon::ops::Family::Qmovn | crate::neon::ops::Family::Qmovun
+            ) {
+                convert::custom(call, dst, ctx)
+            } else {
+                arith::custom(call, dst, ctx)
+            }
+        }
+        (Mode::Baseline, Category::Arith | Category::Pairwise | Category::Saturating) => {
+            // saturating narrows live in the convert rules
+            if matches!(
+                call.op.family,
+                crate::neon::ops::Family::Qmovn | crate::neon::ops::Family::Qmovun
+            ) {
+                convert::baseline(call, dst, ctx)
+            } else {
+                arith::baseline(call, dst, ctx)
+            }
+        }
+        (Mode::RvvCustom, Category::Compare | Category::Bitwise) => cmp_bit::custom(call, dst, ctx),
+        (Mode::Baseline, Category::Compare | Category::Bitwise) => cmp_bit::baseline(call, dst, ctx),
+        (Mode::RvvCustom, Category::Shift) => shift::custom(call, dst, ctx),
+        (Mode::Baseline, Category::Shift) => shift::baseline(call, dst, ctx),
+        (Mode::RvvCustom, Category::Permute) => permute::custom(call, dst, ctx),
+        (Mode::Baseline, Category::Permute) => permute::baseline(call, dst, ctx),
+        (Mode::RvvCustom, Category::Convert | Category::WidenNarrow) => {
+            match call.op.family {
+                // widening multiplies live in the arith rules, narrowing
+                // shifts in the shift rules
+                crate::neon::ops::Family::Mull | crate::neon::ops::Family::Mlal => {
+                    arith::custom(call, dst, ctx)
+                }
+                crate::neon::ops::Family::ShrnN => shift::custom(call, dst, ctx),
+                _ => convert::custom(call, dst, ctx),
+            }
+        }
+        (Mode::Baseline, Category::Convert | Category::WidenNarrow) => {
+            match call.op.family {
+                crate::neon::ops::Family::Mull | crate::neon::ops::Family::Mlal => {
+                    arith::baseline(call, dst, ctx)
+                }
+                crate::neon::ops::Family::ShrnN => shift::baseline(call, dst, ctx),
+                _ => convert::baseline(call, dst, ctx),
+            }
+        }
+        (Mode::RvvCustom, Category::FloatEst) => floatest::custom(call, dst, ctx),
+        (Mode::Baseline, Category::FloatEst) => floatest::baseline(call, dst, ctx),
+        (Mode::RvvCustom, Category::BitManip) => bitmanip::custom(call, dst, ctx),
+        (Mode::Baseline, Category::BitManip) => bitmanip::baseline(call, dst, ctx),
+    }
+}
+
+/// Resolve the saturating-narrow overlap for custom mode too.
+pub fn lower_custom_qmov(call: &NeonCall, dst: Option<u32>, ctx: &mut Ctx) -> Result<Method> {
+    convert::custom(call, dst, ctx)
+}
+
+/// Emit a SIMDe generic scalar-loop fallback (baseline only): reference
+/// semantics + calibrated cost.
+pub(crate) fn scalar_fallback(
+    call: &NeonCall,
+    dst: Option<u32>,
+    per_lane: u64,
+    mem_per_lane: u64,
+    ctx: &mut Ctx,
+) {
+    let lanes = call
+        .op
+        .sig()
+        .ret
+        .map(|r| r.lanes as u64)
+        .unwrap_or_else(|| call.op.vt().lanes as u64);
+    ctx.out.push(RStmt::Scalar(ScalarBlock {
+        call: call.clone(),
+        dst,
+        scalar_cost: costs::SCALAR_SPILL_OVERHEAD + lanes * per_lane,
+        mem_ops: lanes * mem_per_lane,
+        cost_only: false,
+    }));
+}

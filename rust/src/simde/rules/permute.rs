@@ -1,0 +1,268 @@
+//! Permute conversions: `vget_high` -> `vslidedown` (paper Listing 5),
+//! combine/ext via slides, reversals via `vid`+`vxor`+`vrgather`, zips via
+//! the widening-interleave trick, unzips via `vnsrl`, and broadcasts via
+//! `vrgather.vi` / `vmv.v.x`.
+//!
+//! Baseline: SIMDe's generic permutes go through `SIMDE_SHUFFLE_VECTOR_`
+//! (clang shufflevector — lowered to constant-index `vrgather` with an
+//! index load from the constant pool) or, for `vget_high`-style half moves,
+//! `memcpy` from the private union (stack spill + reload).
+
+use anyhow::{bail, Result};
+
+use crate::ir::{Arg, NeonCall};
+use crate::neon::ops::Family;
+use crate::rvv::ops::{Dst, RvvKind, Src};
+use crate::rvv::vtype::Sew;
+use crate::simde::costs;
+use crate::simde::ctx::{op_sew_vl, ret_sew_vl, Ctx};
+use crate::simde::method::Method;
+
+fn vr(ctx: &Ctx, a: &Arg) -> Result<u32> {
+    match a {
+        Arg::V(r) => Ok(ctx.v(*r)),
+        _ => bail!("expected vector register"),
+    }
+}
+
+fn imm(a: &Arg) -> Result<i64> {
+    match a {
+        Arg::Imm(i) => Ok(*i),
+        _ => bail!("expected immediate"),
+    }
+}
+
+pub fn custom(call: &NeonCall, dst: Option<u32>, ctx: &mut Ctx) -> Result<Method> {
+    let op = call.op;
+    let e = op.elem;
+    let d = dst.unwrap();
+    let sew = Sew::of_elem(e);
+    match op.family {
+        Family::GetLow => {
+            let a = vr(ctx, &call.args[0])?;
+            let dl = (64 / e.bits()) as u32;
+            ctx.mov_v(sew, dl, d, a);
+            if d == a {
+                // register already holds the value; a true no-op, but SIMDe
+                // still materialises the d-typed result: count one vmv
+                ctx.op(RvvKind::VmvVV, sew, dl, Dst::V(d), vec![Src::V(a)]);
+            }
+            Ok(Method::CustomDirect)
+        }
+        Family::GetHigh => {
+            // paper Listing 5
+            let a = vr(ctx, &call.args[0])?;
+            let dl = (64 / e.bits()) as u32;
+            ctx.op(RvvKind::Vslidedown, sew, dl, Dst::V(d), vec![Src::V(a), Src::ImmI(dl as i64)]);
+            Ok(Method::CustomCombo)
+        }
+        Family::Combine => {
+            let lo = vr(ctx, &call.args[0])?;
+            let hi = vr(ctx, &call.args[1])?;
+            let dl = (64 / e.bits()) as u32;
+            ctx.mov_v(sew, dl, d, lo);
+            ctx.op(RvvKind::Vslideup, sew, 2 * dl, Dst::V(d), vec![Src::V(hi), Src::ImmI(dl as i64)]);
+            Ok(Method::CustomCombo)
+        }
+        Family::Ext => {
+            let (_, vl) = op_sew_vl(op);
+            let a = vr(ctx, &call.args[0])?;
+            let b = vr(ctx, &call.args[1])?;
+            let n = imm(&call.args[2])?;
+            ctx.op(RvvKind::Vslidedown, sew, vl, Dst::V(d), vec![Src::V(a), Src::ImmI(n)]);
+            if n > 0 {
+                // b[0..n-1] lands in the top n lanes; vslideup leaves the
+                // lanes below the offset undisturbed
+                ctx.op(RvvKind::Vslideup, sew, vl, Dst::V(d), vec![Src::V(b), Src::ImmI(vl as i64 - n)]);
+            }
+            Ok(Method::CustomCombo)
+        }
+        Family::Rev64 | Family::Rev32 | Family::Rev16 => {
+            // reversal within aligned power-of-two groups == index XOR (g-1)
+            let (_, vl) = op_sew_vl(op);
+            let a = vr(ctx, &call.args[0])?;
+            let g = match op.family {
+                Family::Rev64 => 64 / e.bits(),
+                Family::Rev32 => 32 / e.bits(),
+                _ => 16 / e.bits(),
+            } as i64;
+            let idx = ctx.scratch();
+            ctx.op(RvvKind::Vid, sew, vl, Dst::V(idx), vec![]);
+            ctx.op(RvvKind::Vxor, sew, vl, Dst::V(idx), vec![Src::V(idx), Src::ImmI(g - 1)]);
+            ctx.op(RvvKind::Vrgather, sew, vl, Dst::V(d), vec![Src::V(a), Src::V(idx)]);
+            Ok(Method::CustomCombo)
+        }
+        Family::Zip1 | Family::Zip2 => {
+            let (_, vl) = op_sew_vl(op);
+            let mut a = vr(ctx, &call.args[0])?;
+            let mut b = vr(ctx, &call.args[1])?;
+            let half = vl / 2;
+            if op.family == Family::Zip2 {
+                let (ta, tb) = (ctx.scratch(), ctx.scratch());
+                ctx.op(RvvKind::Vslidedown, sew, half, Dst::V(ta), vec![Src::V(a), Src::ImmI(half as i64)]);
+                ctx.op(RvvKind::Vslidedown, sew, half, Dst::V(tb), vec![Src::V(b), Src::ImmI(half as i64)]);
+                a = ta;
+                b = tb;
+            }
+            if sew.bits() >= 64 {
+                // 2-lane vectors: [a0, b0]
+                ctx.mov_v(sew, 1, d, a);
+                if d == a {
+                    ctx.op(RvvKind::VmvVV, sew, 1, Dst::V(d), vec![Src::V(a)]);
+                }
+                ctx.op(RvvKind::Vslideup, sew, 2, Dst::V(d), vec![Src::V(b), Src::ImmI(1)]);
+            } else {
+                // widening interleave (RVV cookbook): t = a + b, then
+                // t += b * (2^sew - 1)  =>  t = a + b * 2^sew — the scalar
+                // multiplier must fit in SEW bits, hence the -1 form
+                let t = ctx.scratch();
+                ctx.op(RvvKind::Vwaddu, sew, half, Dst::V(t), vec![Src::V(a), Src::V(b)]);
+                let mul = (1i64 << sew.bits()) - 1;
+                ctx.op(RvvKind::Vwmaccu, sew, half, Dst::V(t), vec![Src::V(b), Src::ImmI(mul)]);
+                ctx.op(RvvKind::VmvVV, sew, vl, Dst::V(d), vec![Src::V(t)]);
+            }
+            Ok(Method::CustomCombo)
+        }
+        Family::Uzp1 | Family::Uzp2 => {
+            let (_, vl) = op_sew_vl(op);
+            let a = vr(ctx, &call.args[0])?;
+            let b = vr(ctx, &call.args[1])?;
+            let half = vl / 2;
+            if sew.bits() >= 64 {
+                // 2-lane: uzp1 = [a0,b0], uzp2 = [a1,b1]
+                let n = if op.family == Family::Uzp2 { 1 } else { 0 };
+                ctx.op(RvvKind::Vslidedown, sew, 1, Dst::V(d), vec![Src::V(a), Src::ImmI(n)]);
+                let t = ctx.scratch();
+                ctx.op(RvvKind::Vslidedown, sew, 1, Dst::V(t), vec![Src::V(b), Src::ImmI(n)]);
+                ctx.op(RvvKind::Vslideup, sew, 2, Dst::V(d), vec![Src::V(t), Src::ImmI(1)]);
+            } else {
+                // evens/odds of each source via vnsrl, then concatenate
+                let sh = if op.family == Family::Uzp2 { sew.bits() as i64 } else { 0 };
+                let t = ctx.scratch();
+                ctx.op(RvvKind::Vnsrl, sew, half, Dst::V(d), vec![Src::V(a), Src::ImmI(sh)]);
+                ctx.op(RvvKind::Vnsrl, sew, half, Dst::V(t), vec![Src::V(b), Src::ImmI(sh)]);
+                ctx.op(RvvKind::Vslideup, sew, vl, Dst::V(d), vec![Src::V(t), Src::ImmI(half as i64)]);
+            }
+            Ok(Method::CustomCombo)
+        }
+        Family::Trn1 | Family::Trn2 => {
+            // dst[2i] = a[2i+o], dst[2i+1] = b[2i+o]
+            let (_, vl) = op_sew_vl(op);
+            let a = vr(ctx, &call.args[0])?;
+            let b = vr(ctx, &call.args[1])?;
+            let o = if op.family == Family::Trn2 { 1i64 } else { 0 };
+            // idx_a = (vid & ~1) + o ; gather a; idx shifted for b lanes
+            let idx = ctx.scratch();
+            let ga = ctx.scratch();
+            let gb = ctx.scratch();
+            let mk = ctx.mask();
+            ctx.op(RvvKind::Vid, sew, vl, Dst::V(idx), vec![]);
+            // parity mask: odd lanes take b
+            let par = ctx.scratch();
+            ctx.op(RvvKind::Vand, sew, vl, Dst::V(par), vec![Src::V(idx), Src::ImmI(1)]);
+            ctx.op(RvvKind::Vmseq, sew, vl, Dst::M(mk), vec![Src::V(par), Src::ImmI(1)]);
+            // base index = (vid & ~1) + o
+            ctx.op(RvvKind::Vand, sew, vl, Dst::V(idx), vec![Src::V(idx), Src::ImmI(-2)]);
+            if o != 0 {
+                ctx.op(RvvKind::Vadd, sew, vl, Dst::V(idx), vec![Src::V(idx), Src::ImmI(o)]);
+            }
+            ctx.op(RvvKind::Vrgather, sew, vl, Dst::V(ga), vec![Src::V(a), Src::V(idx)]);
+            ctx.op(RvvKind::Vrgather, sew, vl, Dst::V(gb), vec![Src::V(b), Src::V(idx)]);
+            ctx.op(RvvKind::Vmerge, sew, vl, Dst::V(d), vec![Src::V(ga), Src::V(gb), Src::M(mk)]);
+            Ok(Method::CustomCombo)
+        }
+        Family::DupLane => {
+            let (_, vl) = ret_sew_vl(op);
+            let a = vr(ctx, &call.args[0])?;
+            let lane = imm(&call.args[1])?;
+            ctx.op(RvvKind::Vrgather, sew, vl, Dst::V(d), vec![Src::V(a), Src::ImmI(lane)]);
+            Ok(Method::CustomDirect)
+        }
+        Family::DupN => {
+            let (_, vl) = ret_sew_vl(op);
+            match &call.args[0] {
+                Arg::Imm(i) => {
+                    ctx.op(RvvKind::VmvVX, sew, vl, Dst::V(d), vec![Src::ImmI(*i)]);
+                }
+                Arg::ImmF(f) => {
+                    ctx.op(RvvKind::VfmvVF, sew, vl, Dst::V(d), vec![Src::ImmF(*f)]);
+                }
+                Arg::S(r) => {
+                    ctx.op(RvvKind::VmvVX, sew, vl, Dst::V(d), vec![Src::SReg(*r)]);
+                }
+                _ => bail!("vdup_n expects scalar"),
+            }
+            Ok(Method::CustomDirect)
+        }
+        Family::Tbl1 => {
+            // vrgather + zero out-of-table lanes (NEON zeroes idx >= 8)
+            let a = vr(ctx, &call.args[0])?;
+            let idx = vr(ctx, &call.args[1])?;
+            let dl = 8u32;
+            let mk = ctx.mask();
+            let zeros = ctx.scratch();
+            ctx.op(RvvKind::Vrgather, sew, dl, Dst::V(d), vec![Src::V(a), Src::V(idx)]);
+            ctx.op(RvvKind::Vmsgtu, sew, dl, Dst::M(mk), vec![Src::V(idx), Src::ImmI(7)]);
+            ctx.op(RvvKind::VmvVX, sew, dl, Dst::V(zeros), vec![Src::ImmI(0)]);
+            ctx.op(RvvKind::Vmerge, sew, dl, Dst::V(d), vec![Src::V(d), Src::V(zeros), Src::M(mk)]);
+            Ok(Method::CustomCombo)
+        }
+        f => bail!("permute::custom got family {f:?}"),
+    }
+}
+
+pub fn baseline(call: &NeonCall, dst: Option<u32>, ctx: &mut Ctx) -> Result<Method> {
+    let op = call.op;
+    let e = op.elem;
+    let sew = Sew::of_elem(e);
+    match op.family {
+        // memcpy from the union's value array: stack spill + byte reload
+        Family::GetLow | Family::GetHigh | Family::Combine => {
+            let d = dst.unwrap();
+            let dl = (64 / e.bits()) as u32;
+            // modelled as: vse8 (spill) + vle8 (reload at offset); the
+            // values move through memory, so emit the semantic equivalent
+            // (slides) plus the extra memory traffic the union path incurs
+            custom(call, Some(d), ctx)?;
+            ctx.out.push(crate::rvv::program::RStmt::Scalar(crate::rvv::program::ScalarBlock {
+                call: NeonCall { op, args: vec![] },
+                dst: None,
+                scalar_cost: 1, // address of the union member
+                mem_ops: 2,     // spill + reload
+                cost_only: true,
+            }));
+            let _ = dl;
+            Ok(Method::MemUnion)
+        }
+        // clang shufflevector: constant-pool index load + vrgather (+merge
+        // for two-source shuffles)
+        Family::Ext | Family::Zip1 | Family::Zip2 | Family::Uzp1 | Family::Uzp2
+        | Family::Trn1 | Family::Trn2 => {
+            let d = dst.unwrap();
+            let (_, vl) = op_sew_vl(op);
+            // semantics via the custom lowering, plus the baseline's extra
+            // index-vector materialisation and merge overhead
+            custom(call, Some(d), ctx)?;
+            let t = ctx.scratch();
+            ctx.op(RvvKind::Vid, sew, vl, Dst::V(t), vec![]);
+            ctx.op(RvvKind::Vadd, sew, vl, Dst::V(t), vec![Src::V(t), Src::ImmI(1)]);
+            Ok(Method::VectorAttr)
+        }
+        Family::Rev64 | Family::Rev32 | Family::Rev16 => {
+            // single-source constant shuffle: idx load + vrgather
+            let d = dst.unwrap();
+            custom(call, Some(d), ctx)?;
+            Ok(Method::VectorAttr)
+        }
+        Family::DupLane | Family::DupN => {
+            custom(call, dst, ctx)?;
+            Ok(Method::VectorAttr)
+        }
+        // bounds-checked gather loop does not vectorize
+        Family::Tbl1 => {
+            super::scalar_fallback(call, dst, costs::TBL_PER_LANE, costs::SCALAR_MEM_PER_LANE, ctx);
+            Ok(Method::ScalarLoop)
+        }
+        f => bail!("permute::baseline got family {f:?}"),
+    }
+}

@@ -1,0 +1,125 @@
+//! Shift conversions: immediate shifts map 1:1; shift-insert (`vsli`/
+//! `vsri`) combine shift+mask ops; variable signed shifts (`vshl.s*`) need
+//! a positive/negative split.
+
+use anyhow::{bail, Result};
+
+use crate::ir::NeonCall;
+use crate::neon::ops::Family;
+use crate::rvv::ops::{Dst, RvvKind, Src};
+use crate::simde::costs;
+use crate::simde::ctx::{op_sew_vl, ret_sew_vl, Ctx};
+use crate::simde::method::Method;
+
+pub fn custom(call: &NeonCall, dst: Option<u32>, ctx: &mut Ctx) -> Result<Method> {
+    let op = call.op;
+    let e = op.elem;
+    let (sew, vl) = op_sew_vl(op);
+    let d = dst.unwrap();
+    match op.family {
+        Family::ShlN => {
+            let a = ctx.vsrc(&call.args[0]);
+            let n = ctx.vsrc(&call.args[1]);
+            ctx.op(RvvKind::Vsll, sew, vl, Dst::V(d), vec![a, n]);
+            Ok(Method::CustomDirect)
+        }
+        Family::ShrN => {
+            let a = ctx.vsrc(&call.args[0]);
+            let n = ctx.vsrc(&call.args[1]);
+            let kind = if e.is_unsigned() { RvvKind::Vsrl } else { RvvKind::Vsra };
+            ctx.op(kind, sew, vl, Dst::V(d), vec![a, n]);
+            Ok(Method::CustomDirect)
+        }
+        Family::SliN => {
+            // dst = (b << n) | (a & low_n_mask)
+            let a = ctx.vsrc(&call.args[0]);
+            let b = ctx.vsrc(&call.args[1]);
+            let n = match call.args[2] {
+                crate::ir::Arg::Imm(i) => i,
+                _ => bail!("vsli shift must be imm"),
+            };
+            let keep = if n == 0 { 0 } else { (1i64 << n) - 1 };
+            let t = ctx.scratch();
+            ctx.op(RvvKind::Vsll, sew, vl, Dst::V(t), vec![b, Src::ImmI(n)]);
+            ctx.op(RvvKind::Vand, sew, vl, Dst::V(d), vec![a, Src::ImmI(keep)]);
+            ctx.op(RvvKind::Vor, sew, vl, Dst::V(d), vec![Src::V(d), Src::V(t)]);
+            Ok(Method::CustomCombo)
+        }
+        Family::SriN => {
+            // dst = (b >>u n) | (a & high_n_mask)
+            let a = ctx.vsrc(&call.args[0]);
+            let b = ctx.vsrc(&call.args[1]);
+            let n = match call.args[2] {
+                crate::ir::Arg::Imm(i) => i,
+                _ => bail!("vsri shift must be imm"),
+            };
+            let bits = sew.bits() as i64;
+            let mask = e.lane_mask() as i64;
+            let keep_hi = if n == 0 { 0 } else { mask & !(((mask as u64) >> n) as i64) };
+            let _ = bits;
+            let t = ctx.scratch();
+            ctx.op(RvvKind::Vsrl, sew, vl, Dst::V(t), vec![b, Src::ImmI(n)]);
+            ctx.op(RvvKind::Vand, sew, vl, Dst::V(d), vec![a, Src::ImmI(keep_hi)]);
+            ctx.op(RvvKind::Vor, sew, vl, Dst::V(d), vec![Src::V(d), Src::V(t)]);
+            Ok(Method::CustomCombo)
+        }
+        Family::Sshl => {
+            // per-lane signed shift: split positive (left) / negative (right)
+            let a = ctx.vsrc(&call.args[0]);
+            let s = ctx.vsrc(&call.args[1]);
+            let (sl, sneg, sr) = (ctx.scratch(), ctx.scratch(), ctx.scratch());
+            let mk = ctx.mask();
+            ctx.op(RvvKind::Vsll, sew, vl, Dst::V(sl), vec![a.clone(), s.clone()]);
+            ctx.op(RvvKind::Vrsub, sew, vl, Dst::V(sneg), vec![s.clone(), Src::ImmI(0)]);
+            let shr = if e.is_unsigned() { RvvKind::Vsrl } else { RvvKind::Vsra };
+            ctx.op(shr, sew, vl, Dst::V(sr), vec![a, Src::V(sneg)]);
+            ctx.op(RvvKind::Vmslt, sew, vl, Dst::M(mk), vec![s, Src::ImmI(0)]);
+            ctx.op(RvvKind::Vmerge, sew, vl, Dst::V(d), vec![Src::V(sl), Src::V(sr), Src::M(mk)]);
+            Ok(Method::CustomCombo)
+        }
+        Family::ShrnN => {
+            let a = ctx.vsrc(&call.args[0]);
+            let n = ctx.vsrc(&call.args[1]);
+            let (nsew, nvl) = ret_sew_vl(op);
+            let kind = if e.is_unsigned() { RvvKind::Vnsrl } else { RvvKind::Vnsra };
+            ctx.op(kind, nsew, nvl, Dst::V(d), vec![a, n]);
+            Ok(Method::CustomDirect)
+        }
+        f => bail!("shift::custom got family {f:?}"),
+    }
+}
+
+pub fn baseline(call: &NeonCall, dst: Option<u32>, ctx: &mut Ctx) -> Result<Method> {
+    let op = call.op;
+    match op.family {
+        // vector-attribute shifts lower identically
+        Family::ShlN | Family::ShrN => {
+            custom(call, dst, ctx)?;
+            Ok(Method::VectorAttr)
+        }
+        // generic (b<<n)|(a&mask) is also vector-attribute expressible,
+        // clang emits the same 3-op chain plus a spare mask materialise
+        Family::SliN | Family::SriN => {
+            custom(call, dst, ctx)?;
+            // extra constant materialisation clang does not fold
+            let (sew, vl) = op_sew_vl(op);
+            let t = ctx.scratch();
+            ctx.op(RvvKind::VmvVX, sew, vl, Dst::V(t), vec![Src::ImmI(0)]);
+            Ok(Method::VectorAttr)
+        }
+        // branchy per-lane body (negative => right shift) doesn't vectorize
+        Family::Sshl => {
+            super::scalar_fallback(call, dst, costs::SSHL_PER_LANE, costs::SCALAR_MEM_PER_LANE, ctx);
+            Ok(Method::ScalarLoop)
+        }
+        // convertvector truncate + shift
+        Family::ShrnN => {
+            custom(call, dst, ctx)?;
+            let (sew, vl) = ret_sew_vl(op);
+            let t = ctx.scratch();
+            ctx.op(RvvKind::VmvVV, sew, vl, Dst::V(t), vec![Src::V(dst.unwrap())]);
+            Ok(Method::VectorAttr)
+        }
+        f => bail!("shift::baseline got family {f:?}"),
+    }
+}

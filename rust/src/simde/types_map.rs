@@ -1,0 +1,179 @@
+//! The paper's §3.2 type-conversion strategy (Table 2): mapping NEON
+//! fixed-size vector types onto RVV LMUL=1 fixed-vlen types (LLVM D145088),
+//! gated by the hardware `vlen` and the `Zvfh` extension.
+//!
+//! Rules reproduced from the paper:
+//! 1. vlen < 64 — no substitution for NEON 64-bit types;
+//! 2. vlen < 128 — no substitution for NEON 128-bit types;
+//! 3. without Zvfh, f16 vectors cannot be substituted.
+//!
+//! When substitution fails the union's vector-attribute member is used
+//! instead (the generic SIMDe path).
+//!
+//! Note: the paper's printed Table 2 contains obvious typesetting slips
+//! (128-bit integer rows all read `vint8m1_t`); we implement the intended
+//! mapping (`int16x8_t -> vint16m1_t`, etc.) and record the discrepancy in
+//! EXPERIMENTS.md.
+
+use crate::neon::elem::Elem;
+use crate::neon::vreg::VecTy;
+use crate::rvv::vtype::Lmul;
+
+/// A fixed-vlen RVV intrinsic type (LMUL=1 per D145088).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RvvType {
+    pub elem: Elem,
+    pub lmul: Lmul,
+}
+
+impl RvvType {
+    /// C type name, e.g. `vint32m1_t`, `vfloat16m1_t`.
+    pub fn name(self) -> String {
+        let base = match self.elem {
+            Elem::I8 => "int8",
+            Elem::I16 => "int16",
+            Elem::I32 => "int32",
+            Elem::I64 => "int64",
+            Elem::U8 => "uint8",
+            Elem::U16 => "uint16",
+            Elem::U32 => "uint32",
+            Elem::U64 => "uint64",
+            Elem::F16 => "float16",
+            Elem::F32 => "float32",
+            Elem::F64 => "float64",
+            // poly types map onto unsigned carriers
+            Elem::P8 => "uint8",
+            Elem::P16 => "uint16",
+            Elem::P64 => "uint64",
+            Elem::BF16 => "bfloat16",
+        };
+        let m = match self.lmul {
+            Lmul::MF2 => "mf2",
+            Lmul::M1 => "m1",
+            Lmul::M2 => "m2",
+            Lmul::M4 => "m4",
+            Lmul::M8 => "m8",
+        };
+        format!("v{base}{m}_t")
+    }
+}
+
+/// Why a NEON type could not be mapped (the paper's `x` cells).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Unmappable {
+    /// vlen too small for the NEON register width.
+    VlenTooSmall,
+    /// f16 requires the Zvfh extension.
+    NeedsZvfh,
+    /// bf16 has no modelled RVV counterpart (would need Zvfbfmin).
+    NoRvvType,
+}
+
+/// Map a NEON vector type to its RVV LMUL=1 type under a given `vlen` and
+/// extension set — the paper's Table 2 as a function.
+pub fn map_neon_type(vt: VecTy, vlen: u32, zvfh: bool) -> Result<RvvType, Unmappable> {
+    if vt.elem == Elem::BF16 {
+        return Err(Unmappable::NoRvvType);
+    }
+    if vt.elem == Elem::F16 && !zvfh {
+        return Err(Unmappable::NeedsZvfh);
+    }
+    if vlen < vt.bits() {
+        return Err(Unmappable::VlenTooSmall);
+    }
+    Ok(RvvType { elem: vt.elem, lmul: Lmul::M1 })
+}
+
+/// The row set of the paper's Table 2, in print order.
+pub fn table2_rows() -> Vec<VecTy> {
+    let d = [
+        Elem::I8, Elem::I16, Elem::I32, Elem::I64,
+        Elem::U8, Elem::U16, Elem::U32, Elem::U64,
+        Elem::F16, Elem::F32, Elem::F64,
+    ];
+    let mut rows: Vec<VecTy> = d.iter().map(|&e| VecTy::d(e)).collect();
+    rows.extend(d.iter().map(|&e| VecTy::q(e)));
+    rows
+}
+
+/// Render one Table 2 cell: type name or `x`.
+pub fn table2_cell(vt: VecTy, vlen: u32, zvfh: bool) -> String {
+    match map_neon_type(vt, vlen, zvfh) {
+        Ok(t) => t.name(),
+        Err(_) => "x".to_string(),
+    }
+}
+
+/// Size of the SIMDe generic union for a NEON type once the RVV member is
+/// added (§3.2: "the size of the union increases" when vlen > NEON width) —
+/// this is what makes the memcpy-store bug (Listing 4) observable.
+pub fn union_size_bytes(vt: VecTy, vlen: u32, zvfh: bool) -> u32 {
+    let neon = vt.bits() / 8;
+    match map_neon_type(vt, vlen, zvfh) {
+        Ok(_) => neon.max(vlen / 8),
+        Err(_) => neon,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_vlen_128_matches_paper() {
+        // vlen >= 128: every d and q integer/float row maps to m1
+        assert_eq!(table2_cell(VecTy::d(Elem::I8), 128, true), "vint8m1_t");
+        assert_eq!(table2_cell(VecTy::q(Elem::I16), 128, true), "vint16m1_t");
+        assert_eq!(table2_cell(VecTy::q(Elem::U64), 128, true), "vuint64m1_t");
+        assert_eq!(table2_cell(VecTy::q(Elem::F16), 128, true), "vfloat16m1_t");
+        assert_eq!(table2_cell(VecTy::q(Elem::F64), 128, true), "vfloat64m1_t");
+    }
+
+    #[test]
+    fn table2_vlen_64_only_d_types() {
+        // 64 <= vlen < 128: d types map, q types don't
+        assert_eq!(table2_cell(VecTy::d(Elem::I32), 64, true), "vint32m1_t");
+        assert_eq!(table2_cell(VecTy::q(Elem::I32), 64, true), "x");
+        assert_eq!(table2_cell(VecTy::d(Elem::F32), 64, true), "vfloat32m1_t");
+    }
+
+    #[test]
+    fn table2_vlen_32_nothing() {
+        for vt in table2_rows() {
+            assert_eq!(table2_cell(vt, 32, true), "x");
+        }
+    }
+
+    #[test]
+    fn zvfh_gates_f16() {
+        assert_eq!(table2_cell(VecTy::q(Elem::F16), 128, false), "x");
+        assert_eq!(table2_cell(VecTy::d(Elem::F16), 128, false), "x");
+        assert_eq!(table2_cell(VecTy::q(Elem::F16), 128, true), "vfloat16m1_t");
+        // other types unaffected
+        assert_eq!(table2_cell(VecTy::q(Elem::F32), 128, false), "vfloat32m1_t");
+    }
+
+    #[test]
+    fn union_grows_with_vlen() {
+        // the Listing-4 bug precondition: union bigger than the NEON value
+        assert_eq!(union_size_bytes(VecTy::q(Elem::I32), 128, true), 16);
+        assert_eq!(union_size_bytes(VecTy::q(Elem::I32), 256, true), 32);
+        assert_eq!(union_size_bytes(VecTy::d(Elem::I32), 256, true), 32);
+        // unmapped types keep the NEON size
+        assert_eq!(union_size_bytes(VecTy::q(Elem::I32), 64, true), 16);
+    }
+
+    #[test]
+    fn poly_maps_to_unsigned_carrier() {
+        assert_eq!(
+            map_neon_type(VecTy::q(Elem::P8), 128, true).unwrap().name(),
+            "vuint8m1_t"
+        );
+    }
+
+    #[test]
+    fn row_count_matches_paper() {
+        // Table 2 lists 22 rows (11 d + 11 q)
+        assert_eq!(table2_rows().len(), 22);
+    }
+}

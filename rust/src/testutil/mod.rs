@@ -1,0 +1,127 @@
+//! Test utilities: a deterministic PRNG (no `rand` offline) and numeric
+//! comparison helpers used by unit/property tests, the kernel suite's
+//! input generators, and the verification pipeline.
+
+/// xorshift64* PRNG — deterministic, seedable, no dependencies.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Rng {
+        Rng { state: seed.max(1).wrapping_mul(0x9e37_79b9_7f4a_7c15) | 1 }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545_f491_4f6c_dd1d)
+    }
+
+    /// Uniform in [0, n).
+    pub fn below(&mut self, n: u64) -> u64 {
+        self.next_u64() % n.max(1)
+    }
+
+    /// Uniform f32 in [lo, hi).
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        let u = (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32;
+        lo + u * (hi - lo)
+    }
+
+    /// Vector of uniform f32s.
+    pub fn f32s(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    /// Vector of i32s in [lo, hi).
+    pub fn i32s(&mut self, n: usize, lo: i32, hi: i32) -> Vec<i32> {
+        (0..n)
+            .map(|_| lo.wrapping_add((self.below((hi - lo) as u64)) as i32))
+            .collect()
+    }
+
+    /// Raw lane values for an element type (full bit range).
+    pub fn lanes(&mut self, n: usize, bits: u32) -> Vec<u64> {
+        let mask = if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 };
+        (0..n).map(|_| self.next_u64() & mask).collect()
+    }
+}
+
+/// Maximum absolute difference between two f32 slices.
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len(), "length mismatch {} vs {}", a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| {
+            if x.is_nan() && y.is_nan() {
+                0.0
+            } else {
+                (x - y).abs()
+            }
+        })
+        .fold(0.0f32, f32::max)
+}
+
+/// Maximum relative difference (with absolute floor).
+pub fn max_rel_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| {
+            if x.is_nan() && y.is_nan() {
+                return 0.0;
+            }
+            let d = (x - y).abs();
+            let m = x.abs().max(y.abs()).max(1e-6);
+            d / m
+        })
+        .fold(0.0f32, f32::max)
+}
+
+/// Panic with a useful message if slices differ beyond `tol` (absolute).
+pub fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    let d = max_abs_diff(a, b);
+    assert!(
+        d <= tol,
+        "{what}: max abs diff {d} > tol {tol} (first few: {:?} vs {:?})",
+        &a[..a.len().min(8)],
+        &b[..b.len().min(8)]
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn rng_ranges() {
+        let mut r = Rng::new(7);
+        for _ in 0..1000 {
+            let v = r.f32_in(-2.0, 3.0);
+            assert!((-2.0..3.0).contains(&v));
+            let i = r.below(17);
+            assert!(i < 17);
+        }
+    }
+
+    #[test]
+    fn diff_helpers() {
+        assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.0, 2.5]), 0.5);
+        assert!(max_rel_diff(&[100.0], &[101.0]) < 0.011);
+        assert_eq!(max_abs_diff(&[f32::NAN], &[f32::NAN]), 0.0);
+    }
+}

@@ -1,0 +1,69 @@
+//! Integration over the PJRT runtime: load the AOT artifacts and verify
+//! the whole kernel suite against the JAX/XLA oracle (the three-layer
+//! composition test). Skips with a notice when `make artifacts` has not
+//! been run.
+
+use std::path::Path;
+
+use simde_rvv::coordinator::verify_kernel;
+use simde_rvv::kernels;
+use simde_rvv::runtime::GoldenOracle;
+
+fn oracle() -> Option<GoldenOracle> {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping golden-oracle tests: run `make artifacts` first");
+        return None;
+    }
+    Some(GoldenOracle::load(dir).expect("loading artifacts"))
+}
+
+#[test]
+fn oracle_covers_the_full_suite() {
+    let Some(o) = oracle() else { return };
+    let mut ops = o.ops();
+    ops.sort();
+    let mut want: Vec<&str> = kernels::NAMES.to_vec();
+    want.sort();
+    assert_eq!(ops, want);
+    assert_eq!(o.platform(), "cpu");
+}
+
+#[test]
+fn manifest_matches_kernel_buffers() {
+    let Some(o) = oracle() else { return };
+    for case in kernels::suite() {
+        let entry = o.manifest(case.name).expect(case.name);
+        let n_inputs = case
+            .prog
+            .bufs
+            .iter()
+            .filter(|b| b.kind == simde_rvv::ir::BufKind::Input)
+            .count();
+        let n_outputs = case
+            .prog
+            .bufs
+            .iter()
+            .filter(|b| b.kind == simde_rvv::ir::BufKind::Output)
+            .count();
+        assert_eq!(entry.inputs.len(), n_inputs, "{} inputs", case.name);
+        assert_eq!(entry.outputs.len(), n_outputs, "{} outputs", case.name);
+        // element counts line up with the rust buffers
+        for ((_, dims), decl) in entry.inputs.iter().zip(
+            case.prog.bufs.iter().filter(|b| b.kind == simde_rvv::ir::BufKind::Input),
+        ) {
+            let n: i64 = dims.iter().product();
+            assert_eq!(n as usize, decl.len, "{} input {}", case.name, decl.name);
+        }
+    }
+}
+
+#[test]
+fn full_suite_verifies_against_xla() {
+    let Some(o) = oracle() else { return };
+    for case in kernels::suite() {
+        let outcome = verify_kernel(&case, 128, Some(&o)).expect(case.name);
+        assert!(outcome.passed, "{} failed: {:?}", case.name, outcome);
+        assert!(!outcome.vs_golden.is_empty(), "{} had no golden comparison", case.name);
+    }
+}

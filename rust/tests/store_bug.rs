@@ -1,0 +1,103 @@
+//! Failure injection — the paper's Listing 4 union-store bug.
+//!
+//! Under partial conversion, SIMDe's generic store does
+//! `memcpy(ptr, &union, sizeof(union))`; once the RVV member makes the
+//! union larger than the NEON value (vlen > 128), the store writes past
+//! the intended 16 bytes. The paper's fix is the customized `vse32`
+//! with the exact element count ("Ensure that we save the correct number
+//! of elements into memory").
+
+use simde_rvv::ir::{AddrExpr, Arg, ProgramBuilder};
+use simde_rvv::neon::elem::Elem;
+use simde_rvv::neon::interp::{Buffer, Inputs};
+use simde_rvv::neon::ops::Family;
+use simde_rvv::rvv::machine::RvvConfig;
+use simde_rvv::sim::Simulator;
+use simde_rvv::simde::{Mode, Translator};
+
+/// Two adjacent 4-element stores into one 12-element output buffer (the
+/// slack keeps the oversized store in-bounds so the *corruption* — not a
+/// fault — is observable).
+fn two_store_program() -> simde_rvv::ir::Program {
+    let mut b = ProgramBuilder::new("adjacent_stores");
+    let x = b.input("X", Elem::I32, 8);
+    let o = b.output("O", Elem::I32, 12);
+    let lo = b.vop(Family::Ld1, Elem::I32, true, vec![Arg::mem(x, AddrExpr::k(0))]);
+    let hi = b.vop(Family::Ld1, Elem::I32, true, vec![Arg::mem(x, AddrExpr::k(4))]);
+    // store the *high* half first, then the low half: a 32-byte buggy
+    // store of the low half would overwrite the high half's result
+    b.vstore(Family::St1, Elem::I32, true, vec![Arg::mem(o, AddrExpr::k(4)), Arg::V(hi)]);
+    b.vstore(Family::St1, Elem::I32, true, vec![Arg::mem(o, AddrExpr::k(0)), Arg::V(lo)]);
+    b.finish()
+}
+
+fn inputs() -> Inputs {
+    let mut i = Inputs::new();
+    i.insert("X".into(), Buffer::from_i32s(&[1, 2, 3, 4, 5, 6, 7, 8]));
+    i
+}
+
+#[test]
+fn buggy_store_corrupts_adjacent_memory_at_vlen_256() {
+    let cfg = RvvConfig::new(256);
+    let prog = two_store_program();
+
+    // correct baseline: both halves intact
+    let (rp, _) = Translator::new(Mode::Baseline, cfg).translate(&prog).unwrap();
+    let (out, _) = Simulator::new(&rp, cfg, &inputs()).unwrap().run().unwrap();
+    assert_eq!(out["O"].as_i32s()[..8], [1, 2, 3, 4, 5, 6, 7, 8]);
+
+    // injected Listing-4 bug: memcpy(sizeof(union)) = 32 bytes
+    let tr = Translator::new(Mode::Baseline, cfg).with_union_store_bug(true);
+    let (rp, _) = tr.translate(&prog).unwrap();
+    let (out, _) = Simulator::new(&rp, cfg, &inputs()).unwrap().run().unwrap();
+    let got = out["O"].as_i32s();
+    assert_eq!(got[..4], [1, 2, 3, 4], "low half must still be written");
+    assert_ne!(
+        got[4..],
+        [5, 6, 7, 8],
+        "the oversized store must clobber the adjacent elements"
+    );
+}
+
+#[test]
+fn buggy_store_is_harmless_at_vlen_128() {
+    // union size == NEON size at vlen=128: the bug is latent
+    let cfg = RvvConfig::new(128);
+    let prog = two_store_program();
+    let tr = Translator::new(Mode::Baseline, cfg).with_union_store_bug(true);
+    let (rp, _) = tr.translate(&prog).unwrap();
+    let (out, _) = Simulator::new(&rp, cfg, &inputs()).unwrap().run().unwrap();
+    assert_eq!(out["O"].as_i32s()[..8], [1, 2, 3, 4, 5, 6, 7, 8]);
+}
+
+#[test]
+fn custom_store_is_exact_at_any_vlen() {
+    // the paper's fix: vse32 with the exact element count
+    for vlen in [128, 256, 512] {
+        let cfg = RvvConfig::new(vlen);
+        let prog = two_store_program();
+        let (rp, _) = Translator::new(Mode::RvvCustom, cfg).translate(&prog).unwrap();
+        let (out, _) = Simulator::new(&rp, cfg, &inputs()).unwrap().run().unwrap();
+        assert_eq!(out["O"].as_i32s()[..8], [1, 2, 3, 4, 5, 6, 7, 8], "vlen={vlen}");
+    }
+}
+
+#[test]
+fn buggy_store_at_buffer_end_faults() {
+    // when the oversized store runs past the buffer, the simulator traps
+    let cfg = RvvConfig::new(256);
+    let mut b = ProgramBuilder::new("end_store");
+    let x = b.input("X", Elem::I32, 4);
+    let o = b.output("O", Elem::I32, 4); // exactly 16 bytes
+    let v = b.vop(Family::Ld1, Elem::I32, true, vec![Arg::mem(x, AddrExpr::k(0))]);
+    b.vstore(Family::St1, Elem::I32, true, vec![Arg::mem(o, AddrExpr::k(0)), Arg::V(v)]);
+    let prog = b.finish();
+    let mut inputs = Inputs::new();
+    inputs.insert("X".into(), Buffer::from_i32s(&[1, 2, 3, 4]));
+
+    let tr = Translator::new(Mode::Baseline, cfg).with_union_store_bug(true);
+    let (rp, _) = tr.translate(&prog).unwrap();
+    let r = Simulator::new(&rp, cfg, &inputs).unwrap().run();
+    assert!(r.is_err(), "32-byte store into a 16-byte buffer must fault");
+}
