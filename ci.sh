@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# CI gate for the simde-rvv reproduction: release build, tests, lints.
+# Run from the repository root.
+set -euo pipefail
+cd "$(dirname "$0")/rust"
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== cargo clippy -- -D warnings =="
+cargo clippy -- -D warnings
+
+echo "CI OK"

@@ -1,0 +1,118 @@
+//! Tiny JSON emission layer (serde is unavailable offline): just enough
+//! to write flat machine-readable benchmark records like `BENCH_6.json`.
+//!
+//! Values are built with the [`Obj`] builder and composed with [`array`];
+//! everything is a `String`, no intermediate tree.
+
+/// Escape a string for inclusion in a JSON string literal.
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Builder for one JSON object, field order preserved.
+#[derive(Debug, Default)]
+pub struct Obj {
+    fields: Vec<(String, String)>,
+}
+
+impl Obj {
+    pub fn new() -> Obj {
+        Obj::default()
+    }
+
+    /// Add a raw, already-serialised JSON value (object, array, literal).
+    pub fn raw(mut self, key: &str, value: impl Into<String>) -> Obj {
+        self.fields.push((key.to_string(), value.into()));
+        self
+    }
+
+    pub fn str(self, key: &str, value: &str) -> Obj {
+        let v = format!("\"{}\"", escape(value));
+        self.raw(key, v)
+    }
+
+    pub fn u64(self, key: &str, value: u64) -> Obj {
+        self.raw(key, value.to_string())
+    }
+
+    /// Finite floats serialise as numbers; NaN/inf (not representable in
+    /// JSON) as `null`.
+    pub fn f64(self, key: &str, value: f64) -> Obj {
+        let v = if value.is_finite() { format!("{value}") } else { "null".to_string() };
+        self.raw(key, v)
+    }
+
+    pub fn bool(self, key: &str, value: bool) -> Obj {
+        self.raw(key, if value { "true" } else { "false" })
+    }
+
+    /// Serialise to a single-line JSON object.
+    pub fn finish(self) -> String {
+        let mut out = String::from("{");
+        for (i, (k, v)) in self.fields.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            out.push_str(&format!("\"{}\": {}", escape(k), v));
+        }
+        out.push('}');
+        out
+    }
+}
+
+/// Serialise pre-rendered JSON values as an array, one element per line
+/// (diff-friendly for committed artifacts).
+pub fn array<I>(items: I) -> String
+where
+    I: IntoIterator,
+    I::Item: AsRef<str>,
+{
+    let items: Vec<String> = items.into_iter().map(|s| s.as_ref().to_string()).collect();
+    if items.is_empty() {
+        return "[]".to_string();
+    }
+    format!("[\n  {}\n]", items.join(",\n  "))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_flat_records() {
+        let row = Obj::new()
+            .str("kernel", "gemm")
+            .str("mode", "baseline")
+            .u64("vlen", 512)
+            .u64("wall_ns", 12345)
+            .f64("speedup", 3.5)
+            .bool("placeholder", false)
+            .finish();
+        assert_eq!(
+            row,
+            "{\"kernel\": \"gemm\", \"mode\": \"baseline\", \"vlen\": 512, \
+             \"wall_ns\": 12345, \"speedup\": 3.5, \"placeholder\": false}"
+        );
+    }
+
+    #[test]
+    fn escapes_and_non_finite() {
+        assert_eq!(escape("a\"b\\c\n"), "a\\\"b\\\\c\\n");
+        let o = Obj::new().f64("x", f64::NAN).finish();
+        assert_eq!(o, "{\"x\": null}");
+        assert_eq!(array(Vec::<String>::new()), "[]");
+        assert_eq!(array(["1", "2"]), "[\n  1,\n  2\n]");
+    }
+}

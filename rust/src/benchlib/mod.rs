@@ -1,6 +1,9 @@
 //! Minimal benchmark harness (criterion is unavailable offline): warmup +
 //! timed iterations with mean/median/min reporting, used by the
-//! `harness = false` bench targets.
+//! `harness = false` bench targets. The [`json`] submodule emits
+//! machine-readable result files (e.g. `BENCH_6.json`) without serde.
+
+pub mod json;
 
 use std::time::{Duration, Instant};
 

@@ -3,21 +3,45 @@
 //! (std::thread — the work is CPU-bound simulation, no async needed),
 //! verifies translated outputs against the NEON interpretation and the
 //! JAX/XLA golden oracle, and aggregates the Figure 2 rows.
+//!
+//! # Translation + decode cache
+//!
+//! Translating a kernel and decoding it for the pre-decoded engine is a
+//! pure function of `(kernel, mode, vlen)` for the suite's default shapes
+//! (the only shapes reachable through [`kernels::by_name`]). The
+//! coordinator therefore memoises the `(RvvProgram, DecodedProgram)` pair
+//! in a process-wide [`TranslationCache`] of `Arc`-shared
+//! [`CachedProgram`]s: `run_matrix`, `figure2`, and the vlen-sweep benches
+//! translate each program once and every subsequent job — from any worker
+//! thread — reuses the decoded artifact. Custom-shaped cases (e.g.
+//! `kernels::suite_small()`) bypass the cache by construction, since the
+//! cache key is the kernel *name* and their programs differ from the
+//! default shapes.
+//!
+//! # Engines
+//!
+//! Jobs default to the pre-decoded lane-batched [`Engine`]; the
+//! tree-walking [`Simulator`] remains available through
+//! [`EngineKind::Interp`] as the differential-testing oracle and the
+//! pre-PR baseline for `benches/sim_throughput.rs`. Both produce
+//! bit-identical buffers and equal [`SimStats`] (see the `sim` module
+//! docs).
 
 mod verify;
 
 pub use verify::{verify_kernel, VerifyOutcome};
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::kernels::{self, KernelCase};
 use crate::rvv::machine::RvvConfig;
-use crate::sim::{SimStats, Simulator};
+use crate::rvv::program::RvvProgram;
+use crate::sim::{decode, DecodedProgram, Engine, SimStats, Simulator};
 use crate::simde::{Mode, Translator};
 
 /// One unit of work.
@@ -28,6 +52,15 @@ pub struct Job {
     pub vlen: u32,
 }
 
+/// Which execution engine a job runs on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Tree-walking interpreter (`sim::Simulator`) — the reference.
+    Interp,
+    /// Pre-decoded lane-batched engine (`sim::Engine`) — the default.
+    Decoded,
+}
+
 /// Result of one simulated job.
 #[derive(Debug, Clone)]
 pub struct JobResult {
@@ -36,24 +69,99 @@ pub struct JobResult {
     pub wall: Duration,
 }
 
-/// Run one job (translate + simulate).
-pub fn run_job(job: &Job) -> Result<JobResult> {
-    let case = kernels::by_name(job.kernel)
-        .with_context(|| format!("unknown kernel '{}'", job.kernel))?;
-    run_job_on(&case, job)
+/// A translated + decoded program, shared across jobs via `Arc`.
+#[derive(Debug)]
+pub struct CachedProgram {
+    pub rvv: RvvProgram,
+    pub decoded: DecodedProgram,
 }
 
-fn run_job_on(case: &KernelCase, job: &Job) -> Result<JobResult> {
+/// Process-wide memo of translation + decode results keyed on
+/// (kernel, mode, vlen). Valid only for the suite's default shapes —
+/// the `by_name` path — because the key carries no shape information.
+#[derive(Default)]
+pub struct TranslationCache {
+    map: Mutex<HashMap<(&'static str, Mode, u32), Arc<CachedProgram>>>,
+}
+
+impl TranslationCache {
+    /// Fetch the decoded program for `job`, translating + decoding on
+    /// first use. Concurrent misses on the same key may translate twice;
+    /// the first insert wins and the duplicate is dropped (translation is
+    /// pure, so either result is interchangeable).
+    pub fn get_or_translate(&self, case: &KernelCase, job: &Job) -> Result<Arc<CachedProgram>> {
+        let key = (job.kernel, job.mode, job.vlen);
+        if let Some(hit) = self.map.lock().unwrap().get(&key) {
+            return Ok(Arc::clone(hit));
+        }
+        let cfg = RvvConfig::new(job.vlen);
+        let (rvv, _) = Translator::new(job.mode, cfg).translate(&case.prog)?;
+        let decoded = decode(&rvv);
+        let entry = Arc::new(CachedProgram { rvv, decoded });
+        let mut map = self.map.lock().unwrap();
+        Ok(Arc::clone(map.entry(key).or_insert(entry)))
+    }
+
+    /// Number of cached programs (for tests/benches).
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// The shared process-wide cache used by `run_job` and the worker pool.
+pub fn translation_cache() -> &'static TranslationCache {
+    static CACHE: OnceLock<TranslationCache> = OnceLock::new();
+    CACHE.get_or_init(TranslationCache::default)
+}
+
+/// Run one job on the default (pre-decoded) engine, via the shared cache.
+pub fn run_job(job: &Job) -> Result<JobResult> {
+    run_job_engine(job, EngineKind::Decoded)
+}
+
+/// Run one job on an explicit engine. `Interp` translates from scratch
+/// every time (the pre-PR behaviour); `Decoded` goes through the shared
+/// translation cache.
+pub fn run_job_engine(job: &Job, engine: EngineKind) -> Result<JobResult> {
+    let case = kernels::by_name(job.kernel)
+        .with_context(|| format!("unknown kernel '{}'", job.kernel))?;
     let cfg = RvvConfig::new(job.vlen);
     let t0 = Instant::now();
-    let tr = Translator::new(job.mode, cfg);
-    let (rp, _) = tr.translate(&case.prog)?;
-    let (_, stats) = Simulator::new(&rp, cfg, &case.inputs)?.run()?;
+    let stats = match engine {
+        EngineKind::Interp => {
+            let (rp, _) = Translator::new(job.mode, cfg).translate(&case.prog)?;
+            let (_, stats) = Simulator::new(&rp, cfg, &case.inputs)?.run()?;
+            stats
+        }
+        EngineKind::Decoded => {
+            let cached = translation_cache().get_or_translate(&case, job)?;
+            let (_, stats) = Engine::new(&cached.rvv, &cached.decoded, cfg, &case.inputs)?.run()?;
+            stats
+        }
+    };
     Ok(JobResult { job: job.clone(), stats, wall: t0.elapsed() })
 }
 
 /// Run a job list across `threads` workers; results in input order.
 pub fn run_matrix(jobs: Vec<Job>, threads: usize) -> Result<Vec<JobResult>> {
+    run_matrix_engine(jobs, threads, EngineKind::Decoded)
+}
+
+/// `run_matrix` with an explicit engine choice.
+///
+/// On a failed job the queue is drained (no new work is handed out), the
+/// remaining in-flight results are received, and every worker is joined
+/// *before* the first error propagates — an early return here used to
+/// leave detached workers still executing against a dropped receiver.
+pub fn run_matrix_engine(
+    jobs: Vec<Job>,
+    threads: usize,
+    engine: EngineKind,
+) -> Result<Vec<JobResult>> {
     let n = jobs.len();
     let queue: Arc<Mutex<VecDeque<(usize, Job)>>> =
         Arc::new(Mutex::new(jobs.into_iter().enumerate().collect()));
@@ -67,7 +175,7 @@ pub fn run_matrix(jobs: Vec<Job>, threads: usize) -> Result<Vec<JobResult>> {
                 let next = queue.lock().unwrap().pop_front();
                 match next {
                     Some((idx, job)) => {
-                        let r = run_job(&job);
+                        let r = run_job_engine(&job, engine);
                         if tx.send((idx, r)).is_err() {
                             return;
                         }
@@ -80,11 +188,25 @@ pub fn run_matrix(jobs: Vec<Job>, threads: usize) -> Result<Vec<JobResult>> {
     drop(tx);
 
     let mut slots: Vec<Option<JobResult>> = (0..n).map(|_| None).collect();
+    let mut first_err: Option<anyhow::Error> = None;
     for (idx, r) in rx {
-        slots[idx] = Some(r?);
+        match r {
+            Ok(jr) => slots[idx] = Some(jr),
+            Err(e) => {
+                if first_err.is_none() {
+                    // stop handing out work; keep draining so workers can
+                    // finish their in-flight jobs and exit
+                    queue.lock().unwrap().clear();
+                    first_err = Some(e);
+                }
+            }
+        }
     }
     for w in workers {
         w.join().expect("worker panicked");
+    }
+    if let Some(e) = first_err {
+        return Err(e);
     }
     Ok(slots.into_iter().map(|s| s.expect("missing result")).collect())
 }
@@ -98,14 +220,25 @@ pub struct Fig2Row {
     pub speedup: f64,
 }
 
-/// Compute the Figure 2 table at a given vlen across the worker pool.
-pub fn figure2(vlen: u32, threads: usize) -> Result<Vec<Fig2Row>> {
+/// The (kernel × mode) job list behind the Figure 2 table at one vlen.
+pub fn figure2_jobs(vlen: u32) -> Vec<Job> {
     let mut jobs = Vec::new();
     for name in kernels::NAMES {
         jobs.push(Job { kernel: name, mode: Mode::Baseline, vlen });
         jobs.push(Job { kernel: name, mode: Mode::RvvCustom, vlen });
     }
-    let results = run_matrix(jobs, threads)?;
+    jobs
+}
+
+/// Compute the Figure 2 table at a given vlen across the worker pool.
+pub fn figure2(vlen: u32, threads: usize) -> Result<Vec<Fig2Row>> {
+    figure2_with(vlen, threads, EngineKind::Decoded)
+}
+
+/// `figure2` with an explicit engine choice (used by the throughput bench
+/// to compare engines on identical work).
+pub fn figure2_with(vlen: u32, threads: usize, engine: EngineKind) -> Result<Vec<Fig2Row>> {
+    let results = run_matrix_engine(figure2_jobs(vlen), threads, engine)?;
     let rows = results
         .chunks(2)
         .map(|pair| {
@@ -145,5 +278,32 @@ mod tests {
     fn unknown_kernel_is_an_error() {
         let jobs = vec![Job { kernel: "nope", mode: Mode::Baseline, vlen: 128 }];
         assert!(run_matrix(jobs, 1).is_err());
+    }
+
+    #[test]
+    fn failed_job_still_joins_workers_and_reports_first_error() {
+        // one bad job sandwiched between good ones, more jobs than threads
+        // so the queue-drain path is exercised
+        let mut jobs = vec![
+            Job { kernel: "vrelu", mode: Mode::RvvCustom, vlen: 128 },
+            Job { kernel: "nope", mode: Mode::Baseline, vlen: 128 },
+        ];
+        for _ in 0..6 {
+            jobs.push(Job { kernel: "vsqrt", mode: Mode::RvvCustom, vlen: 128 });
+        }
+        let err = run_matrix(jobs, 2).unwrap_err();
+        assert!(err.to_string().contains("nope"), "unexpected error: {err:#}");
+    }
+
+    #[test]
+    fn engines_agree_and_cache_fills() {
+        let job = Job { kernel: "vrelu", mode: Mode::RvvCustom, vlen: 128 };
+        let a = run_job_engine(&job, EngineKind::Interp).unwrap();
+        let b = run_job_engine(&job, EngineKind::Decoded).unwrap();
+        assert_eq!(a.stats, b.stats);
+        // second decoded run hits the cache and still agrees
+        let c = run_job_engine(&job, EngineKind::Decoded).unwrap();
+        assert_eq!(b.stats, c.stats);
+        assert!(!translation_cache().is_empty());
     }
 }

@@ -90,6 +90,68 @@ impl RvvMachine {
         (0..vl).map(|i| self.read_lane(reg, sew, i)).collect()
     }
 
+    /// Batched lane read: copy `vl` lanes of `reg` at `sew` into `out`
+    /// (cleared first) as zero-extended raw values. One pass over the
+    /// contiguous register bytes instead of `vl` `read_lane` round-trips —
+    /// the gather half of the lane-batched execution engine.
+    pub fn read_lanes_into(&self, reg: u32, sew: Sew, vl: u32, out: &mut Vec<u64>) {
+        let data = &self.vregs[reg as usize];
+        let n = vl as usize;
+        debug_assert!(n * sew.bytes() as usize <= data.len(), "vl {vl} at {sew:?} exceeds VLEN");
+        out.clear();
+        match sew {
+            Sew::E8 => out.extend(data[..n].iter().map(|&b| b as u64)),
+            Sew::E16 => out.extend(
+                data.chunks_exact(2).take(n).map(|c| u16::from_le_bytes([c[0], c[1]]) as u64),
+            ),
+            Sew::E32 => out.extend(
+                data.chunks_exact(4)
+                    .take(n)
+                    .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]) as u64),
+            ),
+            Sew::E64 => out.extend(
+                data.chunks_exact(8)
+                    .take(n)
+                    .map(|c| u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]])),
+            ),
+        }
+    }
+
+    /// Batched lane write: scatter `vals` into the low lanes of `reg` at
+    /// `sew` (lane `i` = `vals[i]`, truncated to the lane width). The
+    /// scatter half of the lane-batched execution engine.
+    pub fn write_lanes_from(&mut self, reg: u32, sew: Sew, vals: &[u64]) {
+        let data = &mut self.vregs[reg as usize];
+        debug_assert!(vals.len() * sew.bytes() as usize <= data.len());
+        match sew {
+            Sew::E8 => {
+                for (c, &v) in data.iter_mut().zip(vals) {
+                    *c = v as u8;
+                }
+            }
+            Sew::E16 => {
+                for (c, &v) in data.chunks_exact_mut(2).zip(vals) {
+                    c.copy_from_slice(&(v as u16).to_le_bytes());
+                }
+            }
+            Sew::E32 => {
+                for (c, &v) in data.chunks_exact_mut(4).zip(vals) {
+                    c.copy_from_slice(&(v as u32).to_le_bytes());
+                }
+            }
+            Sew::E64 => {
+                for (c, &v) in data.chunks_exact_mut(8).zip(vals) {
+                    c.copy_from_slice(&v.to_le_bytes());
+                }
+            }
+        }
+    }
+
+    /// The first `vl` bits of a mask register as a bool slice.
+    pub fn mask_bits(&self, reg: u32, vl: u32) -> &[bool] {
+        &self.masks[reg as usize][..vl as usize]
+    }
+
     /// Raw bytes of a vreg (for reinterpret-style moves).
     pub fn reg_bytes(&self, reg: u32) -> &[u8] {
         &self.vregs[reg as usize]
@@ -218,6 +280,31 @@ mod tests {
         assert_eq!(m.bufs[0].as_i32s(), vec![1, -1, 42, 4]);
         assert!(m.load_at(0, 16, Sew::E32).is_err());
         assert!(m.load_at(0, -1, Sew::E8).is_err());
+    }
+
+    #[test]
+    fn batched_lane_access_matches_scalar() {
+        let cfg = RvvConfig::new(128);
+        let mut m = RvvMachine::new(cfg, 2, 0, 0, vec![]);
+        for sew in [Sew::E8, Sew::E16, Sew::E32, Sew::E64] {
+            let vl = 128 / sew.bits();
+            let vals: Vec<u64> =
+                (0..vl as u64).map(|i| (i.wrapping_mul(0x9e37_79b9_7f4a_7c15)) & sew_mask(sew)).collect();
+            m.write_lanes_from(0, sew, &vals);
+            for (i, &v) in vals.iter().enumerate() {
+                assert_eq!(m.read_lane(0, sew, i as u32), v, "{sew:?} lane {i}");
+            }
+            let mut got = Vec::new();
+            m.read_lanes_into(0, sew, vl, &mut got);
+            assert_eq!(got, vals, "{sew:?} batched read");
+        }
+    }
+
+    fn sew_mask(sew: Sew) -> u64 {
+        match sew.bits() {
+            64 => u64::MAX,
+            b => (1u64 << b) - 1,
+        }
     }
 
     #[test]

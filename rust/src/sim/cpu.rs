@@ -9,17 +9,15 @@
 
 use std::collections::HashMap;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 
-use crate::ir::{Arg, BufKind};
+use crate::ir::BufKind;
 use crate::neon::interp::{Buffer, Inputs};
-use crate::neon::ops::Family;
-use crate::neon::semantics::{eval_pure, Value};
-use crate::neon::vreg::VReg;
 use crate::rvv::exec::exec;
 use crate::rvv::machine::{RvvConfig, RvvMachine};
-use crate::rvv::program::{RStmt, RvvProgram, ScalarBlock};
+use crate::rvv::program::{RStmt, RvvProgram};
 use crate::rvv::vtype::Sew;
+use super::scalar::exec_scalar_block;
 use super::stats::{SimStats, LOOP_OVERHEAD};
 
 /// Simulator over one program execution.
@@ -99,144 +97,12 @@ impl<'p> Simulator<'p> {
                         i += step;
                     }
                 }
-                RStmt::Scalar(b) => self.exec_scalar_block(b)?,
+                RStmt::Scalar(b) => {
+                    exec_scalar_block(&mut self.m, &self.prog.bufs, &mut self.stats, b)?
+                }
             }
         }
         Ok(())
-    }
-
-    /// Execute a SIMDe generic-path scalar fallback: numerics via the
-    /// reference NEON semantics over the values in the RVV registers,
-    /// cost from the calibrated model (see `rvv::program::ScalarBlock`).
-    fn exec_scalar_block(&mut self, b: &ScalarBlock) -> Result<()> {
-        let op = b.call.op;
-        self.stats.scalar_ops += b.scalar_cost;
-        self.stats.scalar_mem += b.mem_ops;
-        // note: scalar code does not alter vtype — no vsetvli churn here;
-        // the churn comes from the baseline's e8 memcpy traffic
-        if b.cost_only {
-            return Ok(());
-        }
-
-        match op.family {
-            Family::Ld1 | Family::Ld1Dup => {
-                let (buf, idx) = self.resolve_mem(&b.call.args[0])?;
-                let vt = op.vt();
-                let dst = b.dst.context("scalar load without dst")?;
-                let decl = &self.prog.bufs[buf as usize];
-                let sew = Sew::of_bits(decl.elem.bits());
-                for lane in 0..vt.lanes as u32 {
-                    let off = if op.family == Family::Ld1Dup {
-                        idx * decl.elem.bytes() as i64
-                    } else {
-                        (idx + lane as i64) * decl.elem.bytes() as i64
-                    };
-                    let raw = self.m.load_at(buf, off, sew)?;
-                    self.m.write_lane(dst, Sew::of_bits(vt.elem.bits()), lane, raw);
-                }
-                Ok(())
-            }
-            Family::St1 => {
-                let (buf, idx) = self.resolve_mem(&b.call.args[0])?;
-                let src = match b.call.args[1] {
-                    Arg::V(r) => r,
-                    _ => bail!("st1 src must be a vreg"),
-                };
-                let vt = op.vt();
-                let decl = &self.prog.bufs[buf as usize];
-                let sew = Sew::of_bits(decl.elem.bits());
-                for lane in 0..vt.lanes as u32 {
-                    let raw = self.m.read_lane(src, Sew::of_bits(vt.elem.bits()), lane);
-                    self.m
-                        .store_at(buf, (idx + lane as i64) * decl.elem.bytes() as i64, sew, raw)?;
-                }
-                Ok(())
-            }
-            Family::Ld1Lane => {
-                let (buf, idx) = self.resolve_mem(&b.call.args[0])?;
-                let src = match b.call.args[1] {
-                    Arg::V(r) => r,
-                    _ => bail!("ld1_lane src must be a vreg"),
-                };
-                let lane = match b.call.args[2] {
-                    Arg::Imm(i) => i as u32,
-                    _ => bail!("ld1_lane lane must be imm"),
-                };
-                let vt = op.vt();
-                let dst = b.dst.context("ld1_lane without dst")?;
-                let sew = Sew::of_bits(vt.elem.bits());
-                // copy the source vector, then overwrite one lane
-                for l in 0..vt.lanes as u32 {
-                    let raw = self.m.read_lane(src, sew, l);
-                    self.m.write_lane(dst, sew, l, raw);
-                }
-                let decl = &self.prog.bufs[buf as usize];
-                let raw = self
-                    .m
-                    .load_at(buf, idx * decl.elem.bytes() as i64, Sew::of_bits(decl.elem.bits()))?;
-                self.m.write_lane(dst, sew, lane, raw);
-                Ok(())
-            }
-            Family::St1Lane => {
-                let (buf, idx) = self.resolve_mem(&b.call.args[0])?;
-                let src = match b.call.args[1] {
-                    Arg::V(r) => r,
-                    _ => bail!("st1_lane src must be a vreg"),
-                };
-                let lane = match b.call.args[2] {
-                    Arg::Imm(i) => i as u32,
-                    _ => bail!("st1_lane lane must be imm"),
-                };
-                let vt = op.vt();
-                let sew = Sew::of_bits(vt.elem.bits());
-                let raw = self.m.read_lane(src, sew, lane);
-                let decl = &self.prog.bufs[buf as usize];
-                self.m
-                    .store_at(buf, idx * decl.elem.bytes() as i64, Sew::of_bits(decl.elem.bits()), raw)?;
-                Ok(())
-            }
-            _ => {
-                // pure op via reference semantics
-                let sig = op.sig();
-                let mut vals = Vec::with_capacity(b.call.args.len());
-                for (at, a) in sig.args.iter().zip(&b.call.args) {
-                    vals.push(match (at, a) {
-                        (crate::neon::ops::ArgTy::V(vt), Arg::V(r)) => {
-                            Value::V(self.read_neon(*r, *vt))
-                        }
-                        (_, Arg::Imm(i)) => Value::Imm(*i),
-                        (_, Arg::S(r)) => Value::Imm(self.m.sregs[*r as usize]),
-                        _ => bail!("scalar block: bad arg for {}", op.name()),
-                    });
-                }
-                let r = eval_pure(op, &vals);
-                let dst = b.dst.context("scalar op without dst")?;
-                self.write_neon(dst, &r);
-                Ok(())
-            }
-        }
-    }
-
-    /// Read the low lanes of an RVV vreg as a NEON vector value.
-    fn read_neon(&self, reg: u32, vt: crate::neon::vreg::VecTy) -> VReg {
-        let sew = Sew::of_bits(vt.elem.bits());
-        let lanes = (0..vt.lanes as u32).map(|i| self.m.read_lane(reg, sew, i)).collect();
-        VReg::from_raw(vt, lanes)
-    }
-
-    /// Write a NEON vector value into the low lanes of an RVV vreg.
-    fn write_neon(&mut self, reg: u32, v: &VReg) {
-        let sew = Sew::of_bits(v.ty.elem.bits());
-        for (i, &raw) in v.lanes.iter().enumerate() {
-            self.m.write_lane(reg, sew, i as u32, raw);
-        }
-    }
-
-    fn resolve_mem(&self, a: &Arg) -> Result<(u32, i64)> {
-        match a {
-            Arg::Mem { buf, index } => Ok((*buf, index.eval(&self.m.sregs))),
-            _ => bail!("expected memory operand"),
-        }
     }
 }
 

@@ -1,0 +1,364 @@
+//! Decode pass of the pre-decoded execution engine: flattens an
+//! [`RvvProgram`]'s statement tree into a linear [`DecodedOp`] stream that
+//! the [`crate::sim::Engine`] executes with a program counter.
+//!
+//! What is precomputed, once per (kernel, mode, vlen):
+//!
+//! - **control flow** — `Loop` statements become `LoopStart`/`LoopBack`
+//!   ops with PC targets (back-edges), replacing the interpreter's
+//!   recursive `exec_block` walk;
+//! - **addresses** — every `AddrExpr` (memory-operand indices and `SSet`
+//!   right-hand sides) is compiled to an affine [`AffineAddr`]
+//!   `base + Σ coef·sreg` form, with the buffer's element-byte scale
+//!   folded into the coefficients for memory operands;
+//! - **vsetvli decisions** — each instruction's `(sew, vl)` demand is
+//!   analysed statically: inside a straight-line run whose predecessor
+//!   already established the same configuration, the runtime
+//!   `vsetvli` check is elided entirely (`check_cfg = false`). At control
+//!   -flow joins (loop-body entry, loop exit) the static state is
+//!   invalidated so the runtime check — identical to the interpreter's —
+//!   decides, keeping the paper's vsetvli-churn metric exact;
+//! - **stats metadata** — opcode discriminant, mnemonic and
+//!   load/store-ness are captured per decoded instruction so the hot loop
+//!   does no per-op classification.
+//!
+//! Decoding is semantics-preserving by construction: the engine's
+//! differential test checks bit-identical output buffers and equal
+//! [`crate::sim::SimStats`] against the tree-walking interpreter.
+
+use crate::ir::AddrExpr;
+use crate::rvv::ops::RvvInst;
+use crate::rvv::program::{RStmt, RvvProgram, ScalarBlock};
+use crate::rvv::vtype::Sew;
+
+/// An affine integer expression `base + Σ coef·sreg`, precompiled from an
+/// [`AddrExpr`] tree. Evaluation is a flat multiply-accumulate loop
+/// instead of a recursive tree walk.
+#[derive(Debug, Clone)]
+pub struct AffineAddr {
+    pub base: i64,
+    /// (scalar register, coefficient) terms; deduplicated, zero terms
+    /// dropped.
+    pub terms: Vec<(u32, i64)>,
+}
+
+impl AffineAddr {
+    /// Compile `expr * scale` into affine form. Distributing the scale
+    /// over the tree is exact in wrapping arithmetic, so the result
+    /// matches `expr.eval(sregs) * scale` for every `sregs`.
+    pub fn compile(expr: &AddrExpr, scale: i64) -> AffineAddr {
+        let mut a = AffineAddr { base: 0, terms: Vec::new() };
+        a.absorb(expr, scale);
+        a.terms.sort_by_key(|t| t.0);
+        a.terms.dedup_by(|cur, prev| {
+            if cur.0 == prev.0 {
+                prev.1 += cur.1;
+                true
+            } else {
+                false
+            }
+        });
+        a.terms.retain(|t| t.1 != 0);
+        a
+    }
+
+    fn absorb(&mut self, expr: &AddrExpr, scale: i64) {
+        match expr {
+            AddrExpr::Const(v) => self.base += v * scale,
+            AddrExpr::SReg(r) => self.terms.push((*r, scale)),
+            AddrExpr::Add(a, b) => {
+                self.absorb(a, scale);
+                self.absorb(b, scale);
+            }
+            AddrExpr::Mul(a, k) => self.absorb(a, scale * k),
+        }
+    }
+
+    #[inline]
+    pub fn eval(&self, sregs: &[i64]) -> i64 {
+        let mut v = self.base;
+        for &(r, c) in &self.terms {
+            v += sregs[r as usize] * c;
+        }
+        v
+    }
+}
+
+/// One pre-decoded RVV instruction with its execution metadata.
+#[derive(Debug, Clone)]
+pub struct DecodedInst {
+    pub inst: RvvInst,
+    /// Precompiled memory-operand byte offset (element-byte scale folded
+    /// in), for loads/stores.
+    pub mem: Option<AffineAddr>,
+    /// The `(sew, vl)` configuration this instruction demands.
+    pub want: (Sew, u32),
+    /// Opcode discriminant + mnemonic + memory-op flag for stats
+    /// recording without per-op classification.
+    pub kind_idx: usize,
+    pub mnemonic: &'static str,
+    pub is_mem: bool,
+}
+
+/// One op of the linear decoded stream.
+#[derive(Debug, Clone)]
+pub enum DecodedOp {
+    /// Execute `insts[idx]`. `check_cfg = false` means the decode pass
+    /// proved the current configuration already matches (no vsetvli
+    /// possible); `true` means compare at runtime and count a vsetvli on
+    /// change, exactly like the interpreter.
+    Inst { idx: u32, check_cfg: bool },
+    /// `sregs[dst] = addr(sregs)` — one scalar instruction.
+    SSet { dst: u32, addr: AffineAddr },
+    /// Loop header: initialise trip counter `slot` to `start`; if
+    /// `start >= end` jump to `exit`, else publish the induction variable
+    /// and fall through into the body.
+    LoopStart { slot: u32, ivar: u32, start: i64, end: i64, exit: u32 },
+    /// Loop latch: step trip counter `slot`; while `< end`, publish the
+    /// induction variable and jump back to `back` (the body head), else
+    /// fall through out of the loop.
+    LoopBack { slot: u32, ivar: u32, step: i64, end: i64, back: u32 },
+    /// SIMDe generic-path scalar fallback `scalars[idx]` (baseline mode).
+    Scalar { idx: u32 },
+}
+
+/// A fully decoded program: the reusable artifact cached per
+/// (kernel, mode, vlen) by the coordinator's translation cache.
+#[derive(Debug, Clone)]
+pub struct DecodedProgram {
+    pub ops: Vec<DecodedOp>,
+    pub insts: Vec<DecodedInst>,
+    pub scalars: Vec<ScalarBlock>,
+    /// Number of loop trip-counter slots the engine must allocate.
+    pub n_loop_slots: usize,
+}
+
+impl DecodedProgram {
+    /// Number of ops in the linear stream (for reports/tests).
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+}
+
+/// Flatten `prog` into a linear decoded stream. Pure function of the
+/// program — decode once, execute any number of times.
+pub fn decode(prog: &RvvProgram) -> DecodedProgram {
+    let mut d = Decoder {
+        prog,
+        out: DecodedProgram {
+            ops: Vec::new(),
+            insts: Vec::new(),
+            scalars: Vec::new(),
+            n_loop_slots: 0,
+        },
+        cur: None,
+    };
+    d.walk(&prog.body);
+    d.out
+}
+
+struct Decoder<'p> {
+    prog: &'p RvvProgram,
+    out: DecodedProgram,
+    /// Statically-known `(sew, vl)` configuration at the current decode
+    /// point; `None` at control-flow joins.
+    cur: Option<(Sew, u32)>,
+}
+
+impl Decoder<'_> {
+    fn walk(&mut self, stmts: &[RStmt]) {
+        for s in stmts {
+            match s {
+                RStmt::Op(inst) => {
+                    let want = (inst.sew, inst.vl);
+                    let check_cfg = self.cur != Some(want);
+                    self.cur = Some(want);
+                    let mem = inst.mem.as_ref().map(|mref| {
+                        let scale = self.prog.bufs[mref.buf as usize].elem.bytes() as i64;
+                        AffineAddr::compile(&mref.index, scale)
+                    });
+                    let idx = self.out.insts.len() as u32;
+                    self.out.insts.push(DecodedInst {
+                        inst: inst.clone(),
+                        mem,
+                        want,
+                        kind_idx: inst.kind as usize,
+                        mnemonic: inst.kind.mnemonic(),
+                        is_mem: inst.kind.is_load() || inst.kind.is_store(),
+                    });
+                    self.out.ops.push(DecodedOp::Inst { idx, check_cfg });
+                }
+                RStmt::SSet { dst, expr } => {
+                    self.out.ops.push(DecodedOp::SSet {
+                        dst: *dst,
+                        addr: AffineAddr::compile(expr, 1),
+                    });
+                }
+                RStmt::Loop { ivar, start, end, step, body } => {
+                    let slot = self.out.n_loop_slots as u32;
+                    self.out.n_loop_slots += 1;
+                    let head = self.out.ops.len();
+                    // placeholder; exit patched once the body is decoded
+                    self.out.ops.push(DecodedOp::LoopStart {
+                        slot,
+                        ivar: *ivar,
+                        start: *start,
+                        end: *end,
+                        exit: u32::MAX,
+                    });
+                    // body entry is a join (fallthrough + back-edge)
+                    self.cur = None;
+                    self.walk(body);
+                    let latch = self.out.ops.len();
+                    self.out.ops.push(DecodedOp::LoopBack {
+                        slot,
+                        ivar: *ivar,
+                        step: *step,
+                        end: *end,
+                        back: (head + 1) as u32,
+                    });
+                    if let DecodedOp::LoopStart { exit, .. } = &mut self.out.ops[head] {
+                        *exit = (latch + 1) as u32;
+                    }
+                    // loop exit is a join (zero-trip jump + latch exit)
+                    self.cur = None;
+                }
+                RStmt::Scalar(b) => {
+                    // scalar fallbacks never touch vtype — `cur` unchanged
+                    let idx = self.out.scalars.len() as u32;
+                    self.out.scalars.push(b.clone());
+                    self.out.ops.push(DecodedOp::Scalar { idx });
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{BufDecl, BufKind};
+    use crate::neon::elem::Elem;
+    use crate::rvv::ops::{Dst, MemRef, RvvInst, RvvKind, Src};
+
+    #[test]
+    fn affine_matches_tree_eval() {
+        // i*16 + j*4 + 3, scaled by 4 bytes
+        let e = AddrExpr::s(0).mul(16).add(AddrExpr::s(1).mul(4)).addk(3);
+        let a = AffineAddr::compile(&e, 4);
+        for sregs in [[0i64, 0], [2, 1], [7, 3], [-1, 5]] {
+            assert_eq!(a.eval(&sregs), e.eval(&sregs) * 4);
+        }
+        // duplicate sregs fold into one term
+        let e2 = AddrExpr::s(0).add(AddrExpr::s(0).mul(3));
+        let a2 = AffineAddr::compile(&e2, 1);
+        assert_eq!(a2.terms, vec![(0, 4)]);
+        // cancelled terms are dropped
+        let e3 = AddrExpr::s(1).add(AddrExpr::s(1).mul(-1));
+        let a3 = AffineAddr::compile(&e3, 1);
+        assert!(a3.terms.is_empty());
+    }
+
+    fn op(sew: Sew, vl: u32) -> RStmt {
+        RStmt::Op(RvvInst {
+            kind: RvvKind::VmvVX,
+            sew,
+            vl,
+            dst: Dst::V(0),
+            srcs: vec![Src::ImmI(1)],
+            mask: None,
+            mem: None,
+        })
+    }
+
+    #[test]
+    fn vsetvli_checks_elided_in_straight_line_runs() {
+        let p = RvvProgram {
+            name: "t".into(),
+            bufs: vec![],
+            body: vec![op(Sew::E32, 4), op(Sew::E32, 4), op(Sew::E8, 16), op(Sew::E8, 16)],
+            n_vregs: 1,
+            n_mregs: 0,
+            n_sregs: 0,
+        };
+        let d = decode(&p);
+        let checks: Vec<bool> = d
+            .ops
+            .iter()
+            .map(|o| match o {
+                DecodedOp::Inst { check_cfg, .. } => *check_cfg,
+                _ => panic!("expected insts"),
+            })
+            .collect();
+        assert_eq!(checks, vec![true, false, true, false]);
+    }
+
+    #[test]
+    fn loop_body_and_exit_are_joins() {
+        let p = RvvProgram {
+            name: "t".into(),
+            bufs: vec![],
+            body: vec![
+                op(Sew::E32, 4),
+                RStmt::Loop { ivar: 0, start: 0, end: 2, step: 1, body: vec![op(Sew::E32, 4)] },
+                op(Sew::E32, 4),
+            ],
+            n_vregs: 1,
+            n_mregs: 0,
+            n_sregs: 1,
+        };
+        let d = decode(&p);
+        assert_eq!(d.n_loop_slots, 1);
+        assert_eq!(d.ops.len(), 5); // op, LoopStart, op, LoopBack, op
+        // same config everywhere, but the body op and the post-loop op sit
+        // at joins so they must keep the runtime check
+        let check = |i: usize| match &d.ops[i] {
+            DecodedOp::Inst { check_cfg, .. } => *check_cfg,
+            o => panic!("op {i}: expected inst, got {o:?}"),
+        };
+        assert!(check(0));
+        assert!(check(2), "loop-body head keeps the runtime vsetvli check");
+        assert!(check(4), "loop exit keeps the runtime vsetvli check");
+        // branch targets line up
+        match (&d.ops[1], &d.ops[3]) {
+            (
+                DecodedOp::LoopStart { exit, .. },
+                DecodedOp::LoopBack { back, .. },
+            ) => {
+                assert_eq!(*exit, 4);
+                assert_eq!(*back, 2);
+            }
+            other => panic!("unexpected shape {other:?}"),
+        }
+    }
+
+    #[test]
+    fn mem_offsets_are_byte_scaled() {
+        let p = RvvProgram {
+            name: "t".into(),
+            bufs: vec![BufDecl { name: "A".into(), elem: Elem::I32, len: 16, kind: BufKind::Input }],
+            body: vec![RStmt::Op(RvvInst {
+                kind: RvvKind::Vle,
+                sew: Sew::E32,
+                vl: 4,
+                dst: Dst::V(0),
+                srcs: vec![],
+                mask: None,
+                mem: Some(MemRef { buf: 0, index: AddrExpr::s(0).addk(2), stride: 1 }),
+            })],
+            n_vregs: 1,
+            n_mregs: 0,
+            n_sregs: 1,
+        };
+        let d = decode(&p);
+        let mem = d.insts[0].mem.as_ref().unwrap();
+        // element index (s0 + 2) * 4 bytes
+        assert_eq!(mem.eval(&[3]), 20);
+        assert_eq!(mem.base, 8);
+        assert_eq!(mem.terms, vec![(0, 4)]);
+    }
+}

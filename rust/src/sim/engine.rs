@@ -1,0 +1,251 @@
+//! Pre-decoded execution engine: runs a [`DecodedProgram`] with a flat
+//! program-counter loop and lane-batched instruction semantics.
+//!
+//! This is the fast path behind every harness entry point (`run_job`,
+//! `run_matrix`, `figure2`, the vlen-sweep benches). It is observationally
+//! identical to the tree-walking [`crate::sim::Simulator`]:
+//!
+//! - output buffers are **bit-identical** — batched element-wise kernels
+//!   in [`crate::rvv::exec::exec_batched`] compute the same formulas as
+//!   the per-lane interpreter, and everything else falls back to the
+//!   interpreter's own `exec`;
+//! - [`SimStats`] are **exactly equal** — vsetvli churn is decided by the
+//!   same runtime comparison wherever the decode pass could not prove the
+//!   configuration statically, and loop/scalar accounting mirrors the
+//!   interpreter statement-for-statement.
+//!
+//! The differential test (`tests/engine_differential.rs`) enforces both
+//! properties across the kernel suite × modes × vlens.
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+
+use crate::ir::BufKind;
+use crate::neon::interp::{Buffer, Inputs};
+use crate::rvv::exec::{exec_batched, ExecScratch};
+use crate::rvv::machine::{RvvConfig, RvvMachine};
+use crate::rvv::program::RvvProgram;
+use crate::rvv::vtype::Sew;
+use super::decode::{DecodedOp, DecodedProgram};
+use super::scalar::exec_scalar_block;
+use super::stats::{SimStats, LOOP_OVERHEAD};
+
+/// One execution of a [`DecodedProgram`]. The decoded program is borrowed,
+/// not owned: decode once per (kernel, mode, vlen), run many times.
+pub struct Engine<'p> {
+    prog: &'p RvvProgram,
+    dec: &'p DecodedProgram,
+    m: RvvMachine,
+    /// current (sew, vl) configuration, None = unconfigured
+    vcfg: Option<(Sew, u32)>,
+    /// loop trip counters, one slot per static loop (kept out of `sregs`
+    /// so body writes to the induction register cannot alter trip counts,
+    /// matching the interpreter's local loop variable)
+    slots: Vec<i64>,
+    scratch: ExecScratch,
+    pub stats: SimStats,
+}
+
+impl<'p> Engine<'p> {
+    pub fn new(
+        prog: &'p RvvProgram,
+        dec: &'p DecodedProgram,
+        cfg: RvvConfig,
+        inputs: &Inputs,
+    ) -> Result<Engine<'p>> {
+        let mut bufs = Vec::with_capacity(prog.bufs.len());
+        for decl in &prog.bufs {
+            let b = match decl.kind {
+                BufKind::Input => inputs
+                    .get(&decl.name)
+                    .with_context(|| format!("missing input '{}'", decl.name))?
+                    .clone(),
+                _ => Buffer::zeros(decl.elem, decl.len),
+            };
+            bufs.push(b);
+        }
+        let m = RvvMachine::new(cfg, prog.n_vregs, prog.n_mregs, prog.n_sregs, bufs);
+        Ok(Engine {
+            prog,
+            dec,
+            m,
+            vcfg: None,
+            slots: vec![0; dec.n_loop_slots],
+            scratch: ExecScratch::default(),
+            stats: SimStats::default(),
+        })
+    }
+
+    /// Run to completion, returning output buffers by name.
+    pub fn run(mut self) -> Result<(HashMap<String, Buffer>, SimStats)> {
+        self.exec_ops()?;
+        let mut out = HashMap::new();
+        for (decl, buf) in self.prog.bufs.iter().zip(self.m.bufs) {
+            if decl.kind == BufKind::Output {
+                out.insert(decl.name.clone(), buf);
+            }
+        }
+        Ok((out, self.stats))
+    }
+
+    fn exec_ops(&mut self) -> Result<()> {
+        let dec = self.dec;
+        let mut pc = 0usize;
+        while pc < dec.ops.len() {
+            match &dec.ops[pc] {
+                DecodedOp::Inst { idx, check_cfg } => {
+                    let di = &dec.insts[*idx as usize];
+                    if *check_cfg {
+                        if self.vcfg != Some(di.want) {
+                            self.stats.vsetvli += 1;
+                            self.vcfg = Some(di.want);
+                        }
+                    } else {
+                        // decode proved the predecessor left this config
+                        debug_assert_eq!(self.vcfg, Some(di.want));
+                    }
+                    let mem_off = di.mem.as_ref().map(|a| a.eval(&self.m.sregs));
+                    exec_batched(&mut self.m, &di.inst, mem_off, &mut self.scratch)
+                        .with_context(|| format!("executing {}", di.inst.asm()))?;
+                    self.stats.record_vector(di.kind_idx, di.mnemonic, di.is_mem);
+                    pc += 1;
+                }
+                DecodedOp::SSet { dst, addr } => {
+                    let v = addr.eval(&self.m.sregs);
+                    self.m.sregs[*dst as usize] = v;
+                    self.stats.scalar_ops += 1;
+                    pc += 1;
+                }
+                DecodedOp::LoopStart { slot, ivar, start, end, exit } => {
+                    self.slots[*slot as usize] = *start;
+                    if *start < *end {
+                        self.m.sregs[*ivar as usize] = *start;
+                        self.stats.scalar_ops += LOOP_OVERHEAD;
+                        pc += 1;
+                    } else {
+                        pc = *exit as usize;
+                    }
+                }
+                DecodedOp::LoopBack { slot, ivar, step, end, back } => {
+                    let v = self.slots[*slot as usize] + *step;
+                    self.slots[*slot as usize] = v;
+                    if v < *end {
+                        self.m.sregs[*ivar as usize] = v;
+                        self.stats.scalar_ops += LOOP_OVERHEAD;
+                        pc = *back as usize;
+                    } else {
+                        pc += 1;
+                    }
+                }
+                DecodedOp::Scalar { idx } => {
+                    let b = &dec.scalars[*idx as usize];
+                    exec_scalar_block(&mut self.m, &self.prog.bufs, &mut self.stats, b)?;
+                    pc += 1;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{AddrExpr, BufDecl};
+    use crate::neon::elem::Elem;
+    use crate::rvv::ops::{Dst, MemRef, RvvInst, RvvKind, Src};
+    use crate::rvv::program::RStmt;
+    use crate::sim::decode::decode;
+    use crate::sim::Simulator;
+
+    /// A looped saxpy-style program exercising loads, stores, arithmetic,
+    /// address expressions and loop control.
+    fn looped_program() -> RvvProgram {
+        let vle = |dst, buf| {
+            RStmt::Op(RvvInst {
+                kind: RvvKind::Vle,
+                sew: Sew::E32,
+                vl: 4,
+                dst: Dst::V(dst),
+                srcs: vec![],
+                mask: None,
+                mem: Some(MemRef { buf, index: AddrExpr::s(0), stride: 1 }),
+            })
+        };
+        RvvProgram {
+            name: "loop_add".into(),
+            bufs: vec![
+                BufDecl { name: "A".into(), elem: Elem::I32, len: 16, kind: BufKind::Input },
+                BufDecl { name: "B".into(), elem: Elem::I32, len: 16, kind: BufKind::Input },
+                BufDecl { name: "O".into(), elem: Elem::I32, len: 16, kind: BufKind::Output },
+            ],
+            body: vec![RStmt::Loop {
+                ivar: 0,
+                start: 0,
+                end: 16,
+                step: 4,
+                body: vec![
+                    vle(0, 0),
+                    vle(1, 1),
+                    RStmt::Op(RvvInst {
+                        kind: RvvKind::Vmacc,
+                        sew: Sew::E32,
+                        vl: 4,
+                        dst: Dst::V(1),
+                        srcs: vec![Src::V(0), Src::V(0)],
+                        mask: None,
+                        mem: None,
+                    }),
+                    RStmt::Op(RvvInst {
+                        kind: RvvKind::Vse,
+                        sew: Sew::E32,
+                        vl: 4,
+                        dst: Dst::None,
+                        srcs: vec![Src::V(1)],
+                        mask: None,
+                        mem: Some(MemRef { buf: 2, index: AddrExpr::s(0), stride: 1 }),
+                    }),
+                ],
+            }],
+            n_vregs: 2,
+            n_mregs: 0,
+            n_sregs: 1,
+        }
+    }
+
+    #[test]
+    fn engine_matches_interpreter_on_looped_program() {
+        let p = looped_program();
+        let mut inputs = Inputs::new();
+        inputs.insert("A".into(), Buffer::from_i32s(&(0..16).collect::<Vec<_>>()));
+        inputs.insert("B".into(), Buffer::from_i32s(&(100..116).collect::<Vec<_>>()));
+        let cfg = RvvConfig::new(128);
+
+        let (ref_out, ref_stats) =
+            Simulator::new(&p, cfg, &inputs).unwrap().run().unwrap();
+        let dec = decode(&p);
+        let (out, stats) = Engine::new(&p, &dec, cfg, &inputs).unwrap().run().unwrap();
+
+        assert_eq!(out["O"].as_i32s(), ref_out["O"].as_i32s());
+        assert_eq!(stats, ref_stats);
+        // sanity: b[i] + a[i]*a[i]
+        assert_eq!(out["O"].as_i32s()[5], 105 + 25);
+    }
+
+    #[test]
+    fn zero_trip_loop_skips_body() {
+        let mut p = looped_program();
+        if let RStmt::Loop { end, .. } = &mut p.body[0] {
+            *end = 0;
+        }
+        let mut inputs = Inputs::new();
+        inputs.insert("A".into(), Buffer::from_i32s(&[0; 16]));
+        inputs.insert("B".into(), Buffer::from_i32s(&[0; 16]));
+        let cfg = RvvConfig::new(128);
+        let dec = decode(&p);
+        let (out, stats) = Engine::new(&p, &dec, cfg, &inputs).unwrap().run().unwrap();
+        assert_eq!(stats.total(), 0);
+        assert_eq!(out["O"].as_i32s(), vec![0; 16]);
+    }
+}

@@ -1,8 +1,45 @@
 //! Spike-like functional simulator: executes translated RVV programs
 //! and reports the dynamic instruction counts behind Figure 2.
+//!
+//! # Execution engines
+//!
+//! Two observationally-identical engines execute an
+//! [`crate::rvv::program::RvvProgram`]:
+//!
+//! - [`Simulator`] (`cpu.rs`) — the reference **tree-walking
+//!   interpreter**: recursive statement walk, per-lane register access,
+//!   address-expression trees evaluated on every use. Simple and obviously
+//!   faithful to the paper's semantics; kept as the differential-testing
+//!   oracle.
+//! - [`Engine`] (`engine.rs`) — the **pre-decoded engine** used by the
+//!   harness. [`decode`] (`decode.rs`) flattens the program once per
+//!   (kernel, mode, vlen) into a linear [`DecodedProgram`]: loops become
+//!   PC-based back-edges, `AddrExpr` trees become affine
+//!   `base + Σ coef·sreg` forms with byte scaling folded in, and vsetvli
+//!   checks are elided where the configuration is statically known. The
+//!   engine then executes with a flat PC loop and **lane-batched**
+//!   instruction semantics ([`crate::rvv::exec::exec_batched`]):
+//!   element-wise families gather operands into typed scratch slices,
+//!   compute in a tight loop, and scatter once — instead of per-lane
+//!   8-byte `read_lane`/`write_lane` round-trips per operand.
+//!
+//! The contract between them is exact: bit-identical output buffers and
+//! equal [`SimStats`] (vsetvli churn included), enforced by
+//! `tests/engine_differential.rs`. Decoded programs are cached and shared
+//! across jobs by the coordinator's translation cache
+//! (see [`crate::coordinator`]).
+//!
+//! Scalar-fallback blocks (SIMDe generic paths) execute through one shared
+//! implementation (`scalar.rs`) in both engines, so numerics and cost
+//! accounting cannot drift.
 
 pub mod cpu;
+pub mod decode;
+pub mod engine;
+pub(crate) mod scalar;
 pub mod stats;
 
 pub use cpu::Simulator;
+pub use decode::{decode, AffineAddr, DecodedOp, DecodedProgram};
+pub use engine::Engine;
 pub use stats::SimStats;

@@ -1,0 +1,149 @@
+//! SIMDe generic-path scalar-fallback execution, shared verbatim between
+//! the tree-walking [`crate::sim::Simulator`] and the pre-decoded
+//! [`crate::sim::Engine`] so the two paths cannot drift numerically or in
+//! cost accounting.
+
+use anyhow::{bail, Context, Result};
+
+use crate::ir::{Arg, BufDecl};
+use crate::neon::ops::Family;
+use crate::neon::semantics::{eval_pure, Value};
+use crate::neon::vreg::{VReg, VecTy};
+use crate::rvv::machine::RvvMachine;
+use crate::rvv::program::ScalarBlock;
+use crate::rvv::vtype::Sew;
+use super::stats::SimStats;
+
+/// Execute a SIMDe generic-path scalar fallback: numerics via the
+/// reference NEON semantics over the values in the RVV registers, cost
+/// from the calibrated model (see [`ScalarBlock`]).
+pub(crate) fn exec_scalar_block(
+    m: &mut RvvMachine,
+    bufs: &[BufDecl],
+    stats: &mut SimStats,
+    b: &ScalarBlock,
+) -> Result<()> {
+    let op = b.call.op;
+    stats.scalar_ops += b.scalar_cost;
+    stats.scalar_mem += b.mem_ops;
+    // note: scalar code does not alter vtype — no vsetvli churn here;
+    // the churn comes from the baseline's e8 memcpy traffic
+    if b.cost_only {
+        return Ok(());
+    }
+
+    match op.family {
+        Family::Ld1 | Family::Ld1Dup => {
+            let (buf, idx) = resolve_mem(m, &b.call.args[0])?;
+            let vt = op.vt();
+            let dst = b.dst.context("scalar load without dst")?;
+            let decl = &bufs[buf as usize];
+            let sew = Sew::of_bits(decl.elem.bits());
+            for lane in 0..vt.lanes as u32 {
+                let off = if op.family == Family::Ld1Dup {
+                    idx * decl.elem.bytes() as i64
+                } else {
+                    (idx + lane as i64) * decl.elem.bytes() as i64
+                };
+                let raw = m.load_at(buf, off, sew)?;
+                m.write_lane(dst, Sew::of_bits(vt.elem.bits()), lane, raw);
+            }
+            Ok(())
+        }
+        Family::St1 => {
+            let (buf, idx) = resolve_mem(m, &b.call.args[0])?;
+            let src = match b.call.args[1] {
+                Arg::V(r) => r,
+                _ => bail!("st1 src must be a vreg"),
+            };
+            let vt = op.vt();
+            let decl = &bufs[buf as usize];
+            let sew = Sew::of_bits(decl.elem.bits());
+            for lane in 0..vt.lanes as u32 {
+                let raw = m.read_lane(src, Sew::of_bits(vt.elem.bits()), lane);
+                m.store_at(buf, (idx + lane as i64) * decl.elem.bytes() as i64, sew, raw)?;
+            }
+            Ok(())
+        }
+        Family::Ld1Lane => {
+            let (buf, idx) = resolve_mem(m, &b.call.args[0])?;
+            let src = match b.call.args[1] {
+                Arg::V(r) => r,
+                _ => bail!("ld1_lane src must be a vreg"),
+            };
+            let lane = match b.call.args[2] {
+                Arg::Imm(i) => i as u32,
+                _ => bail!("ld1_lane lane must be imm"),
+            };
+            let vt = op.vt();
+            let dst = b.dst.context("ld1_lane without dst")?;
+            let sew = Sew::of_bits(vt.elem.bits());
+            // copy the source vector, then overwrite one lane
+            for l in 0..vt.lanes as u32 {
+                let raw = m.read_lane(src, sew, l);
+                m.write_lane(dst, sew, l, raw);
+            }
+            let decl = &bufs[buf as usize];
+            let raw =
+                m.load_at(buf, idx * decl.elem.bytes() as i64, Sew::of_bits(decl.elem.bits()))?;
+            m.write_lane(dst, sew, lane, raw);
+            Ok(())
+        }
+        Family::St1Lane => {
+            let (buf, idx) = resolve_mem(m, &b.call.args[0])?;
+            let src = match b.call.args[1] {
+                Arg::V(r) => r,
+                _ => bail!("st1_lane src must be a vreg"),
+            };
+            let lane = match b.call.args[2] {
+                Arg::Imm(i) => i as u32,
+                _ => bail!("st1_lane lane must be imm"),
+            };
+            let vt = op.vt();
+            let sew = Sew::of_bits(vt.elem.bits());
+            let raw = m.read_lane(src, sew, lane);
+            let decl = &bufs[buf as usize];
+            m.store_at(buf, idx * decl.elem.bytes() as i64, Sew::of_bits(decl.elem.bits()), raw)?;
+            Ok(())
+        }
+        _ => {
+            // pure op via reference semantics
+            let sig = op.sig();
+            let mut vals = Vec::with_capacity(b.call.args.len());
+            for (at, a) in sig.args.iter().zip(&b.call.args) {
+                vals.push(match (at, a) {
+                    (crate::neon::ops::ArgTy::V(vt), Arg::V(r)) => Value::V(read_neon(m, *r, *vt)),
+                    (_, Arg::Imm(i)) => Value::Imm(*i),
+                    (_, Arg::S(r)) => Value::Imm(m.sregs[*r as usize]),
+                    _ => bail!("scalar block: bad arg for {}", op.name()),
+                });
+            }
+            let r = eval_pure(op, &vals);
+            let dst = b.dst.context("scalar op without dst")?;
+            write_neon(m, dst, &r);
+            Ok(())
+        }
+    }
+}
+
+/// Read the low lanes of an RVV vreg as a NEON vector value.
+fn read_neon(m: &RvvMachine, reg: u32, vt: VecTy) -> VReg {
+    let sew = Sew::of_bits(vt.elem.bits());
+    let lanes = (0..vt.lanes as u32).map(|i| m.read_lane(reg, sew, i)).collect();
+    VReg::from_raw(vt, lanes)
+}
+
+/// Write a NEON vector value into the low lanes of an RVV vreg.
+fn write_neon(m: &mut RvvMachine, reg: u32, v: &VReg) {
+    let sew = Sew::of_bits(v.ty.elem.bits());
+    for (i, &raw) in v.lanes.iter().enumerate() {
+        m.write_lane(reg, sew, i as u32, raw);
+    }
+}
+
+fn resolve_mem(m: &RvvMachine, a: &Arg) -> Result<(u32, i64)> {
+    match a {
+        Arg::Mem { buf, index } => Ok((*buf, index.eval(&m.sregs))),
+        _ => bail!("expected memory operand"),
+    }
+}

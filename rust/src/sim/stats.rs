@@ -16,7 +16,11 @@ const MAX_KINDS: usize = 128;
 /// The per-opcode histogram is a flat array indexed by the opcode
 /// discriminant — a BTreeMap entry per *dynamic* instruction was the
 /// simulator's top hot spot (see EXPERIMENTS.md §Perf P1).
-#[derive(Debug, Clone)]
+///
+/// `PartialEq`/`Eq` compare every counter including the per-opcode
+/// histogram — the differential test uses this to assert the decoded
+/// engine reproduces the interpreter's metric exactly.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct SimStats {
     /// RVV vector-arithmetic/permute/mask instructions.
     pub vector_ops: u64,

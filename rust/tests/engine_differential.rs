@@ -1,0 +1,75 @@
+//! Differential test: the pre-decoded lane-batched engine must be
+//! observationally identical to the tree-walking interpreter —
+//! bit-identical output buffers and exactly equal `SimStats` (the paper's
+//! dynamic-instruction metric, vsetvli churn included) — across the
+//! kernel suite × translation modes × vector lengths.
+
+use simde_rvv::kernels;
+use simde_rvv::rvv::machine::RvvConfig;
+use simde_rvv::sim::{decode, Engine, Simulator};
+use simde_rvv::simde::{Mode, Translator};
+
+#[test]
+fn decoded_engine_matches_interpreter_bit_for_bit() {
+    let mut combos = 0usize;
+    for case in kernels::suite_small() {
+        for mode in [Mode::Baseline, Mode::RvvCustom] {
+            for vlen in [128u32, 256, 512] {
+                let ctx = format!("{} mode={mode:?} vlen={vlen}", case.name);
+                let cfg = RvvConfig::new(vlen);
+                let (rp, _) = Translator::new(mode, cfg)
+                    .translate(&case.prog)
+                    .unwrap_or_else(|e| panic!("translate failed for {ctx}: {e:#}"));
+
+                let (ref_out, ref_stats) = Simulator::new(&rp, cfg, &case.inputs)
+                    .unwrap()
+                    .run()
+                    .unwrap_or_else(|e| panic!("interpreter failed for {ctx}: {e:#}"));
+
+                let dec = decode(&rp);
+                let (out, stats) = Engine::new(&rp, &dec, cfg, &case.inputs)
+                    .unwrap()
+                    .run()
+                    .unwrap_or_else(|e| panic!("decoded engine failed for {ctx}: {e:#}"));
+
+                assert_eq!(stats, ref_stats, "SimStats diverged for {ctx}");
+                assert_eq!(out.len(), ref_out.len(), "output set diverged for {ctx}");
+                for (name, ref_buf) in &ref_out {
+                    let buf = out
+                        .get(name)
+                        .unwrap_or_else(|| panic!("missing output '{name}' for {ctx}"));
+                    assert_eq!(buf.elem, ref_buf.elem, "elem type of '{name}' for {ctx}");
+                    assert_eq!(
+                        buf.data, ref_buf.data,
+                        "output '{name}' not bit-identical for {ctx}"
+                    );
+                }
+                combos += 1;
+            }
+        }
+    }
+    // 10 kernels x 2 modes x 3 vlens
+    assert_eq!(combos, 60, "differential matrix lost coverage");
+}
+
+/// The cached `by_name` path (default shapes) must agree with a fresh
+/// interpreter run too — this drives the coordinator's translation cache
+/// end to end, across repeated hits.
+#[test]
+fn cached_jobs_match_interpreter_stats() {
+    use simde_rvv::coordinator::{run_job_engine, EngineKind, Job};
+
+    for kernel in ["vrelu", "gemm"] {
+        for vlen in [128u32, 512] {
+            let job = Job { kernel, mode: Mode::RvvCustom, vlen };
+            let reference = run_job_engine(&job, EngineKind::Interp).unwrap();
+            for round in 0..2 {
+                let got = run_job_engine(&job, EngineKind::Decoded).unwrap();
+                assert_eq!(
+                    got.stats, reference.stats,
+                    "{kernel} vlen={vlen} round={round} diverged from interpreter"
+                );
+            }
+        }
+    }
+}
