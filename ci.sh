@@ -10,6 +10,15 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+# Fault-tolerance gate: panic containment, retries, trap fidelity.
+# Redundant with the full test run above, but kept as a named step so a
+# regression in the recovery machinery is visible at a glance.
+echo "== cargo test -q --test fault_injection --test store_bug =="
+cargo test -q --test fault_injection --test store_bug
+
+# -D warnings also enforces the warn-level clippy::unwrap_used /
+# clippy::expect_used gates scoped to the rvv and sim modules (their
+# mod.rs inner attributes): execution-layer faults must be SimTraps.
 echo "== cargo clippy -- -D warnings =="
 cargo clippy -- -D warnings
 

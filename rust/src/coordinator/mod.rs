@@ -26,23 +26,69 @@
 //! pre-PR baseline for `benches/sim_throughput.rs`. Both produce
 //! bit-identical buffers and equal [`SimStats`] (see the `sim` module
 //! docs).
+//!
+//! # Fault tolerance
+//!
+//! A faulting or panicking job must never abort the matrix. The layers,
+//! innermost out:
+//!
+//! 1. **Structured traps** — the simulators report faults as
+//!    [`SimTrap`]s (see [`crate::rvv::trap`]) rather than panicking, so a
+//!    bad program produces a typed error with kernel/engine/PC context.
+//! 2. **Panic backstop** — each job attempt runs under
+//!    `std::panic::catch_unwind`; a residual panic (simulator bug, bad
+//!    register index) becomes a [`TrapKind::Panic`] record instead of a
+//!    dead worker. Injected panics still print through the default panic
+//!    hook, so test output may carry backtraces — that is cosmetic.
+//! 3. **Retries + degradation** — a [`RetryPolicy`] re-runs failed
+//!    attempts, optionally falling back from the decoded engine to the
+//!    interpreter (identical semantics, independent code path). A job
+//!    that exhausts its attempts degrades to a [`FaultRecord`] in the
+//!    [`MatrixReport`]; healthy jobs are unaffected and workers keep
+//!    draining the queue.
+//!
+//! [`run_matrix_report`] is the fault-tolerant core. The legacy
+//! [`run_matrix`]/[`run_matrix_engine`] wrappers keep their strict
+//! `Result` contract (first fault, in job order, becomes the error) and
+//! single-attempt policy. [`figure2_report`] degrades per kernel: rows
+//! whose baseline+custom pair both succeeded are emitted, failed kernels
+//! are listed alongside their `FaultRecord`s.
+//!
+//! Deterministic fault-injection tests drive all of this through
+//! [`FaultPlan`] (fail job N on attempt M, panic in job K) — see
+//! `tests/fault_injection.rs`.
+//!
+//! [`TrapKind::Panic`]: crate::rvv::trap::TrapKind
 
 mod verify;
 
 pub use verify::{verify_kernel, VerifyOutcome};
 
 use std::collections::{HashMap, VecDeque};
+use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
 use std::time::{Duration, Instant};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::kernels::{self, KernelCase};
 use crate::rvv::machine::RvvConfig;
 use crate::rvv::program::RvvProgram;
+use crate::rvv::trap::SimTrap;
 use crate::sim::{decode, DecodedProgram, Engine, SimStats, Simulator};
 use crate::simde::{Mode, Translator};
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+///
+/// All coordinator-shared state (translation cache, job queue) is written
+/// in a panic-safe order — an entry is either absent or complete — so a
+/// poisoned lock carries no torn data and refusing to run after one would
+/// turn a single contained panic into a process-wide outage.
+fn lock_ignore_poison<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 /// One unit of work.
 #[derive(Debug, Clone)]
@@ -61,12 +107,27 @@ pub enum EngineKind {
     Decoded,
 }
 
+impl EngineKind {
+    /// Short stable label, matching the engine tags on [`SimTrap`].
+    pub fn label(self) -> &'static str {
+        match self {
+            EngineKind::Interp => "interp",
+            EngineKind::Decoded => "decoded",
+        }
+    }
+}
+
 /// Result of one simulated job.
 #[derive(Debug, Clone)]
 pub struct JobResult {
     pub job: Job,
     pub stats: SimStats,
     pub wall: Duration,
+    /// Attempts taken to produce this result (1 = first try).
+    pub attempts: u32,
+    /// Engine that actually produced it — may differ from the requested
+    /// engine after an interp fallback.
+    pub engine: EngineKind,
 }
 
 /// A translated + decoded program, shared across jobs via `Arc`.
@@ -86,25 +147,32 @@ pub struct TranslationCache {
 
 impl TranslationCache {
     /// Fetch the decoded program for `job`, translating + decoding on
-    /// first use. Concurrent misses on the same key may translate twice;
-    /// the first insert wins and the duplicate is dropped (translation is
-    /// pure, so either result is interchangeable).
+    /// first use.
+    ///
+    /// The lock is deliberately released between the miss check and the
+    /// insert so translation runs unlocked; concurrent misses on the same
+    /// key may therefore translate twice, and `entry().or_insert` makes
+    /// the first insert win while the duplicate is dropped. This is a
+    /// benign race: translation is a pure function of the key, so either
+    /// artifact is interchangeable — the cost is one wasted translation,
+    /// never a wrong result. Locks recover from poisoning (a worker that
+    /// panicked while reading the map cannot have torn an entry).
     pub fn get_or_translate(&self, case: &KernelCase, job: &Job) -> Result<Arc<CachedProgram>> {
         let key = (job.kernel, job.mode, job.vlen);
-        if let Some(hit) = self.map.lock().unwrap().get(&key) {
+        if let Some(hit) = lock_ignore_poison(&self.map).get(&key) {
             return Ok(Arc::clone(hit));
         }
         let cfg = RvvConfig::new(job.vlen);
         let (rvv, _) = Translator::new(job.mode, cfg).translate(&case.prog)?;
         let decoded = decode(&rvv);
         let entry = Arc::new(CachedProgram { rvv, decoded });
-        let mut map = self.map.lock().unwrap();
+        let mut map = lock_ignore_poison(&self.map);
         Ok(Arc::clone(map.entry(key).or_insert(entry)))
     }
 
     /// Number of cached programs (for tests/benches).
     pub fn len(&self) -> usize {
-        self.map.lock().unwrap().len()
+        lock_ignore_poison(&self.map).len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -143,39 +211,328 @@ pub fn run_job_engine(job: &Job, engine: EngineKind) -> Result<JobResult> {
             stats
         }
     };
-    Ok(JobResult { job: job.clone(), stats, wall: t0.elapsed() })
+    Ok(JobResult { job: job.clone(), stats, wall: t0.elapsed(), attempts: 1, engine })
 }
 
-/// Run a job list across `threads` workers; results in input order.
-pub fn run_matrix(jobs: Vec<Job>, threads: usize) -> Result<Vec<JobResult>> {
-    run_matrix_engine(jobs, threads, EngineKind::Decoded)
+/// How failed job attempts are retried.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Attempts on the requested engine before giving up (min 1).
+    pub max_attempts: u32,
+    /// After exhausting decoded-engine attempts, try once more on the
+    /// tree-walking interpreter — an independent code path with identical
+    /// semantics, so a decoded-engine bug degrades to a slower result
+    /// instead of a fault. No effect when the requested engine is
+    /// already `Interp`.
+    pub interp_fallback: bool,
 }
 
-/// `run_matrix` with an explicit engine choice.
+impl RetryPolicy {
+    /// Single attempt, no fallback — the strict legacy behaviour.
+    pub fn none() -> RetryPolicy {
+        RetryPolicy { max_attempts: 1, interp_fallback: false }
+    }
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy { max_attempts: 2, interp_fallback: true }
+    }
+}
+
+/// What a [`FaultPlan`] entry injects.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InjectKind {
+    /// Return a `TrapKind::Injected` [`SimTrap`] from the attempt.
+    Trap,
+    /// `panic!` inside the attempt, exercising the unwind backstop.
+    Panic,
+}
+
+/// One deterministic injected fault: matches a job index plus optional
+/// attempt number and engine (None = match any).
+#[derive(Debug, Clone)]
+pub struct InjectedFault {
+    pub job: usize,
+    pub attempt: Option<u32>,
+    pub engine: Option<EngineKind>,
+    pub kind: InjectKind,
+}
+
+/// Test-only deterministic fault injection for the worker pool: "fail job
+/// N on attempt M", "panic in job K". Injection happens inside the
+/// per-attempt `catch_unwind`, before the job body runs, so the recovery
+/// machinery is exercised exactly as it would be by a real fault.
 ///
-/// On a failed job the queue is drained (no new work is handed out), the
-/// remaining in-flight results are received, and every worker is joined
-/// *before* the first error propagates — an early return here used to
-/// leave detached workers still executing against a dropped receiver.
-pub fn run_matrix_engine(
-    jobs: Vec<Job>,
-    threads: usize,
-    engine: EngineKind,
-) -> Result<Vec<JobResult>> {
+/// Compiled unconditionally (it is plain data and the lookup is one
+/// `Vec::iter().find`), but only tests construct one — production entry
+/// points leave `MatrixOptions::fault_plan` empty.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    faults: Vec<InjectedFault>,
+}
+
+impl FaultPlan {
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Inject a trap in job `job`, attempt `attempt` only (1-based).
+    pub fn fail(mut self, job: usize, attempt: u32) -> FaultPlan {
+        self.faults.push(InjectedFault {
+            job,
+            attempt: Some(attempt),
+            engine: None,
+            kind: InjectKind::Trap,
+        });
+        self
+    }
+
+    /// Inject a trap in every attempt of job `job`, on every engine.
+    pub fn fail_always(mut self, job: usize) -> FaultPlan {
+        self.faults.push(InjectedFault { job, attempt: None, engine: None, kind: InjectKind::Trap });
+        self
+    }
+
+    /// Inject a trap in job `job` whenever it runs on `engine` — lets a
+    /// test fail every decoded attempt while the interp fallback succeeds.
+    pub fn fail_engine(mut self, job: usize, engine: EngineKind) -> FaultPlan {
+        self.faults.push(InjectedFault {
+            job,
+            attempt: None,
+            engine: Some(engine),
+            kind: InjectKind::Trap,
+        });
+        self
+    }
+
+    /// Panic inside job `job`, attempt `attempt` (1-based).
+    pub fn panic_on(mut self, job: usize, attempt: u32) -> FaultPlan {
+        self.faults.push(InjectedFault {
+            job,
+            attempt: Some(attempt),
+            engine: None,
+            kind: InjectKind::Panic,
+        });
+        self
+    }
+
+    fn lookup(&self, job: usize, attempt: u32, engine: EngineKind) -> Option<InjectKind> {
+        self.faults
+            .iter()
+            .find(|f| {
+                f.job == job
+                    && (f.attempt.is_none() || f.attempt == Some(attempt))
+                    && (f.engine.is_none() || f.engine == Some(engine))
+            })
+            .map(|f| f.kind)
+    }
+}
+
+/// Options for [`run_matrix_report`].
+#[derive(Debug, Clone)]
+pub struct MatrixOptions {
+    pub threads: usize,
+    pub engine: EngineKind,
+    pub retry: RetryPolicy,
+    pub fault_plan: Option<Arc<FaultPlan>>,
+}
+
+impl MatrixOptions {
+    /// Decoded engine, default retry policy, no fault injection.
+    pub fn new(threads: usize) -> MatrixOptions {
+        MatrixOptions {
+            threads,
+            engine: EngineKind::Decoded,
+            retry: RetryPolicy::default(),
+            fault_plan: None,
+        }
+    }
+
+    pub fn engine(mut self, engine: EngineKind) -> MatrixOptions {
+        self.engine = engine;
+        self
+    }
+
+    pub fn retry(mut self, retry: RetryPolicy) -> MatrixOptions {
+        self.retry = retry;
+        self
+    }
+
+    pub fn fault_plan(mut self, plan: FaultPlan) -> MatrixOptions {
+        self.fault_plan = Some(Arc::new(plan));
+        self
+    }
+}
+
+/// How one job failed after all recovery was exhausted.
+#[derive(Debug, Clone)]
+pub struct FaultRecord {
+    /// Index into the submitted job list.
+    pub index: usize,
+    pub job: Job,
+    /// Total attempts made (0 = the job never produced an outcome, e.g.
+    /// its worker died outside the backstop).
+    pub attempts: u32,
+    /// Engine of the last attempt.
+    pub engine: EngineKind,
+    /// Rendered error chain of the last attempt.
+    pub error: String,
+    /// Structured trap, when the failure was (or unwound into) one.
+    pub trap: Option<SimTrap>,
+}
+
+impl fmt::Display for FaultRecord {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "job #{} {} [{:?} vlen={}] failed on {} after {} attempt(s): {}",
+            self.index,
+            self.job.kernel,
+            self.job.mode,
+            self.job.vlen,
+            self.engine.label(),
+            self.attempts,
+            self.error,
+        )
+    }
+}
+
+impl std::error::Error for FaultRecord {}
+
+/// Outcome of a fault-tolerant matrix run: per-job results in input
+/// order (`None` where the job faulted) plus the fault records, sorted
+/// by job index.
+#[derive(Debug)]
+pub struct MatrixReport {
+    pub results: Vec<Option<JobResult>>,
+    pub faults: Vec<FaultRecord>,
+}
+
+impl MatrixReport {
+    pub fn ok(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// Collapse to the strict contract: all results, or the first fault
+    /// (in job order) as the error. The error is an `anyhow::Error`
+    /// wrapping the [`FaultRecord`], so callers can still downcast.
+    pub fn into_results(self) -> Result<Vec<JobResult>> {
+        if let Some(f) = self.faults.into_iter().next() {
+            return Err(anyhow::Error::new(f));
+        }
+        let mut out = Vec::with_capacity(self.results.len());
+        for (i, slot) in self.results.into_iter().enumerate() {
+            match slot {
+                Some(jr) => out.push(jr),
+                None => bail!("missing result for job #{i} with no fault record"),
+            }
+        }
+        Ok(out)
+    }
+}
+
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Run one job through the full recovery ladder: injection check, panic
+/// backstop, retries on the requested engine, optional interp fallback.
+// the Err carries the full fault context by design; it is built once per
+// failed job, never on a hot path
+#[allow(clippy::result_large_err)]
+fn run_with_recovery(
+    idx: usize,
+    job: &Job,
+    retry: RetryPolicy,
+    primary: EngineKind,
+    plan: Option<&FaultPlan>,
+) -> Result<JobResult, FaultRecord> {
+    let mut schedule = vec![primary; retry.max_attempts.max(1) as usize];
+    if retry.interp_fallback && primary == EngineKind::Decoded {
+        schedule.push(EngineKind::Interp);
+    }
+    let mut last: Option<(anyhow::Error, EngineKind)> = None;
+    for (i, &eng) in schedule.iter().enumerate() {
+        let attempt = (i + 1) as u32;
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            if let Some(kind) = plan.and_then(|p| p.lookup(idx, attempt, eng)) {
+                match kind {
+                    InjectKind::Trap => {
+                        return Err(SimTrap::injected(format!(
+                            "fault plan: job #{idx} attempt {attempt}"
+                        ))
+                        .in_kernel(job.kernel)
+                        .on_engine(eng.label())
+                        .into());
+                    }
+                    InjectKind::Panic => {
+                        panic!("fault plan: injected panic in job #{idx} attempt {attempt}")
+                    }
+                }
+            }
+            run_job_engine(job, eng)
+        }));
+        match outcome {
+            Ok(Ok(mut jr)) => {
+                jr.attempts = attempt;
+                jr.engine = eng;
+                return Ok(jr);
+            }
+            Ok(Err(e)) => last = Some((e, eng)),
+            Err(payload) => {
+                let trap = SimTrap::panicked(panic_message(payload))
+                    .in_kernel(job.kernel)
+                    .on_engine(eng.label());
+                last = Some((anyhow::Error::new(trap), eng));
+            }
+        }
+    }
+    let attempts = schedule.len() as u32;
+    let (error, engine) = match last {
+        Some(l) => l,
+        // unreachable: the schedule always has at least one attempt
+        None => (anyhow::anyhow!("no attempt executed"), primary),
+    };
+    let trap = error.downcast_ref::<SimTrap>().cloned();
+    Err(FaultRecord {
+        index: idx,
+        job: job.clone(),
+        attempts,
+        engine,
+        error: format!("{error:#}"),
+        trap,
+    })
+}
+
+/// Fault-tolerant matrix run: every job is attempted under the recovery
+/// ladder, workers stay alive through failures and keep draining the
+/// queue, and the report carries partial results plus fault records.
+/// Never fails as a whole — degradation is per job.
+pub fn run_matrix_report(jobs: Vec<Job>, opts: MatrixOptions) -> MatrixReport {
     let n = jobs.len();
+    let job_table = jobs.clone();
     let queue: Arc<Mutex<VecDeque<(usize, Job)>>> =
         Arc::new(Mutex::new(jobs.into_iter().enumerate().collect()));
-    let (tx, rx) = mpsc::channel::<(usize, Result<JobResult>)>();
+    let (tx, rx) = mpsc::channel::<(usize, Result<JobResult, FaultRecord>)>();
 
-    let workers: Vec<_> = (0..threads.max(1))
+    let workers: Vec<_> = (0..opts.threads.max(1))
         .map(|_| {
             let queue = Arc::clone(&queue);
             let tx = tx.clone();
+            let plan = opts.fault_plan.clone();
+            let (retry, engine) = (opts.retry, opts.engine);
             std::thread::spawn(move || loop {
-                let next = queue.lock().unwrap().pop_front();
+                let next = lock_ignore_poison(&queue).pop_front();
                 match next {
                     Some((idx, job)) => {
-                        let r = run_job_engine(&job, engine);
+                        let r = run_with_recovery(idx, &job, retry, engine, plan.as_deref());
                         if tx.send((idx, r)).is_err() {
                             return;
                         }
@@ -188,27 +545,50 @@ pub fn run_matrix_engine(
     drop(tx);
 
     let mut slots: Vec<Option<JobResult>> = (0..n).map(|_| None).collect();
-    let mut first_err: Option<anyhow::Error> = None;
+    let mut faults: Vec<FaultRecord> = Vec::new();
     for (idx, r) in rx {
         match r {
             Ok(jr) => slots[idx] = Some(jr),
-            Err(e) => {
-                if first_err.is_none() {
-                    // stop handing out work; keep draining so workers can
-                    // finish their in-flight jobs and exit
-                    queue.lock().unwrap().clear();
-                    first_err = Some(e);
-                }
-            }
+            Err(f) => faults.push(f),
         }
     }
     for w in workers {
-        w.join().expect("worker panicked");
+        // the per-attempt catch_unwind makes worker death near-impossible;
+        // if one dies anyway, its hole is synthesised as a fault below
+        let _ = w.join();
     }
-    if let Some(e) = first_err {
-        return Err(e);
+    for (i, slot) in slots.iter().enumerate() {
+        if slot.is_none() && !faults.iter().any(|f| f.index == i) {
+            faults.push(FaultRecord {
+                index: i,
+                job: job_table[i].clone(),
+                attempts: 0,
+                engine: opts.engine,
+                error: "no result: worker thread died or the job was never handed out".to_string(),
+                trap: None,
+            });
+        }
     }
-    Ok(slots.into_iter().map(|s| s.expect("missing result")).collect())
+    faults.sort_by_key(|f| f.index);
+    MatrixReport { results: slots, faults }
+}
+
+/// Run a job list across `threads` workers; results in input order.
+pub fn run_matrix(jobs: Vec<Job>, threads: usize) -> Result<Vec<JobResult>> {
+    run_matrix_engine(jobs, threads, EngineKind::Decoded)
+}
+
+/// `run_matrix` with an explicit engine choice: the strict single-attempt
+/// contract. All jobs still run to completion with workers kept alive
+/// (see [`run_matrix_report`]); afterwards the first fault, in job order,
+/// becomes the error.
+pub fn run_matrix_engine(
+    jobs: Vec<Job>,
+    threads: usize,
+    engine: EngineKind,
+) -> Result<Vec<JobResult>> {
+    let opts = MatrixOptions::new(threads).engine(engine).retry(RetryPolicy::none());
+    run_matrix_report(jobs, opts).into_results()
 }
 
 /// One Figure 2 row.
@@ -218,6 +598,17 @@ pub struct Fig2Row {
     pub baseline: u64,
     pub custom: u64,
     pub speedup: f64,
+}
+
+/// Figure 2 with degradation: rows for every kernel whose baseline+custom
+/// pair both succeeded, failed kernels listed with their fault records.
+#[derive(Debug)]
+pub struct Fig2Report {
+    pub vlen: u32,
+    pub rows: Vec<Fig2Row>,
+    /// Kernels with no row because at least one half of the pair faulted.
+    pub failed: Vec<&'static str>,
+    pub faults: Vec<FaultRecord>,
 }
 
 /// The (kernel × mode) job list behind the Figure 2 table at one vlen.
@@ -231,6 +622,8 @@ pub fn figure2_jobs(vlen: u32) -> Vec<Job> {
 }
 
 /// Compute the Figure 2 table at a given vlen across the worker pool.
+/// Strict: any fault is an error (used by the sweeps and benches, which
+/// want a hard failure rather than a partial table).
 pub fn figure2(vlen: u32, threads: usize) -> Result<Vec<Fig2Row>> {
     figure2_with(vlen, threads, EngineKind::Decoded)
 }
@@ -255,6 +648,33 @@ pub fn figure2_with(vlen: u32, threads: usize, engine: EngineKind) -> Result<Vec
     Ok(rows)
 }
 
+/// Fault-tolerant Figure 2: partial rows plus fault annotations.
+pub fn figure2_report(vlen: u32, threads: usize) -> Fig2Report {
+    figure2_report_opts(vlen, MatrixOptions::new(threads))
+}
+
+/// [`figure2_report`] with explicit [`MatrixOptions`] (engine choice,
+/// retry policy, fault injection for tests).
+pub fn figure2_report_opts(vlen: u32, opts: MatrixOptions) -> Fig2Report {
+    let jobs = figure2_jobs(vlen);
+    let names: Vec<&'static str> = jobs.iter().step_by(2).map(|j| j.kernel).collect();
+    let report = run_matrix_report(jobs, opts);
+    let mut rows = Vec::new();
+    let mut failed = Vec::new();
+    for (i, pair) in report.results.chunks(2).enumerate() {
+        match pair {
+            [Some(b), Some(c)] => rows.push(Fig2Row {
+                kernel: b.job.kernel,
+                baseline: b.stats.total(),
+                custom: c.stats.total(),
+                speedup: b.stats.total() as f64 / c.stats.total() as f64,
+            }),
+            _ => failed.push(names[i]),
+        }
+    }
+    Fig2Report { vlen, rows, failed, faults: report.faults }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -272,6 +692,7 @@ mod tests {
         assert_eq!(results[0].job.mode, Mode::Baseline);
         assert_eq!(results[2].job.kernel, "maxpool");
         assert!(results[0].stats.total() > results[1].stats.total());
+        assert!(results.iter().all(|r| r.attempts == 1 && r.engine == EngineKind::Decoded));
     }
 
     #[test]
@@ -283,7 +704,7 @@ mod tests {
     #[test]
     fn failed_job_still_joins_workers_and_reports_first_error() {
         // one bad job sandwiched between good ones, more jobs than threads
-        // so the queue-drain path is exercised
+        // so workers outlive the failure
         let mut jobs = vec![
             Job { kernel: "vrelu", mode: Mode::RvvCustom, vlen: 128 },
             Job { kernel: "nope", mode: Mode::Baseline, vlen: 128 },
@@ -293,6 +714,10 @@ mod tests {
         }
         let err = run_matrix(jobs, 2).unwrap_err();
         assert!(err.to_string().contains("nope"), "unexpected error: {err:#}");
+        // the strict wrapper surfaces the fault as a downcastable record
+        let f = err.downcast_ref::<FaultRecord>().expect("FaultRecord");
+        assert_eq!(f.index, 1);
+        assert_eq!(f.attempts, 1);
     }
 
     #[test]
@@ -305,5 +730,21 @@ mod tests {
         let c = run_job_engine(&job, EngineKind::Decoded).unwrap();
         assert_eq!(b.stats, c.stats);
         assert!(!translation_cache().is_empty());
+    }
+
+    #[test]
+    fn fault_plan_lookup_matches_wildcards() {
+        let plan = FaultPlan::new()
+            .fail(0, 2)
+            .fail_engine(1, EngineKind::Decoded)
+            .fail_always(2)
+            .panic_on(3, 1);
+        assert_eq!(plan.lookup(0, 1, EngineKind::Decoded), None);
+        assert_eq!(plan.lookup(0, 2, EngineKind::Interp), Some(InjectKind::Trap));
+        assert_eq!(plan.lookup(1, 5, EngineKind::Decoded), Some(InjectKind::Trap));
+        assert_eq!(plan.lookup(1, 5, EngineKind::Interp), None);
+        assert_eq!(plan.lookup(2, 9, EngineKind::Interp), Some(InjectKind::Trap));
+        assert_eq!(plan.lookup(3, 1, EngineKind::Decoded), Some(InjectKind::Panic));
+        assert_eq!(plan.lookup(4, 1, EngineKind::Decoded), None);
     }
 }

@@ -79,11 +79,19 @@ fn report_cmd(args: &Args) -> Result<()> {
 
 fn bench_cmd(args: &Args) -> Result<()> {
     let s = settings(args)?;
-    let rows = coordinator::figure2(s.vlen, s.threads)?;
+    // fault-tolerant path: one bad kernel degrades to an annotated row
+    // gap instead of losing the whole table
+    let fig = coordinator::figure2_report(s.vlen, s.threads);
     if args.has("csv") {
-        print!("{}", report::fig2_csv(&rows));
+        print!("{}", report::fig2_csv(&fig.rows));
     } else {
-        print!("{}", report::fig2_markdown(&rows, s.vlen));
+        print!("{}", report::fig2_markdown_report(&fig));
+    }
+    for f in &fig.faults {
+        eprintln!("warning: {f}");
+    }
+    if !fig.failed.is_empty() {
+        bail!("{} kernel(s) produced no row: {}", fig.failed.len(), fig.failed.join(", "));
     }
     Ok(())
 }
@@ -173,7 +181,11 @@ fn catalog_cmd(args: &Args) -> Result<()> {
     let pat = args.get("grep");
     let mut n = 0;
     for e in catalog::generate() {
-        if pat.map_or(true, |p| e.name.contains(p)) {
+        let keep = match pat {
+            Some(p) => e.name.contains(p),
+            None => true,
+        };
+        if keep {
             println!("{:<40} {}", e.name, e.ret.name());
             n += 1;
         }

@@ -3,7 +3,7 @@
 
 use std::fmt::Write;
 
-use crate::coordinator::Fig2Row;
+use crate::coordinator::{Fig2Report, Fig2Row};
 use crate::neon::catalog;
 use crate::neon::elem::BaseClass;
 use crate::rvv::machine::RvvConfig;
@@ -80,6 +80,20 @@ pub fn fig2_markdown(rows: &[Fig2Row], vlen: u32) -> String {
     s
 }
 
+/// Figure 2 from a fault-tolerant run: the healthy rows, then an
+/// annotation block for kernels that produced no row and the fault
+/// records behind them.
+pub fn fig2_markdown_report(rep: &Fig2Report) -> String {
+    let mut s = fig2_markdown(&rep.rows, rep.vlen);
+    if !rep.failed.is_empty() {
+        let _ = writeln!(s, "\nfailed kernels (no row): {}", rep.failed.join(", "));
+    }
+    for f in &rep.faults {
+        let _ = writeln!(s, "- fault: {f}");
+    }
+    s
+}
+
 pub fn fig2_csv(rows: &[Fig2Row]) -> String {
     let mut s = String::from("kernel,baseline,custom,speedup\n");
     for r in rows {
@@ -133,6 +147,29 @@ mod tests {
         assert!(md.contains("| int8x8_t | x | vint8m1_t | vint8m1_t |"));
         let md = table2_markdown(false);
         assert!(md.contains("| float16x8_t | x | x | x |"));
+    }
+
+    #[test]
+    fn fig2_report_annotates_faults() {
+        use crate::coordinator::{EngineKind, FaultRecord, Job};
+        use crate::simde::Mode;
+        let rep = Fig2Report {
+            vlen: 128,
+            rows: vec![Fig2Row { kernel: "gemm", baseline: 200, custom: 100, speedup: 2.0 }],
+            failed: vec!["vrelu"],
+            faults: vec![FaultRecord {
+                index: 2,
+                job: Job { kernel: "vrelu", mode: Mode::Baseline, vlen: 128 },
+                attempts: 3,
+                engine: EngineKind::Decoded,
+                error: "sim trap [injected] boom".into(),
+                trap: None,
+            }],
+        };
+        let md = fig2_markdown_report(&rep);
+        assert!(md.contains("| gemm | 200 | 100 | 2.00x |"));
+        assert!(md.contains("failed kernels (no row): vrelu"));
+        assert!(md.contains("injected"));
     }
 
     #[test]

@@ -3,21 +3,33 @@
 //! Masked-off and tail lanes are left undisturbed (a legal ta/ma
 //! implementation), which preserves the NEON values that live in the low
 //! 64/128 bits of each virtual register after translation.
-
-use anyhow::{bail, Result};
+//!
+//! Every detectable fault — illegal instruction, out-of-bounds memory,
+//! operand-kind mismatch, unsupported opcode — propagates as a structured
+//! [`SimTrap`] instead of panicking, so a malformed program costs one job,
+//! not a worker thread. The happy path is byte-identical to the previous
+//! panicking implementation.
 
 use crate::neon::elem::{self, Elem};
 use crate::neon::semantics::floatest;
 use super::machine::RvvMachine;
 use super::ops::{Dst, RvvInst, RvvKind, Src};
+use super::trap::SimTrap;
 use super::vtype::Sew;
 
-fn float_elem(sew: Sew) -> Elem {
+/// Raise a [`SimTrap`] from the enclosing `Result<_, SimTrap>` function.
+macro_rules! trap {
+    ($ctor:ident, $($arg:tt)*) => {
+        return Err(SimTrap::$ctor(format!($($arg)*)))
+    };
+}
+
+fn float_elem(sew: Sew) -> Result<Elem, SimTrap> {
     match sew {
-        Sew::E16 => Elem::F16,
-        Sew::E32 => Elem::F32,
-        Sew::E64 => Elem::F64,
-        Sew::E8 => panic!("no e8 float"),
+        Sew::E16 => Ok(Elem::F16),
+        Sew::E32 => Ok(Elem::F32),
+        Sew::E64 => Ok(Elem::F64),
+        Sew::E8 => Err(SimTrap::illegal("no e8 float type")),
     }
 }
 
@@ -35,34 +47,46 @@ fn int_elem(sew: Sew, signed: bool) -> Elem {
     }
 }
 
+/// Double-width SEW for widening ops; traps when none exists (e64 source).
+fn widened(sew: Sew) -> Result<Sew, SimTrap> {
+    Sew::try_of_bits(sew.bits() * 2)
+        .ok_or_else(|| SimTrap::illegal(format!("no widened SEW above {}", sew.asm())))
+}
+
+/// Half-width SEW for narrowing ops; traps when none exists (e8 source).
+fn narrowed(sew: Sew) -> Result<Sew, SimTrap> {
+    Sew::try_of_bits(sew.bits() / 2)
+        .ok_or_else(|| SimTrap::illegal(format!("no narrowed SEW below {}", sew.asm())))
+}
+
 /// Resolve a scalar-capable source operand to a raw lane value at `sew`.
-fn scalar_val(m: &RvvMachine, s: &Src, sew: Sew, float: bool) -> u64 {
-    match s {
+fn scalar_val(m: &RvvMachine, s: &Src, sew: Sew, float: bool) -> Result<u64, SimTrap> {
+    Ok(match s {
         Src::ImmI(i) => elem::from_i64(int_elem(sew, true), *i),
-        Src::ImmF(f) => elem::from_f64(float_elem(sew), *f),
+        Src::ImmF(f) => elem::from_f64(float_elem(sew)?, *f),
         Src::SReg(r) => {
             let v = m.sregs[*r as usize];
             if float {
-                elem::from_f64(float_elem(sew), v as f64)
+                elem::from_f64(float_elem(sew)?, v as f64)
             } else {
                 elem::from_i64(int_elem(sew, true), v)
             }
         }
-        _ => panic!("operand is not scalar"),
-    }
+        other => trap!(bad_operand, "operand {other:?} is not scalar"),
+    })
 }
 
 /// Per-lane value of a source operand (vector lane or broadcast scalar).
-fn src_lane(m: &RvvMachine, s: &Src, sew: Sew, lane: u32, float: bool) -> u64 {
+fn src_lane(m: &RvvMachine, s: &Src, sew: Sew, lane: u32, float: bool) -> Result<u64, SimTrap> {
     match s {
-        Src::V(r) => m.read_lane(*r, sew, lane),
+        Src::V(r) => Ok(m.read_lane(*r, sew, lane)),
         _ => scalar_val(m, s, sew, float),
     }
 }
 
 /// Execute one RVV instruction. `mem_byte_off` must be pre-resolved for
 /// loads/stores (the simulator evaluates the `MemRef` address expression).
-pub fn exec(m: &mut RvvMachine, inst: &RvvInst, mem_byte_off: Option<i64>) -> Result<()> {
+pub fn exec(m: &mut RvvMachine, inst: &RvvInst, mem_byte_off: Option<i64>) -> Result<(), SimTrap> {
     use RvvKind::*;
     let sew = inst.sew;
     let vl = inst.vl;
@@ -70,8 +94,12 @@ pub fn exec(m: &mut RvvMachine, inst: &RvvInst, mem_byte_off: Option<i64>) -> Re
 
     // loads/stores
     if k.is_load() || k.is_store() {
-        let base = mem_byte_off.expect("memory op without resolved address");
-        let mref = inst.mem.as_ref().unwrap();
+        let Some(base) = mem_byte_off else {
+            trap!(bad_operand, "memory op {k:?} without resolved address");
+        };
+        let Some(mref) = inst.mem.as_ref() else {
+            trap!(bad_operand, "memory op {k:?} without MemRef");
+        };
         // P2 fast path: unit-stride unmasked ops are a single bulk copy
         if inst.mask.is_none() && mref.stride == 1 {
             let n = (vl * sew.bytes()) as usize;
@@ -86,7 +114,9 @@ pub fn exec(m: &mut RvvMachine, inst: &RvvInst, mem_byte_off: Option<i64>) -> Re
         let stride = mref.stride * sew.bytes() as i64;
         match k {
             Vle | Vlse => {
-                let Dst::V(dst) = inst.dst else { bail!("load without vreg dst") };
+                let Dst::V(dst) = inst.dst else {
+                    trap!(bad_operand, "load {k:?} without vreg dst");
+                };
                 for i in 0..vl {
                     if let Some(mk) = inst.mask {
                         if !m.mask_bit(mk, i) {
@@ -99,7 +129,7 @@ pub fn exec(m: &mut RvvMachine, inst: &RvvInst, mem_byte_off: Option<i64>) -> Re
             }
             Vse | Vsse => {
                 let Some(Src::V(src)) = inst.srcs.first() else {
-                    bail!("store without vreg src")
+                    trap!(bad_operand, "store {k:?} without vreg src");
                 };
                 for i in 0..vl {
                     if let Some(mk) = inst.mask {
@@ -111,16 +141,18 @@ pub fn exec(m: &mut RvvMachine, inst: &RvvInst, mem_byte_off: Option<i64>) -> Re
                     m.store_at(mref.buf, base + i as i64 * stride, sew, v)?;
                 }
             }
-            _ => unreachable!(),
+            _ => trap!(unsupported, "unexpected memory kind {k:?}"),
         }
         return Ok(());
     }
 
     // mask-register logical ops
     if matches!(k, Vmand | Vmor | Vmxor | Vmnand) {
-        let Dst::M(dst) = inst.dst else { bail!("mask op without mask dst") };
-        let (Src::M(a), Src::M(b)) = (&inst.srcs[0], &inst.srcs[1]) else {
-            bail!("mask op without mask srcs")
+        let Dst::M(dst) = inst.dst else {
+            trap!(bad_operand, "mask op {k:?} without mask dst");
+        };
+        let (Some(Src::M(a)), Some(Src::M(b))) = (inst.srcs.first(), inst.srcs.get(1)) else {
+            trap!(bad_operand, "mask op {k:?} needs two mask srcs");
         };
         for i in 0..vl {
             let (x, y) = (m.mask_bit(*a, i), m.mask_bit(*b, i));
@@ -129,7 +161,7 @@ pub fn exec(m: &mut RvvMachine, inst: &RvvInst, mem_byte_off: Option<i64>) -> Re
                 Vmor => x || y,
                 Vmxor => x ^ y,
                 Vmnand => !(x && y),
-                _ => unreachable!(),
+                _ => trap!(unsupported, "unexpected mask-logical kind {k:?}"),
             };
             m.write_mask_bit(dst, i, r);
         }
@@ -138,9 +170,12 @@ pub fn exec(m: &mut RvvMachine, inst: &RvvInst, mem_byte_off: Option<i64>) -> Re
 
     // compares -> mask destination
     if k.writes_mask() {
-        let Dst::M(dst) = inst.dst else { bail!("compare without mask dst") };
-        let a = &inst.srcs[0];
-        let b = &inst.srcs[1];
+        let Dst::M(dst) = inst.dst else {
+            trap!(bad_operand, "compare {k:?} without mask dst");
+        };
+        let (Some(a), Some(b)) = (inst.srcs.first(), inst.srcs.get(1)) else {
+            trap!(bad_operand, "compare {k:?} needs two srcs");
+        };
         let float = matches!(k, Vmfeq | Vmfne | Vmflt | Vmfle | Vmfgt | Vmfge);
         for i in 0..vl {
             if let Some(mk) = inst.mask {
@@ -148,10 +183,10 @@ pub fn exec(m: &mut RvvMachine, inst: &RvvInst, mem_byte_off: Option<i64>) -> Re
                     continue;
                 }
             }
-            let x = src_lane(m, a, sew, i, float);
-            let y = src_lane(m, b, sew, i, float);
+            let x = src_lane(m, a, sew, i, float)?;
+            let y = src_lane(m, b, sew, i, float)?;
             let r = if float {
-                let fe = float_elem(sew);
+                let fe = float_elem(sew)?;
                 let (fx, fy) = (elem::to_f64(fe, x), elem::to_f64(fe, y));
                 match k {
                     Vmfeq => fx == fy,
@@ -160,7 +195,7 @@ pub fn exec(m: &mut RvvMachine, inst: &RvvInst, mem_byte_off: Option<i64>) -> Re
                     Vmfle => fx <= fy,
                     Vmfgt => fx > fy,
                     Vmfge => fx >= fy,
-                    _ => unreachable!(),
+                    _ => trap!(unsupported, "unexpected float compare {k:?}"),
                 }
             } else {
                 let se = int_elem(sew, true);
@@ -176,7 +211,7 @@ pub fn exec(m: &mut RvvMachine, inst: &RvvInst, mem_byte_off: Option<i64>) -> Re
                     Vmsltu => ux < uy,
                     Vmsleu => ux <= uy,
                     Vmsgtu => ux > uy,
-                    _ => unreachable!(),
+                    _ => trap!(unsupported, "unexpected int compare {k:?}"),
                 }
             };
             m.write_mask_bit(dst, i, r);
@@ -186,35 +221,42 @@ pub fn exec(m: &mut RvvMachine, inst: &RvvInst, mem_byte_off: Option<i64>) -> Re
 
     // reductions: dst[0] = fold(init = srcs[1][0], over srcs[0][0..vl])
     if matches!(k, Vredsum | Vredmax | Vredmaxu | Vredmin | Vredminu | Vfredusum | Vfredmax | Vfredmin) {
-        let Dst::V(dst) = inst.dst else { bail!("reduction without vreg dst") };
-        let Src::V(vs2) = inst.srcs[0] else { bail!("reduction src0 must be vreg") };
-        let Src::V(vs1) = inst.srcs[1] else { bail!("reduction src1 must be vreg") };
-        let init = m.read_lane(vs1, sew, 0);
-        let fe = if matches!(k, Vfredusum | Vfredmax | Vfredmin) {
-            Some(float_elem(sew))
-        } else {
-            None
+        let Dst::V(dst) = inst.dst else {
+            trap!(bad_operand, "reduction {k:?} without vreg dst");
         };
-        let mut acc_f = fe.map(|e| elem::to_f64(e, init));
-        let mut acc_i = elem::to_i64(int_elem(sew, true), init);
-        let mut acc_u = elem::to_u64(int_elem(sew, false), init);
-        for i in 0..vl {
-            if let Some(mk) = inst.mask {
-                if !m.mask_bit(mk, i) {
-                    continue;
+        let (Some(&Src::V(vs2)), Some(&Src::V(vs1))) = (inst.srcs.first(), inst.srcs.get(1))
+        else {
+            trap!(bad_operand, "reduction {k:?} needs two vreg srcs");
+        };
+        let init = m.read_lane(vs1, sew, 0);
+        if matches!(k, Vfredusum | Vfredmax | Vfredmin) {
+            let e = float_elem(sew)?;
+            let mut acc = elem::to_f64(e, init);
+            for i in 0..vl {
+                if let Some(mk) = inst.mask {
+                    if !m.mask_bit(mk, i) {
+                        continue;
+                    }
                 }
-            }
-            let x = m.read_lane(vs2, sew, i);
-            if let Some(e) = fe {
-                let fx = elem::to_f64(e, x);
-                let a = acc_f.as_mut().unwrap();
-                *a = match k {
-                    Vfredusum => *a + fx,
-                    Vfredmax => a.max(fx),
-                    Vfredmin => a.min(fx),
-                    _ => unreachable!(),
+                let fx = elem::to_f64(e, m.read_lane(vs2, sew, i));
+                acc = match k {
+                    Vfredusum => acc + fx,
+                    Vfredmax => acc.max(fx),
+                    Vfredmin => acc.min(fx),
+                    _ => trap!(unsupported, "unexpected float reduction {k:?}"),
                 };
-            } else {
+            }
+            m.write_lane(dst, sew, 0, elem::from_f64(e, acc));
+        } else {
+            let mut acc_i = elem::to_i64(int_elem(sew, true), init);
+            let mut acc_u = elem::to_u64(int_elem(sew, false), init);
+            for i in 0..vl {
+                if let Some(mk) = inst.mask {
+                    if !m.mask_bit(mk, i) {
+                        continue;
+                    }
+                }
+                let x = m.read_lane(vs2, sew, i);
                 let sx = elem::to_i64(int_elem(sew, true), x);
                 let ux = elem::to_u64(int_elem(sew, false), x);
                 match k {
@@ -223,24 +265,24 @@ pub fn exec(m: &mut RvvMachine, inst: &RvvInst, mem_byte_off: Option<i64>) -> Re
                     Vredmin => acc_i = acc_i.min(sx),
                     Vredmaxu => acc_u = acc_u.max(ux),
                     Vredminu => acc_u = acc_u.min(ux),
-                    _ => unreachable!(),
+                    _ => trap!(unsupported, "unexpected int reduction {k:?}"),
                 }
             }
+            let out = if matches!(k, Vredmaxu | Vredminu) {
+                acc_u
+            } else {
+                elem::from_i64(int_elem(sew, true), acc_i)
+            };
+            m.write_lane(dst, sew, 0, out);
         }
-        let out = if let Some(e) = fe {
-            elem::from_f64(e, acc_f.unwrap())
-        } else if matches!(k, Vredmaxu | Vredminu) {
-            acc_u
-        } else {
-            elem::from_i64(int_elem(sew, true), acc_i)
-        };
-        m.write_lane(dst, sew, 0, out);
         return Ok(());
     }
 
     // permutation ops with cross-lane reads: snapshot sources first
     if matches!(k, Vslideup | Vslidedown | Vslide1down | Vrgather | Vcompress | Vid) {
-        let Dst::V(dst) = inst.dst else { bail!("permute without vreg dst") };
+        let Dst::V(dst) = inst.dst else {
+            trap!(bad_operand, "permute {k:?} without vreg dst");
+        };
         let vlmax = m.cfg.vlen / sew.bits();
         match k {
             Vid => {
@@ -249,11 +291,13 @@ pub fn exec(m: &mut RvvMachine, inst: &RvvInst, mem_byte_off: Option<i64>) -> Re
                 }
             }
             Vslideup => {
-                let Src::V(src) = inst.srcs[0] else { bail!("vslideup src") };
-                let off = match &inst.srcs[1] {
-                    Src::ImmI(i) => *i as u32,
-                    Src::SReg(r) => m.sregs[*r as usize] as u32,
-                    _ => bail!("vslideup offset"),
+                let Some(&Src::V(src)) = inst.srcs.first() else {
+                    trap!(bad_operand, "vslideup needs vreg src");
+                };
+                let off = match inst.srcs.get(1) {
+                    Some(Src::ImmI(i)) => *i as u32,
+                    Some(Src::SReg(r)) => m.sregs[*r as usize] as u32,
+                    _ => trap!(bad_operand, "vslideup offset operand"),
                 };
                 let snap = m.read_lanes(src, sew, vlmax.min(vl + off));
                 for i in off..vl {
@@ -261,11 +305,13 @@ pub fn exec(m: &mut RvvMachine, inst: &RvvInst, mem_byte_off: Option<i64>) -> Re
                 }
             }
             Vslidedown => {
-                let Src::V(src) = inst.srcs[0] else { bail!("vslidedown src") };
-                let off = match &inst.srcs[1] {
-                    Src::ImmI(i) => *i as u32,
-                    Src::SReg(r) => m.sregs[*r as usize] as u32,
-                    _ => bail!("vslidedown offset"),
+                let Some(&Src::V(src)) = inst.srcs.first() else {
+                    trap!(bad_operand, "vslidedown needs vreg src");
+                };
+                let off = match inst.srcs.get(1) {
+                    Some(Src::ImmI(i)) => *i as u32,
+                    Some(Src::SReg(r)) => m.sregs[*r as usize] as u32,
+                    _ => trap!(bad_operand, "vslidedown offset operand"),
                 };
                 let snap = m.read_lanes(src, sew, vlmax);
                 for i in 0..vl {
@@ -275,8 +321,13 @@ pub fn exec(m: &mut RvvMachine, inst: &RvvInst, mem_byte_off: Option<i64>) -> Re
                 }
             }
             Vslide1down => {
-                let Src::V(src) = inst.srcs[0] else { bail!("vslide1down src") };
-                let x = scalar_val(m, &inst.srcs[1], sew, false);
+                let Some(&Src::V(src)) = inst.srcs.first() else {
+                    trap!(bad_operand, "vslide1down needs vreg src");
+                };
+                let Some(s1) = inst.srcs.get(1) else {
+                    trap!(bad_operand, "vslide1down scalar operand");
+                };
+                let x = scalar_val(m, s1, sew, false)?;
                 let snap = m.read_lanes(src, sew, vl);
                 for i in 0..vl.saturating_sub(1) {
                     m.write_lane(dst, sew, i, snap[(i + 1) as usize]);
@@ -286,20 +337,26 @@ pub fn exec(m: &mut RvvMachine, inst: &RvvInst, mem_byte_off: Option<i64>) -> Re
                 }
             }
             Vrgather => {
-                let Src::V(src) = inst.srcs[0] else { bail!("vrgather src") };
+                let Some(&Src::V(src)) = inst.srcs.first() else {
+                    trap!(bad_operand, "vrgather needs vreg src");
+                };
                 let snap = m.read_lanes(src, sew, vlmax);
                 for i in 0..vl {
-                    let idx = match &inst.srcs[1] {
-                        Src::V(ir) => m.read_lane(*ir, sew, i),
-                        s => scalar_val(m, s, sew, false),
+                    let idx = match inst.srcs.get(1) {
+                        Some(Src::V(ir)) => m.read_lane(*ir, sew, i),
+                        Some(s) => scalar_val(m, s, sew, false)?,
+                        None => trap!(bad_operand, "vrgather index operand"),
                     };
                     let v = if (idx as u32) < vlmax { snap[idx as usize] } else { 0 };
                     m.write_lane(dst, sew, i, v);
                 }
             }
             Vcompress => {
-                let Src::V(src) = inst.srcs[0] else { bail!("vcompress src") };
-                let Src::M(mk) = inst.srcs[1] else { bail!("vcompress mask") };
+                let (Some(&Src::V(src)), Some(&Src::M(mk))) =
+                    (inst.srcs.first(), inst.srcs.get(1))
+                else {
+                    trap!(bad_operand, "vcompress needs vreg + mask srcs");
+                };
                 let snap = m.read_lanes(src, sew, vl);
                 let mut j = 0;
                 for i in 0..vl {
@@ -309,17 +366,19 @@ pub fn exec(m: &mut RvvMachine, inst: &RvvInst, mem_byte_off: Option<i64>) -> Re
                     }
                 }
             }
-            _ => unreachable!(),
+            _ => trap!(unsupported, "unexpected permute kind {k:?}"),
         }
         return Ok(());
     }
 
     // everything else: elementwise
-    let Dst::V(dst) = inst.dst else { bail!("{k:?} without vreg dst") };
+    let Dst::V(dst) = inst.dst else {
+        trap!(bad_operand, "{k:?} without vreg dst");
+    };
 
     // P4 fast path: vmv.v.v is a bulk register copy (vl*sew bytes)
     if k == VmvVV && inst.mask.is_none() {
-        if let Src::V(src) = inst.srcs[0] {
+        if let Some(&Src::V(src)) = inst.srcs.first() {
             let n = (vl * sew.bytes()) as usize;
             if src != dst {
                 let (a, b) = (src.min(dst) as usize, src.max(dst) as usize);
@@ -344,7 +403,7 @@ pub fn exec(m: &mut RvvMachine, inst: &RvvInst, mem_byte_off: Option<i64>) -> Re
             }
         }
         // P4: direct-u32 integer ops (exp reconstruction mix)
-        if exec_i32_fast(m, inst, dst) {
+        if exec_i32_fast(m, inst, dst)? {
             return Ok(());
         }
     }
@@ -356,7 +415,7 @@ pub fn exec(m: &mut RvvMachine, inst: &RvvInst, mem_byte_off: Option<i64>) -> Re
             }
         }
         let out = exec_lane(m, inst, i)?;
-        let dsew = dst_sew(k, sew);
+        let dsew = dst_sew(k, sew)?;
         m.write_lane(dst, dsew, i, out);
     }
     Ok(())
@@ -365,151 +424,194 @@ pub fn exec(m: &mut RvvMachine, inst: &RvvInst, mem_byte_off: Option<i64>) -> Re
 /// Destination EEW for widening ops. Convention: for the vw* arithmetic
 /// ops `inst.sew` is the *source* SEW (dest doubles); for vzext/vsext the
 /// `inst.sew` is already the *destination* SEW (source halves).
-fn dst_sew(k: RvvKind, sew: Sew) -> Sew {
+fn dst_sew(k: RvvKind, sew: Sew) -> Result<Sew, SimTrap> {
     use RvvKind::*;
     match k {
-        Vwmul | Vwmulu | Vwadd | Vwaddu | Vwmacc | Vwmaccu | VfwcvtFF => {
-            Sew::of_bits(sew.bits() * 2)
-        }
-        _ => sew,
+        Vwmul | Vwmulu | Vwadd | Vwaddu | Vwmacc | Vwmaccu | VfwcvtFF => widened(sew),
+        _ => Ok(sew),
     }
 }
 
-fn exec_lane(m: &RvvMachine, inst: &RvvInst, i: u32) -> Result<u64> {
+fn exec_lane(m: &RvvMachine, inst: &RvvInst, i: u32) -> Result<u64, SimTrap> {
     use RvvKind::*;
     let sew = inst.sew;
     let k = inst.kind;
     let fe = || float_elem(sew);
     let se = int_elem(sew, true);
     let ue = int_elem(sew, false);
-    let a = inst.srcs.first().map(|s| src_lane(m, s, sew, i, is_float_op(k)));
-    let b = inst.srcs.get(1).map(|s| src_lane(m, s, sew, i, is_float_op(k)));
+    let a = inst
+        .srcs
+        .first()
+        .map(|s| src_lane(m, s, sew, i, is_float_op(k)))
+        .transpose()?;
+    let b = inst
+        .srcs
+        .get(1)
+        .map(|s| src_lane(m, s, sew, i, is_float_op(k)))
+        .transpose()?;
+
+    // operand-or-trap: replaces the old `a.unwrap()` sites
+    macro_rules! opa {
+        () => {
+            match a {
+                Some(v) => v,
+                None => trap!(bad_operand, "{k:?} missing operand 0"),
+            }
+        };
+    }
+    macro_rules! opb {
+        () => {
+            match b {
+                Some(v) => v,
+                None => trap!(bad_operand, "{k:?} missing operand 1"),
+            }
+        };
+    }
 
     Ok(match k {
-        Vadd => elem::from_i64(se, elem::to_i64(se, a.unwrap()).wrapping_add(elem::to_i64(se, b.unwrap()))),
-        Vsub => elem::from_i64(se, elem::to_i64(se, a.unwrap()).wrapping_sub(elem::to_i64(se, b.unwrap()))),
-        Vrsub => elem::from_i64(se, elem::to_i64(se, b.unwrap()).wrapping_sub(elem::to_i64(se, a.unwrap()))),
-        Vmul => elem::from_i64(se, elem::to_i64(se, a.unwrap()).wrapping_mul(elem::to_i64(se, b.unwrap()))),
+        Vadd => elem::from_i64(se, elem::to_i64(se, opa!()).wrapping_add(elem::to_i64(se, opb!()))),
+        Vsub => elem::from_i64(se, elem::to_i64(se, opa!()).wrapping_sub(elem::to_i64(se, opb!()))),
+        Vrsub => elem::from_i64(se, elem::to_i64(se, opb!()).wrapping_sub(elem::to_i64(se, opa!()))),
+        Vmul => elem::from_i64(se, elem::to_i64(se, opa!()).wrapping_mul(elem::to_i64(se, opb!()))),
         Vmulh => {
-            let p = (elem::to_i64(se, a.unwrap()) as i128) * (elem::to_i64(se, b.unwrap()) as i128);
+            let p = (elem::to_i64(se, opa!()) as i128) * (elem::to_i64(se, opb!()) as i128);
             elem::from_i64(se, (p >> sew.bits()) as i64)
         }
         Vmulhu => {
-            let p = (elem::to_u64(ue, a.unwrap()) as u128) * (elem::to_u64(ue, b.unwrap()) as u128);
+            let p = (elem::to_u64(ue, opa!()) as u128) * (elem::to_u64(ue, opb!()) as u128);
             ((p >> sew.bits()) as u64) & ue.lane_mask()
         }
         Vwmul => {
-            let wide = int_elem(dst_sew(k, sew), true);
-            elem::from_i64(wide, elem::to_i64(se, a.unwrap()).wrapping_mul(elem::to_i64(se, b.unwrap())))
+            let wide = int_elem(dst_sew(k, sew)?, true);
+            elem::from_i64(wide, elem::to_i64(se, opa!()).wrapping_mul(elem::to_i64(se, opb!())))
         }
         Vwmulu => {
-            let wide = int_elem(dst_sew(k, sew), false);
-            (elem::to_u64(ue, a.unwrap()).wrapping_mul(elem::to_u64(ue, b.unwrap()))) & wide.lane_mask()
+            let wide = int_elem(dst_sew(k, sew)?, false);
+            (elem::to_u64(ue, opa!()).wrapping_mul(elem::to_u64(ue, opb!()))) & wide.lane_mask()
         }
         Vwadd => {
-            let wide = int_elem(dst_sew(k, sew), true);
-            elem::from_i64(wide, elem::to_i64(se, a.unwrap()) + elem::to_i64(se, b.unwrap()))
+            let wide = int_elem(dst_sew(k, sew)?, true);
+            elem::from_i64(wide, elem::to_i64(se, opa!()) + elem::to_i64(se, opb!()))
         }
-        Vwaddu => elem::to_u64(ue, a.unwrap()) + elem::to_u64(ue, b.unwrap()),
+        Vwaddu => elem::to_u64(ue, opa!()) + elem::to_u64(ue, opb!()),
         Vmacc | Vnmsac => {
-            let Dst::V(dr) = inst.dst else { bail!("vmacc dst") };
+            let Dst::V(dr) = inst.dst else { trap!(bad_operand, "{k:?} needs vreg dst") };
             let acc = elem::to_i64(se, m.read_lane(dr, sew, i));
-            let p = elem::to_i64(se, a.unwrap()).wrapping_mul(elem::to_i64(se, b.unwrap()));
+            let p = elem::to_i64(se, opa!()).wrapping_mul(elem::to_i64(se, opb!()));
             let r = if k == Vmacc { acc.wrapping_add(p) } else { acc.wrapping_sub(p) };
             elem::from_i64(se, r)
         }
         Vwmacc => {
-            let wide = int_elem(dst_sew(k, sew), true);
-            let Dst::V(dr) = inst.dst else { bail!("vwmacc dst") };
-            let acc = elem::to_i64(wide, m.read_lane(dr, dst_sew(k, sew), i));
-            let p = elem::to_i64(se, a.unwrap()).wrapping_mul(elem::to_i64(se, b.unwrap()));
+            let wide = int_elem(dst_sew(k, sew)?, true);
+            let Dst::V(dr) = inst.dst else { trap!(bad_operand, "vwmacc needs vreg dst") };
+            let acc = elem::to_i64(wide, m.read_lane(dr, dst_sew(k, sew)?, i));
+            let p = elem::to_i64(se, opa!()).wrapping_mul(elem::to_i64(se, opb!()));
             elem::from_i64(wide, acc.wrapping_add(p))
         }
         Vwmaccu => {
-            let wide = int_elem(dst_sew(k, sew), false);
-            let Dst::V(dr) = inst.dst else { bail!("vwmaccu dst") };
-            let acc = elem::to_u64(wide, m.read_lane(dr, dst_sew(k, sew), i));
-            let p = elem::to_u64(ue, a.unwrap()).wrapping_mul(elem::to_u64(ue, b.unwrap()));
+            let wide = int_elem(dst_sew(k, sew)?, false);
+            let Dst::V(dr) = inst.dst else { trap!(bad_operand, "vwmaccu needs vreg dst") };
+            let acc = elem::to_u64(wide, m.read_lane(dr, dst_sew(k, sew)?, i));
+            let p = elem::to_u64(ue, opa!()).wrapping_mul(elem::to_u64(ue, opb!()));
             (acc.wrapping_add(p)) & wide.lane_mask()
         }
-        Vmin => elem::from_i64(se, elem::to_i64(se, a.unwrap()).min(elem::to_i64(se, b.unwrap()))),
-        Vmax => elem::from_i64(se, elem::to_i64(se, a.unwrap()).max(elem::to_i64(se, b.unwrap()))),
-        Vminu => elem::to_u64(ue, a.unwrap()).min(elem::to_u64(ue, b.unwrap())),
-        Vmaxu => elem::to_u64(ue, a.unwrap()).max(elem::to_u64(ue, b.unwrap())),
-        Vsadd => elem::saturate(se, elem::to_i64(se, a.unwrap()) as i128 + elem::to_i64(se, b.unwrap()) as i128),
-        Vssub => elem::saturate(se, elem::to_i64(se, a.unwrap()) as i128 - elem::to_i64(se, b.unwrap()) as i128),
-        Vsaddu => elem::saturate(ue, elem::to_u64(ue, a.unwrap()) as i128 + elem::to_u64(ue, b.unwrap()) as i128),
-        Vssubu => elem::saturate(ue, elem::to_u64(ue, a.unwrap()) as i128 - elem::to_u64(ue, b.unwrap()) as i128),
-        Vand => a.unwrap() & b.unwrap(),
-        Vor => a.unwrap() | b.unwrap(),
-        Vxor => a.unwrap() ^ b.unwrap(),
+        Vmin => elem::from_i64(se, elem::to_i64(se, opa!()).min(elem::to_i64(se, opb!()))),
+        Vmax => elem::from_i64(se, elem::to_i64(se, opa!()).max(elem::to_i64(se, opb!()))),
+        Vminu => elem::to_u64(ue, opa!()).min(elem::to_u64(ue, opb!())),
+        Vmaxu => elem::to_u64(ue, opa!()).max(elem::to_u64(ue, opb!())),
+        Vsadd => elem::saturate(se, elem::to_i64(se, opa!()) as i128 + elem::to_i64(se, opb!()) as i128),
+        Vssub => elem::saturate(se, elem::to_i64(se, opa!()) as i128 - elem::to_i64(se, opb!()) as i128),
+        Vsaddu => elem::saturate(ue, elem::to_u64(ue, opa!()) as i128 + elem::to_u64(ue, opb!()) as i128),
+        Vssubu => elem::saturate(ue, elem::to_u64(ue, opa!()) as i128 - elem::to_u64(ue, opb!()) as i128),
+        Vand => opa!() & opb!(),
+        Vor => opa!() | opb!(),
+        Vxor => opa!() ^ opb!(),
         Vsll => {
-            let sh = (b.unwrap() & (sew.bits() as u64 - 1)) as u32;
-            (a.unwrap() << sh) & ue.lane_mask()
+            let sh = (opb!() & (sew.bits() as u64 - 1)) as u32;
+            (opa!() << sh) & ue.lane_mask()
         }
         Vsrl => {
-            let sh = (b.unwrap() & (sew.bits() as u64 - 1)) as u32;
-            elem::to_u64(ue, a.unwrap()) >> sh
+            let sh = (opb!() & (sew.bits() as u64 - 1)) as u32;
+            elem::to_u64(ue, opa!()) >> sh
         }
         Vsra => {
-            let sh = (b.unwrap() & (sew.bits() as u64 - 1)) as u32;
-            elem::from_i64(se, elem::to_i64(se, a.unwrap()) >> sh)
+            let sh = (opb!() & (sew.bits() as u64 - 1)) as u32;
+            elem::from_i64(se, elem::to_i64(se, opa!()) >> sh)
         }
         Vnsrl => {
             // source EEW = 2*sew
-            let wide = int_elem(Sew::of_bits(sew.bits() * 2), false);
-            let Src::V(src) = inst.srcs[0] else { bail!("vnsrl src") };
-            let x = m.read_lane(src, Sew::of_bits(sew.bits() * 2), i);
-            let sh = match &inst.srcs[1] {
-                Src::ImmI(n) => *n as u32,
-                s => scalar_val(m, s, sew, false) as u32,
+            let wsew = widened(sew)?;
+            let wide = int_elem(wsew, false);
+            let Some(&Src::V(src)) = inst.srcs.first() else {
+                trap!(bad_operand, "vnsrl needs vreg src");
+            };
+            let x = m.read_lane(src, wsew, i);
+            let sh = match inst.srcs.get(1) {
+                Some(Src::ImmI(n)) => *n as u32,
+                Some(s) => scalar_val(m, s, sew, false)? as u32,
+                None => trap!(bad_operand, "vnsrl shift operand"),
             };
             (elem::to_u64(wide, x) >> sh) & ue.lane_mask()
         }
         Vnsra => {
-            let wide = int_elem(Sew::of_bits(sew.bits() * 2), true);
-            let Src::V(src) = inst.srcs[0] else { bail!("vnsra src") };
-            let x = m.read_lane(src, Sew::of_bits(sew.bits() * 2), i);
-            let sh = match &inst.srcs[1] {
-                Src::ImmI(n) => *n as u32,
-                s => scalar_val(m, s, sew, false) as u32,
+            let wsew = widened(sew)?;
+            let wide = int_elem(wsew, true);
+            let Some(&Src::V(src)) = inst.srcs.first() else {
+                trap!(bad_operand, "vnsra needs vreg src");
+            };
+            let x = m.read_lane(src, wsew, i);
+            let sh = match inst.srcs.get(1) {
+                Some(Src::ImmI(n)) => *n as u32,
+                Some(s) => scalar_val(m, s, sew, false)? as u32,
+                None => trap!(bad_operand, "vnsra shift operand"),
             };
             ((elem::to_i64(wide, x) >> sh) as u64) & ue.lane_mask()
         }
-        VmvVV => a.unwrap(),
-        VmvVX | VfmvVF => scalar_val(m, &inst.srcs[0], sew, k == VfmvVF),
+        VmvVV => opa!(),
+        VmvVX | VfmvVF => {
+            let Some(s0) = inst.srcs.first() else {
+                trap!(bad_operand, "{k:?} missing scalar src");
+            };
+            scalar_val(m, s0, sew, k == VfmvVF)?
+        }
         Vmerge | Vfmerge => {
             // srcs: [false_src(vector), true_src(vector|scalar), mask]
-            let Src::M(mk) = inst.srcs[2] else { bail!("vmerge needs mask src") };
+            let Some(&Src::M(mk)) = inst.srcs.get(2) else {
+                trap!(bad_operand, "vmerge needs mask src");
+            };
             if m.mask_bit(mk, i) {
-                b.unwrap()
+                opb!()
             } else {
-                a.unwrap()
+                opa!()
             }
         }
         Vzext2 => {
-            let half = Sew::of_bits(sew.bits() / 2);
-            let Src::V(src) = inst.srcs[0] else { bail!("vzext src") };
+            let half = narrowed(sew)?;
+            let Some(&Src::V(src)) = inst.srcs.first() else {
+                trap!(bad_operand, "vzext needs vreg src");
+            };
             elem::to_u64(int_elem(half, false), m.read_lane(src, half, i))
         }
         Vsext2 => {
-            let half = Sew::of_bits(sew.bits() / 2);
-            let Src::V(src) = inst.srcs[0] else { bail!("vsext src") };
+            let half = narrowed(sew)?;
+            let Some(&Src::V(src)) = inst.srcs.first() else {
+                trap!(bad_operand, "vsext needs vreg src");
+            };
             elem::from_i64(se, elem::to_i64(int_elem(half, true), m.read_lane(src, half, i)))
         }
-        Vfadd => fbin(fe(), a.unwrap(), b.unwrap(), |x, y| x + y),
-        Vfsub => fbin(fe(), a.unwrap(), b.unwrap(), |x, y| x - y),
-        Vfrsub => fbin(fe(), a.unwrap(), b.unwrap(), |x, y| y - x),
-        Vfmul => fbin(fe(), a.unwrap(), b.unwrap(), |x, y| x * y),
-        Vfdiv => fbin(fe(), a.unwrap(), b.unwrap(), |x, y| x / y),
-        Vfrdiv => fbin(fe(), a.unwrap(), b.unwrap(), |x, y| y / x),
+        Vfadd => fbin(fe()?, opa!(), opb!(), |x, y| x + y),
+        Vfsub => fbin(fe()?, opa!(), opb!(), |x, y| x - y),
+        Vfrsub => fbin(fe()?, opa!(), opb!(), |x, y| y - x),
+        Vfmul => fbin(fe()?, opa!(), opb!(), |x, y| x * y),
+        Vfdiv => fbin(fe()?, opa!(), opb!(), |x, y| x / y),
+        Vfrdiv => fbin(fe()?, opa!(), opb!(), |x, y| y / x),
         Vfmacc | Vfnmacc | Vfmsac | Vfnmsac => {
             // vd = ±(vs1 * vs2) ± vd ; srcs = [multiplier_a, multiplier_b],
             // accumulator is the destination register
-            let Dst::V(dr) = inst.dst else { bail!("fma dst") };
+            let Dst::V(dr) = inst.dst else { trap!(bad_operand, "fma {k:?} needs vreg dst") };
             let acc = m.read_lane(dr, sew, i);
-            let e = fe();
-            let (x, y, s) = (elem::to_f64(e, a.unwrap()), elem::to_f64(e, b.unwrap()), elem::to_f64(e, acc));
+            let e = fe()?;
+            let (x, y, s) = (elem::to_f64(e, opa!()), elem::to_f64(e, opb!()), elem::to_f64(e, acc));
             let r = match (k, e) {
                 // single-rounding fused at lane precision
                 (Vfmacc, Elem::F32) => ((x as f32).mul_add(y as f32, s as f32)) as f64,
@@ -520,54 +622,58 @@ fn exec_lane(m: &RvvMachine, inst: &RvvInst, i: u32) -> Result<u64> {
                 (Vfmsac, _) => x.mul_add(y, -s),
                 (Vfnmsac, Elem::F32) => ((-(x as f32)).mul_add(y as f32, s as f32)) as f64,
                 (Vfnmsac, _) => (-x).mul_add(y, s),
-                _ => unreachable!(),
+                _ => trap!(unsupported, "unexpected fma kind {k:?}"),
             };
             elem::from_f64(e, r)
         }
-        Vfmin => fbin(fe(), a.unwrap(), b.unwrap(), |x, y| {
+        Vfmin => fbin(fe()?, opa!(), opb!(), |x, y| {
             if x.is_nan() || y.is_nan() { f64::NAN } else { x.min(y) }
         }),
-        Vfmax => fbin(fe(), a.unwrap(), b.unwrap(), |x, y| {
+        Vfmax => fbin(fe()?, opa!(), opb!(), |x, y| {
             if x.is_nan() || y.is_nan() { f64::NAN } else { x.max(y) }
         }),
-        Vfsqrt => funary(fe(), a.unwrap(), f64::sqrt),
-        Vfrec7 => funary(fe(), a.unwrap(), floatest::recip_estimate),
-        Vfrsqrt7 => funary(fe(), a.unwrap(), floatest::rsqrt_estimate),
-        Vfsgnj => fsgn(fe(), a.unwrap(), b.unwrap(), |_, sb| sb),
-        Vfsgnjn => fsgn(fe(), a.unwrap(), b.unwrap(), |_, sb| !sb),
-        Vfsgnjx => fsgn(fe(), a.unwrap(), b.unwrap(), |sa, sb| sa ^ sb),
+        Vfsqrt => funary(fe()?, opa!(), f64::sqrt),
+        Vfrec7 => funary(fe()?, opa!(), floatest::recip_estimate),
+        Vfrsqrt7 => funary(fe()?, opa!(), floatest::rsqrt_estimate),
+        Vfsgnj => fsgn(fe()?, opa!(), opb!(), |_, sb| sb),
+        Vfsgnjn => fsgn(fe()?, opa!(), opb!(), |_, sb| !sb),
+        Vfsgnjx => fsgn(fe()?, opa!(), opb!(), |sa, sb| sa ^ sb),
         VfcvtXF => {
-            let f = elem::to_f64(fe(), a.unwrap());
+            let f = elem::to_f64(fe()?, opa!());
             let r = round_ties_even(f);
             saturate_f2i(r, sew, true)
         }
-        VfcvtRtzXF => saturate_f2i(elem::to_f64(fe(), a.unwrap()).trunc(), sew, true),
-        VfcvtRtzXuF => saturate_f2i(elem::to_f64(fe(), a.unwrap()).trunc(), sew, false),
-        VfcvtFX => elem::from_f64(fe(), elem::to_i64(se, a.unwrap()) as f64),
-        VfcvtFXu => elem::from_f64(fe(), elem::to_u64(ue, a.unwrap()) as f64),
+        VfcvtRtzXF => saturate_f2i(elem::to_f64(fe()?, opa!()).trunc(), sew, true),
+        VfcvtRtzXuF => saturate_f2i(elem::to_f64(fe()?, opa!()).trunc(), sew, false),
+        VfcvtFX => elem::from_f64(fe()?, elem::to_i64(se, opa!()) as f64),
+        VfcvtFXu => elem::from_f64(fe()?, elem::to_u64(ue, opa!()) as f64),
         VfwcvtFF => {
-            let half = Sew::of_bits(sew.bits()); // src EEW = sew, dst = 2*sew
-            let Src::V(src) = inst.srcs[0] else { bail!("vfwcvt src") };
-            let x = m.read_lane(src, half, i);
-            elem::from_f64(float_elem(dst_sew(k, sew)), elem::to_f64(float_elem(half), x))
+            // src EEW = sew, dst = 2*sew
+            let Some(&Src::V(src)) = inst.srcs.first() else {
+                trap!(bad_operand, "vfwcvt needs vreg src");
+            };
+            let x = m.read_lane(src, sew, i);
+            elem::from_f64(float_elem(dst_sew(k, sew)?)?, elem::to_f64(float_elem(sew)?, x))
         }
         VfncvtFF => {
             // src EEW = 2*sew, dst = sew
-            let wide = Sew::of_bits(sew.bits() * 2);
-            let Src::V(src) = inst.srcs[0] else { bail!("vfncvt src") };
+            let wide = widened(sew)?;
+            let Some(&Src::V(src)) = inst.srcs.first() else {
+                trap!(bad_operand, "vfncvt needs vreg src");
+            };
             let x = m.read_lane(src, wide, i);
-            elem::from_f64(fe(), elem::to_f64(float_elem(wide), x))
+            elem::from_f64(fe()?, elem::to_f64(float_elem(wide)?, x))
         }
-        _ => bail!("exec_lane: unhandled kind {k:?}"),
+        _ => trap!(unsupported, "exec_lane: unhandled kind {k:?}"),
     })
 }
 
 /// P4: direct-u32 execution for unmasked e32 integer vv/vx ops.
 /// Returns true when handled.
-fn exec_i32_fast(m: &mut RvvMachine, inst: &RvvInst, dst: u32) -> bool {
+fn exec_i32_fast(m: &mut RvvMachine, inst: &RvvInst, dst: u32) -> Result<bool, SimTrap> {
     use RvvKind::*;
     if !matches!(inst.kind, Vadd | Vsub | Vand | Vor | Vxor | Vsll | Vsrl | Vsra | VmvVX) {
-        return false;
+        return Ok(false);
     }
     #[inline(always)]
     fn g(m: &RvvMachine, s: &Src, i: u32) -> Option<u32> {
@@ -578,20 +684,20 @@ fn exec_i32_fast(m: &mut RvvMachine, inst: &RvvInst, dst: u32) -> bool {
         }
     }
     // reject operand kinds the fast path doesn't cover
-    if inst.srcs.iter().any(|s| !matches!(s, Src::V(_) | Src::ImmI(_))) {
-        return false;
+    if inst.srcs.is_empty() || inst.srcs.iter().any(|s| !matches!(s, Src::V(_) | Src::ImmI(_))) {
+        return Ok(false);
     }
     for i in 0..inst.vl {
         let a = match g(m, &inst.srcs[0], i) {
             Some(v) => v,
-            None => return false,
+            None => return Ok(false),
         };
         let r = if inst.kind == VmvVX {
             a
         } else {
             let b = match inst.srcs.get(1).and_then(|s| g(m, s, i)) {
                 Some(v) => v,
-                None => return false,
+                None => return Ok(false),
             };
             match inst.kind {
                 Vadd => a.wrapping_add(b),
@@ -602,17 +708,17 @@ fn exec_i32_fast(m: &mut RvvMachine, inst: &RvvInst, dst: u32) -> bool {
                 Vsll => a << (b & 31),
                 Vsrl => a >> (b & 31),
                 Vsra => ((a as i32) >> (b & 31)) as u32,
-                _ => unreachable!(),
+                k => trap!(unsupported, "unexpected i32 fast-path kind {k:?}"),
             }
         };
         m.write_lane(dst, Sew::E32, i, r as u64);
     }
-    true
+    Ok(true)
 }
 
 /// P3: direct-f32 execution for the hot float ops at SEW=e32.
 /// Returns Some(true) when handled.
-fn exec_f32_fast(m: &mut RvvMachine, inst: &RvvInst, dst: u32) -> Result<Option<bool>> {
+fn exec_f32_fast(m: &mut RvvMachine, inst: &RvvInst, dst: u32) -> Result<Option<bool>, SimTrap> {
     use RvvKind::*;
     #[inline(always)]
     fn f(m: &RvvMachine, s: &Src, i: u32) -> f32 {
@@ -627,7 +733,10 @@ fn exec_f32_fast(m: &mut RvvMachine, inst: &RvvInst, dst: u32) -> Result<Option<
         inst.kind,
         Vfadd | Vfsub | Vfrsub | Vfmul | Vfdiv | Vfmacc | Vfnmsac | Vfmin | Vfmax
     );
-    if !handled || inst.srcs.iter().any(|s| matches!(s, Src::SReg(_) | Src::M(_))) {
+    if !handled
+        || inst.srcs.is_empty()
+        || inst.srcs.iter().any(|s| matches!(s, Src::SReg(_) | Src::M(_)))
+    {
         return Ok(None);
     }
     for i in 0..inst.vl {
@@ -653,7 +762,7 @@ fn exec_f32_fast(m: &mut RvvMachine, inst: &RvvInst, dst: u32) -> Result<Option<
             Vfmax => {
                 if a.is_nan() || b.is_nan() { f32::NAN } else { a.max(b) }
             }
-            _ => unreachable!(),
+            k => trap!(unsupported, "unexpected f32 fast-path kind {k:?}"),
         };
         m.write_lane(dst, Sew::E32, i, r.to_bits() as u64);
     }
@@ -676,18 +785,25 @@ pub struct ExecScratch {
 /// Gather one source operand into `out` as `vl` raw lane values
 /// (vector lanes bulk-copied, scalars broadcast). Returns false for mask
 /// sources, which the batched paths don't model.
-fn gather(m: &RvvMachine, s: &Src, sew: Sew, vl: u32, float: bool, out: &mut Vec<u64>) -> bool {
+fn gather(
+    m: &RvvMachine,
+    s: &Src,
+    sew: Sew,
+    vl: u32,
+    float: bool,
+    out: &mut Vec<u64>,
+) -> Result<bool, SimTrap> {
     match s {
         Src::V(r) => {
             m.read_lanes_into(*r, sew, vl, out);
-            true
+            Ok(true)
         }
-        Src::M(_) => false,
+        Src::M(_) => Ok(false),
         s => {
-            let v = scalar_val(m, s, sew, float);
+            let v = scalar_val(m, s, sew, float)?;
             out.clear();
             out.resize(vl as usize, v);
-            true
+            Ok(true)
         }
     }
 }
@@ -714,7 +830,7 @@ pub fn exec_batched(
     inst: &RvvInst,
     mem_byte_off: Option<i64>,
     scratch: &mut ExecScratch,
-) -> Result<()> {
+) -> Result<(), SimTrap> {
     use RvvKind::*;
     let k = inst.kind;
     let sew = inst.sew;
@@ -727,11 +843,14 @@ pub fn exec_batched(
     let cmp_int = matches!(k, Vmseq | Vmsne | Vmslt | Vmsle | Vmsgt | Vmsltu | Vmsleu | Vmsgtu);
     let cmp_f = matches!(k, Vmfeq | Vmfne | Vmflt | Vmfle | Vmfgt | Vmfge);
     if cmp_int || cmp_f {
-        let Dst::M(dst) = inst.dst else { bail!("compare without mask dst") };
+        let Dst::M(dst) = inst.dst else {
+            trap!(bad_operand, "compare {k:?} without mask dst");
+        };
+        let (Some(s0), Some(s1)) = (inst.srcs.first(), inst.srcs.get(1)) else {
+            trap!(bad_operand, "compare {k:?} needs two srcs");
+        };
         let (a, b) = (&mut scratch.a, &mut scratch.b);
-        if !gather(m, &inst.srcs[0], sew, vl, cmp_f, a)
-            || !gather(m, &inst.srcs[1], sew, vl, cmp_f, b)
-        {
+        if !gather(m, s0, sew, vl, cmp_f, a)? || !gather(m, s1, sew, vl, cmp_f, b)? {
             return exec(m, inst, mem_byte_off);
         }
         macro_rules! cmp2 {
@@ -742,7 +861,7 @@ pub fn exec_batched(
             }};
         }
         if cmp_f {
-            let fe = float_elem(sew);
+            let fe = float_elem(sew)?;
             match k {
                 Vmfeq => cmp2!(|x, y| elem::to_f64(fe, x) == elem::to_f64(fe, y)),
                 Vmfne => cmp2!(|x, y| elem::to_f64(fe, x) != elem::to_f64(fe, y)),
@@ -750,7 +869,7 @@ pub fn exec_batched(
                 Vmfle => cmp2!(|x, y| elem::to_f64(fe, x) <= elem::to_f64(fe, y)),
                 Vmfgt => cmp2!(|x, y| elem::to_f64(fe, x) > elem::to_f64(fe, y)),
                 Vmfge => cmp2!(|x, y| elem::to_f64(fe, x) >= elem::to_f64(fe, y)),
-                _ => unreachable!(),
+                _ => trap!(unsupported, "unexpected float compare {k:?}"),
             }
         } else {
             let se = int_elem(sew, true);
@@ -764,7 +883,7 @@ pub fn exec_batched(
                 Vmsltu => cmp2!(|x, y| elem::to_u64(ue, x) < elem::to_u64(ue, y)),
                 Vmsleu => cmp2!(|x, y| elem::to_u64(ue, x) <= elem::to_u64(ue, y)),
                 Vmsgtu => cmp2!(|x, y| elem::to_u64(ue, x) > elem::to_u64(ue, y)),
-                _ => unreachable!(),
+                _ => trap!(unsupported, "unexpected int compare {k:?}"),
             }
         }
         return Ok(());
@@ -788,24 +907,37 @@ pub fn exec_batched(
         return exec(m, inst, mem_byte_off);
     }
 
-    let Dst::V(dst) = inst.dst else { bail!("{k:?} without vreg dst") };
+    let Dst::V(dst) = inst.dst else {
+        trap!(bad_operand, "{k:?} without vreg dst");
+    };
     let float = is_float_op(k);
     let (a, b) = (&mut scratch.a, &mut scratch.b);
 
     if bcast {
-        let v = scalar_val(m, &inst.srcs[0], sew, k == VfmvVF);
+        let Some(s0) = inst.srcs.first() else {
+            trap!(bad_operand, "{k:?} missing scalar src");
+        };
+        let v = scalar_val(m, s0, sew, k == VfmvVF)?;
         a.clear();
         a.resize(vl as usize, v);
         m.write_lanes_from(dst, sew, a);
         return Ok(());
     }
 
-    if !gather(m, &inst.srcs[0], sew, vl, float, a) {
+    let Some(s0) = inst.srcs.first() else {
+        trap!(bad_operand, "{k:?} missing operand 0");
+    };
+    if !gather(m, s0, sew, vl, float, a)? {
         return exec(m, inst, mem_byte_off);
     }
     let binary = !f32_unary;
-    if binary && !gather(m, &inst.srcs[1], sew, vl, float, b) {
-        return exec(m, inst, mem_byte_off);
+    if binary {
+        let Some(s1) = inst.srcs.get(1) else {
+            trap!(bad_operand, "{k:?} missing operand 1");
+        };
+        if !gather(m, s1, sew, vl, float, b)? {
+            return exec(m, inst, mem_byte_off);
+        }
     }
 
     // compute in place over `a` (or over the gathered accumulator `c`)
@@ -828,7 +960,9 @@ pub fn exec_batched(
 
     if merge {
         // srcs: [false_src, true_src, mask] — lane-select by mask bit
-        let Src::M(mk) = inst.srcs[2] else { bail!("vmerge needs mask src") };
+        let Some(&Src::M(mk)) = inst.srcs.get(2) else {
+            trap!(bad_operand, "vmerge needs mask src");
+        };
         let c = &mut scratch.c;
         c.clear();
         c.extend(m.mask_bits(mk, vl).iter().map(|&t| t as u64));
@@ -865,7 +999,7 @@ pub fn exec_batched(
                     Vfnmacc => (-fx).mul_add(fy, -fs),
                     Vfmsac => fx.mul_add(fy, -fs),
                     Vfnmsac => (-fx).mul_add(fy, fs),
-                    _ => unreachable!(),
+                    _ => trap!(unsupported, "unexpected fma kind {k:?}"),
                 };
                 *s = r.to_bits() as u64;
             }
@@ -905,19 +1039,19 @@ pub fn exec_batched(
             Vsll => zip2!(|x: u64, y: u64| (x << ((y & shmask) as u32)) & ue.lane_mask()),
             Vsrl => zip2!(|x, y: u64| elem::to_u64(ue, x) >> ((y & shmask) as u32)),
             Vsra => zip2!(|x, y: u64| elem::from_i64(se, elem::to_i64(se, x) >> ((y & shmask) as u32))),
-            _ => unreachable!(),
+            _ => trap!(unsupported, "unexpected int-bin kind {k:?}"),
         }
         m.write_lanes_from(dst, sew, a);
         return Ok(());
     }
 
     if sgnj {
-        let fe = float_elem(sew);
+        let fe = float_elem(sew)?;
         match k {
             Vfsgnj => zip2!(|x, y| fsgn(fe, x, y, |_, sb| sb)),
             Vfsgnjn => zip2!(|x, y| fsgn(fe, x, y, |_, sb| !sb)),
             Vfsgnjx => zip2!(|x, y| fsgn(fe, x, y, |sa, sb| sa ^ sb)),
-            _ => unreachable!(),
+            _ => trap!(unsupported, "unexpected sign-injection kind {k:?}"),
         }
         m.write_lanes_from(dst, sew, a);
         return Ok(());
@@ -941,7 +1075,7 @@ pub fn exec_batched(
         Vfrdiv => fzip2!(|x: f32, y: f32| y / x),
         Vfmin => fzip2!(|x: f32, y: f32| if x.is_nan() || y.is_nan() { f32::NAN } else { x.min(y) }),
         Vfmax => fzip2!(|x: f32, y: f32| if x.is_nan() || y.is_nan() { f32::NAN } else { x.max(y) }),
-        _ => unreachable!(),
+        _ => trap!(unsupported, "unexpected f32-bin kind {k:?}"),
     }
     m.write_lanes_from(dst, sew, a);
     Ok(())
@@ -1001,11 +1135,14 @@ fn round_ties_even(f: f64) -> f64 {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
     use super::*;
     use crate::ir::AddrExpr;
     use crate::neon::interp::Buffer;
     use crate::rvv::machine::RvvConfig;
     use crate::rvv::ops::MemRef;
+    use crate::rvv::trap::TrapKind;
 
     fn mk_machine() -> RvvMachine {
         RvvMachine::new(RvvConfig::new(128), 8, 4, 4, vec![Buffer::from_i32s(&[1, 2, 3, 4, 5, 6, 7, 8])])
@@ -1213,5 +1350,48 @@ mod tests {
         exec(&mut m, &inst, None).unwrap();
         assert_eq!(m.read_lane(1, Sew::E16, 0), 1);
         assert_eq!(m.read_lane(1, Sew::E16, 1), 0xffff);
+    }
+
+    #[test]
+    fn oob_store_traps_with_structured_kind() {
+        let mut m = mk_machine();
+        let st = RvvInst {
+            kind: RvvKind::Vse,
+            sew: Sew::E32,
+            vl: 4,
+            dst: Dst::None,
+            srcs: vec![Src::V(0)],
+            mask: None,
+            mem: Some(MemRef { buf: 0, index: AddrExpr::k(0), stride: 1 }),
+        };
+        // buffer is 32 bytes; a 16-byte store at byte 20 runs past the end
+        let t = exec(&mut m, &st, Some(20)).unwrap_err();
+        match t.kind {
+            TrapKind::OutOfBounds { buf, byte_off, width, len, store } => {
+                assert_eq!((buf, byte_off, width, len, store), (0, 20, 16, 32, true));
+            }
+            other => panic!("expected OOB trap, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn e8_float_op_is_illegal_instruction() {
+        let mut m = mk_machine();
+        let mut inst = vinst(RvvKind::Vfadd, Dst::V(1), vec![Src::V(0), Src::V(0)]);
+        inst.sew = Sew::E8;
+        let t = exec(&mut m, &inst, None).unwrap_err();
+        assert!(matches!(t.kind, TrapKind::IllegalInstruction(_)), "{t}");
+    }
+
+    #[test]
+    fn missing_operand_is_bad_operand_trap() {
+        let mut m = mk_machine();
+        // vadd with a single src: operand 1 is missing
+        let t = exec(&mut m, &vinst(RvvKind::Vadd, Dst::V(1), vec![Src::V(0)]), None).unwrap_err();
+        assert!(matches!(t.kind, TrapKind::BadOperand(_)), "{t}");
+        // compare with a mask dst missing -> bad operand, not panic
+        let t2 = exec(&mut m, &vinst(RvvKind::Vmseq, Dst::V(1), vec![Src::V(0), Src::V(0)]), None)
+            .unwrap_err();
+        assert!(matches!(t2.kind, TrapKind::BadOperand(_)), "{t2}");
     }
 }

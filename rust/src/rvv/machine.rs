@@ -5,9 +5,8 @@
 //! SSA): the simulator counts instructions, it does not model register
 //! pressure — matching the paper's functional-simulation methodology.
 
-use anyhow::{bail, Result};
-
 use crate::neon::interp::Buffer;
+use super::trap::SimTrap;
 use super::vtype::Sew;
 
 /// Machine configuration.
@@ -28,8 +27,22 @@ impl Default for RvvConfig {
 
 impl RvvConfig {
     pub fn new(vlen: u32) -> RvvConfig {
-        assert!(vlen.is_power_of_two() && (32..=65536).contains(&vlen), "bad VLEN {vlen}");
-        RvvConfig { vlen, zvfh: true }
+        match RvvConfig::try_new(vlen) {
+            Ok(c) => c,
+            Err(t) => panic!("{t}"),
+        }
+    }
+
+    /// Fallible constructor: a bad VLEN is a [`SimTrap`] (vsetvli
+    /// violation), not a panic — the coordinator uses this so malformed
+    /// job parameters become `FaultRecord`s.
+    pub fn try_new(vlen: u32) -> Result<RvvConfig, SimTrap> {
+        if !(vlen.is_power_of_two() && (32..=65536).contains(&vlen)) {
+            return Err(SimTrap::vsetvli(format!(
+                "bad VLEN {vlen}: must be a power of two in 32..=65536"
+            )));
+        }
+        Ok(RvvConfig { vlen, zvfh: true })
     }
 
     pub fn vlen_bytes(self) -> usize {
@@ -186,15 +199,19 @@ impl RvvMachine {
 
     /// Load `sew.bytes()` at a *byte* offset — RVV memory is untyped; the
     /// simulator converts the IR's element indices to byte addresses.
-    pub fn load_at(&self, buf: u32, byte_off: i64, sew: Sew) -> Result<u64> {
-        let b = &self.bufs[buf as usize];
+    /// Negative and past-the-end offsets trap as [`SimTrap`] out-of-bounds.
+    pub fn load_at(&self, buf: u32, byte_off: i64, sew: Sew) -> Result<u64, SimTrap> {
         let w = sew.bytes() as usize;
+        let b = self
+            .bufs
+            .get(buf as usize)
+            .ok_or_else(|| SimTrap::oob(buf, byte_off, w, 0, false))?;
         if byte_off < 0 {
-            bail!("negative byte offset {byte_off}");
+            return Err(SimTrap::oob(buf, byte_off, w, b.data.len(), false));
         }
         let off = byte_off as usize;
         if off + w > b.data.len() {
-            bail!("OOB load at byte {off} (+{w}) of buf{buf} ({} bytes)", b.data.len());
+            return Err(SimTrap::oob(buf, byte_off, w, b.data.len(), false));
         }
         let mut raw = [0u8; 8];
         raw[..w].copy_from_slice(&b.data[off..off + w]);
@@ -203,14 +220,17 @@ impl RvvMachine {
 
     /// Bulk load: copy `n` bytes from buffer memory into the low bytes of
     /// a register (unit-stride unmasked vle fast path — P2).
-    pub fn load_bulk(&mut self, buf: u32, byte_off: i64, n: usize, reg: u32) -> Result<()> {
+    pub fn load_bulk(&mut self, buf: u32, byte_off: i64, n: usize, reg: u32) -> Result<(), SimTrap> {
+        let b = self
+            .bufs
+            .get(buf as usize)
+            .ok_or_else(|| SimTrap::oob(buf, byte_off, n, 0, false))?;
         if byte_off < 0 {
-            bail!("negative byte offset {byte_off}");
+            return Err(SimTrap::oob(buf, byte_off, n, b.data.len(), false));
         }
         let off = byte_off as usize;
-        let b = &self.bufs[buf as usize];
         if off + n > b.data.len() {
-            bail!("OOB load at byte {off} (+{n}) of buf{buf} ({} bytes)", b.data.len());
+            return Err(SimTrap::oob(buf, byte_off, n, b.data.len(), false));
         }
         self.vregs[reg as usize][..n].copy_from_slice(&b.data[off..off + n]);
         Ok(())
@@ -218,16 +238,19 @@ impl RvvMachine {
 
     /// Bulk store: copy the low `n` bytes of a register into buffer memory
     /// (unit-stride unmasked vse fast path — P2).
-    pub fn store_bulk(&mut self, buf: u32, byte_off: i64, n: usize, reg: u32) -> Result<()> {
-        if byte_off < 0 {
-            bail!("negative byte offset {byte_off}");
-        }
-        let off = byte_off as usize;
+    pub fn store_bulk(&mut self, buf: u32, byte_off: i64, n: usize, reg: u32) -> Result<(), SimTrap> {
         // split borrows: registers and buffers are separate fields
         let reg_data = &self.vregs[reg as usize][..n] as *const [u8];
-        let b = &mut self.bufs[buf as usize];
+        let b = self
+            .bufs
+            .get_mut(buf as usize)
+            .ok_or_else(|| SimTrap::oob(buf, byte_off, n, 0, true))?;
+        if byte_off < 0 {
+            return Err(SimTrap::oob(buf, byte_off, n, b.data.len(), true));
+        }
+        let off = byte_off as usize;
         if off + n > b.data.len() {
-            bail!("OOB store at byte {off} (+{n}) of buf{buf} ({} bytes)", b.data.len());
+            return Err(SimTrap::oob(buf, byte_off, n, b.data.len(), true));
         }
         // SAFETY: vregs and bufs are disjoint fields; no aliasing
         b.data[off..off + n].copy_from_slice(unsafe { &*reg_data });
@@ -235,15 +258,18 @@ impl RvvMachine {
     }
 
     /// Store `sew.bytes()` at a *byte* offset.
-    pub fn store_at(&mut self, buf: u32, byte_off: i64, sew: Sew, val: u64) -> Result<()> {
-        let b = &mut self.bufs[buf as usize];
+    pub fn store_at(&mut self, buf: u32, byte_off: i64, sew: Sew, val: u64) -> Result<(), SimTrap> {
         let w = sew.bytes() as usize;
+        let b = self
+            .bufs
+            .get_mut(buf as usize)
+            .ok_or_else(|| SimTrap::oob(buf, byte_off, w, 0, true))?;
         if byte_off < 0 {
-            bail!("negative byte offset {byte_off}");
+            return Err(SimTrap::oob(buf, byte_off, w, b.data.len(), true));
         }
         let off = byte_off as usize;
         if off + w > b.data.len() {
-            bail!("OOB store at byte {off} (+{w}) of buf{buf} ({} bytes)", b.data.len());
+            return Err(SimTrap::oob(buf, byte_off, w, b.data.len(), true));
         }
         b.data[off..off + w].copy_from_slice(&val.to_le_bytes()[..w]);
         Ok(())
@@ -252,6 +278,8 @@ impl RvvMachine {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
     use super::*;
     use crate::neon::elem::Elem;
 

@@ -2,14 +2,21 @@
 //! agnostic target ISA of the migration. Configurable VLEN, `vtype`
 //! (SEW/LMUL) and `vl` semantics per the riscv-v-spec, an executable op
 //! set, and the RVV program representation the SIMDe engine lowers into.
+//!
+//! Execution-layer faults never panic: every detectable fault is a
+//! structured [`trap::SimTrap`] propagated as `Result<_, SimTrap>` so the
+//! coordinator can record, retry, and degrade instead of losing a worker.
+#![warn(clippy::unwrap_used, clippy::expect_used)]
 
 pub mod exec;
 pub mod machine;
 pub mod ops;
 pub mod program;
+pub mod trap;
 pub mod vtype;
 
 pub use machine::RvvMachine;
 pub use ops::{Dst, MemRef, RvvInst, RvvKind, Src};
 pub use program::{RStmt, RvvProgram, ScalarBlock};
+pub use trap::{SimTrap, TrapKind};
 pub use vtype::{Sew, VType};

@@ -319,13 +319,19 @@ impl RvvInst {
             Dst::None => String::new(),
         };
         if self.kind.is_load() || self.kind.is_store() {
-            let mem = self.mem.as_ref().expect("mem op without MemRef");
             let v = match (self.dst, self.srcs.first()) {
                 (Dst::V(r), _) => format!("v{r}"),
                 (Dst::None, Some(Src::V(r))) => format!("v{r}"),
                 _ => "v?".into(),
             };
-            return format!("{mn}{}.v {v}, (buf{}+{:?})", self.sew.bits(), mem.buf, mem.index);
+            // render malformed mem ops (no MemRef) instead of panicking:
+            // asm() runs inside trap/error paths and must stay total
+            return match self.mem.as_ref() {
+                Some(mem) => {
+                    format!("{mn}{}.v {v}, (buf{}+{:?})", self.sew.bits(), mem.buf, mem.index)
+                }
+                None => format!("{mn}{}.v {v}, (?)", self.sew.bits()),
+            };
         }
         let mut parts = Vec::new();
         if !dst.is_empty() {

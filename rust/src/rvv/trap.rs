@@ -1,0 +1,225 @@
+//! Structured simulation traps.
+//!
+//! A [`SimTrap`] is the machine-readable failure record of the execution
+//! layer: instead of `panic!`/`unreachable!` aborting the worker thread,
+//! every fault the simulator can detect — illegal instructions,
+//! out-of-bounds or negative memory accesses, operand-kind mismatches,
+//! unsupported opcodes, vector-configuration violations — propagates as a
+//! `Result<_, SimTrap>` up through [`crate::rvv::exec`] and the two
+//! `sim` engines, which enrich it with kernel name, engine kind, PC/op
+//! index and the offending instruction's debug render before handing it
+//! to the coordinator.
+//!
+//! `SimTrap` implements [`std::error::Error`], so it threads through
+//! `anyhow` with `?` and can be recovered at the job boundary with
+//! `err.downcast_ref::<SimTrap>()` — this is how the coordinator turns a
+//! trapped job into a structured `FaultRecord` instead of a dead worker.
+
+use std::fmt;
+
+/// What went wrong, with the fault-specific payload.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TrapKind {
+    /// Instruction not executable as encoded (e.g. a float op at e8, a
+    /// widening op with no wider SEW).
+    IllegalInstruction(String),
+    /// Memory access outside a buffer: negative or past-the-end.
+    OutOfBounds {
+        buf: u32,
+        byte_off: i64,
+        /// Access width in bytes.
+        width: usize,
+        /// Buffer length in bytes.
+        len: usize,
+        store: bool,
+    },
+    /// Operand list or operand kind does not match what the opcode
+    /// requires (e.g. a store without a vreg source).
+    BadOperand(String),
+    /// Opcode with no execution semantics on the taken path.
+    UnsupportedOp(String),
+    /// Invalid vector configuration (bad VLEN, vsetvli contract breach).
+    VsetvliViolation(String),
+    /// A panic caught at the job boundary — the `catch_unwind` backstop
+    /// in the coordinator, not a trap the simulator raised itself.
+    Panic(String),
+    /// Deterministic test-only fault injected by the coordinator's
+    /// `FaultPlan`.
+    Injected(String),
+}
+
+impl TrapKind {
+    /// Short stable label for logs and reports.
+    pub fn label(&self) -> &'static str {
+        match self {
+            TrapKind::IllegalInstruction(_) => "illegal-instruction",
+            TrapKind::OutOfBounds { store: true, .. } => "out-of-bounds-store",
+            TrapKind::OutOfBounds { store: false, .. } => "out-of-bounds-load",
+            TrapKind::BadOperand(_) => "bad-operand",
+            TrapKind::UnsupportedOp(_) => "unsupported-op",
+            TrapKind::VsetvliViolation(_) => "vsetvli-violation",
+            TrapKind::Panic(_) => "panic",
+            TrapKind::Injected(_) => "injected",
+        }
+    }
+}
+
+impl fmt::Display for TrapKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TrapKind::IllegalInstruction(d)
+            | TrapKind::BadOperand(d)
+            | TrapKind::UnsupportedOp(d)
+            | TrapKind::VsetvliViolation(d)
+            | TrapKind::Panic(d)
+            | TrapKind::Injected(d) => write!(f, "[{}] {d}", self.label()),
+            TrapKind::OutOfBounds { buf, byte_off, width, len, store: _ } => write!(
+                f,
+                "[{}] {width} bytes at byte {byte_off} of buf{buf} ({len} bytes)",
+                self.label(),
+            ),
+        }
+    }
+}
+
+/// A structured simulation trap: the fault kind plus the execution context
+/// the engines attach on the way out (innermost context wins — once a
+/// field is set, outer layers leave it alone).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SimTrap {
+    pub kind: TrapKind,
+    /// Kernel (program) name, attached by the engines.
+    pub kernel: Option<String>,
+    /// `"interp"` or `"decoded"`, attached by the engines.
+    pub engine: Option<&'static str>,
+    /// For the decoded engine: the static index into the decoded op
+    /// stream. For the interpreter: the dynamic index of the executed
+    /// statement (vector ops and scalar blocks).
+    pub pc: Option<usize>,
+    /// Debug render (`RvvInst::asm`) of the offending instruction.
+    pub inst: Option<String>,
+}
+
+impl SimTrap {
+    pub fn new(kind: TrapKind) -> SimTrap {
+        SimTrap { kind, kernel: None, engine: None, pc: None, inst: None }
+    }
+
+    pub fn illegal(detail: impl Into<String>) -> SimTrap {
+        SimTrap::new(TrapKind::IllegalInstruction(detail.into()))
+    }
+
+    pub fn bad_operand(detail: impl Into<String>) -> SimTrap {
+        SimTrap::new(TrapKind::BadOperand(detail.into()))
+    }
+
+    pub fn unsupported(detail: impl Into<String>) -> SimTrap {
+        SimTrap::new(TrapKind::UnsupportedOp(detail.into()))
+    }
+
+    pub fn vsetvli(detail: impl Into<String>) -> SimTrap {
+        SimTrap::new(TrapKind::VsetvliViolation(detail.into()))
+    }
+
+    pub fn oob(buf: u32, byte_off: i64, width: usize, len: usize, store: bool) -> SimTrap {
+        SimTrap::new(TrapKind::OutOfBounds { buf, byte_off, width, len, store })
+    }
+
+    pub fn panicked(message: impl Into<String>) -> SimTrap {
+        SimTrap::new(TrapKind::Panic(message.into()))
+    }
+
+    pub fn injected(detail: impl Into<String>) -> SimTrap {
+        SimTrap::new(TrapKind::Injected(detail.into()))
+    }
+
+    /// Attach the kernel name if not already set.
+    pub fn in_kernel(mut self, kernel: &str) -> SimTrap {
+        if self.kernel.is_none() {
+            self.kernel = Some(kernel.to_string());
+        }
+        self
+    }
+
+    /// Attach the engine kind if not already set.
+    pub fn on_engine(mut self, engine: &'static str) -> SimTrap {
+        if self.engine.is_none() {
+            self.engine = Some(engine);
+        }
+        self
+    }
+
+    /// Attach the PC / op index if not already set.
+    pub fn at_pc(mut self, pc: usize) -> SimTrap {
+        if self.pc.is_none() {
+            self.pc = Some(pc);
+        }
+        self
+    }
+
+    /// Attach the offending instruction's debug render if not already set.
+    pub fn with_inst(mut self, inst: impl Into<String>) -> SimTrap {
+        if self.inst.is_none() {
+            self.inst = Some(inst.into());
+        }
+        self
+    }
+}
+
+impl fmt::Display for SimTrap {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "sim trap {}", self.kind)?;
+        if let Some(k) = &self.kernel {
+            write!(f, " kernel={k}")?;
+        }
+        if let Some(e) = self.engine {
+            write!(f, " engine={e}")?;
+        }
+        if let Some(pc) = self.pc {
+            write!(f, " pc={pc}")?;
+        }
+        if let Some(i) = &self.inst {
+            write!(f, " inst=`{i}`")?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for SimTrap {}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
+    use super::*;
+
+    #[test]
+    fn context_is_innermost_wins() {
+        let t = SimTrap::oob(1, -4, 8, 16, true)
+            .at_pc(3)
+            .with_inst("vse32.v v0, (buf1+0)")
+            .in_kernel("end_store")
+            .on_engine("interp")
+            // outer enrichment must not overwrite
+            .at_pc(99)
+            .in_kernel("other");
+        assert_eq!(t.pc, Some(3));
+        assert_eq!(t.kernel.as_deref(), Some("end_store"));
+        assert_eq!(t.kind.label(), "out-of-bounds-store");
+        let s = t.to_string();
+        assert!(s.contains("buf1"), "{s}");
+        assert!(s.contains("pc=3"), "{s}");
+        assert!(s.contains("vse32"), "{s}");
+    }
+
+    #[test]
+    fn threads_through_anyhow_and_downcasts_back() {
+        fn fails() -> anyhow::Result<()> {
+            Err(SimTrap::illegal("no e8 float").in_kernel("k"))?;
+            Ok(())
+        }
+        let err = fails().unwrap_err();
+        let t = err.downcast_ref::<SimTrap>().expect("downcast");
+        assert_eq!(t.kind, TrapKind::IllegalInstruction("no e8 float".into()));
+    }
+}

@@ -30,13 +30,21 @@ impl Sew {
         self.bits() / 8
     }
 
-    pub fn of_bits(bits: u32) -> Sew {
+    /// Fallible lookup; `None` when no SEW has that width.
+    pub fn try_of_bits(bits: u32) -> Option<Sew> {
         match bits {
-            8 => Sew::E8,
-            16 => Sew::E16,
-            32 => Sew::E32,
-            64 => Sew::E64,
-            _ => panic!("no SEW of {bits} bits"),
+            8 => Some(Sew::E8),
+            16 => Some(Sew::E16),
+            32 => Some(Sew::E32),
+            64 => Some(Sew::E64),
+            _ => None,
+        }
+    }
+
+    pub fn of_bits(bits: u32) -> Sew {
+        match Sew::try_of_bits(bits) {
+            Some(s) => s,
+            None => panic!("no SEW of {bits} bits"),
         }
     }
 

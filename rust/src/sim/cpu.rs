@@ -26,6 +26,9 @@ pub struct Simulator<'p> {
     m: RvvMachine,
     /// current (sew, vl) configuration, None = unconfigured
     vcfg: Option<(Sew, u32)>,
+    /// dynamic index of the executed statement (vector ops and scalar
+    /// blocks) — attached to traps as their `pc`
+    op_index: usize,
     pub stats: SimStats,
 }
 
@@ -43,7 +46,7 @@ impl<'p> Simulator<'p> {
             bufs.push(b);
         }
         let m = RvvMachine::new(cfg, prog.n_vregs, prog.n_mregs, prog.n_sregs, bufs);
-        Ok(Simulator { prog, m, vcfg: None, stats: SimStats::default() })
+        Ok(Simulator { prog, m, vcfg: None, op_index: 0, stats: SimStats::default() })
     }
 
     /// Run to completion, returning output buffers by name.
@@ -76,8 +79,14 @@ impl<'p> Simulator<'p> {
                         }
                         None => None,
                     };
-                    exec(&mut self.m, inst, mem_off)
-                        .with_context(|| format!("executing {}", inst.asm()))?;
+                    let pc = self.op_index;
+                    self.op_index += 1;
+                    exec(&mut self.m, inst, mem_off).map_err(|t| {
+                        t.at_pc(pc)
+                            .with_inst(inst.asm())
+                            .in_kernel(&self.prog.name)
+                            .on_engine("interp")
+                    })?;
                     self.stats.record_vector(
                         inst.kind as usize,
                         inst.kind.mnemonic(),
@@ -98,7 +107,10 @@ impl<'p> Simulator<'p> {
                     }
                 }
                 RStmt::Scalar(b) => {
-                    exec_scalar_block(&mut self.m, &self.prog.bufs, &mut self.stats, b)?
+                    let pc = self.op_index;
+                    self.op_index += 1;
+                    exec_scalar_block(&mut self.m, &self.prog.bufs, &mut self.stats, b)
+                        .map_err(|t| t.at_pc(pc).in_kernel(&self.prog.name).on_engine("interp"))?
                 }
             }
         }
@@ -108,6 +120,8 @@ impl<'p> Simulator<'p> {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
     use super::*;
     use crate::ir::AddrExpr;
     use crate::neon::elem::Elem;

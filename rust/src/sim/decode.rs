@@ -240,6 +240,8 @@ impl Decoder<'_> {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
     use super::*;
     use crate::ir::{BufDecl, BufKind};
     use crate::neon::elem::Elem;

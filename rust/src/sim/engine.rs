@@ -106,8 +106,14 @@ impl<'p> Engine<'p> {
                         debug_assert_eq!(self.vcfg, Some(di.want));
                     }
                     let mem_off = di.mem.as_ref().map(|a| a.eval(&self.m.sregs));
-                    exec_batched(&mut self.m, &di.inst, mem_off, &mut self.scratch)
-                        .with_context(|| format!("executing {}", di.inst.asm()))?;
+                    exec_batched(&mut self.m, &di.inst, mem_off, &mut self.scratch).map_err(
+                        |t| {
+                            t.at_pc(pc)
+                                .with_inst(di.inst.asm())
+                                .in_kernel(&self.prog.name)
+                                .on_engine("decoded")
+                        },
+                    )?;
                     self.stats.record_vector(di.kind_idx, di.mnemonic, di.is_mem);
                     pc += 1;
                 }
@@ -140,7 +146,10 @@ impl<'p> Engine<'p> {
                 }
                 DecodedOp::Scalar { idx } => {
                     let b = &dec.scalars[*idx as usize];
-                    exec_scalar_block(&mut self.m, &self.prog.bufs, &mut self.stats, b)?;
+                    exec_scalar_block(&mut self.m, &self.prog.bufs, &mut self.stats, b)
+                        .map_err(|t| {
+                            t.at_pc(pc).in_kernel(&self.prog.name).on_engine("decoded")
+                        })?;
                     pc += 1;
                 }
             }
@@ -151,6 +160,8 @@ impl<'p> Engine<'p> {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
     use super::*;
     use crate::ir::{AddrExpr, BufDecl};
     use crate::neon::elem::Elem;

@@ -32,6 +32,21 @@
 //! Scalar-fallback blocks (SIMDe generic paths) execute through one shared
 //! implementation (`scalar.rs`) in both engines, so numerics and cost
 //! accounting cannot drift.
+//!
+//! # Trap model
+//!
+//! Execution faults do not panic: both engines propagate structured
+//! [`SimTrap`]s (see [`crate::rvv::trap`]) and enrich them with kernel
+//! name, engine kind (`"interp"` / `"decoded"`), a PC, and the offending
+//! instruction's debug render. The PC means different things per engine —
+//! for [`Engine`] it is the static index into the decoded op stream, for
+//! [`Simulator`] the dynamic index of the executed statement — but for
+//! straight-line programs the two coincide. Recover a trap from an
+//! `anyhow::Error` with `err.downcast_ref::<SimTrap>()`; the coordinator
+//! does exactly this to build `FaultRecord`s
+//! (see [`crate::coordinator`]).
+
+#![warn(clippy::unwrap_used, clippy::expect_used)]
 
 pub mod cpu;
 pub mod decode;
@@ -43,3 +58,4 @@ pub use cpu::Simulator;
 pub use decode::{decode, AffineAddr, DecodedOp, DecodedProgram};
 pub use engine::Engine;
 pub use stats::SimStats;
+pub use crate::rvv::trap::{SimTrap, TrapKind};

@@ -2,8 +2,9 @@
 //! the tree-walking [`crate::sim::Simulator`] and the pre-decoded
 //! [`crate::sim::Engine`] so the two paths cannot drift numerically or in
 //! cost accounting.
-
-use anyhow::{bail, Context, Result};
+//!
+//! Faults (bad operands, out-of-bounds accesses) propagate as structured
+//! [`SimTrap`]s, tagged with the scalar op's name as the "instruction".
 
 use crate::ir::{Arg, BufDecl};
 use crate::neon::ops::Family;
@@ -11,6 +12,7 @@ use crate::neon::semantics::{eval_pure, Value};
 use crate::neon::vreg::{VReg, VecTy};
 use crate::rvv::machine::RvvMachine;
 use crate::rvv::program::ScalarBlock;
+use crate::rvv::trap::SimTrap;
 use crate::rvv::vtype::Sew;
 use super::stats::SimStats;
 
@@ -22,7 +24,17 @@ pub(crate) fn exec_scalar_block(
     bufs: &[BufDecl],
     stats: &mut SimStats,
     b: &ScalarBlock,
-) -> Result<()> {
+) -> Result<(), SimTrap> {
+    scalar_block_inner(m, bufs, stats, b)
+        .map_err(|t| t.with_inst(format!("scalar {}", b.call.op.name())))
+}
+
+fn scalar_block_inner(
+    m: &mut RvvMachine,
+    bufs: &[BufDecl],
+    stats: &mut SimStats,
+    b: &ScalarBlock,
+) -> Result<(), SimTrap> {
     let op = b.call.op;
     stats.scalar_ops += b.scalar_cost;
     stats.scalar_mem += b.mem_ops;
@@ -36,7 +48,7 @@ pub(crate) fn exec_scalar_block(
         Family::Ld1 | Family::Ld1Dup => {
             let (buf, idx) = resolve_mem(m, &b.call.args[0])?;
             let vt = op.vt();
-            let dst = b.dst.context("scalar load without dst")?;
+            let dst = b.dst.ok_or_else(|| SimTrap::bad_operand("scalar load without dst"))?;
             let decl = &bufs[buf as usize];
             let sew = Sew::of_bits(decl.elem.bits());
             for lane in 0..vt.lanes as u32 {
@@ -54,7 +66,7 @@ pub(crate) fn exec_scalar_block(
             let (buf, idx) = resolve_mem(m, &b.call.args[0])?;
             let src = match b.call.args[1] {
                 Arg::V(r) => r,
-                _ => bail!("st1 src must be a vreg"),
+                _ => return Err(SimTrap::bad_operand("st1 src must be a vreg")),
             };
             let vt = op.vt();
             let decl = &bufs[buf as usize];
@@ -69,14 +81,14 @@ pub(crate) fn exec_scalar_block(
             let (buf, idx) = resolve_mem(m, &b.call.args[0])?;
             let src = match b.call.args[1] {
                 Arg::V(r) => r,
-                _ => bail!("ld1_lane src must be a vreg"),
+                _ => return Err(SimTrap::bad_operand("ld1_lane src must be a vreg")),
             };
             let lane = match b.call.args[2] {
                 Arg::Imm(i) => i as u32,
-                _ => bail!("ld1_lane lane must be imm"),
+                _ => return Err(SimTrap::bad_operand("ld1_lane lane must be imm")),
             };
             let vt = op.vt();
-            let dst = b.dst.context("ld1_lane without dst")?;
+            let dst = b.dst.ok_or_else(|| SimTrap::bad_operand("ld1_lane without dst"))?;
             let sew = Sew::of_bits(vt.elem.bits());
             // copy the source vector, then overwrite one lane
             for l in 0..vt.lanes as u32 {
@@ -93,11 +105,11 @@ pub(crate) fn exec_scalar_block(
             let (buf, idx) = resolve_mem(m, &b.call.args[0])?;
             let src = match b.call.args[1] {
                 Arg::V(r) => r,
-                _ => bail!("st1_lane src must be a vreg"),
+                _ => return Err(SimTrap::bad_operand("st1_lane src must be a vreg")),
             };
             let lane = match b.call.args[2] {
                 Arg::Imm(i) => i as u32,
-                _ => bail!("st1_lane lane must be imm"),
+                _ => return Err(SimTrap::bad_operand("st1_lane lane must be imm")),
             };
             let vt = op.vt();
             let sew = Sew::of_bits(vt.elem.bits());
@@ -115,11 +127,16 @@ pub(crate) fn exec_scalar_block(
                     (crate::neon::ops::ArgTy::V(vt), Arg::V(r)) => Value::V(read_neon(m, *r, *vt)),
                     (_, Arg::Imm(i)) => Value::Imm(*i),
                     (_, Arg::S(r)) => Value::Imm(m.sregs[*r as usize]),
-                    _ => bail!("scalar block: bad arg for {}", op.name()),
+                    _ => {
+                        return Err(SimTrap::bad_operand(format!(
+                            "scalar block: bad arg for {}",
+                            op.name()
+                        )))
+                    }
                 });
             }
             let r = eval_pure(op, &vals);
-            let dst = b.dst.context("scalar op without dst")?;
+            let dst = b.dst.ok_or_else(|| SimTrap::bad_operand("scalar op without dst"))?;
             write_neon(m, dst, &r);
             Ok(())
         }
@@ -141,9 +158,9 @@ fn write_neon(m: &mut RvvMachine, reg: u32, v: &VReg) {
     }
 }
 
-fn resolve_mem(m: &RvvMachine, a: &Arg) -> Result<(u32, i64)> {
+fn resolve_mem(m: &RvvMachine, a: &Arg) -> Result<(u32, i64), SimTrap> {
     match a {
         Arg::Mem { buf, index } => Ok((*buf, index.eval(&m.sregs))),
-        _ => bail!("expected memory operand"),
+        _ => Err(SimTrap::bad_operand("expected memory operand")),
     }
 }

@@ -1,0 +1,160 @@
+//! Fault-tolerance integration tests for the coordinator: a faulting or
+//! panicking job must never abort the matrix. Deterministic faults are
+//! driven by `FaultPlan` (fail job N on attempt M, panic in job K) and
+//! verified across both engines and thread counts {1, 4}.
+//!
+//! Injected panics unwind through the per-attempt `catch_unwind`
+//! backstop, so the default panic hook may print backtraces while these
+//! tests run — that output is cosmetic.
+
+use simde_rvv::coordinator::{
+    figure2_report_opts, run_matrix_report, EngineKind, FaultPlan, Job, MatrixOptions,
+    RetryPolicy,
+};
+use simde_rvv::kernels;
+use simde_rvv::sim::TrapKind;
+use simde_rvv::simde::Mode;
+
+/// A small all-healthy job list over cheap kernels.
+fn jobs(n: usize) -> Vec<Job> {
+    (0..n)
+        .map(|i| Job {
+            kernel: if i % 2 == 0 { "vrelu" } else { "vsqrt" },
+            mode: Mode::RvvCustom,
+            vlen: 128,
+        })
+        .collect()
+}
+
+#[test]
+fn panic_is_contained_on_both_engines_and_thread_counts() {
+    for engine in [EngineKind::Interp, EngineKind::Decoded] {
+        for threads in [1, 4] {
+            let opts = MatrixOptions::new(threads)
+                .engine(engine)
+                .retry(RetryPolicy::none())
+                .fault_plan(FaultPlan::new().panic_on(1, 1));
+            let report = run_matrix_report(jobs(4), opts);
+
+            assert_eq!(report.results.len(), 4);
+            assert!(report.results[1].is_none(), "panicked job has no result");
+            for i in [0, 2, 3] {
+                assert!(
+                    report.results[i].is_some(),
+                    "engine={engine:?} threads={threads}: healthy job {i} must survive"
+                );
+            }
+            assert_eq!(report.faults.len(), 1);
+            let f = &report.faults[0];
+            assert_eq!(f.index, 1);
+            assert_eq!(f.attempts, 1);
+            let trap = f.trap.as_ref().expect("panic becomes a structured trap");
+            assert!(
+                matches!(trap.kind, TrapKind::Panic(_)),
+                "engine={engine:?} threads={threads}: {:?}",
+                trap.kind
+            );
+            assert_eq!(trap.kind.label(), "panic");
+        }
+    }
+}
+
+#[test]
+fn transient_fault_recovers_on_retry() {
+    // job 0 traps on attempt 1 only; attempt 2 succeeds
+    let opts = MatrixOptions::new(2)
+        .retry(RetryPolicy { max_attempts: 2, interp_fallback: false })
+        .fault_plan(FaultPlan::new().fail(0, 1));
+    let report = run_matrix_report(jobs(3), opts);
+
+    assert!(report.ok(), "faults: {:?}", report.faults);
+    let r0 = report.results[0].as_ref().expect("retried job succeeds");
+    assert_eq!(r0.attempts, 2);
+    assert_eq!(r0.engine, EngineKind::Decoded);
+    assert_eq!(report.results[1].as_ref().map(|r| r.attempts), Some(1));
+}
+
+#[test]
+fn decoded_trap_falls_back_to_interp() {
+    // every decoded attempt of job 0 traps; the interp fallback succeeds
+    let opts = MatrixOptions::new(1)
+        .retry(RetryPolicy { max_attempts: 2, interp_fallback: true })
+        .fault_plan(FaultPlan::new().fail_engine(0, EngineKind::Decoded));
+    let report = run_matrix_report(jobs(2), opts);
+
+    assert!(report.ok(), "faults: {:?}", report.faults);
+    let r0 = report.results[0].as_ref().expect("fallback result");
+    assert_eq!(r0.engine, EngineKind::Interp, "degraded to the interpreter");
+    assert_eq!(r0.attempts, 3, "2 decoded attempts + 1 interp fallback");
+    // the fallback result is still the real simulation
+    let healthy = report.results[1].as_ref().unwrap();
+    assert!(r0.stats.total() > 0 && healthy.stats.total() > 0);
+}
+
+#[test]
+fn exhausted_retries_degrade_to_fault_record() {
+    // job 2 traps on every attempt and engine; everything else is healthy
+    let opts = MatrixOptions::new(4)
+        .retry(RetryPolicy { max_attempts: 2, interp_fallback: true })
+        .fault_plan(FaultPlan::new().fail_always(2));
+    let report = run_matrix_report(jobs(6), opts);
+
+    assert_eq!(report.faults.len(), 1);
+    let f = &report.faults[0];
+    assert_eq!(f.index, 2);
+    assert_eq!(f.attempts, 3, "2 decoded + 1 interp fallback, all injected");
+    assert_eq!(f.engine, EngineKind::Interp, "last attempt was the fallback");
+    let trap = f.trap.as_ref().expect("structured trap");
+    assert!(matches!(trap.kind, TrapKind::Injected(_)), "{:?}", trap.kind);
+    assert!(f.error.contains("injected") || f.error.contains("fault plan"), "{}", f.error);
+    for (i, r) in report.results.iter().enumerate() {
+        assert_eq!(r.is_some(), i != 2, "only job 2 may lack a result");
+    }
+}
+
+#[test]
+fn figure2_report_degrades_per_kernel_on_both_engines() {
+    // fail both halves of the first kernel's pair (jobs 0 and 1 are
+    // baseline+custom of kernels::NAMES[0]); every other kernel's row
+    // must still be produced
+    let first = kernels::NAMES[0];
+    for engine in [EngineKind::Interp, EngineKind::Decoded] {
+        let opts = MatrixOptions::new(4)
+            .engine(engine)
+            .retry(RetryPolicy::none())
+            .fault_plan(FaultPlan::new().fail_always(0).fail_always(1));
+        let fig = figure2_report_opts(128, opts);
+
+        assert_eq!(fig.vlen, 128);
+        assert_eq!(fig.failed, vec![first], "engine={engine:?}");
+        assert_eq!(
+            fig.rows.len(),
+            kernels::NAMES.len() - 1,
+            "engine={engine:?}: all healthy kernels keep their rows"
+        );
+        assert!(fig.rows.iter().all(|r| r.kernel != first));
+        assert!(fig.rows.iter().all(|r| r.speedup > 0.0));
+        assert_eq!(fig.faults.len(), 2, "one fault per failed half");
+        assert!(fig.faults.iter().all(|f| f.job.kernel == first));
+    }
+}
+
+#[test]
+fn strict_matrix_surfaces_fault_after_running_everything() {
+    // the legacy strict wrapper: first fault in job order becomes the
+    // error, but workers are joined and the fault is downcastable
+    let opts_err = run_matrix_report(
+        jobs(4),
+        MatrixOptions::new(2)
+            .retry(RetryPolicy::none())
+            .fault_plan(FaultPlan::new().panic_on(3, 1).fail_always(1)),
+    );
+    assert_eq!(opts_err.faults.len(), 2);
+    assert_eq!(opts_err.faults[0].index, 1, "faults sorted by job index");
+    assert_eq!(opts_err.faults[1].index, 3);
+    let err = opts_err.into_results().unwrap_err();
+    let f = err
+        .downcast_ref::<simde_rvv::coordinator::FaultRecord>()
+        .expect("first fault record");
+    assert_eq!(f.index, 1);
+}

@@ -7,12 +7,15 @@
 //! with the exact element count ("Ensure that we save the correct number
 //! of elements into memory").
 
-use simde_rvv::ir::{AddrExpr, Arg, ProgramBuilder};
+use simde_rvv::ir::{AddrExpr, Arg, BufDecl, BufKind, ProgramBuilder};
 use simde_rvv::neon::elem::Elem;
 use simde_rvv::neon::interp::{Buffer, Inputs};
 use simde_rvv::neon::ops::Family;
 use simde_rvv::rvv::machine::RvvConfig;
-use simde_rvv::sim::Simulator;
+use simde_rvv::rvv::ops::{Dst, MemRef, RvvInst, RvvKind, Src};
+use simde_rvv::rvv::program::{RStmt, RvvProgram};
+use simde_rvv::rvv::vtype::Sew;
+use simde_rvv::sim::{decode, Engine, SimTrap, Simulator, TrapKind};
 use simde_rvv::simde::{Mode, Translator};
 
 /// Two adjacent 4-element stores into one 12-element output buffer (the
@@ -98,6 +101,133 @@ fn buggy_store_at_buffer_end_faults() {
 
     let tr = Translator::new(Mode::Baseline, cfg).with_union_store_bug(true);
     let (rp, _) = tr.translate(&prog).unwrap();
-    let r = Simulator::new(&rp, cfg, &inputs).unwrap().run();
-    assert!(r.is_err(), "32-byte store into a 16-byte buffer must fault");
+    let err = Simulator::new(&rp, cfg, &inputs).unwrap().run().unwrap_err();
+
+    // the fault is a structured trap carrying the execution context, not
+    // a bare string: kind, kernel, engine and the offending instruction
+    let t = err.downcast_ref::<SimTrap>().expect("SimTrap behind the anyhow error");
+    assert!(
+        matches!(t.kind, TrapKind::OutOfBounds { store: true, .. }),
+        "expected an out-of-bounds store, got {:?}",
+        t.kind
+    );
+    assert_eq!(t.kind.label(), "out-of-bounds-store");
+    assert_eq!(t.engine, Some("interp"));
+    assert!(
+        t.kernel.as_deref().unwrap_or("").contains("end_store"),
+        "kernel context: {:?}",
+        t.kernel
+    );
+    assert!(t.pc.is_some(), "trap must carry a PC");
+    let inst = t.inst.as_deref().unwrap_or("");
+    assert!(inst.contains("vse"), "inst render: {inst}");
+}
+
+/// Hand-built straight-line program: `vle32` from X, then a `vse32` whose
+/// base element index pushes the store 8 bytes past O's end.
+fn oob_line_program() -> RvvProgram {
+    RvvProgram {
+        name: "oob_line".into(),
+        bufs: vec![
+            BufDecl { name: "X".into(), elem: Elem::I32, len: 4, kind: BufKind::Input },
+            BufDecl { name: "O".into(), elem: Elem::I32, len: 4, kind: BufKind::Output },
+        ],
+        body: vec![
+            RStmt::Op(RvvInst {
+                kind: RvvKind::Vle,
+                sew: Sew::E32,
+                vl: 4,
+                dst: Dst::V(0),
+                srcs: vec![],
+                mask: None,
+                mem: Some(MemRef { buf: 0, index: AddrExpr::k(0), stride: 1 }),
+            }),
+            RStmt::Op(RvvInst {
+                kind: RvvKind::Vse,
+                sew: Sew::E32,
+                vl: 4,
+                dst: Dst::None,
+                srcs: vec![Src::V(0)],
+                mask: None,
+                mem: Some(MemRef { buf: 1, index: AddrExpr::k(2), stride: 1 }),
+            }),
+        ],
+        n_vregs: 1,
+        n_mregs: 0,
+        n_sregs: 0,
+    }
+}
+
+#[test]
+fn oob_store_trap_reports_pc_and_inst_on_both_engines() {
+    let prog = oob_line_program();
+    let cfg = RvvConfig::new(128);
+    let mut inputs = Inputs::new();
+    inputs.insert("X".into(), Buffer::from_i32s(&[1, 2, 3, 4]));
+
+    // 16-byte store at byte 8 of a 16-byte buffer, from the second op
+    let want =
+        TrapKind::OutOfBounds { buf: 1, byte_off: 8, width: 16, len: 16, store: true };
+
+    let err = Simulator::new(&prog, cfg, &inputs).unwrap().run().unwrap_err();
+    let t = err.downcast_ref::<SimTrap>().expect("interp trap");
+    assert_eq!(t.kind, want);
+    assert_eq!(t.pc, Some(1), "second statement faults");
+    assert_eq!(t.engine, Some("interp"));
+    assert_eq!(t.kernel.as_deref(), Some("oob_line"));
+    assert!(t.inst.as_deref().unwrap_or("").contains("vse32"), "inst: {:?}", t.inst);
+
+    let dec = decode(&prog);
+    let err = Engine::new(&prog, &dec, cfg, &inputs).unwrap().run().unwrap_err();
+    let t = err.downcast_ref::<SimTrap>().expect("decoded trap");
+    assert_eq!(t.kind, want);
+    assert_eq!(t.pc, Some(1), "straight-line decoded stream maps 1:1");
+    assert_eq!(t.engine, Some("decoded"));
+    assert_eq!(t.kernel.as_deref(), Some("oob_line"));
+    assert!(t.inst.as_deref().unwrap_or("").contains("vse32"), "inst: {:?}", t.inst);
+}
+
+#[test]
+fn illegal_operand_program_traps_on_both_engines() {
+    // vfadd at e8: no float element type of that width — an illegal
+    // instruction, raised identically by both engines at pc 0
+    let prog = RvvProgram {
+        name: "e8_float".into(),
+        bufs: vec![],
+        body: vec![RStmt::Op(RvvInst {
+            kind: RvvKind::Vfadd,
+            sew: Sew::E8,
+            vl: 4,
+            dst: Dst::V(2),
+            srcs: vec![Src::V(0), Src::V(1)],
+            mask: None,
+            mem: None,
+        })],
+        n_vregs: 3,
+        n_mregs: 0,
+        n_sregs: 0,
+    };
+    let cfg = RvvConfig::new(128);
+
+    let err = Simulator::new(&prog, cfg, &Inputs::new()).unwrap().run().unwrap_err();
+    let t = err.downcast_ref::<SimTrap>().expect("interp trap");
+    assert!(
+        matches!(t.kind, TrapKind::IllegalInstruction(_)),
+        "expected illegal-instruction, got {:?}",
+        t.kind
+    );
+    assert_eq!(t.pc, Some(0));
+    assert_eq!(t.engine, Some("interp"));
+    assert_eq!(t.kernel.as_deref(), Some("e8_float"));
+
+    let dec = decode(&prog);
+    let err = Engine::new(&prog, &dec, cfg, &Inputs::new()).unwrap().run().unwrap_err();
+    let t = err.downcast_ref::<SimTrap>().expect("decoded trap");
+    assert!(
+        matches!(t.kind, TrapKind::IllegalInstruction(_)),
+        "expected illegal-instruction, got {:?}",
+        t.kind
+    );
+    assert_eq!(t.pc, Some(0));
+    assert_eq!(t.engine, Some("decoded"));
 }
