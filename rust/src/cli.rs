@@ -57,6 +57,12 @@ impl Args {
         self.bools.iter().any(|b| b == key)
     }
 
+    /// Comma-separated string list flag; `None` when the flag is absent.
+    pub fn get_str_list(&self, key: &str) -> Option<Vec<&str>> {
+        self.get(key)
+            .map(|v| v.split(',').map(str::trim).filter(|s| !s.is_empty()).collect())
+    }
+
     /// Comma-separated u32 list flag.
     pub fn get_u32_list(&self, key: &str, default: &[u32]) -> Result<Vec<u32>> {
         match self.get(key) {
@@ -85,6 +91,13 @@ mod tests {
         assert_eq!(a.get("vlen"), Some("256"));
         assert!(a.has("verbose"));
         assert_eq!(a.positional, vec!["fig2"]);
+    }
+
+    #[test]
+    fn str_list() {
+        let a = parse("tune --kernel vrelu,gemm, vsqrt");
+        assert_eq!(a.get_str_list("kernel"), Some(vec!["vrelu", "gemm"]));
+        assert_eq!(parse("tune").get_str_list("kernel"), None);
     }
 
     #[test]

@@ -7,16 +7,18 @@
 //! # Translation + decode cache
 //!
 //! Translating a kernel and decoding it for the pre-decoded engine is a
-//! pure function of `(kernel, mode, vlen)` for the suite's default shapes
-//! (the only shapes reachable through [`kernels::by_name`]). The
-//! coordinator therefore memoises the `(RvvProgram, DecodedProgram)` pair
-//! in a process-wide [`TranslationCache`] of `Arc`-shared
-//! [`CachedProgram`]s: `run_matrix`, `figure2`, and the vlen-sweep benches
-//! translate each program once and every subsequent job — from any worker
-//! thread — reuses the decoded artifact. Custom-shaped cases (e.g.
-//! `kernels::suite_small()`) bypass the cache by construction, since the
-//! cache key is the kernel *name* and their programs differ from the
-//! default shapes.
+//! pure function of the program's shape, the mode and the vlen. The
+//! coordinator memoises the `(RvvProgram, DecodedProgram)` pair in a
+//! process-wide [`TranslationCache`] of `Arc`-shared [`CachedProgram`]s
+//! keyed on `(kernel, mode, vlen, shape fingerprint)` — see
+//! [`crate::ir::Program::fingerprint`]. The fingerprint makes the key
+//! sound for *any* program shape, so custom-shaped sweeps (e.g.
+//! `kernels::suite_small()`) and tuner candidate runs are cacheable, not
+//! just the default `kernels::by_name` shapes: same-shape jobs share one
+//! translation, while differently-shaped programs carrying the same
+//! kernel name can never collide. Jobs running with a tuning database
+//! ([`MatrixOptions::tuning`]) bypass the cache instead — a tuned RVV
+//! stream differs from the static-rule stream under the same key.
 //!
 //! # Engines
 //!
@@ -38,8 +40,10 @@
 //! 2. **Panic backstop** — each job attempt runs under
 //!    `std::panic::catch_unwind`; a residual panic (simulator bug, bad
 //!    register index) becomes a [`TrapKind::Panic`] record instead of a
-//!    dead worker. Injected panics still print through the default panic
-//!    hook, so test output may carry backtraces — that is cosmetic.
+//!    dead worker. Matrix runs and tuner searches install a scoped
+//!    [`quiet_panics`] guard around the backstop, so contained panics do
+//!    not spam backtraces; the previous hook is restored when the
+//!    outermost guard drops.
 //! 3. **Retries + degradation** — a [`RetryPolicy`] re-runs failed
 //!    attempts, optionally falling back from the decoded engine to the
 //!    interpreter (identical semantics, independent code path). A job
@@ -74,11 +78,13 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::kernels::{self, KernelCase};
+use crate::neon::interp::{Buffer, Inputs};
 use crate::rvv::machine::RvvConfig;
 use crate::rvv::program::RvvProgram;
 use crate::rvv::trap::SimTrap;
 use crate::sim::{decode, DecodedProgram, Engine, SimStats, Simulator};
 use crate::simde::{Mode, Translator};
+use crate::tuner::db::TuningDb;
 
 /// Lock a mutex, recovering the guard if a previous holder panicked.
 ///
@@ -88,6 +94,58 @@ use crate::simde::{Mode, Translator};
 /// turn a single contained panic into a process-wide outage.
 fn lock_ignore_poison<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+type PrevHook = Box<dyn Fn(&std::panic::PanicHookInfo<'_>) + Send + Sync + 'static>;
+
+/// Refcounted process-global state behind [`quiet_panics`]: the panic
+/// hook is process-wide, so nested/concurrent guards must share one
+/// depth counter and only the outermost transition touches the hook.
+#[derive(Default)]
+struct QuietHookState {
+    depth: usize,
+    prev: Option<PrevHook>,
+}
+
+fn quiet_hook_state() -> &'static Mutex<QuietHookState> {
+    static STATE: OnceLock<Mutex<QuietHookState>> = OnceLock::new();
+    STATE.get_or_init(|| Mutex::new(QuietHookState::default()))
+}
+
+/// RAII guard from [`quiet_panics`]; dropping the outermost guard
+/// restores the previous panic hook.
+pub struct QuietPanicGuard(());
+
+/// Silence the panic hook for the lifetime of the returned guard.
+///
+/// The per-attempt `catch_unwind` backstop contains panics, but the
+/// default hook still prints a message + backtrace for each one — noise
+/// that drowns real output during tuner searches (where a panicking
+/// candidate is an *expected*, scored-out outcome) and fault-injection
+/// tests. Guards nest and may overlap across threads: a shared refcount
+/// ensures the hook is swapped once on the first guard and restored when
+/// the last one drops. Panic *propagation* is untouched — only the
+/// printing side effect is suppressed.
+pub fn quiet_panics() -> QuietPanicGuard {
+    let mut st = lock_ignore_poison(quiet_hook_state());
+    if st.depth == 0 {
+        st.prev = Some(std::panic::take_hook());
+        std::panic::set_hook(Box::new(|_| {}));
+    }
+    st.depth += 1;
+    QuietPanicGuard(())
+}
+
+impl Drop for QuietPanicGuard {
+    fn drop(&mut self) {
+        let mut st = lock_ignore_poison(quiet_hook_state());
+        st.depth -= 1;
+        if st.depth == 0 {
+            if let Some(prev) = st.prev.take() {
+                std::panic::set_hook(prev);
+            }
+        }
+    }
 }
 
 /// One unit of work.
@@ -138,11 +196,13 @@ pub struct CachedProgram {
 }
 
 /// Process-wide memo of translation + decode results keyed on
-/// (kernel, mode, vlen). Valid only for the suite's default shapes —
-/// the `by_name` path — because the key carries no shape information.
+/// (kernel, mode, vlen, shape fingerprint). The fingerprint
+/// ([`crate::ir::Program::fingerprint`]) covers the program's full
+/// structure, so the key is valid for any shape — default suite shapes
+/// and custom-shaped sweeps alike.
 #[derive(Default)]
 pub struct TranslationCache {
-    map: Mutex<HashMap<(&'static str, Mode, u32), Arc<CachedProgram>>>,
+    map: Mutex<HashMap<(&'static str, Mode, u32, u64), Arc<CachedProgram>>>,
 }
 
 impl TranslationCache {
@@ -158,7 +218,7 @@ impl TranslationCache {
     /// never a wrong result. Locks recover from poisoning (a worker that
     /// panicked while reading the map cannot have torn an entry).
     pub fn get_or_translate(&self, case: &KernelCase, job: &Job) -> Result<Arc<CachedProgram>> {
-        let key = (job.kernel, job.mode, job.vlen);
+        let key = (job.kernel, job.mode, job.vlen, case.prog.fingerprint());
         if let Some(hit) = lock_ignore_poison(&self.map).get(&key) {
             return Ok(Arc::clone(hit));
         }
@@ -195,17 +255,44 @@ pub fn run_job(job: &Job) -> Result<JobResult> {
 /// every time (the pre-PR behaviour); `Decoded` goes through the shared
 /// translation cache.
 pub fn run_job_engine(job: &Job, engine: EngineKind) -> Result<JobResult> {
+    run_job_engine_opts(job, engine, None)
+}
+
+/// [`run_job_engine`] with an optional tuning database. When a database
+/// is supplied the translator consults it for a tuned lowering
+/// (falling back to the static rules per entry), and the job bypasses
+/// the shared translation cache: a tuned RVV stream differs from the
+/// static-rule stream that an untuned job would cache under the same
+/// (kernel, mode, vlen, fingerprint) key.
+pub fn run_job_engine_opts(
+    job: &Job,
+    engine: EngineKind,
+    tuning: Option<&Arc<TuningDb>>,
+) -> Result<JobResult> {
     let case = kernels::by_name(job.kernel)
         .with_context(|| format!("unknown kernel '{}'", job.kernel))?;
     let cfg = RvvConfig::new(job.vlen);
+    let translator = || {
+        let tr = Translator::new(job.mode, cfg);
+        match tuning {
+            Some(db) => tr.with_tuning(Arc::clone(db)),
+            None => tr,
+        }
+    };
     let t0 = Instant::now();
-    let stats = match engine {
-        EngineKind::Interp => {
-            let (rp, _) = Translator::new(job.mode, cfg).translate(&case.prog)?;
+    let stats = match (engine, tuning) {
+        (EngineKind::Interp, _) => {
+            let (rp, _) = translator().translate(&case.prog)?;
             let (_, stats) = Simulator::new(&rp, cfg, &case.inputs)?.run()?;
             stats
         }
-        EngineKind::Decoded => {
+        (EngineKind::Decoded, Some(_)) => {
+            let (rp, _) = translator().translate(&case.prog)?;
+            let dec = decode(&rp);
+            let (_, stats) = Engine::new(&rp, &dec, cfg, &case.inputs)?.run()?;
+            stats
+        }
+        (EngineKind::Decoded, None) => {
             let cached = translation_cache().get_or_translate(&case, job)?;
             let (_, stats) = Engine::new(&cached.rvv, &cached.decoded, cfg, &case.inputs)?.run()?;
             stats
@@ -336,6 +423,9 @@ pub struct MatrixOptions {
     pub engine: EngineKind,
     pub retry: RetryPolicy,
     pub fault_plan: Option<Arc<FaultPlan>>,
+    /// Tuning database consulted during lowering; jobs bypass the
+    /// translation cache when set (see [`run_job_engine_opts`]).
+    pub tuning: Option<Arc<TuningDb>>,
 }
 
 impl MatrixOptions {
@@ -346,6 +436,7 @@ impl MatrixOptions {
             engine: EngineKind::Decoded,
             retry: RetryPolicy::default(),
             fault_plan: None,
+            tuning: None,
         }
     }
 
@@ -361,6 +452,11 @@ impl MatrixOptions {
 
     pub fn fault_plan(mut self, plan: FaultPlan) -> MatrixOptions {
         self.fault_plan = Some(Arc::new(plan));
+        self
+    }
+
+    pub fn tuning(mut self, db: Arc<TuningDb>) -> MatrixOptions {
+        self.tuning = Some(db);
         self
     }
 }
@@ -453,6 +549,7 @@ fn run_with_recovery(
     retry: RetryPolicy,
     primary: EngineKind,
     plan: Option<&FaultPlan>,
+    tuning: Option<&Arc<TuningDb>>,
 ) -> Result<JobResult, FaultRecord> {
     let mut schedule = vec![primary; retry.max_attempts.max(1) as usize];
     if retry.interp_fallback && primary == EngineKind::Decoded {
@@ -477,7 +574,7 @@ fn run_with_recovery(
                     }
                 }
             }
-            run_job_engine(job, eng)
+            run_job_engine_opts(job, eng, tuning)
         }));
         match outcome {
             Ok(Ok(mut jr)) => {
@@ -511,11 +608,90 @@ fn run_with_recovery(
     })
 }
 
+/// Result of one prepared-program run: output buffers (for bit-identity
+/// checks) plus the scoring signals. Unlike [`JobResult`] this keeps the
+/// outputs, which the tuner compares against the static-rule reference.
+#[derive(Debug)]
+pub struct PreparedOutcome {
+    pub outputs: HashMap<String, Buffer>,
+    pub stats: SimStats,
+    pub wall: Duration,
+    pub attempts: u32,
+    pub engine: EngineKind,
+}
+
+/// Run an already translated + decoded program through the same recovery
+/// ladder as the matrix jobs: per-attempt `catch_unwind` backstop,
+/// retries on the decoded engine, optional interp fallback, degradation
+/// to a [`FaultRecord`]. This is the tuner's execution primitive — a
+/// candidate lowering is an arbitrary RVV program that may trap or
+/// panic, and a broken candidate must score out of the search, not abort
+/// it. `job` provides the fault-record context (kernel, mode, vlen);
+/// `idx` is the caller's candidate index.
+// the Err carries full fault context, built once per failed candidate
+#[allow(clippy::result_large_err)]
+pub fn run_prepared_with_recovery(
+    idx: usize,
+    job: &Job,
+    prog: &CachedProgram,
+    inputs: &Inputs,
+    retry: RetryPolicy,
+) -> Result<PreparedOutcome, FaultRecord> {
+    let cfg = RvvConfig::new(job.vlen);
+    let mut schedule = vec![EngineKind::Decoded; retry.max_attempts.max(1) as usize];
+    if retry.interp_fallback {
+        schedule.push(EngineKind::Interp);
+    }
+    let mut last: Option<(anyhow::Error, EngineKind)> = None;
+    for (i, &eng) in schedule.iter().enumerate() {
+        let attempt = (i + 1) as u32;
+        let t0 = Instant::now();
+        let outcome = catch_unwind(AssertUnwindSafe(|| match eng {
+            EngineKind::Interp => Simulator::new(&prog.rvv, cfg, inputs)?.run(),
+            EngineKind::Decoded => Engine::new(&prog.rvv, &prog.decoded, cfg, inputs)?.run(),
+        }));
+        match outcome {
+            Ok(Ok((outputs, stats))) => {
+                return Ok(PreparedOutcome {
+                    outputs,
+                    stats,
+                    wall: t0.elapsed(),
+                    attempts: attempt,
+                    engine: eng,
+                });
+            }
+            Ok(Err(e)) => last = Some((e, eng)),
+            Err(payload) => {
+                let trap = SimTrap::panicked(panic_message(payload))
+                    .in_kernel(job.kernel)
+                    .on_engine(eng.label());
+                last = Some((anyhow::Error::new(trap), eng));
+            }
+        }
+    }
+    let attempts = schedule.len() as u32;
+    let (error, engine) = match last {
+        Some(l) => l,
+        // unreachable: the schedule always has at least one attempt
+        None => (anyhow::anyhow!("no attempt executed"), EngineKind::Decoded),
+    };
+    let trap = error.downcast_ref::<SimTrap>().cloned();
+    Err(FaultRecord {
+        index: idx,
+        job: job.clone(),
+        attempts,
+        engine,
+        error: format!("{error:#}"),
+        trap,
+    })
+}
+
 /// Fault-tolerant matrix run: every job is attempted under the recovery
 /// ladder, workers stay alive through failures and keep draining the
 /// queue, and the report carries partial results plus fault records.
 /// Never fails as a whole — degradation is per job.
 pub fn run_matrix_report(jobs: Vec<Job>, opts: MatrixOptions) -> MatrixReport {
+    let _quiet = quiet_panics();
     let n = jobs.len();
     let job_table = jobs.clone();
     let queue: Arc<Mutex<VecDeque<(usize, Job)>>> =
@@ -527,12 +703,20 @@ pub fn run_matrix_report(jobs: Vec<Job>, opts: MatrixOptions) -> MatrixReport {
             let queue = Arc::clone(&queue);
             let tx = tx.clone();
             let plan = opts.fault_plan.clone();
+            let tuning = opts.tuning.clone();
             let (retry, engine) = (opts.retry, opts.engine);
             std::thread::spawn(move || loop {
                 let next = lock_ignore_poison(&queue).pop_front();
                 match next {
                     Some((idx, job)) => {
-                        let r = run_with_recovery(idx, &job, retry, engine, plan.as_deref());
+                        let r = run_with_recovery(
+                            idx,
+                            &job,
+                            retry,
+                            engine,
+                            plan.as_deref(),
+                            tuning.as_ref(),
+                        );
                         if tx.send((idx, r)).is_err() {
                             return;
                         }

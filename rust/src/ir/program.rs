@@ -167,6 +167,116 @@ impl Program {
         c
     }
 
+    /// Structural shape fingerprint: a stable 64-bit FNV-1a hash over the
+    /// program's name, buffer declarations, register counts and the full
+    /// statement tree (ops, operands, address expressions, loop bounds).
+    ///
+    /// Two programs share a fingerprint iff they are structurally
+    /// identical, so `(kernel, mode, vlen, fingerprint)` is a sound
+    /// translation-cache key even for custom-shaped sweeps, and a tuning
+    /// database entry can detect that the kernel it was tuned for has
+    /// since changed shape. Buffer *contents* are deliberately excluded —
+    /// translation depends only on shape.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = Fnv::new();
+        h.str(&self.name);
+        h.u64(self.bufs.len() as u64);
+        for b in &self.bufs {
+            h.str(&b.name);
+            h.str(&format!("{:?}", b.elem));
+            h.u64(b.len as u64);
+            h.u64(match b.kind {
+                BufKind::Input => 0,
+                BufKind::Output => 1,
+                BufKind::Scratch => 2,
+            });
+        }
+        h.u64(self.n_vregs as u64);
+        h.u64(self.n_sregs as u64);
+        fn addr(h: &mut Fnv, e: &AddrExpr) {
+            match e {
+                AddrExpr::Const(v) => {
+                    h.u64(0x10);
+                    h.i64(*v);
+                }
+                AddrExpr::SReg(r) => {
+                    h.u64(0x11);
+                    h.u64(*r as u64);
+                }
+                AddrExpr::Add(a, b) => {
+                    h.u64(0x12);
+                    addr(h, a);
+                    addr(h, b);
+                }
+                AddrExpr::Mul(a, k) => {
+                    h.u64(0x13);
+                    addr(h, a);
+                    h.i64(*k);
+                }
+            }
+        }
+        fn call(h: &mut Fnv, c: &NeonCall) {
+            h.str(c.op.name());
+            h.u64(c.args.len() as u64);
+            for a in &c.args {
+                match a {
+                    Arg::V(r) => {
+                        h.u64(0x20);
+                        h.u64(*r as u64);
+                    }
+                    Arg::S(r) => {
+                        h.u64(0x21);
+                        h.u64(*r as u64);
+                    }
+                    Arg::Imm(v) => {
+                        h.u64(0x22);
+                        h.i64(*v);
+                    }
+                    Arg::ImmF(v) => {
+                        h.u64(0x23);
+                        h.u64(v.to_bits());
+                    }
+                    Arg::Mem { buf, index } => {
+                        h.u64(0x24);
+                        h.u64(*buf as u64);
+                        addr(h, index);
+                    }
+                }
+            }
+        }
+        fn walk(h: &mut Fnv, stmts: &[Stmt]) {
+            h.u64(stmts.len() as u64);
+            for s in stmts {
+                match s {
+                    Stmt::VOp { dst, call: c } => {
+                        h.u64(0x30);
+                        h.u64(*dst as u64);
+                        call(h, c);
+                    }
+                    Stmt::VStore { call: c } => {
+                        h.u64(0x31);
+                        call(h, c);
+                    }
+                    Stmt::SSet { dst, expr } => {
+                        h.u64(0x32);
+                        h.u64(*dst as u64);
+                        addr(h, expr);
+                    }
+                    Stmt::Loop { ivar, start, end, step, body } => {
+                        h.u64(0x33);
+                        h.u64(*ivar as u64);
+                        h.i64(*start);
+                        h.i64(*end);
+                        h.i64(*step);
+                        walk(h, body);
+                    }
+                }
+            }
+        }
+        walk(&mut h, &self.body);
+        h.0
+    }
+
     /// Every distinct NEON op used by the program (the "migration surface"
     /// a SIMDe port must cover).
     pub fn used_ops(&self) -> Vec<NeonOp> {
@@ -187,6 +297,39 @@ impl Program {
     }
 }
 
+/// Minimal FNV-1a 64-bit hasher (no std `Hasher` ceremony: the digest
+/// must be stable across runs and platforms, which `DefaultHasher` does
+/// not guarantee).
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn byte(&mut self, b: u8) {
+        self.0 ^= b as u64;
+        self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+
+    fn u64(&mut self, v: u64) {
+        for b in v.to_le_bytes() {
+            self.byte(b);
+        }
+    }
+
+    fn i64(&mut self, v: i64) {
+        self.u64(v as u64);
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        for b in s.bytes() {
+            self.byte(b);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -198,5 +341,28 @@ mod tests {
         assert_eq!(e.eval(&[2, 1]), 39);
         assert_eq!(e.eval(&[0, 0]), 3);
         assert!(e.op_count() >= 3);
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_shape_sensitive() {
+        let mk = |len: usize| Program {
+            name: "fp".to_string(),
+            bufs: vec![BufDecl {
+                name: "x".to_string(),
+                elem: Elem::F32,
+                len,
+                kind: BufKind::Input,
+            }],
+            body: vec![Stmt::Loop { ivar: 0, start: 0, end: len as i64, step: 4, body: vec![] }],
+            n_vregs: 2,
+            n_sregs: 1,
+        };
+        let a = mk(16);
+        // deterministic across calls
+        assert_eq!(a.fingerprint(), a.fingerprint());
+        // identical shape => identical digest
+        assert_eq!(a.fingerprint(), mk(16).fingerprint());
+        // different shape => different digest
+        assert_ne!(a.fingerprint(), mk(32).fingerprint());
     }
 }

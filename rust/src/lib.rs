@@ -18,6 +18,8 @@
 //! - [`kernels`] — the 10 XNNPACK benchmark kernels in NEON IR (Figure 2);
 //! - [`runtime`] — the JAX/XLA golden oracle loaded via PJRT;
 //! - [`coordinator`] — the migration/benchmark pipeline;
+//! - [`tuner`] — the lowering autotuner: candidate enumeration, search,
+//!   and the persistent tuning database;
 //! - [`report`] — Table 1 / Table 2 / Figure 2 emitters.
 
 pub mod benchlib;
@@ -33,6 +35,7 @@ pub mod report;
 pub mod runtime;
 pub mod simde;
 pub mod testutil;
+pub mod tuner;
 
 /// Crate version string.
 pub fn version() -> &'static str {

@@ -2,15 +2,21 @@
 //!
 //! Subcommands:
 //!   report table1|table2|methods      regenerate the paper's tables
-//!   bench [--vlen N] [--threads N]    Figure 2 speedup table
+//!   bench [--vlen N] [--threads N] [--tuned] [--db TUNED.json]
+//!                                     Figure 2 speedup table (optionally
+//!                                     replaying tuned lowerings)
 //!   verify [--kernel K] [--artifacts DIR] [--no-golden]
 //!                                     validate both modes vs NEON + XLA
 //!   translate --kernel K [--mode baseline|custom]
 //!                                     dump the translated RVV stream
+//!   tune [--vlens 128,...] [--kernel K] [--mode M] [--budget N]
+//!        [--out TUNED.json] [--smoke] search candidate lowerings, persist
+//!                                     winners to the tuning database
 //!   sweep [--vlens 128,256,512]       VLA scaling ablation (A1)
 //!   catalog [--grep PAT]              dump the NEON intrinsic catalog
 
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
@@ -23,6 +29,7 @@ use simde_rvv::report;
 use simde_rvv::runtime::GoldenOracle;
 use simde_rvv::rvv::machine::RvvConfig;
 use simde_rvv::simde::{Mode, Translator};
+use simde_rvv::tuner::{self, db::TuningDb, TunerOptions};
 
 fn main() {
     if let Err(e) = run() {
@@ -51,12 +58,13 @@ fn run() -> Result<()> {
         Some("bench") => bench_cmd(&args),
         Some("verify") => verify_cmd(&args),
         Some("translate") => translate_cmd(&args),
+        Some("tune") => tune_cmd(&args),
         Some("sweep") => sweep_cmd(&args),
         Some("catalog") => catalog_cmd(&args),
-        Some(other) => bail!("unknown subcommand '{other}' (try: report/bench/verify/translate/sweep/catalog)"),
+        Some(other) => bail!("unknown subcommand '{other}' (try: report/bench/verify/translate/tune/sweep/catalog)"),
         None => {
             println!("simde-rvv {} — SIMD Everywhere NEON->RVV migration pipeline", simde_rvv::version());
-            println!("subcommands: report bench verify translate sweep catalog");
+            println!("subcommands: report bench verify translate tune sweep catalog");
             Ok(())
         }
     }
@@ -81,7 +89,13 @@ fn bench_cmd(args: &Args) -> Result<()> {
     let s = settings(args)?;
     // fault-tolerant path: one bad kernel degrades to an annotated row
     // gap instead of losing the whole table
-    let fig = coordinator::figure2_report(s.vlen, s.threads);
+    let mut opts = coordinator::MatrixOptions::new(s.threads);
+    if args.has("tuned") {
+        let path = args.get("db").unwrap_or("TUNED.json");
+        let db = TuningDb::load(Path::new(path))?;
+        opts = opts.tuning(Arc::new(db));
+    }
+    let fig = coordinator::figure2_report_opts(s.vlen, opts);
     if args.has("csv") {
         print!("{}", report::fig2_csv(&fig.rows));
     } else {
@@ -136,16 +150,54 @@ fn translate_cmd(args: &Args) -> Result<()> {
     let s = settings(args)?;
     let k = args.get("kernel").context("--kernel required")?;
     let case = kernels::by_name(k).with_context(|| format!("unknown kernel '{k}'"))?;
-    let mode = match args.get("mode").unwrap_or("custom") {
-        "baseline" => Mode::Baseline,
-        "custom" | "rvv-custom" => Mode::RvvCustom,
-        other => bail!("bad --mode '{other}'"),
-    };
+    let mode_name = args.get("mode").unwrap_or("custom");
+    let mode = Mode::parse(mode_name)
+        .with_context(|| format!("bad --mode '{mode_name}' (baseline|custom)"))?;
     let tr = Translator::new(mode, RvvConfig::new(s.vlen));
     let (rp, rep) = tr.translate(&case.prog)?;
     println!("; {} translated with mode={} vlen={}", case.name, mode.name(), s.vlen);
     println!("; {} static RVV ops, methods: {:?}", rp.static_ops(), rep.count_by_method());
     print!("{}", rp.disasm());
+    Ok(())
+}
+
+fn tune_cmd(args: &Args) -> Result<()> {
+    let s = settings(args)?;
+    let mut opts = if args.has("smoke") {
+        // CI-sized search: one kernel, minimal candidate budget
+        TunerOptions::smoke(s.vlen)
+    } else {
+        TunerOptions { vlens: args.get_u32_list("vlens", &[s.vlen])?, ..TunerOptions::default() }
+    };
+    if !args.has("smoke") {
+        if let Some(ks) = args.get_str_list("kernel") {
+            // kernels are keyed by 'static names; map through the suite list
+            let mut names = Vec::new();
+            for k in ks {
+                let name = kernels::NAMES
+                    .iter()
+                    .copied()
+                    .find(|n| *n == k)
+                    .with_context(|| format!("unknown kernel '{k}'"))?;
+                names.push(name);
+            }
+            opts.kernels = names;
+        }
+        if let Some(m) = args.get("mode") {
+            let mode =
+                Mode::parse(m).with_context(|| format!("bad --mode '{m}' (baseline|custom)"))?;
+            opts.modes = vec![mode];
+        }
+        opts.max_candidates = args.get_usize("budget", opts.max_candidates)?;
+    }
+    let out = tuner::tune(&opts)?;
+    print!("{}", report::tune_markdown(&out));
+    for f in &out.faults {
+        eprintln!("warning: candidate scored out by fault: {f}");
+    }
+    let path = Path::new(args.get("out").unwrap_or("TUNED.json"));
+    out.db.save(path)?;
+    println!("\ntuning database written to {}", path.display());
     Ok(())
 }
 

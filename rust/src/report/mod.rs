@@ -102,6 +102,50 @@ pub fn fig2_csv(rows: &[Fig2Row]) -> String {
     s
 }
 
+/// Autotuner search summary: one row per tuned point, static score vs
+/// winner score, plus the scored-out candidate tally.
+pub fn tune_markdown(out: &crate::tuner::TuneOutcome) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "## Lowering autotuner — search results\n");
+    let _ = writeln!(s, "| kernel | mode | vlen | static insts | winner | winner insts | delta |");
+    let _ = writeln!(s, "|---|---|---:|---:|---|---:|---:|");
+    for e in &out.db.entries {
+        let stat = e.static_score().map_or(0, |c| c.dyn_insts);
+        let win = e.winner_score().map_or(0, |c| c.dyn_insts);
+        let delta = if stat > 0 {
+            format!("{:+.1}%", (win as f64 - stat as f64) / stat as f64 * 100.0)
+        } else {
+            "-".to_string()
+        };
+        let _ = writeln!(
+            s,
+            "| {} | {} | {} | {} | {} | {} | {} |",
+            e.kernel,
+            e.mode.name(),
+            e.vlen,
+            stat,
+            e.winner,
+            win,
+            delta
+        );
+    }
+    let scored_out: usize = out
+        .db
+        .entries
+        .iter()
+        .map(|e| e.candidates.iter().filter(|c| !c.ok).count())
+        .sum();
+    let _ = writeln!(
+        s,
+        "\n{} of {} points improved over the static rule; {} candidate(s) scored out; {} runtime fault(s)",
+        out.improved,
+        out.db.entries.len(),
+        scored_out,
+        out.faults.len()
+    );
+    s
+}
+
 /// §3.3 conversion-method histogram over the implemented surface.
 pub fn methods_markdown(cfg: RvvConfig) -> String {
     let hist = registry::method_histogram(cfg);
@@ -170,6 +214,43 @@ mod tests {
         assert!(md.contains("| gemm | 200 | 100 | 2.00x |"));
         assert!(md.contains("failed kernels (no row): vrelu"));
         assert!(md.contains("injected"));
+    }
+
+    #[test]
+    fn tune_report_formats() {
+        use crate::simde::Mode;
+        use crate::tuner::db::{CandidateScore, TunedEntry, TuningDb};
+        use crate::tuner::TuneOutcome;
+        let score = |id: &str, ok: bool, dyn_insts: u64| CandidateScore {
+            id: id.into(),
+            ok,
+            dyn_insts,
+            wall_ns: 10,
+            error: if ok { String::new() } else { "nope".into() },
+        };
+        let out = TuneOutcome {
+            db: TuningDb {
+                entries: vec![TunedEntry {
+                    kernel: "vrelu".into(),
+                    mode: Mode::RvvCustom,
+                    vlen: 512,
+                    fingerprint: 7,
+                    engine: "decoded".into(),
+                    winner: "widen:4".into(),
+                    candidates: vec![
+                        score("static", true, 1000),
+                        score("widen:4", true, 400),
+                        score("widen:8", false, 0),
+                    ],
+                }],
+            },
+            faults: vec![],
+            improved: 1,
+        };
+        let md = tune_markdown(&out);
+        assert!(md.contains("| vrelu | rvv-custom | 512 | 1000 | widen:4 | 400 | -60.0% |"), "{md}");
+        assert!(md.contains("1 of 1 points improved"), "{md}");
+        assert!(md.contains("1 candidate(s) scored out"), "{md}");
     }
 
     #[test]

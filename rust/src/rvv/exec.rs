@@ -814,9 +814,11 @@ fn gather(
 /// compares) run as one bulk gather per operand + one tight compute loop
 /// + one bulk scatter over the contiguous vreg bytes, instead of the
 /// interpreter's per-lane `read_lane`/`write_lane` round-trips (8-byte
-/// copy + operand `match` per element per operand). Everything else —
-/// memory ops (already bulk for unit-stride), masked ops, permutes,
-/// reductions, widening/narrowing — falls back to [`exec`].
+/// copy + operand `match` per element per operand). Unmasked reductions
+/// bulk-gather the source vector once and fold it with the interpreter's
+/// exact accumulator semantics. Everything else — memory ops (already
+/// bulk for unit-stride), masked ops, permutes, widening/narrowing —
+/// falls back to [`exec`].
 ///
 /// Results are bit-identical to [`exec`] for every instruction (the
 /// engine-vs-interpreter differential test enforces this across the whole
@@ -885,6 +887,60 @@ pub fn exec_batched(
                 Vmsgtu => cmp2!(|x, y| elem::to_u64(ue, x) > elem::to_u64(ue, y)),
                 _ => trap!(unsupported, "unexpected int compare {k:?}"),
             }
+        }
+        return Ok(());
+    }
+
+    // reductions: one bulk gather of the source vector + a scalar fold,
+    // replicating the interpreter's accumulator semantics exactly (f64
+    // accumulator for float kinds, dual signed/unsigned accumulators for
+    // int kinds), then a single lane-0 write. Masked reductions took the
+    // per-lane fallback above.
+    if matches!(k, Vredsum | Vredmax | Vredmaxu | Vredmin | Vredminu | Vfredusum | Vfredmax | Vfredmin) {
+        let Dst::V(dst) = inst.dst else {
+            trap!(bad_operand, "reduction {k:?} without vreg dst");
+        };
+        let (Some(&Src::V(vs2)), Some(&Src::V(vs1))) = (inst.srcs.first(), inst.srcs.get(1))
+        else {
+            trap!(bad_operand, "reduction {k:?} needs two vreg srcs");
+        };
+        m.read_lanes_into(vs2, sew, vl, &mut scratch.a);
+        let init = m.read_lane(vs1, sew, 0);
+        if matches!(k, Vfredusum | Vfredmax | Vfredmin) {
+            let e = float_elem(sew)?;
+            let mut acc = elem::to_f64(e, init);
+            for &x in scratch.a.iter() {
+                let fx = elem::to_f64(e, x);
+                acc = match k {
+                    Vfredusum => acc + fx,
+                    Vfredmax => acc.max(fx),
+                    Vfredmin => acc.min(fx),
+                    _ => trap!(unsupported, "unexpected float reduction {k:?}"),
+                };
+            }
+            m.write_lane(dst, sew, 0, elem::from_f64(e, acc));
+        } else {
+            let (se, ue) = (int_elem(sew, true), int_elem(sew, false));
+            let mut acc_i = elem::to_i64(se, init);
+            let mut acc_u = elem::to_u64(ue, init);
+            for &x in scratch.a.iter() {
+                let sx = elem::to_i64(se, x);
+                let ux = elem::to_u64(ue, x);
+                match k {
+                    Vredsum => acc_i = acc_i.wrapping_add(sx),
+                    Vredmax => acc_i = acc_i.max(sx),
+                    Vredmin => acc_i = acc_i.min(sx),
+                    Vredmaxu => acc_u = acc_u.max(ux),
+                    Vredminu => acc_u = acc_u.min(ux),
+                    _ => trap!(unsupported, "unexpected int reduction {k:?}"),
+                }
+            }
+            let out = if matches!(k, Vredmaxu | Vredminu) {
+                acc_u
+            } else {
+                elem::from_i64(se, acc_i)
+            };
+            m.write_lane(dst, sew, 0, out);
         }
         return Ok(());
     }
@@ -1276,6 +1332,53 @@ mod tests {
         exec(&mut m, &vinst(RvvKind::VmvVX, Dst::V(1), vec![Src::ImmI(10)]), None).unwrap();
         exec(&mut m, &vinst(RvvKind::Vredsum, Dst::V(2), vec![Src::V(0), Src::V(1)]), None).unwrap();
         assert_eq!(m.read_lane(2, Sew::E32, 0), 20);
+    }
+
+    #[test]
+    fn batched_reductions_match_interpreter() {
+        use RvvKind::*;
+        // signed negatives + a large unsigned value so the signed and
+        // unsigned folds genuinely diverge per kind
+        let ints: [i64; 4] = [-3, 7, -1, 0x7fff_0001];
+        for k in [Vredsum, Vredmax, Vredmaxu, Vredmin, Vredminu] {
+            let mut m1 = mk_machine();
+            let mut m2 = mk_machine();
+            for m in [&mut m1, &mut m2] {
+                for (i, v) in ints.iter().enumerate() {
+                    m.write_lane(0, Sew::E32, i as u32, (*v as u64) & 0xffff_ffff);
+                }
+                exec(m, &vinst(VmvVX, Dst::V(1), vec![Src::ImmI(5)]), None).unwrap();
+            }
+            let inst = vinst(k, Dst::V(2), vec![Src::V(0), Src::V(1)]);
+            exec(&mut m1, &inst, None).unwrap();
+            let mut scratch = ExecScratch::default();
+            exec_batched(&mut m2, &inst, None, &mut scratch).unwrap();
+            assert_eq!(
+                m1.read_lane(2, Sew::E32, 0),
+                m2.read_lane(2, Sew::E32, 0),
+                "batched {k:?} diverged from interpreter"
+            );
+        }
+        let floats: [f32; 4] = [1.5, -2.25, 8.0, 0.125];
+        for k in [Vfredusum, Vfredmax, Vfredmin] {
+            let mut m1 = mk_machine();
+            let mut m2 = mk_machine();
+            for m in [&mut m1, &mut m2] {
+                for (i, v) in floats.iter().enumerate() {
+                    m.write_lane(0, Sew::E32, i as u32, v.to_bits() as u64);
+                }
+                exec(m, &vinst(VfmvVF, Dst::V(1), vec![Src::ImmF(0.5)]), None).unwrap();
+            }
+            let inst = vinst(k, Dst::V(2), vec![Src::V(0), Src::V(1)]);
+            exec(&mut m1, &inst, None).unwrap();
+            let mut scratch = ExecScratch::default();
+            exec_batched(&mut m2, &inst, None, &mut scratch).unwrap();
+            assert_eq!(
+                m1.read_lane(2, Sew::E32, 0),
+                m2.read_lane(2, Sew::E32, 0),
+                "batched {k:?} diverged from interpreter"
+            );
+        }
     }
 
     #[test]

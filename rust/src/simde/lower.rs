@@ -3,6 +3,8 @@
 //! the simulator. This is the SIMDe "preprocessing stage" of the paper's
 //! §4.2 workflow, as a compiler pass instead of C macro expansion.
 
+use std::sync::Arc;
+
 use anyhow::{bail, Context, Result};
 
 use crate::ir::{Program, Stmt};
@@ -13,6 +15,7 @@ use crate::simde::ctx::Ctx;
 use crate::simde::method::{Method, Mode};
 use crate::simde::rules;
 use crate::simde::types_map::{map_neon_type, Unmappable};
+use crate::tuner::db::TuningDb;
 
 /// The translation engine.
 pub struct Translator {
@@ -24,6 +27,12 @@ pub struct Translator {
     /// (generic) rules even in custom mode — measures each category's
     /// contribution to the speedup.
     pub force_baseline: Vec<Category>,
+    /// Tuning database override: when set, [`Translator::translate`]
+    /// consults it for a winning candidate lowering of
+    /// (program, mode, vlen, fingerprint) and applies that instead of
+    /// the static rules; entries that are missing, stale (fingerprint
+    /// mismatch) or `static` fall through to the rules unchanged.
+    pub tuning: Option<Arc<TuningDb>>,
 }
 
 /// Summary of one translation (for reports).
@@ -45,7 +54,13 @@ impl TranslationReport {
 
 impl Translator {
     pub fn new(mode: Mode, cfg: RvvConfig) -> Translator {
-        Translator { mode, cfg, union_store_bug: false, force_baseline: Vec::new() }
+        Translator {
+            mode,
+            cfg,
+            union_store_bug: false,
+            force_baseline: Vec::new(),
+            tuning: None,
+        }
     }
 
     pub fn with_union_store_bug(mut self, on: bool) -> Translator {
@@ -55,6 +70,12 @@ impl Translator {
 
     pub fn with_forced_baseline(mut self, cats: Vec<Category>) -> Translator {
         self.force_baseline = cats;
+        self
+    }
+
+    /// Consult `db` for tuned lowerings (see the `tuning` field).
+    pub fn with_tuning(mut self, db: Arc<TuningDb>) -> Translator {
+        self.tuning = Some(db);
         self
     }
 
@@ -90,6 +111,22 @@ impl Translator {
 
     /// Translate a whole program.
     pub fn translate(&self, prog: &Program) -> Result<(RvvProgram, TranslationReport)> {
+        // Tuned override: a non-static winner recorded for exactly this
+        // (kernel, mode, vlen, shape) replaces the static-rule lowering.
+        // `lower_with` re-enters translation through a plain Translator
+        // (no tuning), so this cannot recurse.
+        if let Some(db) = &self.tuning {
+            if let Some(cand) =
+                db.winner(&prog.name, self.mode, self.cfg.vlen, prog.fingerprint())
+            {
+                if !cand.is_static() {
+                    return crate::tuner::candidate::lower_with(prog, self.mode, self.cfg, &cand)
+                        .with_context(|| {
+                            format!("applying tuned lowering '{}' to '{}'", cand.id(), prog.name)
+                        });
+                }
+            }
+        }
         if self.mode == Mode::RvvCustom {
             let bad = self.unmappable_types(prog);
             if !bad.is_empty() {

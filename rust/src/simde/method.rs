@@ -30,6 +30,16 @@ impl Mode {
             Mode::RvvCustom => "rvv-custom",
         }
     }
+
+    /// Inverse of [`Mode::name`], also accepting the CLI shorthand
+    /// `custom`. Returns `None` for anything else.
+    pub fn parse(s: &str) -> Option<Mode> {
+        match s {
+            "baseline" => Some(Mode::Baseline),
+            "custom" | "rvv-custom" => Some(Mode::RvvCustom),
+            _ => None,
+        }
+    }
 }
 
 /// How one intrinsic is converted under a given mode (reported per rule in

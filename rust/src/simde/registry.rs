@@ -84,6 +84,20 @@ pub fn conversion_table(cfg: RvvConfig) -> Vec<Conversion> {
     out
 }
 
+/// Every distinct intrinsic category a program touches, in a stable
+/// order. The tuner uses this to enumerate `force-baseline:<category>`
+/// candidates — one per category the program can actually be degraded
+/// on — instead of trying all twelve blindly.
+pub fn program_categories(prog: &crate::ir::Program) -> Vec<crate::neon::ops::Category> {
+    let mut cats: Vec<crate::neon::ops::Category> =
+        prog.used_ops().iter().map(|op| op.category()).collect();
+    // Category has no Ord; its Debug render is stable and unique per
+    // variant, so sort on that for a deterministic candidate order
+    cats.sort_by_key(|c| format!("{c:?}"));
+    cats.dedup();
+    cats
+}
+
 /// Counts by (custom) conversion method — the §3.3 methods breakdown.
 pub fn method_histogram(cfg: RvvConfig) -> BTreeMap<&'static str, usize> {
     let mut m = BTreeMap::new();

@@ -1,0 +1,185 @@
+//! The autotuner's candidate space: alternative ways to lower one IR
+//! program at a given (mode, vlen) point.
+//!
+//! Each [`Candidate`] names a complete lowering strategy with a stable
+//! string id (what the tuning database persists):
+//!
+//! - `static` — exactly what [`Translator::new`] would produce; always
+//!   enumerated and always the baseline other candidates must beat.
+//! - `widen:F` — the static lowering post-processed by
+//!   [`crate::tuner::widen::widen`], coalescing `F` loop iterations into
+//!   one when the target VLEN has spare lanes.
+//! - `force-baseline:<category>` — lower intrinsics of one category
+//!   through the generic SIMDe path instead of the customized RVV rule
+//!   (occasionally the "clever" combo sequence loses to the plain one).
+//!
+//! [`lower_with`] materialises a candidate into an [`RvvProgram`]; a
+//! candidate that cannot apply (e.g. no widenable loop) returns `Err`,
+//! which the search records as a scored-out candidate rather than a
+//! failure.
+
+use anyhow::{anyhow, Result};
+
+use crate::ir::Program;
+use crate::neon::ops::Category;
+use crate::rvv::machine::RvvConfig;
+use crate::rvv::RvvProgram;
+use crate::simde::registry::program_categories;
+use crate::simde::{Mode, TranslationReport, Translator};
+use crate::tuner::widen;
+
+/// One point in the lowering search space.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Candidate {
+    /// The unmodified static-rule lowering.
+    Static,
+    /// Loop-coalesce the static lowering by this factor.
+    Widen(u32),
+    /// Degrade one intrinsic category to the generic SIMDe path.
+    ForceBaseline(Category),
+}
+
+/// All twelve categories with their stable kebab-case database names.
+const CATEGORY_NAMES: &[(Category, &str)] = &[
+    (Category::Memory, "memory"),
+    (Category::Arith, "arith"),
+    (Category::Pairwise, "pairwise"),
+    (Category::Saturating, "saturating"),
+    (Category::WidenNarrow, "widen-narrow"),
+    (Category::Compare, "compare"),
+    (Category::Bitwise, "bitwise"),
+    (Category::Shift, "shift"),
+    (Category::Permute, "permute"),
+    (Category::Convert, "convert"),
+    (Category::FloatEst, "float-est"),
+    (Category::BitManip, "bit-manip"),
+];
+
+fn category_name(cat: Category) -> &'static str {
+    CATEGORY_NAMES
+        .iter()
+        .find(|(c, _)| *c == cat)
+        .map(|(_, n)| *n)
+        .unwrap_or("unknown")
+}
+
+fn category_parse(name: &str) -> Option<Category> {
+    CATEGORY_NAMES.iter().find(|(_, n)| *n == name).map(|(c, _)| *c)
+}
+
+impl Candidate {
+    /// Stable string id persisted in the tuning database.
+    pub fn id(&self) -> String {
+        match self {
+            Candidate::Static => "static".to_string(),
+            Candidate::Widen(f) => format!("widen:{f}"),
+            Candidate::ForceBaseline(cat) => format!("force-baseline:{}", category_name(*cat)),
+        }
+    }
+
+    /// Inverse of [`Candidate::id`].
+    pub fn parse(id: &str) -> Option<Candidate> {
+        if id == "static" {
+            return Some(Candidate::Static);
+        }
+        if let Some(f) = id.strip_prefix("widen:") {
+            return f.parse::<u32>().ok().filter(|f| *f >= 2).map(Candidate::Widen);
+        }
+        if let Some(cat) = id.strip_prefix("force-baseline:") {
+            return category_parse(cat).map(Candidate::ForceBaseline);
+        }
+        None
+    }
+
+    pub fn is_static(&self) -> bool {
+        matches!(self, Candidate::Static)
+    }
+}
+
+/// Enumerate the candidate set for one program under one mode, largest
+/// expected win first. `Static` is always first and always kept; a
+/// `max_candidates` budget truncates the tail.
+pub fn enumerate(prog: &Program, mode: Mode, max_candidates: usize) -> Vec<Candidate> {
+    let mut out = vec![Candidate::Static];
+    if mode == Mode::RvvCustom {
+        for f in [2u32, 4, 8] {
+            out.push(Candidate::Widen(f));
+        }
+        for cat in program_categories(prog) {
+            out.push(Candidate::ForceBaseline(cat));
+        }
+    }
+    out.truncate(max_candidates.max(1));
+    out
+}
+
+/// Materialise one candidate lowering. Builds a plain translator
+/// internally (never a tuning-aware one), so the tuned-override hook in
+/// [`Translator::translate`] cannot recurse through here.
+pub fn lower_with(
+    prog: &Program,
+    mode: Mode,
+    cfg: RvvConfig,
+    cand: &Candidate,
+) -> Result<(RvvProgram, TranslationReport)> {
+    match cand {
+        Candidate::Static => Translator::new(mode, cfg).translate(prog),
+        Candidate::ForceBaseline(cat) => {
+            Translator::new(mode, cfg).with_forced_baseline(vec![*cat]).translate(prog)
+        }
+        Candidate::Widen(f) => {
+            let (rp, report) = Translator::new(mode, cfg).translate(prog)?;
+            let wide = widen::widen(&rp, cfg.vlen, *f)
+                .map_err(|e| anyhow!("widen:{f}: {e}"))?;
+            Ok((wide, report))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
+    use super::*;
+
+    #[test]
+    fn id_parse_round_trips() {
+        let mut cands = vec![Candidate::Static, Candidate::Widen(2), Candidate::Widen(8)];
+        for (cat, _) in CATEGORY_NAMES {
+            cands.push(Candidate::ForceBaseline(*cat));
+        }
+        for c in cands {
+            assert_eq!(Candidate::parse(&c.id()), Some(c.clone()), "round trip for {c:?}");
+        }
+        assert_eq!(Candidate::parse("widen:1"), None);
+        assert_eq!(Candidate::parse("widen:x"), None);
+        assert_eq!(Candidate::parse("force-baseline:nope"), None);
+        assert_eq!(Candidate::parse(""), None);
+    }
+
+    #[test]
+    fn enumerate_is_static_first_and_budgeted() {
+        let case = crate::kernels::by_name("vrelu").unwrap();
+        let all = enumerate(&case.prog, Mode::RvvCustom, 64);
+        assert_eq!(all[0], Candidate::Static);
+        assert!(all.contains(&Candidate::Widen(4)), "widen candidates missing: {all:?}");
+        assert!(
+            all.iter().any(|c| matches!(c, Candidate::ForceBaseline(_))),
+            "force-baseline candidates missing: {all:?}"
+        );
+        let tight = enumerate(&case.prog, Mode::RvvCustom, 2);
+        assert_eq!(tight.len(), 2);
+        assert_eq!(tight[0], Candidate::Static);
+        // baseline mode has nothing to vary
+        assert_eq!(enumerate(&case.prog, Mode::Baseline, 64), vec![Candidate::Static]);
+    }
+
+    #[test]
+    fn lower_with_static_matches_translator() {
+        let case = crate::kernels::by_name("vrelu").unwrap();
+        let cfg = RvvConfig::new(512);
+        let (a, _) = Translator::new(Mode::RvvCustom, cfg).translate(&case.prog).unwrap();
+        let (b, _) = lower_with(&case.prog, Mode::RvvCustom, cfg, &Candidate::Static).unwrap();
+        assert_eq!(a.static_ops(), b.static_ops());
+    }
+}

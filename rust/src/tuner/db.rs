@@ -1,0 +1,523 @@
+//! The persistent tuning database (`TUNED.json`).
+//!
+//! Every search run produces one [`TunedEntry`] per (kernel, mode, vlen)
+//! point, carrying full provenance: the whole candidate set with scores
+//! (dynamic-instruction count plus wall-clock tiebreak), which candidate
+//! won, which engine scored it, and the program's shape fingerprint at
+//! tuning time. [`TuningDb::winner`] is the lookup the translator's
+//! tuned-override hook uses; it refuses stale entries — a fingerprint or
+//! format-version mismatch silently (and safely) falls back to the
+//! static rule.
+//!
+//! Serialisation is hand-rolled on both sides (serde is unavailable
+//! offline): emission through [`crate::benchlib::json`], parsing through
+//! a minimal recursive-descent JSON reader below. Fingerprints are
+//! stored as hex *strings* — they are full 64-bit digests and a JSON
+//! number would round-trip through f64 and lose bits above 2^53.
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::benchlib::json::{array, Obj};
+use crate::simde::Mode;
+use crate::tuner::candidate::Candidate;
+
+/// Format version; [`TuningDb::from_json`] rejects anything else.
+pub const VERSION: u32 = 1;
+
+/// Score record for one candidate lowering. `ok == false` means the
+/// candidate was scored out — lowering refused, run faulted, or output
+/// diverged from the static reference — with the reason in `error`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CandidateScore {
+    pub id: String,
+    pub ok: bool,
+    pub dyn_insts: u64,
+    pub wall_ns: u64,
+    pub error: String,
+}
+
+/// One tuned point with full provenance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TunedEntry {
+    pub kernel: String,
+    pub mode: Mode,
+    pub vlen: u32,
+    /// [`crate::ir::Program::fingerprint`] of the kernel at tuning time.
+    pub fingerprint: u64,
+    /// Engine label that scored the winning run (normally "decoded").
+    pub engine: String,
+    /// [`Candidate::id`] of the selected lowering.
+    pub winner: String,
+    pub candidates: Vec<CandidateScore>,
+}
+
+impl TunedEntry {
+    /// The static candidate's score, if it ran.
+    pub fn static_score(&self) -> Option<&CandidateScore> {
+        self.candidates.iter().find(|c| c.id == "static" && c.ok)
+    }
+
+    /// The winning candidate's score.
+    pub fn winner_score(&self) -> Option<&CandidateScore> {
+        self.candidates.iter().find(|c| c.id == self.winner && c.ok)
+    }
+
+    /// Did tuning strictly beat the static rule on dynamic instructions?
+    pub fn improved(&self) -> bool {
+        match (self.static_score(), self.winner_score()) {
+            (Some(s), Some(w)) => self.winner != "static" && w.dyn_insts < s.dyn_insts,
+            _ => false,
+        }
+    }
+}
+
+/// The database: a flat set of tuned entries plus a format version.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TuningDb {
+    pub entries: Vec<TunedEntry>,
+}
+
+impl TuningDb {
+    pub fn new() -> TuningDb {
+        TuningDb::default()
+    }
+
+    /// Look up the winning candidate for an exact (kernel, mode, vlen,
+    /// fingerprint) point. A fingerprint mismatch — the kernel changed
+    /// shape since tuning — returns `None` so callers fall back to the
+    /// static rule.
+    pub fn winner(&self, kernel: &str, mode: Mode, vlen: u32, fingerprint: u64) -> Option<Candidate> {
+        self.entries
+            .iter()
+            .find(|e| {
+                e.kernel == kernel
+                    && e.mode == mode
+                    && e.vlen == vlen
+                    && e.fingerprint == fingerprint
+            })
+            .and_then(|e| Candidate::parse(&e.winner))
+    }
+
+    /// Serialise to pretty-enough JSON (one candidate per line).
+    pub fn to_json(&self) -> String {
+        let entries: Vec<String> = self
+            .entries
+            .iter()
+            .map(|e| {
+                let cands: Vec<String> = e
+                    .candidates
+                    .iter()
+                    .map(|c| {
+                        Obj::new()
+                            .str("id", &c.id)
+                            .bool("ok", c.ok)
+                            .u64("dyn_insts", c.dyn_insts)
+                            .u64("wall_ns", c.wall_ns)
+                            .str("error", &c.error)
+                            .finish()
+                    })
+                    .collect();
+                Obj::new()
+                    .str("kernel", &e.kernel)
+                    .str("mode", e.mode.name())
+                    .u64("vlen", u64::from(e.vlen))
+                    .str("fingerprint", &format!("{:#018x}", e.fingerprint))
+                    .str("engine", &e.engine)
+                    .str("winner", &e.winner)
+                    .raw("candidates", array(&cands))
+                    .finish()
+            })
+            .collect();
+        Obj::new()
+            .u64("version", u64::from(VERSION))
+            .raw("entries", array(&entries))
+            .finish()
+    }
+
+    /// Parse a database, rejecting unknown format versions outright (a
+    /// stale database must never silently steer lowering).
+    pub fn from_json(text: &str) -> Result<TuningDb> {
+        let root = parse_json(text)?;
+        let version = root
+            .get("version")
+            .and_then(Json::as_u64)
+            .context("tuning db: missing or non-numeric 'version'")?;
+        if version != u64::from(VERSION) {
+            bail!("tuning db: version {version} is not the supported version {VERSION} — re-run `tune`");
+        }
+        let mut db = TuningDb::new();
+        for e in root.get("entries").and_then(Json::as_arr).unwrap_or(&[]) {
+            let kernel = e
+                .get("kernel")
+                .and_then(Json::as_str)
+                .context("tuning db: entry missing 'kernel'")?
+                .to_string();
+            let mode_name = e
+                .get("mode")
+                .and_then(Json::as_str)
+                .context("tuning db: entry missing 'mode'")?;
+            let mode = Mode::parse(mode_name)
+                .ok_or_else(|| anyhow!("tuning db: unknown mode '{mode_name}'"))?;
+            let vlen = e
+                .get("vlen")
+                .and_then(Json::as_u64)
+                .context("tuning db: entry missing 'vlen'")? as u32;
+            let fp_text = e
+                .get("fingerprint")
+                .and_then(Json::as_str)
+                .context("tuning db: entry missing 'fingerprint'")?;
+            let fingerprint = parse_hex_u64(fp_text)
+                .with_context(|| format!("tuning db: bad fingerprint '{fp_text}'"))?;
+            let engine =
+                e.get("engine").and_then(Json::as_str).unwrap_or("decoded").to_string();
+            let winner = e
+                .get("winner")
+                .and_then(Json::as_str)
+                .context("tuning db: entry missing 'winner'")?
+                .to_string();
+            let mut candidates = Vec::new();
+            for c in e.get("candidates").and_then(Json::as_arr).unwrap_or(&[]) {
+                candidates.push(CandidateScore {
+                    id: c
+                        .get("id")
+                        .and_then(Json::as_str)
+                        .context("tuning db: candidate missing 'id'")?
+                        .to_string(),
+                    ok: c.get("ok").and_then(Json::as_bool).unwrap_or(false),
+                    dyn_insts: c.get("dyn_insts").and_then(Json::as_u64).unwrap_or(0),
+                    wall_ns: c.get("wall_ns").and_then(Json::as_u64).unwrap_or(0),
+                    error: c.get("error").and_then(Json::as_str).unwrap_or("").to_string(),
+                });
+            }
+            db.entries.push(TunedEntry {
+                kernel,
+                mode,
+                vlen,
+                fingerprint,
+                engine,
+                winner,
+                candidates,
+            });
+        }
+        Ok(db)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        fs::write(path, self.to_json() + "\n")
+            .with_context(|| format!("writing tuning db to {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<TuningDb> {
+        let text = fs::read_to_string(path)
+            .with_context(|| format!("reading tuning db from {}", path.display()))?;
+        TuningDb::from_json(&text)
+            .with_context(|| format!("parsing tuning db {}", path.display()))
+    }
+}
+
+fn parse_hex_u64(s: &str) -> Result<u64> {
+    let digits = s.strip_prefix("0x").unwrap_or(s);
+    u64::from_str_radix(digits, 16).map_err(|e| anyhow!("{e}"))
+}
+
+// ---------------------------------------------------------------------
+// Minimal JSON reader: objects, arrays, strings (with escapes), numbers
+// (kept as raw text — precision is the caller's business), booleans,
+// null. Just enough to read back what `to_json` writes, while tolerating
+// hand-edited files.
+
+/// Parsed JSON value. Numbers stay as raw literals so 64-bit integers
+/// survive (no f64 round trip).
+#[derive(Debug, Clone, PartialEq)]
+enum Json {
+    Null,
+    Bool(bool),
+    Num(String),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(n) => n.parse().ok(),
+            _ => None,
+        }
+    }
+
+    fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+}
+
+struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+fn parse_json(text: &str) -> Result<Json> {
+    let mut r = Reader { bytes: text.as_bytes(), pos: 0 };
+    let v = r.value()?;
+    r.skip_ws();
+    if r.pos != r.bytes.len() {
+        bail!("json: trailing data at byte {}", r.pos);
+    }
+    Ok(v)
+}
+
+impl Reader<'_> {
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len()
+            && matches!(self.bytes[self.pos], b' ' | b'\t' | b'\n' | b'\r')
+        {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Result<u8> {
+        self.skip_ws();
+        self.bytes
+            .get(self.pos)
+            .copied()
+            .ok_or_else(|| anyhow!("json: unexpected end of input"))
+    }
+
+    fn eat(&mut self, b: u8) -> Result<()> {
+        if self.peek()? != b {
+            bail!("json: expected '{}' at byte {}", b as char, self.pos);
+        }
+        self.pos += 1;
+        Ok(())
+    }
+
+    fn literal(&mut self, word: &str, value: Json) -> Result<Json> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(value)
+        } else {
+            bail!("json: bad literal at byte {}", self.pos)
+        }
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.literal("true", Json::Bool(true)),
+            b'f' => self.literal("false", Json::Bool(false)),
+            b'n' => self.literal("null", Json::Null),
+            b'-' | b'0'..=b'9' => self.number(),
+            c => bail!("json: unexpected '{}' at byte {}", c as char, self.pos),
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.eat(b'{')?;
+        let mut fields = Vec::new();
+        if self.peek()? == b'}' {
+            self.pos += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.eat(b':')?;
+            fields.push((key, self.value()?));
+            match self.peek()? {
+                b',' => self.pos += 1,
+                b'}' => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                c => bail!("json: expected ',' or '}}', got '{}' at byte {}", c as char, self.pos),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.eat(b'[')?;
+        let mut items = Vec::new();
+        if self.peek()? == b']' {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            match self.peek()? {
+                b',' => self.pos += 1,
+                b']' => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                c => bail!("json: expected ',' or ']', got '{}' at byte {}", c as char, self.pos),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            let Some(&b) = self.bytes.get(self.pos) else {
+                bail!("json: unterminated string");
+            };
+            self.pos += 1;
+            match b {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let Some(&esc) = self.bytes.get(self.pos) else {
+                        bail!("json: unterminated escape");
+                    };
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'b' => out.push('\u{0008}'),
+                        b'f' => out.push('\u{000c}'),
+                        b'u' => {
+                            let hex = self
+                                .bytes
+                                .get(self.pos..self.pos + 4)
+                                .ok_or_else(|| anyhow!("json: truncated \\u escape"))?;
+                            let code = u32::from_str_radix(std::str::from_utf8(hex)?, 16)?;
+                            self.pos += 4;
+                            // surrogate pairs don't occur in our own output;
+                            // map lone surrogates to the replacement char
+                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        }
+                        c => bail!("json: bad escape '\\{}'", c as char),
+                    }
+                }
+                _ => {
+                    // collect the full UTF-8 sequence starting at b
+                    let start = self.pos - 1;
+                    while self.pos < self.bytes.len() && (self.bytes[self.pos] & 0xc0) == 0x80 {
+                        self.pos += 1;
+                    }
+                    out.push_str(std::str::from_utf8(&self.bytes[start..self.pos])?);
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.pos;
+        while self.pos < self.bytes.len()
+            && matches!(self.bytes[self.pos], b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')
+        {
+            self.pos += 1;
+        }
+        Ok(Json::Num(std::str::from_utf8(&self.bytes[start..self.pos])?.to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
+    use super::*;
+
+    fn sample_db() -> TuningDb {
+        TuningDb {
+            entries: vec![TunedEntry {
+                kernel: "vrelu".into(),
+                mode: Mode::RvvCustom,
+                vlen: 512,
+                fingerprint: 0xdead_beef_cafe_f00d, // > 2^53: must survive JSON
+                engine: "decoded".into(),
+                winner: "widen:4".into(),
+                candidates: vec![
+                    CandidateScore {
+                        id: "static".into(),
+                        ok: true,
+                        dyn_insts: 1000,
+                        wall_ns: 5000,
+                        error: String::new(),
+                    },
+                    CandidateScore {
+                        id: "widen:4".into(),
+                        ok: true,
+                        dyn_insts: 400,
+                        wall_ns: 2000,
+                        error: String::new(),
+                    },
+                    CandidateScore {
+                        id: "widen:8".into(),
+                        ok: false,
+                        dyn_insts: 0,
+                        wall_ns: 0,
+                        error: "widen:8: no loop admits widening by 8\n\"quoted\\path\"".into(),
+                    },
+                ],
+            }],
+        }
+    }
+
+    #[test]
+    fn json_round_trips_exactly() {
+        let db = sample_db();
+        let text = db.to_json();
+        let back = TuningDb::from_json(&text).unwrap();
+        assert_eq!(back, db);
+    }
+
+    #[test]
+    fn stale_version_is_rejected() {
+        let text = sample_db().to_json().replacen("\"version\": 1", "\"version\": 99", 1);
+        let err = TuningDb::from_json(&text).unwrap_err();
+        assert!(format!("{err:#}").contains("version 99"), "unhelpful error: {err:#}");
+    }
+
+    #[test]
+    fn winner_respects_fingerprint_and_point() {
+        let db = sample_db();
+        let hit = db.winner("vrelu", Mode::RvvCustom, 512, 0xdead_beef_cafe_f00d);
+        assert_eq!(hit, Some(Candidate::Widen(4)));
+        // stale shape, wrong vlen, wrong mode, unknown kernel: all None
+        assert_eq!(db.winner("vrelu", Mode::RvvCustom, 512, 1), None);
+        assert_eq!(db.winner("vrelu", Mode::RvvCustom, 256, 0xdead_beef_cafe_f00d), None);
+        assert_eq!(db.winner("vrelu", Mode::Baseline, 512, 0xdead_beef_cafe_f00d), None);
+        assert_eq!(db.winner("gemm", Mode::RvvCustom, 512, 0xdead_beef_cafe_f00d), None);
+    }
+
+    #[test]
+    fn entry_improvement_accounting() {
+        let e = &sample_db().entries[0];
+        assert!(e.improved());
+        assert_eq!(e.static_score().unwrap().dyn_insts, 1000);
+        assert_eq!(e.winner_score().unwrap().dyn_insts, 400);
+    }
+}

@@ -1,0 +1,290 @@
+//! # Lowering autotuner
+//!
+//! Search-based selection of customized RVV conversions. The static
+//! per-intrinsic rules in [`crate::simde`] pick one lowering per
+//! (intrinsic, mode, vlen) point; this module treats that choice as the
+//! *first* candidate in a search space rather than the final answer:
+//!
+//! 1. **Enumerate** ([`candidate`]) — for each kernel the static rule
+//!    plus alternatives: loop-coalescing `widen:F` variants that fill
+//!    wide vector units the fixed 128-bit NEON shapes leave idle
+//!    ([`widen`]), and `force-baseline:<category>` degradations that swap
+//!    a combo/algorithmic sequence for the generic SIMDe path.
+//! 2. **Score** — run every candidate through the pre-decoded engine via
+//!    the coordinator's fault-tolerant primitive
+//!    ([`crate::coordinator::run_prepared_with_recovery`]). The score is
+//!    the paper's metric, [`crate::sim::SimStats::total`] dynamic
+//!    instructions, with wall-clock as tiebreak. A candidate that fails
+//!    to lower, traps, panics, or produces output bytes different from
+//!    the static reference is *scored out* (recorded with `ok = false`
+//!    and, for runtime faults, a [`crate::coordinator::FaultRecord`]) —
+//!    never aborts the search.
+//! 3. **Persist** ([`db`]) — winners plus full provenance (entire
+//!    candidate set with scores, shape fingerprint, engine) go into a
+//!    versioned `TUNED.json`. [`crate::simde::Translator::with_tuning`]
+//!    consults it at translation time, so `bench --tuned` and
+//!    `figure2_report` replay tuned lowerings exactly.
+//!
+//! Safety invariant: a tuned lowering is only ever selected if its
+//! output buffers were bit-identical to the static lowering's during the
+//! search, and the database lookup re-checks the program's shape
+//! fingerprint so a changed kernel silently falls back to the static
+//! rule.
+
+pub mod candidate;
+pub mod db;
+pub mod widen;
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{self, CachedProgram, EngineKind, FaultRecord, Job, RetryPolicy};
+use crate::kernels;
+use crate::neon::interp::Buffer;
+use crate::rvv::machine::RvvConfig;
+use crate::sim::decode;
+use crate::simde::Mode;
+use db::{CandidateScore, TunedEntry, TuningDb};
+
+pub use candidate::Candidate;
+
+/// Search configuration.
+#[derive(Debug, Clone)]
+pub struct TunerOptions {
+    /// Vector lengths to tune for.
+    pub vlens: Vec<u32>,
+    /// Kernels to tune; empty means the full Figure-2 suite.
+    pub kernels: Vec<&'static str>,
+    /// Translation modes to tune (baseline has an empty candidate space
+    /// beyond `static`, so the default is custom only).
+    pub modes: Vec<Mode>,
+    /// Candidate budget per point; `static` is always kept.
+    pub max_candidates: usize,
+    /// Recovery ladder for candidate runs.
+    pub retry: RetryPolicy,
+}
+
+impl Default for TunerOptions {
+    fn default() -> TunerOptions {
+        TunerOptions {
+            vlens: vec![512],
+            kernels: Vec::new(),
+            modes: vec![Mode::RvvCustom],
+            max_candidates: 16,
+            retry: RetryPolicy::none(),
+        }
+    }
+}
+
+impl TunerOptions {
+    /// Tiny smoke configuration for CI: one kernel, minimal budget.
+    pub fn smoke(vlen: u32) -> TunerOptions {
+        TunerOptions {
+            vlens: vec![vlen],
+            kernels: vec!["vrelu"],
+            max_candidates: 3,
+            ..TunerOptions::default()
+        }
+    }
+}
+
+/// Everything a search run produced.
+#[derive(Debug)]
+pub struct TuneOutcome {
+    /// The tuning database (winners + provenance), ready to save.
+    pub db: TuningDb,
+    /// Faults from candidates that trapped or panicked mid-run (they are
+    /// also scored out in the corresponding entry).
+    pub faults: Vec<FaultRecord>,
+    /// Entries whose winner strictly beat the static rule.
+    pub improved: usize,
+}
+
+/// Run the search over the whole (vlen × kernel × mode) grid.
+pub fn tune(opts: &TunerOptions) -> Result<TuneOutcome> {
+    let _quiet = coordinator::quiet_panics();
+    let kernel_names: Vec<&'static str> =
+        if opts.kernels.is_empty() { kernels::NAMES.to_vec() } else { opts.kernels.clone() };
+    let mut db = TuningDb::new();
+    let mut faults = Vec::new();
+    for &vlen in &opts.vlens {
+        for &kernel in &kernel_names {
+            for &mode in &opts.modes {
+                let entry = tune_point(kernel, mode, vlen, opts, &mut faults).with_context(
+                    || format!("tuning {kernel} mode={} vlen={vlen}", mode.name()),
+                )?;
+                db.entries.push(entry);
+            }
+        }
+    }
+    let improved = db.entries.iter().filter(|e| e.improved()).count();
+    Ok(TuneOutcome { db, faults, improved })
+}
+
+fn outputs_identical(a: &HashMap<String, Buffer>, b: &HashMap<String, Buffer>) -> bool {
+    a.len() == b.len()
+        && a.iter().all(|(name, buf)| {
+            b.get(name).is_some_and(|other| other.elem == buf.elem && other.data == buf.data)
+        })
+}
+
+/// Tune one (kernel, mode, vlen) point: run the static lowering first as
+/// the bit-identity reference, then score each alternative against it.
+fn tune_point(
+    kernel: &'static str,
+    mode: Mode,
+    vlen: u32,
+    opts: &TunerOptions,
+    faults: &mut Vec<FaultRecord>,
+) -> Result<TunedEntry> {
+    let case = kernels::by_name(kernel).with_context(|| format!("unknown kernel '{kernel}'"))?;
+    let fingerprint = case.prog.fingerprint();
+    let cfg = RvvConfig::new(vlen);
+    let cands = candidate::enumerate(&case.prog, mode, opts.max_candidates);
+    let job = Job { kernel, mode, vlen };
+
+    let mut scores: Vec<CandidateScore> = Vec::new();
+    let mut reference: Option<HashMap<String, Buffer>> = None;
+    let mut best: Option<(u64, u64, String, EngineKind)> = None;
+
+    for (ci, cand) in cands.iter().enumerate() {
+        let id = cand.id();
+        let lowered = candidate::lower_with(&case.prog, mode, cfg, cand);
+        let (rvv, _report) = match lowered {
+            Ok(x) => x,
+            Err(e) if cand.is_static() => {
+                return Err(e.context("static lowering failed — nothing to tune against"));
+            }
+            Err(e) => {
+                // candidate does not apply here (e.g. no widenable loop):
+                // scored out, search continues
+                scores.push(CandidateScore {
+                    id,
+                    ok: false,
+                    dyn_insts: 0,
+                    wall_ns: 0,
+                    error: format!("{e:#}"),
+                });
+                continue;
+            }
+        };
+        let decoded = decode(&rvv);
+        let prepared = CachedProgram { rvv, decoded };
+        match coordinator::run_prepared_with_recovery(ci, &job, &prepared, &case.inputs, opts.retry)
+        {
+            Ok(out) => {
+                if let Some(reference) = &reference {
+                    if !outputs_identical(reference, &out.outputs) {
+                        scores.push(CandidateScore {
+                            id,
+                            ok: false,
+                            dyn_insts: out.stats.total(),
+                            wall_ns: out.wall.as_nanos() as u64,
+                            error: "output buffers diverge from the static lowering".into(),
+                        });
+                        continue;
+                    }
+                }
+                let dyn_insts = out.stats.total();
+                let wall_ns = out.wall.as_nanos() as u64;
+                if cand.is_static() {
+                    reference = Some(out.outputs);
+                }
+                let better =
+                    best.as_ref().is_none_or(|(d, w, _, _)| (dyn_insts, wall_ns) < (*d, *w));
+                if better {
+                    best = Some((dyn_insts, wall_ns, id.clone(), out.engine));
+                }
+                scores.push(CandidateScore {
+                    id,
+                    ok: true,
+                    dyn_insts,
+                    wall_ns,
+                    error: String::new(),
+                });
+            }
+            Err(fault) if cand.is_static() => {
+                let msg = fault.error.clone();
+                faults.push(fault);
+                bail!("static lowering faulted ({msg}) — nothing to tune against");
+            }
+            Err(fault) => {
+                // trap/panic inside a candidate: degrade to a fault record
+                // plus a scored-out row, keep searching
+                scores.push(CandidateScore {
+                    id,
+                    ok: false,
+                    dyn_insts: 0,
+                    wall_ns: 0,
+                    error: fault.error.clone(),
+                });
+                faults.push(fault);
+            }
+        }
+    }
+
+    let Some((_, _, winner, engine)) = best else {
+        bail!("no candidate survived scoring for {kernel}");
+    };
+    Ok(TunedEntry {
+        kernel: kernel.to_string(),
+        mode,
+        vlen,
+        fingerprint,
+        engine: engine.label().to_string(),
+        winner,
+        candidates: scores,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
+    use super::*;
+
+    #[test]
+    fn narrow_machine_keeps_the_static_rule() {
+        // at VLEN 128 the NEON shapes already fill the machine: every
+        // widen candidate must score out and static must win
+        let opts = TunerOptions {
+            vlens: vec![128],
+            kernels: vec!["vrelu"],
+            max_candidates: 4,
+            ..TunerOptions::default()
+        };
+        let out = tune(&opts).unwrap();
+        assert_eq!(out.db.entries.len(), 1);
+        let e = &out.db.entries[0];
+        assert_eq!(e.winner, "static");
+        assert_eq!(out.improved, 0);
+        let widens: Vec<_> = e.candidates.iter().filter(|c| c.id.starts_with("widen:")).collect();
+        assert!(!widens.is_empty(), "widen candidates were not enumerated");
+        for w in widens {
+            assert!(!w.ok, "widen must score out at vlen 128: {w:?}");
+            assert!(!w.error.is_empty(), "scored-out candidate needs a reason");
+        }
+    }
+
+    #[test]
+    fn wide_machine_widens_vrelu() {
+        let opts = TunerOptions {
+            vlens: vec![512],
+            kernels: vec!["vrelu"],
+            max_candidates: 4,
+            ..TunerOptions::default()
+        };
+        let out = tune(&opts).unwrap();
+        let e = &out.db.entries[0];
+        assert!(e.winner.starts_with("widen:"), "expected a widen winner, got {}", e.winner);
+        assert!(e.improved(), "winner must strictly beat static: {e:?}");
+        assert_eq!(out.improved, 1);
+        // winner must be replayable through the db lookup
+        let cand = out
+            .db
+            .winner("vrelu", Mode::RvvCustom, 512, e.fingerprint)
+            .expect("winner must parse");
+        assert!(!cand.is_static());
+    }
+}

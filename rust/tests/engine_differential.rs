@@ -52,6 +52,108 @@ fn decoded_engine_matches_interpreter_bit_for_bit() {
     assert_eq!(combos, 60, "differential matrix lost coverage");
 }
 
+/// The suite kernels exercise the element-wise batched families; the
+/// reduction family gets its own synthetic differential program so the
+/// batched fold path in `exec_batched` is pinned engine-vs-interpreter
+/// for every reduction kind, inside a loop (stats parity included).
+#[test]
+fn batched_reductions_match_interpreter_in_programs() {
+    use std::collections::HashMap;
+
+    use simde_rvv::ir::{AddrExpr, BufDecl, BufKind};
+    use simde_rvv::neon::elem::Elem;
+    use simde_rvv::neon::interp::Buffer;
+    use simde_rvv::rvv::{Dst, MemRef, RStmt, RvvInst, RvvKind, RvvProgram, Sew, Src};
+
+    let op = |kind: RvvKind, dst: Dst, srcs: Vec<Src>, mem: Option<MemRef>| {
+        RStmt::Op(RvvInst { kind, sew: Sew::E32, vl: 4, dst, srcs, mask: None, mem })
+    };
+    let kinds = [
+        (RvvKind::Vredsum, false),
+        (RvvKind::Vredmax, false),
+        (RvvKind::Vredmaxu, false),
+        (RvvKind::Vredmin, false),
+        (RvvKind::Vredminu, false),
+        (RvvKind::Vfredusum, true),
+        (RvvKind::Vfredmax, true),
+        (RvvKind::Vfredmin, true),
+    ];
+    for (kind, float) in kinds {
+        let elem = if float { Elem::F32 } else { Elem::I32 };
+        let prog = RvvProgram {
+            name: format!("red-{kind:?}"),
+            bufs: vec![
+                BufDecl { name: "x".into(), elem, len: 16, kind: BufKind::Input },
+                BufDecl { name: "out".into(), elem, len: 4, kind: BufKind::Output },
+            ],
+            body: vec![
+                op(
+                    if float { RvvKind::VfmvVF } else { RvvKind::VmvVX },
+                    Dst::V(1),
+                    vec![if float { Src::ImmF(0.5) } else { Src::ImmI(5) }],
+                    None,
+                ),
+                RStmt::Loop {
+                    ivar: 0,
+                    start: 0,
+                    end: 16,
+                    step: 4,
+                    body: vec![
+                        op(
+                            RvvKind::Vle,
+                            Dst::V(0),
+                            vec![],
+                            Some(MemRef { buf: 0, index: AddrExpr::s(0), stride: 1 }),
+                        ),
+                        op(kind, Dst::V(2), vec![Src::V(0), Src::V(1)], None),
+                        // feed the partial back in as the next init
+                        op(RvvKind::VmvVV, Dst::V(1), vec![Src::V(2)], None),
+                    ],
+                },
+                op(
+                    RvvKind::Vse,
+                    Dst::None,
+                    vec![Src::V(2)],
+                    Some(MemRef { buf: 1, index: AddrExpr::k(0), stride: 1 }),
+                ),
+            ],
+            n_vregs: 3,
+            n_mregs: 1,
+            n_sregs: 1,
+        };
+        let inputs: HashMap<String, Buffer> = [(
+            "x".to_string(),
+            if float {
+                Buffer::from_f32s(&[
+                    1.5, -2.25, 8.0, 0.125, 3.0, -7.5, 0.0, 2.5, -1.0, 4.75, 6.5, -0.5, 9.0,
+                    -3.25, 1.0, 0.75,
+                ])
+            } else {
+                Buffer::from_i32s(&[
+                    -3, 7, -1, 2_147_418_113, 11, -9, 0, 5, 13, -2, 8, 1, -6, 4, 10, -12,
+                ])
+            },
+        )]
+        .into();
+        let cfg = RvvConfig::new(128);
+        let (ref_out, ref_stats) = Simulator::new(&prog, cfg, &inputs)
+            .unwrap()
+            .run()
+            .unwrap_or_else(|e| panic!("interpreter failed for {kind:?}: {e:#}"));
+        let dec = decode(&prog);
+        let (out, stats) = Engine::new(&prog, &dec, cfg, &inputs)
+            .unwrap()
+            .run()
+            .unwrap_or_else(|e| panic!("decoded engine failed for {kind:?}: {e:#}"));
+        assert_eq!(stats, ref_stats, "SimStats diverged for {kind:?}");
+        assert_eq!(
+            out.get("out").unwrap().data,
+            ref_out.get("out").unwrap().data,
+            "reduction output not bit-identical for {kind:?}"
+        );
+    }
+}
+
 /// The cached `by_name` path (default shapes) must agree with a fresh
 /// interpreter run too — this drives the coordinator's translation cache
 /// end to end, across repeated hits.

@@ -1,0 +1,153 @@
+//! Differential guarantees for the lowering autotuner:
+//!
+//! - running the search over the full Figure-2 suite × vlen {128, 256,
+//!   512} never aborts — inapplicable or broken candidates score out;
+//! - every tuned lowering replayed through the translator's tuning hook
+//!   produces output buffers bit-identical to the static-rule lowering;
+//! - at vlen 512 the search strictly improves the dynamic-instruction
+//!   count for at least half the suite (the PR's acceptance bar);
+//! - a candidate that traps at runtime degrades to a `FaultRecord`, not
+//!   a search abort.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use simde_rvv::coordinator::{self, CachedProgram, Job, RetryPolicy};
+use simde_rvv::kernels;
+use simde_rvv::neon::interp::Inputs;
+use simde_rvv::rvv::machine::RvvConfig;
+use simde_rvv::sim::{decode, Engine};
+use simde_rvv::simde::{Mode, Translator};
+use simde_rvv::tuner::{self, TunerOptions};
+
+#[test]
+fn tuned_lowerings_are_bit_identical_and_improve_at_wide_vlen() {
+    let opts = TunerOptions {
+        vlens: vec![128, 256, 512],
+        max_candidates: 4, // static + widen 2/4/8: the interesting axis
+        ..TunerOptions::default()
+    };
+    let out = tuner::tune(&opts).expect("search must not abort");
+    assert_eq!(out.db.entries.len(), kernels::NAMES.len() * 3, "one entry per point");
+
+    for e in &out.db.entries {
+        // provenance: every entry keeps the whole candidate set, every
+        // scored-out candidate carries a reason
+        assert!(!e.candidates.is_empty(), "no candidates recorded: {e:?}");
+        assert_eq!(e.candidates[0].id, "static", "static must be scored first: {e:?}");
+        for c in &e.candidates {
+            assert!(c.ok || !c.error.is_empty(), "scored-out without a reason: {c:?}");
+        }
+        // the NEON shapes already fill a 128-bit machine: every widen
+        // candidate must score out there and static must win
+        if e.vlen == 128 {
+            for c in e.candidates.iter().filter(|c| c.id.starts_with("widen:")) {
+                assert!(!c.ok, "{}: widen cannot apply at vlen 128: {c:?}", e.kernel);
+            }
+            assert_eq!(e.winner, "static", "{}: unexpected winner at vlen 128", e.kernel);
+        }
+    }
+
+    // acceptance bar: at vlen 512, at least half the kernels strictly
+    // beat the static RvvCustom lowering on dynamic instructions
+    let improved_512 =
+        out.db.entries.iter().filter(|e| e.vlen == 512 && e.improved()).count();
+    assert!(
+        improved_512 >= kernels::NAMES.len() / 2,
+        "only {improved_512}/{} kernels improved at vlen 512",
+        kernels::NAMES.len()
+    );
+
+    // end-to-end differential: replay through the tuning hook and compare
+    // output buffers bit for bit against the static lowering
+    let db = Arc::new(out.db);
+    for case in kernels::suite() {
+        for vlen in [128u32, 256, 512] {
+            let ctx = format!("{} vlen={vlen}", case.name);
+            let cfg = RvvConfig::new(vlen);
+            let (st, _) = Translator::new(Mode::RvvCustom, cfg)
+                .translate(&case.prog)
+                .unwrap_or_else(|e| panic!("static translate failed for {ctx}: {e:#}"));
+            let (tu, _) = Translator::new(Mode::RvvCustom, cfg)
+                .with_tuning(Arc::clone(&db))
+                .translate(&case.prog)
+                .unwrap_or_else(|e| panic!("tuned translate failed for {ctx}: {e:#}"));
+
+            let sdec = decode(&st);
+            let (sout, sstats) = Engine::new(&st, &sdec, cfg, &case.inputs)
+                .unwrap()
+                .run()
+                .unwrap_or_else(|e| panic!("static run failed for {ctx}: {e:#}"));
+            let tdec = decode(&tu);
+            let (tout, tstats) = Engine::new(&tu, &tdec, cfg, &case.inputs)
+                .unwrap()
+                .run()
+                .unwrap_or_else(|e| panic!("tuned run failed for {ctx}: {e:#}"));
+
+            assert_eq!(sout.len(), tout.len(), "output set diverged for {ctx}");
+            for (name, sbuf) in &sout {
+                let tbuf = tout
+                    .get(name)
+                    .unwrap_or_else(|| panic!("missing tuned output '{name}' for {ctx}"));
+                assert_eq!(tbuf.elem, sbuf.elem, "elem of '{name}' for {ctx}");
+                assert_eq!(
+                    tbuf.data, sbuf.data,
+                    "tuned output '{name}' not bit-identical for {ctx}"
+                );
+            }
+            // the tuned lowering may only ever cost fewer or equal
+            // dynamic instructions — never more
+            assert!(
+                tstats.total() <= sstats.total(),
+                "tuned lowering regressed {ctx}: {} > {}",
+                tstats.total(),
+                sstats.total()
+            );
+        }
+    }
+}
+
+/// A candidate whose program traps at runtime must come back as a
+/// structured `FaultRecord` (the tuner records it and keeps searching),
+/// not a panic or process abort.
+#[test]
+fn trapping_candidate_degrades_to_fault_record() {
+    use simde_rvv::ir::{AddrExpr, BufDecl, BufKind};
+    use simde_rvv::neon::elem::Elem;
+    use simde_rvv::rvv::{Dst, MemRef, RStmt, RvvInst, RvvKind, RvvProgram, Sew, Src};
+
+    let op = |kind, dst, srcs, mem| {
+        RStmt::Op(RvvInst { kind, sew: Sew::E32, vl: 4, dst, srcs, mask: None, mem })
+    };
+    let prog = RvvProgram {
+        name: "oob-candidate".into(),
+        bufs: vec![BufDecl { name: "out".into(), elem: Elem::I32, len: 4, kind: BufKind::Output }],
+        body: vec![
+            op(RvvKind::VmvVX, Dst::V(0), vec![Src::ImmI(7)], None),
+            // stores way past the end of the 4-element buffer
+            op(
+                RvvKind::Vse,
+                Dst::None,
+                vec![Src::V(0)],
+                Some(MemRef { buf: 0, index: AddrExpr::k(100), stride: 1 }),
+            ),
+        ],
+        n_vregs: 1,
+        n_mregs: 1,
+        n_sregs: 1,
+    };
+    let prepared = CachedProgram { decoded: decode(&prog), rvv: prog };
+    let job = Job { kernel: "vrelu", mode: Mode::RvvCustom, vlen: 128 };
+    let inputs: Inputs = HashMap::new();
+    let fault =
+        coordinator::run_prepared_with_recovery(3, &job, &prepared, &inputs, RetryPolicy::none())
+            .expect_err("oob store must fault");
+    assert_eq!(fault.index, 3, "candidate index must be preserved");
+    assert_eq!(fault.job.kernel, "vrelu");
+    assert!(fault.trap.is_some(), "expected a structured trap: {fault:?}");
+    assert!(
+        fault.error.contains("out-of-bounds-store"),
+        "unhelpful fault error: {}",
+        fault.error
+    );
+}

@@ -1,0 +1,141 @@
+//! Round-trip and staleness guarantees for the persistent tuning
+//! database (`TUNED.json`): what `tune` writes, `bench --tuned` must read
+//! back exactly; a database from a different format version or for a
+//! kernel whose shape changed must be refused rather than silently steer
+//! lowering.
+
+use std::collections::HashMap;
+
+use simde_rvv::kernels;
+use simde_rvv::simde::Mode;
+use simde_rvv::tuner::db::{CandidateScore, TunedEntry, TuningDb, VERSION};
+use simde_rvv::tuner::Candidate;
+
+fn sample_db() -> TuningDb {
+    let score = |id: &str, ok: bool, dyn_insts: u64, wall_ns: u64, error: &str| CandidateScore {
+        id: id.into(),
+        ok,
+        dyn_insts,
+        wall_ns,
+        error: error.into(),
+    };
+    TuningDb {
+        entries: vec![
+            TunedEntry {
+                kernel: "vrelu".into(),
+                mode: Mode::RvvCustom,
+                vlen: 512,
+                fingerprint: 0xfedc_ba98_7654_3210, // above 2^53 on purpose
+                engine: "decoded".into(),
+                winner: "widen:4".into(),
+                candidates: vec![
+                    score("static", true, 36877, 120_000, ""),
+                    score("widen:2", true, 18445, 70_000, ""),
+                    score("widen:4", true, 9229, 40_000, ""),
+                    score(
+                        "widen:8",
+                        false,
+                        0,
+                        0,
+                        "widen:8: no loop admits widening by 8\nwith \"quotes\" and \\slashes\\",
+                    ),
+                ],
+            },
+            TunedEntry {
+                kernel: "gemm".into(),
+                mode: Mode::Baseline,
+                vlen: 128,
+                fingerprint: 1,
+                engine: "interp".into(),
+                winner: "static".into(),
+                candidates: vec![score("static", true, 500, 9000, "")],
+            },
+        ],
+    }
+}
+
+#[test]
+fn json_round_trip_is_exact() {
+    let db = sample_db();
+    let text = db.to_json();
+    let back = TuningDb::from_json(&text).expect("own output must parse");
+    assert_eq!(back, db);
+    // and a second trip is a fixed point
+    assert_eq!(back.to_json(), text);
+}
+
+#[test]
+fn file_round_trip() {
+    let db = sample_db();
+    let path = std::env::temp_dir().join(format!("tuned-db-test-{}.json", std::process::id()));
+    db.save(&path).expect("save");
+    let back = TuningDb::load(&path).expect("load");
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(back, db);
+}
+
+#[test]
+fn stale_version_is_rejected() {
+    let text = sample_db()
+        .to_json()
+        .replacen(&format!("\"version\": {VERSION}"), "\"version\": 0", 1);
+    let err = TuningDb::from_json(&text).expect_err("stale version must not parse");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("version 0"), "error must name the bad version: {msg}");
+    assert!(msg.contains("tune"), "error should point at re-tuning: {msg}");
+}
+
+#[test]
+fn garbage_and_missing_fields_are_errors() {
+    assert!(TuningDb::from_json("").is_err());
+    assert!(TuningDb::from_json("not json").is_err());
+    assert!(TuningDb::from_json("{\"entries\": []}").is_err(), "missing version");
+    // entry without a kernel name
+    let text = format!(
+        "{{\"version\": {VERSION}, \"entries\": [{{\"mode\": \"baseline\", \"vlen\": 128}}]}}"
+    );
+    assert!(TuningDb::from_json(&text).is_err());
+}
+
+#[test]
+fn winner_lookup_requires_exact_point_and_fingerprint() {
+    let db = sample_db();
+    let fp = 0xfedc_ba98_7654_3210u64;
+    assert_eq!(db.winner("vrelu", Mode::RvvCustom, 512, fp), Some(Candidate::Widen(4)));
+    assert_eq!(db.winner("gemm", Mode::Baseline, 128, 1), Some(Candidate::Static));
+    // stale shape fingerprint: refuse, fall back to static rules
+    assert_eq!(db.winner("vrelu", Mode::RvvCustom, 512, fp ^ 1), None);
+    // wrong vlen / mode / kernel
+    assert_eq!(db.winner("vrelu", Mode::RvvCustom, 256, fp), None);
+    assert_eq!(db.winner("vrelu", Mode::Baseline, 512, fp), None);
+    assert_eq!(db.winner("vsqrt", Mode::RvvCustom, 512, fp), None);
+}
+
+#[test]
+fn fingerprints_are_stable_across_shape_but_not_content() {
+    // two fresh instantiations of the same kernel must agree (the db is
+    // only useful if fingerprints are deterministic), and different
+    // kernels must not collide
+    let mut by_kernel: HashMap<&str, u64> = HashMap::new();
+    for name in kernels::NAMES {
+        let a = kernels::by_name(name).expect("kernel exists").prog.fingerprint();
+        let b = kernels::by_name(name).expect("kernel exists").prog.fingerprint();
+        assert_eq!(a, b, "{name}: fingerprint not deterministic");
+        for (other, fp) in &by_kernel {
+            assert_ne!(a, *fp, "{name} collides with {other}");
+        }
+        by_kernel.insert(name, a);
+    }
+}
+
+#[test]
+fn candidate_ids_round_trip_through_parse() {
+    for id in ["static", "widen:2", "widen:4", "widen:8", "force-baseline:memory",
+        "force-baseline:float-est", "force-baseline:widen-narrow"]
+    {
+        let cand = Candidate::parse(id).unwrap_or_else(|| panic!("'{id}' must parse"));
+        assert_eq!(cand.id(), id);
+    }
+    assert_eq!(Candidate::parse("widen:0"), None);
+    assert_eq!(Candidate::parse("bogus"), None);
+}
