@@ -15,7 +15,7 @@ use crate::neon::semantics::floatest;
 use super::machine::RvvMachine;
 use super::ops::{Dst, RvvInst, RvvKind, Src};
 use super::trap::SimTrap;
-use super::vtype::Sew;
+use super::vtype::{Lmul, Sew};
 
 /// Raise a [`SimTrap`] from the enclosing `Result<_, SimTrap>` function.
 macro_rules! trap {
@@ -77,11 +77,48 @@ fn scalar_val(m: &RvvMachine, s: &Src, sew: Sew, float: bool) -> Result<u64, Sim
 }
 
 /// Per-lane value of a source operand (vector lane or broadcast scalar).
-fn src_lane(m: &RvvMachine, s: &Src, sew: Sew, lane: u32, float: bool) -> Result<u64, SimTrap> {
+fn src_lane(
+    m: &RvvMachine,
+    s: &Src,
+    sew: Sew,
+    lmul: Lmul,
+    lane: u32,
+    float: bool,
+) -> Result<u64, SimTrap> {
     match s {
-        Src::V(r) => Ok(m.read_lane(*r, sew, lane)),
+        Src::V(r) => m.read_lane(*r, sew, lmul, lane),
         _ => scalar_val(m, s, sew, float),
     }
+}
+
+/// `vsetvli` legality: `vl` must not exceed `VLMAX = VLEN/SEW · LMUL` for
+/// the instruction's vtype. Before PR 9 this was implicitly assumed at
+/// `m1`; now it is an explicit structural fault.
+fn check_vl_legal(m: &RvvMachine, inst: &RvvInst) -> Result<(), SimTrap> {
+    let vt = inst.vtype();
+    let vlmax = vt.vlmax(m.cfg.vlen);
+    if inst.vl > vlmax {
+        return Err(SimTrap::vsetvli(format!(
+            "vl {} exceeds VLMAX {vlmax} for vtype `{}` at VLEN {}",
+            inst.vl,
+            vt.asm(),
+            m.cfg.vlen
+        )));
+    }
+    Ok(())
+}
+
+/// Widening/narrowing kinds access lanes at an EEW other than `inst.sew`;
+/// their grouped (EMUL-scaled) forms are not modelled — the legality
+/// analysis never emits them, so a grouped instance is a structural
+/// unsupported-op fault rather than silently wrong lane mapping.
+fn mixed_eew(k: RvvKind) -> bool {
+    use RvvKind::*;
+    matches!(
+        k,
+        Vwmul | Vwmulu | Vwadd | Vwaddu | Vwmacc | Vwmaccu | VfwcvtFF | VfncvtFF | Vnsrl
+            | Vnsra | Vzext2 | Vsext2
+    )
 }
 
 /// Execute one RVV instruction. `mem_byte_off` must be pre-resolved for
@@ -91,6 +128,12 @@ pub fn exec(m: &mut RvvMachine, inst: &RvvInst, mem_byte_off: Option<i64>) -> Re
     let sew = inst.sew;
     let vl = inst.vl;
     let k = inst.kind;
+    let lmul = inst.lmul;
+    let group = lmul.group();
+    check_vl_legal(m, inst)?;
+    if group > 1 && mixed_eew(k) {
+        trap!(unsupported, "widening/narrowing op {k:?} at grouped LMUL {}", lmul.asm());
+    }
 
     // loads/stores
     if k.is_load() || k.is_store() {
@@ -104,9 +147,9 @@ pub fn exec(m: &mut RvvMachine, inst: &RvvInst, mem_byte_off: Option<i64>) -> Re
         if inst.mask.is_none() && mref.stride == 1 {
             let n = (vl * sew.bytes()) as usize;
             match (k, inst.dst, inst.srcs.first()) {
-                (Vle, Dst::V(dst), _) => return m.load_bulk(mref.buf, base, n, dst),
+                (Vle, Dst::V(dst), _) => return m.load_bulk(mref.buf, base, n, dst, lmul),
                 (Vse, Dst::None, Some(Src::V(src))) => {
-                    return m.store_bulk(mref.buf, base, n, *src)
+                    return m.store_bulk(mref.buf, base, n, *src, lmul)
                 }
                 _ => {}
             }
@@ -124,7 +167,7 @@ pub fn exec(m: &mut RvvMachine, inst: &RvvInst, mem_byte_off: Option<i64>) -> Re
                         }
                     }
                     let v = m.load_at(mref.buf, base + i as i64 * stride, sew)?;
-                    m.write_lane(dst, sew, i, v);
+                    m.write_lane(dst, sew, lmul, i, v)?;
                 }
             }
             Vse | Vsse => {
@@ -137,7 +180,7 @@ pub fn exec(m: &mut RvvMachine, inst: &RvvInst, mem_byte_off: Option<i64>) -> Re
                             continue;
                         }
                     }
-                    let v = m.read_lane(*src, sew, i);
+                    let v = m.read_lane(*src, sew, lmul, i)?;
                     m.store_at(mref.buf, base + i as i64 * stride, sew, v)?;
                 }
             }
@@ -183,8 +226,8 @@ pub fn exec(m: &mut RvvMachine, inst: &RvvInst, mem_byte_off: Option<i64>) -> Re
                     continue;
                 }
             }
-            let x = src_lane(m, a, sew, i, float)?;
-            let y = src_lane(m, b, sew, i, float)?;
+            let x = src_lane(m, a, sew, lmul, i, float)?;
+            let y = src_lane(m, b, sew, lmul, i, float)?;
             let r = if float {
                 let fe = float_elem(sew)?;
                 let (fx, fy) = (elem::to_f64(fe, x), elem::to_f64(fe, y));
@@ -228,7 +271,9 @@ pub fn exec(m: &mut RvvMachine, inst: &RvvInst, mem_byte_off: Option<i64>) -> Re
         else {
             trap!(bad_operand, "reduction {k:?} needs two vreg srcs");
         };
-        let init = m.read_lane(vs1, sew, 0);
+        // reduction scalar operands (vs1 init, vd result) are single
+        // registers regardless of the vector operand's grouping
+        let init = m.read_lane(vs1, sew, Lmul::M1, 0)?;
         if matches!(k, Vfredusum | Vfredmax | Vfredmin) {
             let e = float_elem(sew)?;
             let mut acc = elem::to_f64(e, init);
@@ -238,7 +283,7 @@ pub fn exec(m: &mut RvvMachine, inst: &RvvInst, mem_byte_off: Option<i64>) -> Re
                         continue;
                     }
                 }
-                let fx = elem::to_f64(e, m.read_lane(vs2, sew, i));
+                let fx = elem::to_f64(e, m.read_lane(vs2, sew, lmul, i)?);
                 acc = match k {
                     Vfredusum => acc + fx,
                     Vfredmax => acc.max(fx),
@@ -246,7 +291,7 @@ pub fn exec(m: &mut RvvMachine, inst: &RvvInst, mem_byte_off: Option<i64>) -> Re
                     _ => trap!(unsupported, "unexpected float reduction {k:?}"),
                 };
             }
-            m.write_lane(dst, sew, 0, elem::from_f64(e, acc));
+            m.write_lane(dst, sew, Lmul::M1, 0, elem::from_f64(e, acc))?;
         } else {
             let mut acc_i = elem::to_i64(int_elem(sew, true), init);
             let mut acc_u = elem::to_u64(int_elem(sew, false), init);
@@ -256,7 +301,7 @@ pub fn exec(m: &mut RvvMachine, inst: &RvvInst, mem_byte_off: Option<i64>) -> Re
                         continue;
                     }
                 }
-                let x = m.read_lane(vs2, sew, i);
+                let x = m.read_lane(vs2, sew, lmul, i)?;
                 let sx = elem::to_i64(int_elem(sew, true), x);
                 let ux = elem::to_u64(int_elem(sew, false), x);
                 match k {
@@ -273,7 +318,7 @@ pub fn exec(m: &mut RvvMachine, inst: &RvvInst, mem_byte_off: Option<i64>) -> Re
             } else {
                 elem::from_i64(int_elem(sew, true), acc_i)
             };
-            m.write_lane(dst, sew, 0, out);
+            m.write_lane(dst, sew, Lmul::M1, 0, out)?;
         }
         return Ok(());
     }
@@ -283,11 +328,13 @@ pub fn exec(m: &mut RvvMachine, inst: &RvvInst, mem_byte_off: Option<i64>) -> Re
         let Dst::V(dst) = inst.dst else {
             trap!(bad_operand, "permute {k:?} without vreg dst");
         };
-        let vlmax = m.cfg.vlen / sew.bits();
+        // VLMAX scales with the register group: an m2 slide reaches across
+        // both member registers
+        let vlmax = m.cfg.vlen / sew.bits() * group;
         match k {
             Vid => {
                 for i in 0..vl {
-                    m.write_lane(dst, sew, i, i as u64);
+                    m.write_lane(dst, sew, lmul, i, i as u64)?;
                 }
             }
             Vslideup => {
@@ -299,9 +346,9 @@ pub fn exec(m: &mut RvvMachine, inst: &RvvInst, mem_byte_off: Option<i64>) -> Re
                     Some(Src::SReg(r)) => m.sregs[*r as usize] as u32,
                     _ => trap!(bad_operand, "vslideup offset operand"),
                 };
-                let snap = m.read_lanes(src, sew, vlmax.min(vl + off));
+                let snap = m.read_lanes(src, sew, lmul, vlmax.min(vl + off))?;
                 for i in off..vl {
-                    m.write_lane(dst, sew, i, snap[(i - off) as usize]);
+                    m.write_lane(dst, sew, lmul, i, snap[(i - off) as usize])?;
                 }
             }
             Vslidedown => {
@@ -313,11 +360,11 @@ pub fn exec(m: &mut RvvMachine, inst: &RvvInst, mem_byte_off: Option<i64>) -> Re
                     Some(Src::SReg(r)) => m.sregs[*r as usize] as u32,
                     _ => trap!(bad_operand, "vslidedown offset operand"),
                 };
-                let snap = m.read_lanes(src, sew, vlmax);
+                let snap = m.read_lanes(src, sew, lmul, vlmax)?;
                 for i in 0..vl {
                     let j = i + off;
                     let v = if j < vlmax { snap[j as usize] } else { 0 };
-                    m.write_lane(dst, sew, i, v);
+                    m.write_lane(dst, sew, lmul, i, v)?;
                 }
             }
             Vslide1down => {
@@ -328,27 +375,27 @@ pub fn exec(m: &mut RvvMachine, inst: &RvvInst, mem_byte_off: Option<i64>) -> Re
                     trap!(bad_operand, "vslide1down scalar operand");
                 };
                 let x = scalar_val(m, s1, sew, false)?;
-                let snap = m.read_lanes(src, sew, vl);
+                let snap = m.read_lanes(src, sew, lmul, vl)?;
                 for i in 0..vl.saturating_sub(1) {
-                    m.write_lane(dst, sew, i, snap[(i + 1) as usize]);
+                    m.write_lane(dst, sew, lmul, i, snap[(i + 1) as usize])?;
                 }
                 if vl > 0 {
-                    m.write_lane(dst, sew, vl - 1, x);
+                    m.write_lane(dst, sew, lmul, vl - 1, x)?;
                 }
             }
             Vrgather => {
                 let Some(&Src::V(src)) = inst.srcs.first() else {
                     trap!(bad_operand, "vrgather needs vreg src");
                 };
-                let snap = m.read_lanes(src, sew, vlmax);
+                let snap = m.read_lanes(src, sew, lmul, vlmax)?;
                 for i in 0..vl {
                     let idx = match inst.srcs.get(1) {
-                        Some(Src::V(ir)) => m.read_lane(*ir, sew, i),
+                        Some(Src::V(ir)) => m.read_lane(*ir, sew, lmul, i)?,
                         Some(s) => scalar_val(m, s, sew, false)?,
                         None => trap!(bad_operand, "vrgather index operand"),
                     };
                     let v = if (idx as u32) < vlmax { snap[idx as usize] } else { 0 };
-                    m.write_lane(dst, sew, i, v);
+                    m.write_lane(dst, sew, lmul, i, v)?;
                 }
             }
             Vcompress => {
@@ -357,11 +404,11 @@ pub fn exec(m: &mut RvvMachine, inst: &RvvInst, mem_byte_off: Option<i64>) -> Re
                 else {
                     trap!(bad_operand, "vcompress needs vreg + mask srcs");
                 };
-                let snap = m.read_lanes(src, sew, vl);
+                let snap = m.read_lanes(src, sew, lmul, vl)?;
                 let mut j = 0;
                 for i in 0..vl {
                     if m.mask_bit(mk, i) {
-                        m.write_lane(dst, sew, j, snap[i as usize]);
+                        m.write_lane(dst, sew, lmul, j, snap[i as usize])?;
                         j += 1;
                     }
                 }
@@ -376,8 +423,9 @@ pub fn exec(m: &mut RvvMachine, inst: &RvvInst, mem_byte_off: Option<i64>) -> Re
         trap!(bad_operand, "{k:?} without vreg dst");
     };
 
-    // P4 fast path: vmv.v.v is a bulk register copy (vl*sew bytes)
-    if k == VmvVV && inst.mask.is_none() {
+    // P4 fast path: vmv.v.v is a bulk register copy (vl*sew bytes);
+    // single registers only — grouped moves go through the lane path
+    if k == VmvVV && inst.mask.is_none() && group == 1 {
         if let Some(&Src::V(src)) = inst.srcs.first() {
             let n = (vl * sew.bytes()) as usize;
             if src != dst {
@@ -395,8 +443,9 @@ pub fn exec(m: &mut RvvMachine, inst: &RvvInst, mem_byte_off: Option<i64>) -> Re
     }
 
     // P3 fast path: unmasked e32 float vv-ops compute directly in f32
-    // (skips the per-lane Elem dispatch + f64 round trip)
-    if inst.mask.is_none() && sew == Sew::E32 {
+    // (skips the per-lane Elem dispatch + f64 round trip). Single
+    // registers only: the helpers address lanes flat within one register.
+    if inst.mask.is_none() && sew == Sew::E32 && group == 1 {
         if let Some(done) = exec_f32_fast(m, inst, dst)? {
             if done {
                 return Ok(());
@@ -416,7 +465,7 @@ pub fn exec(m: &mut RvvMachine, inst: &RvvInst, mem_byte_off: Option<i64>) -> Re
         }
         let out = exec_lane(m, inst, i)?;
         let dsew = dst_sew(k, sew)?;
-        m.write_lane(dst, dsew, i, out);
+        m.write_lane(dst, dsew, lmul, i, out)?;
     }
     Ok(())
 }
@@ -436,18 +485,19 @@ fn exec_lane(m: &RvvMachine, inst: &RvvInst, i: u32) -> Result<u64, SimTrap> {
     use RvvKind::*;
     let sew = inst.sew;
     let k = inst.kind;
+    let lmul = inst.lmul;
     let fe = || float_elem(sew);
     let se = int_elem(sew, true);
     let ue = int_elem(sew, false);
     let a = inst
         .srcs
         .first()
-        .map(|s| src_lane(m, s, sew, i, is_float_op(k)))
+        .map(|s| src_lane(m, s, sew, lmul, i, is_float_op(k)))
         .transpose()?;
     let b = inst
         .srcs
         .get(1)
-        .map(|s| src_lane(m, s, sew, i, is_float_op(k)))
+        .map(|s| src_lane(m, s, sew, lmul, i, is_float_op(k)))
         .transpose()?;
 
     // operand-or-trap: replaces the old `a.unwrap()` sites
@@ -496,7 +546,7 @@ fn exec_lane(m: &RvvMachine, inst: &RvvInst, i: u32) -> Result<u64, SimTrap> {
         Vwaddu => elem::to_u64(ue, opa!()) + elem::to_u64(ue, opb!()),
         Vmacc | Vnmsac => {
             let Dst::V(dr) = inst.dst else { trap!(bad_operand, "{k:?} needs vreg dst") };
-            let acc = elem::to_i64(se, m.read_lane(dr, sew, i));
+            let acc = elem::to_i64(se, m.read_lane(dr, sew, lmul, i)?);
             let p = elem::to_i64(se, opa!()).wrapping_mul(elem::to_i64(se, opb!()));
             let r = if k == Vmacc { acc.wrapping_add(p) } else { acc.wrapping_sub(p) };
             elem::from_i64(se, r)
@@ -504,14 +554,14 @@ fn exec_lane(m: &RvvMachine, inst: &RvvInst, i: u32) -> Result<u64, SimTrap> {
         Vwmacc => {
             let wide = int_elem(dst_sew(k, sew)?, true);
             let Dst::V(dr) = inst.dst else { trap!(bad_operand, "vwmacc needs vreg dst") };
-            let acc = elem::to_i64(wide, m.read_lane(dr, dst_sew(k, sew)?, i));
+            let acc = elem::to_i64(wide, m.read_lane(dr, dst_sew(k, sew)?, lmul, i)?);
             let p = elem::to_i64(se, opa!()).wrapping_mul(elem::to_i64(se, opb!()));
             elem::from_i64(wide, acc.wrapping_add(p))
         }
         Vwmaccu => {
             let wide = int_elem(dst_sew(k, sew)?, false);
             let Dst::V(dr) = inst.dst else { trap!(bad_operand, "vwmaccu needs vreg dst") };
-            let acc = elem::to_u64(wide, m.read_lane(dr, dst_sew(k, sew)?, i));
+            let acc = elem::to_u64(wide, m.read_lane(dr, dst_sew(k, sew)?, lmul, i)?);
             let p = elem::to_u64(ue, opa!()).wrapping_mul(elem::to_u64(ue, opb!()));
             (acc.wrapping_add(p)) & wide.lane_mask()
         }
@@ -545,7 +595,7 @@ fn exec_lane(m: &RvvMachine, inst: &RvvInst, i: u32) -> Result<u64, SimTrap> {
             let Some(&Src::V(src)) = inst.srcs.first() else {
                 trap!(bad_operand, "vnsrl needs vreg src");
             };
-            let x = m.read_lane(src, wsew, i);
+            let x = m.read_lane(src, wsew, lmul, i)?;
             let sh = match inst.srcs.get(1) {
                 Some(Src::ImmI(n)) => *n as u32,
                 Some(s) => scalar_val(m, s, sew, false)? as u32,
@@ -559,7 +609,7 @@ fn exec_lane(m: &RvvMachine, inst: &RvvInst, i: u32) -> Result<u64, SimTrap> {
             let Some(&Src::V(src)) = inst.srcs.first() else {
                 trap!(bad_operand, "vnsra needs vreg src");
             };
-            let x = m.read_lane(src, wsew, i);
+            let x = m.read_lane(src, wsew, lmul, i)?;
             let sh = match inst.srcs.get(1) {
                 Some(Src::ImmI(n)) => *n as u32,
                 Some(s) => scalar_val(m, s, sew, false)? as u32,
@@ -590,14 +640,14 @@ fn exec_lane(m: &RvvMachine, inst: &RvvInst, i: u32) -> Result<u64, SimTrap> {
             let Some(&Src::V(src)) = inst.srcs.first() else {
                 trap!(bad_operand, "vzext needs vreg src");
             };
-            elem::to_u64(int_elem(half, false), m.read_lane(src, half, i))
+            elem::to_u64(int_elem(half, false), m.read_lane(src, half, lmul, i)?)
         }
         Vsext2 => {
             let half = narrowed(sew)?;
             let Some(&Src::V(src)) = inst.srcs.first() else {
                 trap!(bad_operand, "vsext needs vreg src");
             };
-            elem::from_i64(se, elem::to_i64(int_elem(half, true), m.read_lane(src, half, i)))
+            elem::from_i64(se, elem::to_i64(int_elem(half, true), m.read_lane(src, half, lmul, i)?))
         }
         Vfadd => fbin(fe()?, opa!(), opb!(), |x, y| x + y),
         Vfsub => fbin(fe()?, opa!(), opb!(), |x, y| x - y),
@@ -609,7 +659,7 @@ fn exec_lane(m: &RvvMachine, inst: &RvvInst, i: u32) -> Result<u64, SimTrap> {
             // vd = ±(vs1 * vs2) ± vd ; srcs = [multiplier_a, multiplier_b],
             // accumulator is the destination register
             let Dst::V(dr) = inst.dst else { trap!(bad_operand, "fma {k:?} needs vreg dst") };
-            let acc = m.read_lane(dr, sew, i);
+            let acc = m.read_lane(dr, sew, lmul, i)?;
             let e = fe()?;
             let (x, y, s) = (elem::to_f64(e, opa!()), elem::to_f64(e, opb!()), elem::to_f64(e, acc));
             let r = match (k, e) {
@@ -652,7 +702,7 @@ fn exec_lane(m: &RvvMachine, inst: &RvvInst, i: u32) -> Result<u64, SimTrap> {
             let Some(&Src::V(src)) = inst.srcs.first() else {
                 trap!(bad_operand, "vfwcvt needs vreg src");
             };
-            let x = m.read_lane(src, sew, i);
+            let x = m.read_lane(src, sew, lmul, i)?;
             elem::from_f64(float_elem(dst_sew(k, sew)?)?, elem::to_f64(float_elem(sew)?, x))
         }
         VfncvtFF => {
@@ -661,7 +711,7 @@ fn exec_lane(m: &RvvMachine, inst: &RvvInst, i: u32) -> Result<u64, SimTrap> {
             let Some(&Src::V(src)) = inst.srcs.first() else {
                 trap!(bad_operand, "vfncvt needs vreg src");
             };
-            let x = m.read_lane(src, wide, i);
+            let x = m.read_lane(src, wide, lmul, i)?;
             elem::from_f64(fe()?, elem::to_f64(float_elem(wide)?, x))
         }
         _ => trap!(unsupported, "exec_lane: unhandled kind {k:?}"),
@@ -678,7 +728,9 @@ fn exec_i32_fast(m: &mut RvvMachine, inst: &RvvInst, dst: u32) -> Result<bool, S
     #[inline(always)]
     fn g(m: &RvvMachine, s: &Src, i: u32) -> Option<u32> {
         match s {
-            Src::V(r) => Some(m.read_lane(*r, Sew::E32, i) as u32),
+            // a bad register index falls back to the generic path, which
+            // raises the structured trap
+            Src::V(r) => m.read_lane(*r, Sew::E32, Lmul::M1, i).ok().map(|v| v as u32),
             Src::ImmI(v) => Some(*v as u32),
             _ => None,
         }
@@ -711,7 +763,7 @@ fn exec_i32_fast(m: &mut RvvMachine, inst: &RvvInst, dst: u32) -> Result<bool, S
                 k => trap!(unsupported, "unexpected i32 fast-path kind {k:?}"),
             }
         };
-        m.write_lane(dst, Sew::E32, i, r as u64);
+        m.write_lane(dst, Sew::E32, Lmul::M1, i, r as u64)?;
     }
     Ok(true)
 }
@@ -721,12 +773,16 @@ fn exec_i32_fast(m: &mut RvvMachine, inst: &RvvInst, dst: u32) -> Result<bool, S
 fn exec_f32_fast(m: &mut RvvMachine, inst: &RvvInst, dst: u32) -> Result<Option<bool>, SimTrap> {
     use RvvKind::*;
     #[inline(always)]
-    fn f(m: &RvvMachine, s: &Src, i: u32) -> f32 {
+    fn f(m: &RvvMachine, s: &Src, i: u32) -> Option<f32> {
         match s {
-            Src::V(r) => f32::from_bits(m.read_lane(*r, Sew::E32, i) as u32),
-            Src::ImmF(v) => *v as f32,
-            Src::ImmI(v) => f32::from_bits(*v as u32),
-            Src::SReg(_) | Src::M(_) => f32::NAN, // not handled here
+            // a bad register index falls back to the generic path, which
+            // raises the structured trap
+            Src::V(r) => {
+                m.read_lane(*r, Sew::E32, Lmul::M1, i).ok().map(|v| f32::from_bits(v as u32))
+            }
+            Src::ImmF(v) => Some(*v as f32),
+            Src::ImmI(v) => Some(f32::from_bits(*v as u32)),
+            Src::SReg(_) | Src::M(_) => None, // not handled here
         }
     }
     let handled = matches!(
@@ -740,8 +796,16 @@ fn exec_f32_fast(m: &mut RvvMachine, inst: &RvvInst, dst: u32) -> Result<Option<
         return Ok(None);
     }
     for i in 0..inst.vl {
-        let a = f(m, &inst.srcs[0], i);
-        let b = inst.srcs.get(1).map(|s| f(m, s, i)).unwrap_or(0.0);
+        let Some(a) = f(m, &inst.srcs[0], i) else {
+            return Ok(None);
+        };
+        let b = match inst.srcs.get(1) {
+            Some(s) => match f(m, s, i) {
+                Some(v) => v,
+                None => return Ok(None),
+            },
+            None => 0.0,
+        };
         let r = match inst.kind {
             Vfadd => a + b,
             Vfsub => a - b,
@@ -749,11 +813,11 @@ fn exec_f32_fast(m: &mut RvvMachine, inst: &RvvInst, dst: u32) -> Result<Option<
             Vfmul => a * b,
             Vfdiv => a / b,
             Vfmacc => {
-                let acc = f32::from_bits(m.read_lane(dst, Sew::E32, i) as u32);
+                let acc = f32::from_bits(m.read_lane(dst, Sew::E32, Lmul::M1, i)? as u32);
                 a.mul_add(b, acc)
             }
             Vfnmsac => {
-                let acc = f32::from_bits(m.read_lane(dst, Sew::E32, i) as u32);
+                let acc = f32::from_bits(m.read_lane(dst, Sew::E32, Lmul::M1, i)? as u32);
                 (-a).mul_add(b, acc)
             }
             Vfmin => {
@@ -764,7 +828,7 @@ fn exec_f32_fast(m: &mut RvvMachine, inst: &RvvInst, dst: u32) -> Result<Option<
             }
             k => trap!(unsupported, "unexpected f32 fast-path kind {k:?}"),
         };
-        m.write_lane(dst, Sew::E32, i, r.to_bits() as u64);
+        m.write_lane(dst, Sew::E32, Lmul::M1, i, r.to_bits() as u64)?;
     }
     Ok(Some(true))
 }
@@ -789,13 +853,14 @@ fn gather(
     m: &RvvMachine,
     s: &Src,
     sew: Sew,
+    lmul: Lmul,
     vl: u32,
     float: bool,
     out: &mut Vec<u64>,
 ) -> Result<bool, SimTrap> {
     match s {
         Src::V(r) => {
-            m.read_lanes_into(*r, sew, vl, out);
+            m.read_lanes_into(*r, sew, lmul, vl, out)?;
             Ok(true)
         }
         Src::M(_) => Ok(false),
@@ -837,6 +902,8 @@ pub fn exec_batched(
     let k = inst.kind;
     let sew = inst.sew;
     let vl = inst.vl;
+    let lmul = inst.lmul;
+    check_vl_legal(m, inst)?;
 
     if inst.mask.is_some() {
         return exec(m, inst, mem_byte_off);
@@ -852,7 +919,7 @@ pub fn exec_batched(
             trap!(bad_operand, "compare {k:?} needs two srcs");
         };
         let (a, b) = (&mut scratch.a, &mut scratch.b);
-        if !gather(m, s0, sew, vl, cmp_f, a)? || !gather(m, s1, sew, vl, cmp_f, b)? {
+        if !gather(m, s0, sew, lmul, vl, cmp_f, a)? || !gather(m, s1, sew, lmul, vl, cmp_f, b)? {
             return exec(m, inst, mem_byte_off);
         }
         macro_rules! cmp2 {
@@ -904,8 +971,9 @@ pub fn exec_batched(
         else {
             trap!(bad_operand, "reduction {k:?} needs two vreg srcs");
         };
-        m.read_lanes_into(vs2, sew, vl, &mut scratch.a);
-        let init = m.read_lane(vs1, sew, 0);
+        m.read_lanes_into(vs2, sew, lmul, vl, &mut scratch.a)?;
+        // reduction scalar operands are single registers (see `exec`)
+        let init = m.read_lane(vs1, sew, Lmul::M1, 0)?;
         if matches!(k, Vfredusum | Vfredmax | Vfredmin) {
             let e = float_elem(sew)?;
             let mut acc = elem::to_f64(e, init);
@@ -918,7 +986,7 @@ pub fn exec_batched(
                     _ => trap!(unsupported, "unexpected float reduction {k:?}"),
                 };
             }
-            m.write_lane(dst, sew, 0, elem::from_f64(e, acc));
+            m.write_lane(dst, sew, Lmul::M1, 0, elem::from_f64(e, acc))?;
         } else {
             let (se, ue) = (int_elem(sew, true), int_elem(sew, false));
             let mut acc_i = elem::to_i64(se, init);
@@ -940,7 +1008,7 @@ pub fn exec_batched(
             } else {
                 elem::from_i64(se, acc_i)
             };
-            m.write_lane(dst, sew, 0, out);
+            m.write_lane(dst, sew, Lmul::M1, 0, out)?;
         }
         return Ok(());
     }
@@ -976,14 +1044,14 @@ pub fn exec_batched(
         let v = scalar_val(m, s0, sew, k == VfmvVF)?;
         a.clear();
         a.resize(vl as usize, v);
-        m.write_lanes_from(dst, sew, a);
+        m.write_lanes_from(dst, sew, lmul, a)?;
         return Ok(());
     }
 
     let Some(s0) = inst.srcs.first() else {
         trap!(bad_operand, "{k:?} missing operand 0");
     };
-    if !gather(m, s0, sew, vl, float, a)? {
+    if !gather(m, s0, sew, lmul, vl, float, a)? {
         return exec(m, inst, mem_byte_off);
     }
     let binary = !f32_unary;
@@ -991,7 +1059,7 @@ pub fn exec_batched(
         let Some(s1) = inst.srcs.get(1) else {
             trap!(bad_operand, "{k:?} missing operand 1");
         };
-        if !gather(m, s1, sew, vl, float, b)? {
+        if !gather(m, s1, sew, lmul, vl, float, b)? {
             return exec(m, inst, mem_byte_off);
         }
     }
@@ -1027,14 +1095,14 @@ pub fn exec_batched(
                 *x = y;
             }
         }
-        m.write_lanes_from(dst, sew, a);
+        m.write_lanes_from(dst, sew, lmul, a)?;
         return Ok(());
     }
 
     if int_macc || f32_fma {
         // accumulator is the destination register
         let c = &mut scratch.c;
-        m.read_lanes_into(dst, sew, vl, c);
+        m.read_lanes_into(dst, sew, lmul, vl, c)?;
         if int_macc {
             let se = int_elem(sew, true);
             for ((s, &x), &y) in c.iter_mut().zip(a.iter()).zip(b.iter()) {
@@ -1060,7 +1128,7 @@ pub fn exec_batched(
                 *s = r.to_bits() as u64;
             }
         }
-        m.write_lanes_from(dst, sew, c);
+        m.write_lanes_from(dst, sew, lmul, c)?;
         return Ok(());
     }
 
@@ -1097,7 +1165,7 @@ pub fn exec_batched(
             Vsra => zip2!(|x, y: u64| elem::from_i64(se, elem::to_i64(se, x) >> ((y & shmask) as u32))),
             _ => trap!(unsupported, "unexpected int-bin kind {k:?}"),
         }
-        m.write_lanes_from(dst, sew, a);
+        m.write_lanes_from(dst, sew, lmul, a)?;
         return Ok(());
     }
 
@@ -1109,7 +1177,7 @@ pub fn exec_batched(
             Vfsgnjx => zip2!(|x, y| fsgn(fe, x, y, |sa, sb| sa ^ sb)),
             _ => trap!(unsupported, "unexpected sign-injection kind {k:?}"),
         }
-        m.write_lanes_from(dst, sew, a);
+        m.write_lanes_from(dst, sew, lmul, a)?;
         return Ok(());
     }
 
@@ -1117,7 +1185,7 @@ pub fn exec_batched(
         for x in a.iter_mut() {
             *x = f32::from_bits(*x as u32).sqrt().to_bits() as u64;
         }
-        m.write_lanes_from(dst, sew, a);
+        m.write_lanes_from(dst, sew, lmul, a)?;
         return Ok(());
     }
 
@@ -1133,7 +1201,7 @@ pub fn exec_batched(
         Vfmax => fzip2!(|x: f32, y: f32| if x.is_nan() || y.is_nan() { f32::NAN } else { x.max(y) }),
         _ => trap!(unsupported, "unexpected f32-bin kind {k:?}"),
     }
-    m.write_lanes_from(dst, sew, a);
+    m.write_lanes_from(dst, sew, lmul, a)?;
     Ok(())
 }
 
@@ -1205,13 +1273,14 @@ mod tests {
     }
 
     fn vinst(kind: RvvKind, dst: Dst, srcs: Vec<Src>) -> RvvInst {
-        RvvInst { kind, sew: Sew::E32, vl: 4, dst, srcs, mask: None, mem: None }
+        RvvInst { kind, sew: Sew::E32, lmul: Lmul::M1, vl: 4, dst, srcs, mask: None, mem: None }
     }
 
     fn load(m: &mut RvvMachine, dst: u32, byte_off: i64) {
         let inst = RvvInst {
             kind: RvvKind::Vle,
             sew: Sew::E32,
+            lmul: Lmul::M1,
             vl: 4,
             dst: Dst::V(dst),
             srcs: vec![],
@@ -1231,6 +1300,7 @@ mod tests {
         let st = RvvInst {
             kind: RvvKind::Vse,
             sew: Sew::E32,
+            lmul: Lmul::M1,
             vl: 4,
             dst: Dst::None,
             srcs: vec![Src::V(2)],
@@ -1250,7 +1320,7 @@ mod tests {
         exec(&mut m, &vinst(RvvKind::VmvVX, Dst::V(2), vec![Src::ImmI(0)]), None).unwrap();
         exec(&mut m, &vinst(RvvKind::Vmseq, Dst::M(0), vec![Src::V(0), Src::V(1)]), None).unwrap();
         exec(&mut m, &vinst(RvvKind::Vmerge, Dst::V(3), vec![Src::V(2), Src::ImmI(-1), Src::M(0)]), None).unwrap();
-        let out: Vec<u64> = m.read_lanes(3, Sew::E32, 4);
+        let out: Vec<u64> = m.read_lanes(3, Sew::E32, Lmul::M1, 4).unwrap();
         assert_eq!(out, vec![0, 0, 0xffff_ffff, 0]);
     }
 
@@ -1260,19 +1330,21 @@ mod tests {
         let mut m = mk_machine();
         load(&mut m, 0, 0); // [1,2,3,4]
         exec(&mut m, &vinst(RvvKind::Vslidedown, Dst::V(1), vec![Src::V(0), Src::ImmI(2)]), None).unwrap();
-        assert_eq!(m.read_lanes(1, Sew::E32, 2), vec![3, 4]);
+        assert_eq!(m.read_lanes(1, Sew::E32, Lmul::M1, 2).unwrap(), vec![3, 4]);
     }
 
     #[test]
     fn vfmacc_accumulates_into_dst() {
         let mut m = mk_machine();
         for (lane, v) in [2.0f32, 3.0, 4.0, 5.0].iter().enumerate() {
-            m.write_lane(0, Sew::E32, lane as u32, v.to_bits() as u64);
-            m.write_lane(1, Sew::E32, lane as u32, 10f32.to_bits() as u64);
-            m.write_lane(2, Sew::E32, lane as u32, 1f32.to_bits() as u64);
+            m.write_lane(0, Sew::E32, Lmul::M1, lane as u32, v.to_bits() as u64).unwrap();
+            m.write_lane(1, Sew::E32, Lmul::M1, lane as u32, 10f32.to_bits() as u64).unwrap();
+            m.write_lane(2, Sew::E32, Lmul::M1, lane as u32, 1f32.to_bits() as u64).unwrap();
         }
         exec(&mut m, &vinst(RvvKind::Vfmacc, Dst::V(2), vec![Src::V(0), Src::V(1)]), None).unwrap();
-        let out: Vec<f32> = (0..4).map(|i| f32::from_bits(m.read_lane(2, Sew::E32, i) as u32)).collect();
+        let out: Vec<f32> = (0..4)
+            .map(|i| f32::from_bits(m.read_lane(2, Sew::E32, Lmul::M1, i).unwrap() as u32))
+            .collect();
         assert_eq!(out, vec![21.0, 31.0, 41.0, 51.0]);
     }
 
@@ -1286,7 +1358,7 @@ mod tests {
         let mut add = vinst(RvvKind::Vadd, Dst::V(1), vec![Src::V(0), Src::ImmI(1)]);
         add.mask = Some(0);
         exec(&mut m, &add, None).unwrap();
-        assert_eq!(m.read_lanes(1, Sew::E32, 4), vec![2, 100, 4, 100]);
+        assert_eq!(m.read_lanes(1, Sew::E32, Lmul::M1, 4).unwrap(), vec![2, 100, 4, 100]);
     }
 
     #[test]
@@ -1297,7 +1369,7 @@ mod tests {
         // idx = 3 - vid
         exec(&mut m, &vinst(RvvKind::Vrsub, Dst::V(2), vec![Src::V(1), Src::ImmI(3)]), None).unwrap();
         exec(&mut m, &vinst(RvvKind::Vrgather, Dst::V(3), vec![Src::V(0), Src::V(2)]), None).unwrap();
-        assert_eq!(m.read_lanes(3, Sew::E32, 4), vec![4, 3, 2, 1]);
+        assert_eq!(m.read_lanes(3, Sew::E32, Lmul::M1, 4).unwrap(), vec![4, 3, 2, 1]);
     }
 
     #[test]
@@ -1307,11 +1379,11 @@ mod tests {
         inst.sew = Sew::E16;
         inst.vl = 4;
         for (i, v) in [-300i64, 2, 3, 4].iter().enumerate() {
-            m.write_lane(0, Sew::E16, i as u32, (*v as u64) & 0xffff);
+            m.write_lane(0, Sew::E16, Lmul::M1, i as u32, (*v as u64) & 0xffff).unwrap();
         }
         exec(&mut m, &inst, None).unwrap();
         let out: Vec<i64> = (0..4)
-            .map(|i| elem::to_i64(Elem::I32, m.read_lane(1, Sew::E32, i)))
+            .map(|i| elem::to_i64(Elem::I32, m.read_lane(1, Sew::E32, Lmul::M1, i).unwrap()))
             .collect();
         assert_eq!(out, vec![90000, 4, 9, 16]);
     }
@@ -1319,9 +1391,9 @@ mod tests {
     #[test]
     fn vfrsqrt7_matches_shared_estimate() {
         let mut m = mk_machine();
-        m.write_lane(0, Sew::E32, 0, 4f32.to_bits() as u64);
+        m.write_lane(0, Sew::E32, Lmul::M1, 0, 4f32.to_bits() as u64).unwrap();
         exec(&mut m, &vinst(RvvKind::Vfrsqrt7, Dst::V(1), vec![Src::V(0)]), None).unwrap();
-        let got = f32::from_bits(m.read_lane(1, Sew::E32, 0) as u32);
+        let got = f32::from_bits(m.read_lane(1, Sew::E32, Lmul::M1, 0).unwrap() as u32);
         assert!((got as f64 - 0.5).abs() < 1.0 / 256.0);
     }
 
@@ -1331,7 +1403,7 @@ mod tests {
         load(&mut m, 0, 0); // [1,2,3,4]
         exec(&mut m, &vinst(RvvKind::VmvVX, Dst::V(1), vec![Src::ImmI(10)]), None).unwrap();
         exec(&mut m, &vinst(RvvKind::Vredsum, Dst::V(2), vec![Src::V(0), Src::V(1)]), None).unwrap();
-        assert_eq!(m.read_lane(2, Sew::E32, 0), 20);
+        assert_eq!(m.read_lane(2, Sew::E32, Lmul::M1, 0).unwrap(), 20);
     }
 
     #[test]
@@ -1345,7 +1417,8 @@ mod tests {
             let mut m2 = mk_machine();
             for m in [&mut m1, &mut m2] {
                 for (i, v) in ints.iter().enumerate() {
-                    m.write_lane(0, Sew::E32, i as u32, (*v as u64) & 0xffff_ffff);
+                    m.write_lane(0, Sew::E32, Lmul::M1, i as u32, (*v as u64) & 0xffff_ffff)
+                        .unwrap();
                 }
                 exec(m, &vinst(VmvVX, Dst::V(1), vec![Src::ImmI(5)]), None).unwrap();
             }
@@ -1354,8 +1427,8 @@ mod tests {
             let mut scratch = ExecScratch::default();
             exec_batched(&mut m2, &inst, None, &mut scratch).unwrap();
             assert_eq!(
-                m1.read_lane(2, Sew::E32, 0),
-                m2.read_lane(2, Sew::E32, 0),
+                m1.read_lane(2, Sew::E32, Lmul::M1, 0).unwrap(),
+                m2.read_lane(2, Sew::E32, Lmul::M1, 0).unwrap(),
                 "batched {k:?} diverged from interpreter"
             );
         }
@@ -1365,7 +1438,7 @@ mod tests {
             let mut m2 = mk_machine();
             for m in [&mut m1, &mut m2] {
                 for (i, v) in floats.iter().enumerate() {
-                    m.write_lane(0, Sew::E32, i as u32, v.to_bits() as u64);
+                    m.write_lane(0, Sew::E32, Lmul::M1, i as u32, v.to_bits() as u64).unwrap();
                 }
                 exec(m, &vinst(VfmvVF, Dst::V(1), vec![Src::ImmF(0.5)]), None).unwrap();
             }
@@ -1374,8 +1447,8 @@ mod tests {
             let mut scratch = ExecScratch::default();
             exec_batched(&mut m2, &inst, None, &mut scratch).unwrap();
             assert_eq!(
-                m1.read_lane(2, Sew::E32, 0),
-                m2.read_lane(2, Sew::E32, 0),
+                m1.read_lane(2, Sew::E32, Lmul::M1, 0).unwrap(),
+                m2.read_lane(2, Sew::E32, Lmul::M1, 0).unwrap(),
                 "batched {k:?} diverged from interpreter"
             );
         }
@@ -1388,6 +1461,7 @@ mod tests {
         let inst = RvvInst {
             kind: RvvKind::Vlse,
             sew: Sew::E32,
+            lmul: Lmul::M1,
             vl: 4,
             dst: Dst::V(0),
             srcs: vec![],
@@ -1395,18 +1469,19 @@ mod tests {
             mem: Some(MemRef { buf: 0, index: AddrExpr::k(0), stride: 0 }),
         };
         exec(&mut m, &inst, Some(8)).unwrap(); // element 2 (= 3)
-        assert_eq!(m.read_lanes(0, Sew::E32, 4), vec![3, 3, 3, 3]);
+        assert_eq!(m.read_lanes(0, Sew::E32, Lmul::M1, 4).unwrap(), vec![3, 3, 3, 3]);
     }
 
     #[test]
     fn vsse_strided_store() {
         let mut m = mk_machine();
         for i in 0..2 {
-            m.write_lane(0, Sew::E32, i, 99 + i as u64);
+            m.write_lane(0, Sew::E32, Lmul::M1, i, 99 + i as u64).unwrap();
         }
         let inst = RvvInst {
             kind: RvvKind::Vsse,
             sew: Sew::E32,
+            lmul: Lmul::M1,
             vl: 2,
             dst: Dst::None,
             srcs: vec![Src::V(0)],
@@ -1426,6 +1501,7 @@ mod tests {
         let fast = RvvInst {
             kind: RvvKind::Vle,
             sew: Sew::E32,
+            lmul: Lmul::M1,
             vl: 4,
             dst: Dst::V(0),
             srcs: vec![],
@@ -1439,20 +1515,23 @@ mod tests {
             m2.write_mask_bit(0, i, true);
         }
         exec(&mut m2, &slow, Some(4)).unwrap();
-        assert_eq!(m1.read_lanes(0, Sew::E32, 4), m2.read_lanes(0, Sew::E32, 4));
+        assert_eq!(
+            m1.read_lanes(0, Sew::E32, Lmul::M1, 4).unwrap(),
+            m2.read_lanes(0, Sew::E32, Lmul::M1, 4).unwrap()
+        );
     }
 
     #[test]
     fn vnsrl_narrows() {
         let mut m = mk_machine();
-        m.write_lane(0, Sew::E32, 0, 0x0001_0002);
-        m.write_lane(0, Sew::E32, 1, 0xffff_0000);
+        m.write_lane(0, Sew::E32, Lmul::M1, 0, 0x0001_0002).unwrap();
+        m.write_lane(0, Sew::E32, Lmul::M1, 1, 0xffff_0000).unwrap();
         let mut inst = vinst(RvvKind::Vnsrl, Dst::V(1), vec![Src::V(0), Src::ImmI(16)]);
         inst.sew = Sew::E16;
         inst.vl = 2;
         exec(&mut m, &inst, None).unwrap();
-        assert_eq!(m.read_lane(1, Sew::E16, 0), 1);
-        assert_eq!(m.read_lane(1, Sew::E16, 1), 0xffff);
+        assert_eq!(m.read_lane(1, Sew::E16, Lmul::M1, 0).unwrap(), 1);
+        assert_eq!(m.read_lane(1, Sew::E16, Lmul::M1, 1).unwrap(), 0xffff);
     }
 
     #[test]
@@ -1461,6 +1540,7 @@ mod tests {
         let st = RvvInst {
             kind: RvvKind::Vse,
             sew: Sew::E32,
+            lmul: Lmul::M1,
             vl: 4,
             dst: Dst::None,
             srcs: vec![Src::V(0)],
@@ -1484,6 +1564,75 @@ mod tests {
         inst.sew = Sew::E8;
         let t = exec(&mut m, &inst, None).unwrap_err();
         assert!(matches!(t.kind, TrapKind::IllegalInstruction(_)), "{t}");
+    }
+
+    #[test]
+    fn grouped_add_matches_per_register_m1() {
+        // VLEN=128, e32, m2: one grouped vadd over 8 lanes must equal two
+        // m1 vadds over the member registers — on both execution paths
+        let vals_a: Vec<u64> = (0..8).map(|i| 10 + i).collect();
+        let vals_b: Vec<u64> = (0..8).map(|i| 100 * (i + 1)).collect();
+        let mut grouped = RvvMachine::new(RvvConfig::new(128), 8, 0, 0, vec![]);
+        let mut batched = RvvMachine::new(RvvConfig::new(128), 8, 0, 0, vec![]);
+        for m in [&mut grouped, &mut batched] {
+            m.write_lanes_from(0, Sew::E32, Lmul::M2, &vals_a).unwrap();
+            m.write_lanes_from(2, Sew::E32, Lmul::M2, &vals_b).unwrap();
+        }
+        let mut inst = vinst(RvvKind::Vadd, Dst::V(4), vec![Src::V(0), Src::V(2)]);
+        inst.lmul = Lmul::M2;
+        inst.vl = 8;
+        exec(&mut grouped, &inst, None).unwrap();
+        let mut scratch = ExecScratch::default();
+        exec_batched(&mut batched, &inst, None, &mut scratch).unwrap();
+        let want: Vec<u64> = vals_a.iter().zip(&vals_b).map(|(a, b)| a + b).collect();
+        assert_eq!(grouped.read_lanes(4, Sew::E32, Lmul::M2, 8).unwrap(), want);
+        assert_eq!(batched.read_lanes(4, Sew::E32, Lmul::M2, 8).unwrap(), want);
+        // and the group halves are plain m1 registers
+        assert_eq!(grouped.read_lanes(4, Sew::E32, Lmul::M1, 4).unwrap(), want[..4]);
+        assert_eq!(grouped.read_lanes(5, Sew::E32, Lmul::M1, 4).unwrap(), want[4..]);
+    }
+
+    #[test]
+    fn vl_beyond_vlmax_is_vsetvli_trap() {
+        // VLEN=128, e32, m1: VLMAX is 4, vl=8 is a configuration breach
+        let mut m = mk_machine();
+        let mut inst = vinst(RvvKind::Vadd, Dst::V(2), vec![Src::V(0), Src::V(1)]);
+        inst.vl = 8;
+        let t = exec(&mut m, &inst, None).unwrap_err();
+        assert!(matches!(t.kind, TrapKind::VsetvliViolation(_)), "{t}");
+        let mut scratch = ExecScratch::default();
+        let t = exec_batched(&mut m, &inst, None, &mut scratch).unwrap_err();
+        assert!(matches!(t.kind, TrapKind::VsetvliViolation(_)), "{t}");
+        // the same vl is legal at m2
+        inst.lmul = Lmul::M2;
+        inst.dst = Dst::V(2);
+        inst.srcs = vec![Src::V(0), Src::ImmI(1)];
+        exec(&mut m, &inst, None).unwrap();
+    }
+
+    #[test]
+    fn misaligned_group_is_bad_operand_trap() {
+        let mut m = mk_machine();
+        let mut inst = vinst(RvvKind::Vadd, Dst::V(1), vec![Src::V(0), Src::ImmI(1)]);
+        inst.lmul = Lmul::M2;
+        inst.vl = 8;
+        // v1 dst is not 2-aligned; v0 src is fine
+        let t = exec(&mut m, &inst, None).unwrap_err();
+        assert!(matches!(t.kind, TrapKind::BadOperand(_)), "{t}");
+        let mut scratch = ExecScratch::default();
+        let t = exec_batched(&mut m, &inst, None, &mut scratch).unwrap_err();
+        assert!(matches!(t.kind, TrapKind::BadOperand(_)), "{t}");
+    }
+
+    #[test]
+    fn grouped_widening_op_is_unsupported() {
+        let mut m = mk_machine();
+        let mut inst = vinst(RvvKind::Vwmul, Dst::V(2), vec![Src::V(0), Src::V(0)]);
+        inst.sew = Sew::E16;
+        inst.lmul = Lmul::M2;
+        inst.vl = 8;
+        let t = exec(&mut m, &inst, None).unwrap_err();
+        assert!(matches!(t.kind, TrapKind::UnsupportedOp(_)), "{t}");
     }
 
     #[test]

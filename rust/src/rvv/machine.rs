@@ -7,7 +7,7 @@
 
 use crate::neon::interp::Buffer;
 use super::trap::SimTrap;
-use super::vtype::Sew;
+use super::vtype::{Lmul, Sew};
 
 /// Machine configuration.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -79,85 +79,198 @@ impl RvvMachine {
     }
 
     // -- vector lane access ---------------------------------------------------
+    //
+    // Since PR 9 every lane accessor takes the instruction's LMUL. At `m1`
+    // (and fractional LMUL) a lane lives inside a single architectural
+    // register, with the 2x-VLEN widening area reachable exactly as before.
+    // At `m2`/`m4`/`m8` the operand is a *register group*: `group()`
+    // consecutive registers, `VLEN/SEW` lanes each, base register aligned
+    // to the group size. Bad indices are structural `SimTrap::BadOperand`
+    // faults (not panics): the recovery ladder turns them into
+    // `FaultRecord`s.
 
-    pub fn read_lane(&self, reg: u32, sew: Sew, lane: u32) -> u64 {
-        let w = sew.bytes() as usize;
-        let off = lane as usize * w;
-        let data = &self.vregs[reg as usize];
-        debug_assert!(off + w <= data.len(), "lane {lane} at {sew:?} exceeds VLEN");
-        let mut buf = [0u8; 8];
-        buf[..w].copy_from_slice(&data[off..off + w]);
-        u64::from_le_bytes(buf)
+    /// Validate a group operand: alignment and register-file bounds.
+    /// Returns the group size in registers.
+    fn check_group(&self, reg: u32, lmul: Lmul) -> Result<u32, SimTrap> {
+        let group = lmul.group();
+        if group > 1 && reg % group != 0 {
+            return Err(SimTrap::bad_operand(format!(
+                "misaligned register group: v{reg} is not {}-aligned for {}",
+                group,
+                lmul.asm()
+            )));
+        }
+        if reg as usize + group as usize > self.vregs.len() {
+            return Err(SimTrap::bad_operand(format!(
+                "register group v{reg}..v{} exceeds register file of {}",
+                reg + group - 1,
+                self.vregs.len()
+            )));
+        }
+        Ok(group)
     }
 
-    pub fn write_lane(&mut self, reg: u32, sew: Sew, lane: u32, raw: u64) {
+    /// Map (`reg`, `lane`) under `lmul` to (member register, byte offset).
+    fn lane_loc(&self, reg: u32, sew: Sew, lmul: Lmul, lane: u32) -> Result<(usize, usize), SimTrap> {
+        let group = self.check_group(reg, lmul)?;
         let w = sew.bytes() as usize;
-        let off = lane as usize * w;
-        let data = &mut self.vregs[reg as usize];
-        debug_assert!(off + w <= data.len(), "lane {lane} at {sew:?} exceeds VLEN");
-        data[off..off + w].copy_from_slice(&raw.to_le_bytes()[..w]);
+        if group == 1 {
+            // single register: lanes may extend into the 2x widening area
+            let off = lane as usize * w;
+            if off + w > self.vregs[reg as usize].len() {
+                return Err(SimTrap::bad_operand(format!(
+                    "lane {lane} at {} exceeds v{reg} storage",
+                    sew.asm()
+                )));
+            }
+            return Ok((reg as usize, off));
+        }
+        let per_reg = self.cfg.vlen / sew.bits();
+        let member = lane / per_reg;
+        if member >= group {
+            return Err(SimTrap::bad_operand(format!(
+                "lane {lane} at {} exceeds {} group v{reg}..v{}",
+                sew.asm(),
+                lmul.asm(),
+                reg + group - 1
+            )));
+        }
+        Ok(((reg + member) as usize, (lane % per_reg) as usize * w))
+    }
+
+    pub fn read_lane(&self, reg: u32, sew: Sew, lmul: Lmul, lane: u32) -> Result<u64, SimTrap> {
+        let (member, off) = self.lane_loc(reg, sew, lmul, lane)?;
+        let w = sew.bytes() as usize;
+        let data = &self.vregs[member];
+        let mut buf = [0u8; 8];
+        buf[..w].copy_from_slice(&data[off..off + w]);
+        Ok(u64::from_le_bytes(buf))
+    }
+
+    pub fn write_lane(
+        &mut self,
+        reg: u32,
+        sew: Sew,
+        lmul: Lmul,
+        lane: u32,
+        raw: u64,
+    ) -> Result<(), SimTrap> {
+        let (member, off) = self.lane_loc(reg, sew, lmul, lane)?;
+        let w = sew.bytes() as usize;
+        self.vregs[member][off..off + w].copy_from_slice(&raw.to_le_bytes()[..w]);
+        Ok(())
     }
 
     /// Read `vl` lanes.
-    pub fn read_lanes(&self, reg: u32, sew: Sew, vl: u32) -> Vec<u64> {
-        (0..vl).map(|i| self.read_lane(reg, sew, i)).collect()
+    pub fn read_lanes(&self, reg: u32, sew: Sew, lmul: Lmul, vl: u32) -> Result<Vec<u64>, SimTrap> {
+        let mut out = Vec::with_capacity(vl as usize);
+        self.read_lanes_into(reg, sew, lmul, vl, &mut out)?;
+        Ok(out)
     }
 
-    /// Batched lane read: copy `vl` lanes of `reg` at `sew` into `out`
-    /// (cleared first) as zero-extended raw values. One pass over the
-    /// contiguous register bytes instead of `vl` `read_lane` round-trips —
-    /// the gather half of the lane-batched execution engine.
-    pub fn read_lanes_into(&self, reg: u32, sew: Sew, vl: u32, out: &mut Vec<u64>) {
-        let data = &self.vregs[reg as usize];
-        let n = vl as usize;
-        debug_assert!(n * sew.bytes() as usize <= data.len(), "vl {vl} at {sew:?} exceeds VLEN");
+    /// Batched lane read: copy `vl` lanes of the group at `reg` into `out`
+    /// (cleared first) as zero-extended raw values. One pass per member
+    /// register over contiguous bytes instead of `vl` `read_lane`
+    /// round-trips — the gather half of the lane-batched execution engine.
+    pub fn read_lanes_into(
+        &self,
+        reg: u32,
+        sew: Sew,
+        lmul: Lmul,
+        vl: u32,
+        out: &mut Vec<u64>,
+    ) -> Result<(), SimTrap> {
+        let group = self.check_group(reg, lmul)?;
         out.clear();
-        match sew {
-            Sew::E8 => out.extend(data[..n].iter().map(|&b| b as u64)),
-            Sew::E16 => out.extend(
-                data.chunks_exact(2).take(n).map(|c| u16::from_le_bytes([c[0], c[1]]) as u64),
-            ),
-            Sew::E32 => out.extend(
-                data.chunks_exact(4)
-                    .take(n)
-                    .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]) as u64),
-            ),
-            Sew::E64 => out.extend(
-                data.chunks_exact(8)
-                    .take(n)
-                    .map(|c| u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]])),
-            ),
+        let per_reg = if group == 1 {
+            // whole single-register storage, widening area included
+            (self.vregs[reg as usize].len() / sew.bytes() as usize) as u32
+        } else {
+            self.cfg.vlen / sew.bits()
+        };
+        if vl > per_reg * group {
+            return Err(SimTrap::bad_operand(format!(
+                "vl {vl} at {} exceeds {} group at v{reg}",
+                sew.asm(),
+                lmul.asm()
+            )));
         }
+        let mut remaining = vl;
+        for member in 0..group {
+            if remaining == 0 {
+                break;
+            }
+            let n = remaining.min(per_reg) as usize;
+            let data = &self.vregs[(reg + member) as usize];
+            match sew {
+                Sew::E8 => out.extend(data[..n].iter().map(|&b| b as u64)),
+                Sew::E16 => out.extend(
+                    data.chunks_exact(2).take(n).map(|c| u16::from_le_bytes([c[0], c[1]]) as u64),
+                ),
+                Sew::E32 => out.extend(
+                    data.chunks_exact(4)
+                        .take(n)
+                        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]) as u64),
+                ),
+                Sew::E64 => out.extend(data.chunks_exact(8).take(n).map(|c| {
+                    u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]])
+                })),
+            }
+            remaining -= n as u32;
+        }
+        Ok(())
     }
 
-    /// Batched lane write: scatter `vals` into the low lanes of `reg` at
-    /// `sew` (lane `i` = `vals[i]`, truncated to the lane width). The
+    /// Batched lane write: scatter `vals` into the low lanes of the group
+    /// at `reg` (lane `i` = `vals[i]`, truncated to the lane width). The
     /// scatter half of the lane-batched execution engine.
-    pub fn write_lanes_from(&mut self, reg: u32, sew: Sew, vals: &[u64]) {
-        let data = &mut self.vregs[reg as usize];
-        debug_assert!(vals.len() * sew.bytes() as usize <= data.len());
-        match sew {
-            Sew::E8 => {
-                for (c, &v) in data.iter_mut().zip(vals) {
-                    *c = v as u8;
+    pub fn write_lanes_from(
+        &mut self,
+        reg: u32,
+        sew: Sew,
+        lmul: Lmul,
+        vals: &[u64],
+    ) -> Result<(), SimTrap> {
+        let group = self.check_group(reg, lmul)?;
+        let per_reg = if group == 1 {
+            (self.vregs[reg as usize].len() / sew.bytes() as usize) as u32
+        } else {
+            self.cfg.vlen / sew.bits()
+        };
+        if vals.len() > (per_reg * group) as usize {
+            return Err(SimTrap::bad_operand(format!(
+                "vl {} at {} exceeds {} group at v{reg}",
+                vals.len(),
+                sew.asm(),
+                lmul.asm()
+            )));
+        }
+        for (member, chunk) in vals.chunks(per_reg.max(1) as usize).enumerate() {
+            let data = &mut self.vregs[reg as usize + member];
+            match sew {
+                Sew::E8 => {
+                    for (c, &v) in data.iter_mut().zip(chunk) {
+                        *c = v as u8;
+                    }
                 }
-            }
-            Sew::E16 => {
-                for (c, &v) in data.chunks_exact_mut(2).zip(vals) {
-                    c.copy_from_slice(&(v as u16).to_le_bytes());
+                Sew::E16 => {
+                    for (c, &v) in data.chunks_exact_mut(2).zip(chunk) {
+                        c.copy_from_slice(&(v as u16).to_le_bytes());
+                    }
                 }
-            }
-            Sew::E32 => {
-                for (c, &v) in data.chunks_exact_mut(4).zip(vals) {
-                    c.copy_from_slice(&(v as u32).to_le_bytes());
+                Sew::E32 => {
+                    for (c, &v) in data.chunks_exact_mut(4).zip(chunk) {
+                        c.copy_from_slice(&(v as u32).to_le_bytes());
+                    }
                 }
-            }
-            Sew::E64 => {
-                for (c, &v) in data.chunks_exact_mut(8).zip(vals) {
-                    c.copy_from_slice(&v.to_le_bytes());
+                Sew::E64 => {
+                    for (c, &v) in data.chunks_exact_mut(8).zip(chunk) {
+                        c.copy_from_slice(&v.to_le_bytes());
+                    }
                 }
             }
         }
+        Ok(())
     }
 
     /// The first `vl` bits of a mask register as a bool slice.
@@ -218,9 +331,36 @@ impl RvvMachine {
         Ok(u64::from_le_bytes(raw))
     }
 
+    /// Bytes of register-group payload one member register holds for bulk
+    /// transfers: the full (2x) storage at `m1`, exactly `VLEN/8` when
+    /// grouped.
+    fn bulk_stride(&self, reg: u32, group: u32) -> usize {
+        if group == 1 {
+            self.vregs[reg as usize].len()
+        } else {
+            self.cfg.vlen_bytes()
+        }
+    }
+
     /// Bulk load: copy `n` bytes from buffer memory into the low bytes of
-    /// a register (unit-stride unmasked vle fast path — P2).
-    pub fn load_bulk(&mut self, buf: u32, byte_off: i64, n: usize, reg: u32) -> Result<(), SimTrap> {
+    /// a register group (unit-stride unmasked vle fast path — P2). Grouped
+    /// operands fill `VLEN/8` bytes per member register in order.
+    pub fn load_bulk(
+        &mut self,
+        buf: u32,
+        byte_off: i64,
+        n: usize,
+        reg: u32,
+        lmul: Lmul,
+    ) -> Result<(), SimTrap> {
+        let group = self.check_group(reg, lmul)?;
+        let stride = self.bulk_stride(reg, group);
+        if n > stride * group as usize {
+            return Err(SimTrap::bad_operand(format!(
+                "bulk load of {n} bytes exceeds {} group at v{reg}",
+                lmul.asm()
+            )));
+        }
         let b = self
             .bufs
             .get(buf as usize)
@@ -232,15 +372,35 @@ impl RvvMachine {
         if off + n > b.data.len() {
             return Err(SimTrap::oob(buf, byte_off, n, b.data.len(), false));
         }
-        self.vregs[reg as usize][..n].copy_from_slice(&b.data[off..off + n]);
+        // split borrows: registers and buffers are separate fields
+        let src = &b.data[off..off + n] as *const [u8];
+        // SAFETY: vregs and bufs are disjoint fields; no aliasing
+        let src = unsafe { &*src };
+        for (member, chunk) in src.chunks(stride).enumerate() {
+            self.vregs[reg as usize + member][..chunk.len()].copy_from_slice(chunk);
+        }
         Ok(())
     }
 
-    /// Bulk store: copy the low `n` bytes of a register into buffer memory
-    /// (unit-stride unmasked vse fast path — P2).
-    pub fn store_bulk(&mut self, buf: u32, byte_off: i64, n: usize, reg: u32) -> Result<(), SimTrap> {
-        // split borrows: registers and buffers are separate fields
-        let reg_data = &self.vregs[reg as usize][..n] as *const [u8];
+    /// Bulk store: copy the low `n` bytes of a register group into buffer
+    /// memory (unit-stride unmasked vse fast path — P2).
+    pub fn store_bulk(
+        &mut self,
+        buf: u32,
+        byte_off: i64,
+        n: usize,
+        reg: u32,
+        lmul: Lmul,
+    ) -> Result<(), SimTrap> {
+        let group = self.check_group(reg, lmul)?;
+        let stride = self.bulk_stride(reg, group);
+        if n > stride * group as usize {
+            return Err(SimTrap::bad_operand(format!(
+                "bulk store of {n} bytes exceeds {} group at v{reg}",
+                lmul.asm()
+            )));
+        }
+        let vregs = &self.vregs as *const Vec<Vec<u8>>;
         let b = self
             .bufs
             .get_mut(buf as usize)
@@ -253,7 +413,11 @@ impl RvvMachine {
             return Err(SimTrap::oob(buf, byte_off, n, b.data.len(), true));
         }
         // SAFETY: vregs and bufs are disjoint fields; no aliasing
-        b.data[off..off + n].copy_from_slice(unsafe { &*reg_data });
+        let vregs = unsafe { &*vregs };
+        for (member, chunk) in b.data[off..off + n].chunks_mut(stride).enumerate() {
+            let len = chunk.len();
+            chunk.copy_from_slice(&vregs[reg as usize + member][..len]);
+        }
         Ok(())
     }
 
@@ -283,17 +447,78 @@ mod tests {
     use super::*;
     use crate::neon::elem::Elem;
 
+    use crate::rvv::trap::TrapKind;
+
     #[test]
     fn lane_rw_by_sew() {
         let cfg = RvvConfig::new(128);
         let mut m = RvvMachine::new(cfg, 2, 1, 0, vec![]);
-        m.write_lane(0, Sew::E32, 0, 0xdead_beef);
-        m.write_lane(0, Sew::E32, 3, 7);
-        assert_eq!(m.read_lane(0, Sew::E32, 0), 0xdead_beef);
-        assert_eq!(m.read_lane(0, Sew::E32, 3), 7);
+        m.write_lane(0, Sew::E32, Lmul::M1, 0, 0xdead_beef).unwrap();
+        m.write_lane(0, Sew::E32, Lmul::M1, 3, 7).unwrap();
+        assert_eq!(m.read_lane(0, Sew::E32, Lmul::M1, 0).unwrap(), 0xdead_beef);
+        assert_eq!(m.read_lane(0, Sew::E32, Lmul::M1, 3).unwrap(), 7);
         // byte view overlaps
-        assert_eq!(m.read_lane(0, Sew::E8, 0), 0xef);
-        assert_eq!(m.read_lane(0, Sew::E8, 3), 0xde);
+        assert_eq!(m.read_lane(0, Sew::E8, Lmul::M1, 0).unwrap(), 0xef);
+        assert_eq!(m.read_lane(0, Sew::E8, Lmul::M1, 3).unwrap(), 0xde);
+    }
+
+    #[test]
+    fn bad_lane_indices_trap_instead_of_panicking() {
+        let cfg = RvvConfig::new(128);
+        let mut m = RvvMachine::new(cfg, 2, 0, 0, vec![]);
+        // past the 2x widening storage of a single register
+        let t = m.read_lane(0, Sew::E64, Lmul::M1, 4).unwrap_err();
+        assert!(matches!(t.kind, TrapKind::BadOperand(_)), "{t}");
+        let t = m.write_lane(1, Sew::E32, Lmul::M1, 8, 0).unwrap_err();
+        assert!(matches!(t.kind, TrapKind::BadOperand(_)), "{t}");
+    }
+
+    #[test]
+    fn grouped_lanes_span_consecutive_registers() {
+        // VLEN=128, e32, m2: 4 lanes per member register, 8 total
+        let cfg = RvvConfig::new(128);
+        let mut m = RvvMachine::new(cfg, 8, 0, 0, vec![]);
+        for lane in 0..8 {
+            m.write_lane(2, Sew::E32, Lmul::M2, lane, 100 + lane as u64).unwrap();
+        }
+        // lanes 4..8 landed in the second member register, readable at m1
+        for lane in 0..4 {
+            assert_eq!(m.read_lane(2, Sew::E32, Lmul::M1, lane).unwrap(), 100 + lane as u64);
+            assert_eq!(m.read_lane(3, Sew::E32, Lmul::M1, lane).unwrap(), 104 + lane as u64);
+        }
+        // batched read sees the same 8 lanes
+        let got = m.read_lanes(2, Sew::E32, Lmul::M2, 8).unwrap();
+        assert_eq!(got, (100..108).collect::<Vec<u64>>());
+        // batched write round-trips across the group at m4
+        let vals: Vec<u64> = (0..16).map(|i| 0x5000 + i).collect();
+        m.write_lanes_from(4, Sew::E32, Lmul::M4, &vals).unwrap();
+        let mut got = Vec::new();
+        m.read_lanes_into(4, Sew::E32, Lmul::M4, 16, &mut got).unwrap();
+        assert_eq!(got, vals);
+        for (i, r) in (4..8).enumerate() {
+            assert_eq!(
+                m.read_lanes(r, Sew::E32, Lmul::M1, 4).unwrap(),
+                (0..4).map(|l| 0x5000 + (i * 4 + l) as u64).collect::<Vec<u64>>()
+            );
+        }
+    }
+
+    #[test]
+    fn misaligned_or_oversized_groups_trap() {
+        let cfg = RvvConfig::new(128);
+        let mut m = RvvMachine::new(cfg, 4, 0, 0, vec![]);
+        // v1 is not 2-aligned
+        let t = m.read_lane(1, Sew::E32, Lmul::M2, 0).unwrap_err();
+        assert!(matches!(t.kind, TrapKind::BadOperand(_)), "{t}");
+        assert!(t.to_string().contains("misaligned"), "{t}");
+        // v3 is not 4-aligned either
+        assert!(m.write_lane(3, Sew::E32, Lmul::M4, 0, 1).is_err());
+        // lane beyond the group capacity
+        let t = m.write_lane(0, Sew::E32, Lmul::M2, 8, 1).unwrap_err();
+        assert!(matches!(t.kind, TrapKind::BadOperand(_)), "{t}");
+        // group running off the end of the register file
+        let t = m.read_lanes(0, Sew::E32, Lmul::M8, 1).unwrap_err();
+        assert!(matches!(t.kind, TrapKind::BadOperand(_)), "{t}");
     }
 
     #[test]
@@ -318,12 +543,12 @@ mod tests {
             let vl = 128 / sew.bits();
             let vals: Vec<u64> =
                 (0..vl as u64).map(|i| (i.wrapping_mul(0x9e37_79b9_7f4a_7c15)) & sew_mask(sew)).collect();
-            m.write_lanes_from(0, sew, &vals);
+            m.write_lanes_from(0, sew, Lmul::M1, &vals).unwrap();
             for (i, &v) in vals.iter().enumerate() {
-                assert_eq!(m.read_lane(0, sew, i as u32), v, "{sew:?} lane {i}");
+                assert_eq!(m.read_lane(0, sew, Lmul::M1, i as u32).unwrap(), v, "{sew:?} lane {i}");
             }
             let mut got = Vec::new();
-            m.read_lanes_into(0, sew, vl, &mut got);
+            m.read_lanes_into(0, sew, Lmul::M1, vl, &mut got).unwrap();
             assert_eq!(got, vals, "{sew:?} batched read");
         }
     }

@@ -19,4 +19,4 @@ pub use machine::RvvMachine;
 pub use ops::{Dst, MemRef, RvvInst, RvvKind, Src};
 pub use program::{RStmt, RvvProgram, ScalarBlock};
 pub use trap::{SimTrap, TrapKind};
-pub use vtype::{Sew, VType};
+pub use vtype::{Lmul, Sew, VType};

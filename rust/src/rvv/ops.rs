@@ -3,7 +3,7 @@
 //! print the Listing-10-style instruction stream).
 
 use crate::ir::AddrExpr;
-use super::vtype::Sew;
+use super::vtype::{Lmul, Sew, VType};
 
 /// RVV opcode kind. Grouped per riscv-v-spec chapters.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -298,6 +298,10 @@ pub struct MemRef {
 pub struct RvvInst {
     pub kind: RvvKind,
     pub sew: Sew,
+    /// register grouping this instruction executes under; the static
+    /// translator always emits `m1`, the tuner's `lmul:F` transform
+    /// rewrites bodies to `m2`/`m4`
+    pub lmul: Lmul,
     /// number of elements processed (AVL == vl; our lowerings pin vl)
     pub vl: u32,
     pub dst: Dst,
@@ -309,6 +313,11 @@ pub struct RvvInst {
 }
 
 impl RvvInst {
+    /// The `vtype` this instruction requires to be in effect.
+    pub fn vtype(&self) -> VType {
+        VType { sew: self.sew, lmul: self.lmul }
+    }
+
     /// Assembly-like rendering for traces and the quickstart example, e.g.
     /// `vadd.vv v2, v0, v1` or `vle32.v v0, (A+0)`.
     pub fn asm(&self) -> String {
@@ -381,6 +390,7 @@ mod tests {
         let add = RvvInst {
             kind: RvvKind::Vadd,
             sew: Sew::E32,
+            lmul: Lmul::M1,
             vl: 4,
             dst: Dst::V(2),
             srcs: vec![Src::V(0), Src::V(1)],
@@ -392,6 +402,7 @@ mod tests {
         let merge = RvvInst {
             kind: RvvKind::Vmerge,
             sew: Sew::E32,
+            lmul: Lmul::M1,
             vl: 4,
             dst: Dst::V(3),
             srcs: vec![Src::V(1), Src::ImmI(-1), Src::M(0)],

@@ -2,8 +2,14 @@
 //! and the `vsetvli` configuration model.
 //!
 //! The paper's type-conversion strategy (§3.2) targets LMUL=1 fixed-size
-//! types (LLVM D145088), so LMUL=1 is the common case here; fractional and
-//! grouped LMULs are modelled for completeness and the vlen-sweep ablation.
+//! types (LLVM D145088), so the *translator* always emits `m1`. Since PR 9
+//! LMUL is a live dimension everywhere above the translator: every
+//! `RvvInst` carries an [`Lmul`], `vlmax = VLEN/SEW · LMUL` legality is
+//! enforced at execution time (`SimTrap::VsetvliViolation`), `RvvMachine`
+//! maps `m2`/`m4` operands onto aligned groups of 2/4 consecutive
+//! architectural registers (`SimTrap::BadOperand` on misalignment), and
+//! the autotuner's `lmul:F` candidate family re-emits legal loops at
+//! grouped vtypes with the trip count divided accordingly.
 
 use crate::neon::elem::Elem;
 
@@ -94,6 +100,42 @@ impl Lmul {
             Lmul::M8 => "m8",
         }
     }
+
+    /// Number of consecutive architectural registers one operand occupies.
+    /// Fractional LMUL still occupies (part of) a single register.
+    pub fn group(self) -> u32 {
+        match self {
+            Lmul::MF2 | Lmul::M1 => 1,
+            Lmul::M2 => 2,
+            Lmul::M4 => 4,
+            Lmul::M8 => 8,
+        }
+    }
+
+    /// Dense index for per-LMUL statistics tables (see `sim::stats`).
+    pub fn index(self) -> usize {
+        match self {
+            Lmul::MF2 => 0,
+            Lmul::M1 => 1,
+            Lmul::M2 => 2,
+            Lmul::M4 => 3,
+            Lmul::M8 => 4,
+        }
+    }
+
+    /// Number of distinct LMUL settings ([`Lmul::index`] range).
+    pub const COUNT: usize = 5;
+
+    /// Grouped LMUL for an integer factor (the tuner's `lmul:F` family).
+    pub fn try_of_factor(f: u32) -> Option<Lmul> {
+        match f {
+            1 => Some(Lmul::M1),
+            2 => Some(Lmul::M2),
+            4 => Some(Lmul::M4),
+            8 => Some(Lmul::M8),
+            _ => None,
+        }
+    }
 }
 
 /// A `vtype` configuration (tail/mask agnosticism fixed at ta,ma like
@@ -146,5 +188,23 @@ mod tests {
     #[test]
     fn asm_rendering() {
         assert_eq!(VType::m1(Sew::E32).asm(), "e32, m1, ta, ma");
+    }
+
+    #[test]
+    fn group_sizes_and_factors() {
+        assert_eq!(Lmul::MF2.group(), 1);
+        assert_eq!(Lmul::M1.group(), 1);
+        assert_eq!(Lmul::M2.group(), 2);
+        assert_eq!(Lmul::M4.group(), 4);
+        assert_eq!(Lmul::M8.group(), 8);
+        assert_eq!(Lmul::try_of_factor(2), Some(Lmul::M2));
+        assert_eq!(Lmul::try_of_factor(4), Some(Lmul::M4));
+        assert_eq!(Lmul::try_of_factor(3), None);
+        for (i, l) in [Lmul::MF2, Lmul::M1, Lmul::M2, Lmul::M4, Lmul::M8]
+            .into_iter()
+            .enumerate()
+        {
+            assert_eq!(l.index(), i);
+        }
     }
 }

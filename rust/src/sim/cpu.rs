@@ -16,7 +16,7 @@ use crate::neon::interp::{Buffer, Inputs};
 use crate::rvv::exec::exec;
 use crate::rvv::machine::{RvvConfig, RvvMachine};
 use crate::rvv::program::{RStmt, RvvProgram};
-use crate::rvv::vtype::Sew;
+use crate::rvv::vtype::{Lmul, Sew};
 use super::scalar::exec_scalar_block;
 use super::stats::{SimStats, LOOP_OVERHEAD};
 
@@ -24,8 +24,8 @@ use super::stats::{SimStats, LOOP_OVERHEAD};
 pub struct Simulator<'p> {
     prog: &'p RvvProgram,
     m: RvvMachine,
-    /// current (sew, vl) configuration, None = unconfigured
-    vcfg: Option<(Sew, u32)>,
+    /// current (sew, lmul, vl) configuration, None = unconfigured
+    vcfg: Option<(Sew, Lmul, u32)>,
     /// dynamic index of the executed statement (vector ops and scalar
     /// blocks) — attached to traps as their `pc`
     op_index: usize,
@@ -66,7 +66,7 @@ impl<'p> Simulator<'p> {
             match s {
                 RStmt::Op(inst) => {
                     // vsetvli on configuration change
-                    let want = (inst.sew, inst.vl);
+                    let want = (inst.sew, inst.lmul, inst.vl);
                     if self.vcfg != Some(want) {
                         self.stats.vsetvli += 1;
                         self.vcfg = Some(want);
@@ -91,6 +91,7 @@ impl<'p> Simulator<'p> {
                         inst.kind as usize,
                         inst.kind.mnemonic(),
                         inst.kind.is_load() || inst.kind.is_store(),
+                        inst.lmul,
                     );
                 }
                 RStmt::SSet { dst, expr } => {
@@ -139,10 +140,10 @@ mod tests {
                 BufDecl { name: "O".into(), elem: Elem::I32, len: 4, kind: BufKind::Output },
             ],
             body: vec![
-                RStmt::Op(RvvInst { kind: RvvKind::Vle, sew: Sew::E32, vl: 4, dst: Dst::V(0), srcs: vec![], mask: None, mem: mem(0) }),
-                RStmt::Op(RvvInst { kind: RvvKind::Vle, sew: Sew::E32, vl: 4, dst: Dst::V(1), srcs: vec![], mask: None, mem: mem(1) }),
-                RStmt::Op(RvvInst { kind: RvvKind::Vadd, sew: Sew::E32, vl: 4, dst: Dst::V(2), srcs: vec![Src::V(0), Src::V(1)], mask: None, mem: None }),
-                RStmt::Op(RvvInst { kind: RvvKind::Vse, sew: Sew::E32, vl: 4, dst: Dst::None, srcs: vec![Src::V(2)], mask: None, mem: mem(2) }),
+                RStmt::Op(RvvInst { kind: RvvKind::Vle, sew: Sew::E32, lmul: Lmul::M1, vl: 4, dst: Dst::V(0), srcs: vec![], mask: None, mem: mem(0) }),
+                RStmt::Op(RvvInst { kind: RvvKind::Vle, sew: Sew::E32, lmul: Lmul::M1, vl: 4, dst: Dst::V(1), srcs: vec![], mask: None, mem: mem(1) }),
+                RStmt::Op(RvvInst { kind: RvvKind::Vadd, sew: Sew::E32, lmul: Lmul::M1, vl: 4, dst: Dst::V(2), srcs: vec![Src::V(0), Src::V(1)], mask: None, mem: None }),
+                RStmt::Op(RvvInst { kind: RvvKind::Vse, sew: Sew::E32, lmul: Lmul::M1, vl: 4, dst: Dst::None, srcs: vec![Src::V(2)], mask: None, mem: mem(2) }),
             ],
             n_vregs: 3,
             n_mregs: 0,
@@ -175,6 +176,7 @@ mod tests {
             body.push(RStmt::Op(RvvInst {
                 kind: RvvKind::VmvVX,
                 sew,
+                lmul: Lmul::M1,
                 vl: 4,
                 dst: Dst::V(0),
                 srcs: vec![Src::ImmI(1)],

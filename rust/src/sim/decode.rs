@@ -11,7 +11,7 @@
 //!   right-hand sides) is compiled to an affine [`AffineAddr`]
 //!   `base + Σ coef·sreg` form, with the buffer's element-byte scale
 //!   folded into the coefficients for memory operands;
-//! - **vsetvli decisions** — each instruction's `(sew, vl)` demand is
+//! - **vsetvli decisions** — each instruction's `(sew, lmul, vl)` demand is
 //!   analysed statically: inside a straight-line run whose predecessor
 //!   already established the same configuration, the runtime
 //!   `vsetvli` check is elided entirely (`check_cfg = false`). At control
@@ -29,7 +29,7 @@
 use crate::ir::AddrExpr;
 use crate::rvv::ops::RvvInst;
 use crate::rvv::program::{RStmt, RvvProgram, ScalarBlock};
-use crate::rvv::vtype::Sew;
+use crate::rvv::vtype::{Lmul, Sew};
 
 /// An affine integer expression `base + Σ coef·sreg`, precompiled from an
 /// [`AddrExpr`] tree. Evaluation is a flat multiply-accumulate loop
@@ -91,8 +91,11 @@ pub struct DecodedInst {
     /// Precompiled memory-operand byte offset (element-byte scale folded
     /// in), for loads/stores.
     pub mem: Option<AffineAddr>,
-    /// The `(sew, vl)` configuration this instruction demands.
-    pub want: (Sew, u32),
+    /// The `(sew, lmul, vl)` configuration this instruction demands.
+    /// Grouped (`m2`/`m4`) instructions decode like any other — the lane
+    /// batch simply spans the whole register group, so tuned `lmul:F`
+    /// kernels stay on the batched fast path.
+    pub want: (Sew, Lmul, u32),
     /// Opcode discriminant + mnemonic + memory-op flag for stats
     /// recording without per-op classification.
     pub kind_idx: usize,
@@ -164,9 +167,9 @@ pub fn decode(prog: &RvvProgram) -> DecodedProgram {
 struct Decoder<'p> {
     prog: &'p RvvProgram,
     out: DecodedProgram,
-    /// Statically-known `(sew, vl)` configuration at the current decode
-    /// point; `None` at control-flow joins.
-    cur: Option<(Sew, u32)>,
+    /// Statically-known `(sew, lmul, vl)` configuration at the current
+    /// decode point; `None` at control-flow joins.
+    cur: Option<(Sew, Lmul, u32)>,
 }
 
 impl Decoder<'_> {
@@ -174,7 +177,7 @@ impl Decoder<'_> {
         for s in stmts {
             match s {
                 RStmt::Op(inst) => {
-                    let want = (inst.sew, inst.vl);
+                    let want = (inst.sew, inst.lmul, inst.vl);
                     let check_cfg = self.cur != Some(want);
                     self.cur = Some(want);
                     let mem = inst.mem.as_ref().map(|mref| {
@@ -269,6 +272,7 @@ mod tests {
         RStmt::Op(RvvInst {
             kind: RvvKind::VmvVX,
             sew,
+            lmul: Lmul::M1,
             vl,
             dst: Dst::V(0),
             srcs: vec![Src::ImmI(1)],
@@ -346,6 +350,7 @@ mod tests {
             body: vec![RStmt::Op(RvvInst {
                 kind: RvvKind::Vle,
                 sew: Sew::E32,
+                lmul: Lmul::M1,
                 vl: 4,
                 dst: Dst::V(0),
                 srcs: vec![],

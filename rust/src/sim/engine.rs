@@ -26,7 +26,7 @@ use crate::neon::interp::{Buffer, Inputs};
 use crate::rvv::exec::{exec_batched, ExecScratch};
 use crate::rvv::machine::{RvvConfig, RvvMachine};
 use crate::rvv::program::RvvProgram;
-use crate::rvv::vtype::Sew;
+use crate::rvv::vtype::{Lmul, Sew};
 use super::decode::{DecodedOp, DecodedProgram};
 use super::scalar::exec_scalar_block;
 use super::stats::{SimStats, LOOP_OVERHEAD};
@@ -37,8 +37,8 @@ pub struct Engine<'p> {
     prog: &'p RvvProgram,
     dec: &'p DecodedProgram,
     m: RvvMachine,
-    /// current (sew, vl) configuration, None = unconfigured
-    vcfg: Option<(Sew, u32)>,
+    /// current (sew, lmul, vl) configuration, None = unconfigured
+    vcfg: Option<(Sew, Lmul, u32)>,
     /// loop trip counters, one slot per static loop (kept out of `sregs`
     /// so body writes to the induction register cannot alter trip counts,
     /// matching the interpreter's local loop variable)
@@ -114,7 +114,7 @@ impl<'p> Engine<'p> {
                                 .on_engine("decoded")
                         },
                     )?;
-                    self.stats.record_vector(di.kind_idx, di.mnemonic, di.is_mem);
+                    self.stats.record_vector(di.kind_idx, di.mnemonic, di.is_mem, di.inst.lmul);
                     pc += 1;
                 }
                 DecodedOp::SSet { dst, addr } => {
@@ -177,6 +177,7 @@ mod tests {
             RStmt::Op(RvvInst {
                 kind: RvvKind::Vle,
                 sew: Sew::E32,
+                lmul: Lmul::M1,
                 vl: 4,
                 dst: Dst::V(dst),
                 srcs: vec![],
@@ -202,6 +203,7 @@ mod tests {
                     RStmt::Op(RvvInst {
                         kind: RvvKind::Vmacc,
                         sew: Sew::E32,
+                        lmul: Lmul::M1,
                         vl: 4,
                         dst: Dst::V(1),
                         srcs: vec![Src::V(0), Src::V(0)],
@@ -211,6 +213,7 @@ mod tests {
                     RStmt::Op(RvvInst {
                         kind: RvvKind::Vse,
                         sew: Sew::E32,
+                        lmul: Lmul::M1,
                         vl: 4,
                         dst: Dst::None,
                         srcs: vec![Src::V(1)],

@@ -13,7 +13,7 @@ use crate::neon::vreg::{VReg, VecTy};
 use crate::rvv::machine::RvvMachine;
 use crate::rvv::program::ScalarBlock;
 use crate::rvv::trap::SimTrap;
-use crate::rvv::vtype::Sew;
+use crate::rvv::vtype::{Lmul, Sew};
 use super::stats::SimStats;
 
 /// Execute a SIMDe generic-path scalar fallback: numerics via the
@@ -58,7 +58,7 @@ fn scalar_block_inner(
                     (idx + lane as i64) * decl.elem.bytes() as i64
                 };
                 let raw = m.load_at(buf, off, sew)?;
-                m.write_lane(dst, Sew::of_bits(vt.elem.bits()), lane, raw);
+                m.write_lane(dst, Sew::of_bits(vt.elem.bits()), Lmul::M1, lane, raw)?;
             }
             Ok(())
         }
@@ -72,7 +72,7 @@ fn scalar_block_inner(
             let decl = &bufs[buf as usize];
             let sew = Sew::of_bits(decl.elem.bits());
             for lane in 0..vt.lanes as u32 {
-                let raw = m.read_lane(src, Sew::of_bits(vt.elem.bits()), lane);
+                let raw = m.read_lane(src, Sew::of_bits(vt.elem.bits()), Lmul::M1, lane)?;
                 m.store_at(buf, (idx + lane as i64) * decl.elem.bytes() as i64, sew, raw)?;
             }
             Ok(())
@@ -92,13 +92,13 @@ fn scalar_block_inner(
             let sew = Sew::of_bits(vt.elem.bits());
             // copy the source vector, then overwrite one lane
             for l in 0..vt.lanes as u32 {
-                let raw = m.read_lane(src, sew, l);
-                m.write_lane(dst, sew, l, raw);
+                let raw = m.read_lane(src, sew, Lmul::M1, l)?;
+                m.write_lane(dst, sew, Lmul::M1, l, raw)?;
             }
             let decl = &bufs[buf as usize];
             let raw =
                 m.load_at(buf, idx * decl.elem.bytes() as i64, Sew::of_bits(decl.elem.bits()))?;
-            m.write_lane(dst, sew, lane, raw);
+            m.write_lane(dst, sew, Lmul::M1, lane, raw)?;
             Ok(())
         }
         Family::St1Lane => {
@@ -113,7 +113,7 @@ fn scalar_block_inner(
             };
             let vt = op.vt();
             let sew = Sew::of_bits(vt.elem.bits());
-            let raw = m.read_lane(src, sew, lane);
+            let raw = m.read_lane(src, sew, Lmul::M1, lane)?;
             let decl = &bufs[buf as usize];
             m.store_at(buf, idx * decl.elem.bytes() as i64, Sew::of_bits(decl.elem.bits()), raw)?;
             Ok(())
@@ -124,7 +124,7 @@ fn scalar_block_inner(
             let mut vals = Vec::with_capacity(b.call.args.len());
             for (at, a) in sig.args.iter().zip(&b.call.args) {
                 vals.push(match (at, a) {
-                    (crate::neon::ops::ArgTy::V(vt), Arg::V(r)) => Value::V(read_neon(m, *r, *vt)),
+                    (crate::neon::ops::ArgTy::V(vt), Arg::V(r)) => Value::V(read_neon(m, *r, *vt)?),
                     (_, Arg::Imm(i)) => Value::Imm(*i),
                     (_, Arg::S(r)) => Value::Imm(m.sregs[*r as usize]),
                     _ => {
@@ -137,25 +137,30 @@ fn scalar_block_inner(
             }
             let r = eval_pure(op, &vals);
             let dst = b.dst.ok_or_else(|| SimTrap::bad_operand("scalar op without dst"))?;
-            write_neon(m, dst, &r);
+            write_neon(m, dst, &r)?;
             Ok(())
         }
     }
 }
 
-/// Read the low lanes of an RVV vreg as a NEON vector value.
-fn read_neon(m: &RvvMachine, reg: u32, vt: VecTy) -> VReg {
+/// Read the low lanes of an RVV vreg as a NEON vector value. Scalar
+/// fallbacks model the fixed 128-bit NEON types, so these always address
+/// single (`m1`) registers.
+fn read_neon(m: &RvvMachine, reg: u32, vt: VecTy) -> Result<VReg, SimTrap> {
     let sew = Sew::of_bits(vt.elem.bits());
-    let lanes = (0..vt.lanes as u32).map(|i| m.read_lane(reg, sew, i)).collect();
-    VReg::from_raw(vt, lanes)
+    let lanes = (0..vt.lanes as u32)
+        .map(|i| m.read_lane(reg, sew, Lmul::M1, i))
+        .collect::<Result<Vec<u64>, SimTrap>>()?;
+    Ok(VReg::from_raw(vt, lanes))
 }
 
 /// Write a NEON vector value into the low lanes of an RVV vreg.
-fn write_neon(m: &mut RvvMachine, reg: u32, v: &VReg) {
+fn write_neon(m: &mut RvvMachine, reg: u32, v: &VReg) -> Result<(), SimTrap> {
     let sew = Sew::of_bits(v.ty.elem.bits());
     for (i, &raw) in v.lanes.iter().enumerate() {
-        m.write_lane(reg, sew, i as u32, raw);
+        m.write_lane(reg, sew, Lmul::M1, i as u32, raw)?;
     }
+    Ok(())
 }
 
 fn resolve_mem(m: &RvvMachine, a: &Arg) -> Result<(u32, i64), SimTrap> {

@@ -4,6 +4,8 @@
 
 use std::collections::BTreeMap;
 
+use crate::rvv::vtype::Lmul;
+
 /// Modelled loop overhead per iteration (induction increment + branch),
 /// identical for both translation modes.
 pub const LOOP_OVERHEAD: u64 = 2;
@@ -33,6 +35,10 @@ pub struct SimStats {
     pub scalar_ops: u64,
     /// Scalar loads/stores (scalar-fallback element traffic).
     pub scalar_mem: u64,
+    /// Dynamic vector instructions by register grouping, indexed by
+    /// [`Lmul::index`] — shows how much of a tuned kernel actually ran
+    /// grouped (`m2`/`m4`) vs at the translator's static `m1`.
+    pub by_lmul: [u64; Lmul::COUNT],
     counts: Box<[u64; MAX_KINDS]>,
     names: Box<[Option<&'static str>; MAX_KINDS]>,
 }
@@ -45,6 +51,7 @@ impl Default for SimStats {
             vsetvli: 0,
             scalar_ops: 0,
             scalar_mem: 0,
+            by_lmul: [0; Lmul::COUNT],
             counts: Box::new([0; MAX_KINDS]),
             names: Box::new([None; MAX_KINDS]),
         }
@@ -58,12 +65,13 @@ impl SimStats {
     }
 
     #[inline]
-    pub fn record_vector(&mut self, kind_idx: usize, mnemonic: &'static str, is_mem: bool) {
+    pub fn record_vector(&mut self, kind_idx: usize, mnemonic: &'static str, is_mem: bool, lmul: Lmul) {
         if is_mem {
             self.vector_mem += 1;
         } else {
             self.vector_ops += 1;
         }
+        self.by_lmul[lmul.index()] += 1;
         debug_assert!(kind_idx < MAX_KINDS);
         self.counts[kind_idx] += 1;
         if self.names[kind_idx].is_none() {
@@ -90,6 +98,9 @@ impl SimStats {
         self.vsetvli += o.vsetvli;
         self.scalar_ops += o.scalar_ops;
         self.scalar_mem += o.scalar_mem;
+        for i in 0..Lmul::COUNT {
+            self.by_lmul[i] += o.by_lmul[i];
+        }
         for i in 0..MAX_KINDS {
             self.counts[i] += o.counts[i];
             if self.names[i].is_none() {
@@ -100,7 +111,7 @@ impl SimStats {
 
     /// One-line summary for logs.
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "total={} (vec={} vmem={} vsetvli={} scalar={} smem={})",
             self.total(),
             self.vector_ops,
@@ -108,7 +119,18 @@ impl SimStats {
             self.vsetvli,
             self.scalar_ops,
             self.scalar_mem
-        )
+        );
+        // grouped execution is the exception worth surfacing; all-m1 runs
+        // keep the line unchanged from previous PRs
+        let grouped: Vec<String> = [Lmul::MF2, Lmul::M2, Lmul::M4, Lmul::M8]
+            .into_iter()
+            .filter(|l| self.by_lmul[l.index()] > 0)
+            .map(|l| format!("{}={}", l.asm(), self.by_lmul[l.index()]))
+            .collect();
+        if !grouped.is_empty() {
+            s.push_str(&format!(" lmul[{}]", grouped.join(" ")));
+        }
+        s
     }
 }
 
@@ -119,8 +141,8 @@ mod tests {
     #[test]
     fn totals_add_up() {
         let mut s = SimStats::default();
-        s.record_vector(4, "vadd", false);
-        s.record_vector(0, "vle", true);
+        s.record_vector(4, "vadd", false, Lmul::M1);
+        s.record_vector(0, "vle", true, Lmul::M1);
         s.vsetvli += 1;
         s.scalar_ops += 3;
         s.scalar_mem += 2;
@@ -131,13 +153,25 @@ mod tests {
     #[test]
     fn merge_accumulates() {
         let mut a = SimStats::default();
-        a.record_vector(4, "vadd", false);
+        a.record_vector(4, "vadd", false, Lmul::M1);
         let mut b = SimStats::default();
-        b.record_vector(4, "vadd", false);
-        b.record_vector(1, "vse", true);
+        b.record_vector(4, "vadd", false, Lmul::M1);
+        b.record_vector(1, "vse", true, Lmul::M2);
         a.merge(&b);
         assert_eq!(a.vector_ops, 2);
         assert_eq!(a.vector_mem, 1);
         assert_eq!(a.histogram()["vadd"], 2);
+        assert_eq!(a.by_lmul[Lmul::M1.index()], 2);
+        assert_eq!(a.by_lmul[Lmul::M2.index()], 1);
+    }
+
+    #[test]
+    fn grouped_counts_surface_in_summary() {
+        let mut s = SimStats::default();
+        s.record_vector(4, "vadd", false, Lmul::M1);
+        assert!(!s.summary().contains("lmul["));
+        s.record_vector(4, "vadd", false, Lmul::M2);
+        s.record_vector(4, "vadd", false, Lmul::M4);
+        assert!(s.summary().contains("lmul[m2=1 m4=1]"), "{}", s.summary());
     }
 }

@@ -7,7 +7,7 @@ use crate::neon::ops::NeonOp;
 use crate::rvv::machine::RvvConfig;
 use crate::rvv::ops::{Dst, MemRef, RvvInst, RvvKind, Src};
 use crate::rvv::program::RStmt;
-use crate::rvv::vtype::Sew;
+use crate::rvv::vtype::{Lmul, Sew};
 
 /// Context for lowering one IR program. NEON vregs map identity onto RVV
 /// vregs; scratch vector/mask registers are allocated from a pool above
@@ -97,14 +97,16 @@ impl<'a> Ctx<'a> {
         self.out.push(RStmt::Op(inst));
     }
 
-    /// Generic op: `dst = kind(srcs)` at (sew, vl).
+    /// Generic op: `dst = kind(srcs)` at (sew, vl). The static translator
+    /// models the paper's LMUL=1 fixed-size mapping; grouped (`m2`/`m4`)
+    /// variants are introduced later by the tuner's `lmul:F` transform.
     pub fn op(&mut self, kind: RvvKind, sew: Sew, vl: u32, dst: Dst, srcs: Vec<Src>) {
-        self.emit(RvvInst { kind, sew, vl, dst, srcs, mask: None, mem: None });
+        self.emit(RvvInst { kind, sew, lmul: Lmul::M1, vl, dst, srcs, mask: None, mem: None });
     }
 
     /// Masked op.
     pub fn op_masked(&mut self, kind: RvvKind, sew: Sew, vl: u32, dst: Dst, srcs: Vec<Src>, mask: u32) {
-        self.emit(RvvInst { kind, sew, vl, dst, srcs, mask: Some(mask), mem: None });
+        self.emit(RvvInst { kind, sew, lmul: Lmul::M1, vl, dst, srcs, mask: Some(mask), mem: None });
     }
 
     /// Unit-stride load into `dst`.
@@ -112,6 +114,7 @@ impl<'a> Ctx<'a> {
         self.emit(RvvInst {
             kind: if mem.stride == 1 { RvvKind::Vle } else { RvvKind::Vlse },
             sew,
+            lmul: Lmul::M1,
             vl,
             dst: Dst::V(dst),
             srcs: vec![],
@@ -125,6 +128,7 @@ impl<'a> Ctx<'a> {
         self.emit(RvvInst {
             kind: if mem.stride == 1 { RvvKind::Vle } else { RvvKind::Vlse },
             sew,
+            lmul: Lmul::M1,
             vl,
             dst: Dst::V(dst),
             srcs: vec![],
@@ -138,6 +142,7 @@ impl<'a> Ctx<'a> {
         self.emit(RvvInst {
             kind: if mem.stride == 1 { RvvKind::Vse } else { RvvKind::Vsse },
             sew,
+            lmul: Lmul::M1,
             vl,
             dst: Dst::None,
             srcs: vec![Src::V(src)],

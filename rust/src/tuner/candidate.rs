@@ -9,6 +9,11 @@
 //! - `widen:F` — the static lowering post-processed by
 //!   [`crate::tuner::widen::widen`], coalescing `F` loop iterations into
 //!   one when the target VLEN has spare lanes.
+//! - `lmul:F` — the static lowering re-emitted at register grouping
+//!   `m2`/`m4` by [`crate::tuner::lmul::regroup`]: same iteration
+//!   coalescing, but the scaled `vl` lands on a register *group* instead
+//!   of the spare lanes of one register, so it applies even when the
+//!   NEON shapes already fill the machine.
 //! - `force-baseline:<category>` — lower intrinsics of one category
 //!   through the generic SIMDe path instead of the customized RVV rule
 //!   (occasionally the "clever" combo sequence loses to the plain one).
@@ -26,7 +31,7 @@ use crate::rvv::machine::RvvConfig;
 use crate::rvv::RvvProgram;
 use crate::simde::registry::program_categories;
 use crate::simde::{Mode, TranslationReport, Translator};
-use crate::tuner::widen;
+use crate::tuner::{lmul, widen};
 
 /// One point in the lowering search space.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -35,6 +40,9 @@ pub enum Candidate {
     Static,
     /// Loop-coalesce the static lowering by this factor.
     Widen(u32),
+    /// Re-emit the static lowering's legal loops at register grouping
+    /// `m2`/`m4` (factor 2 or 4), dividing the trip count.
+    Lmul(u32),
     /// Degrade one intrinsic category to the generic SIMDe path.
     ForceBaseline(Category),
 }
@@ -73,6 +81,7 @@ impl Candidate {
         match self {
             Candidate::Static => "static".to_string(),
             Candidate::Widen(f) => format!("widen:{f}"),
+            Candidate::Lmul(f) => format!("lmul:{f}"),
             Candidate::ForceBaseline(cat) => format!("force-baseline:{}", category_name(*cat)),
         }
     }
@@ -84,6 +93,9 @@ impl Candidate {
         }
         if let Some(f) = id.strip_prefix("widen:") {
             return f.parse::<u32>().ok().filter(|f| *f >= 2).map(Candidate::Widen);
+        }
+        if let Some(f) = id.strip_prefix("lmul:") {
+            return f.parse::<u32>().ok().filter(|f| matches!(f, 2 | 4)).map(Candidate::Lmul);
         }
         if let Some(cat) = id.strip_prefix("force-baseline:") {
             return category_parse(cat).map(Candidate::ForceBaseline);
@@ -104,6 +116,9 @@ pub fn enumerate(prog: &Program, mode: Mode, max_candidates: usize) -> Vec<Candi
     if mode == Mode::RvvCustom {
         for f in [2u32, 4, 8] {
             out.push(Candidate::Widen(f));
+        }
+        for f in [2u32, 4] {
+            out.push(Candidate::Lmul(f));
         }
         for cat in program_categories(prog) {
             out.push(Candidate::ForceBaseline(cat));
@@ -133,6 +148,12 @@ pub fn lower_with(
                 .map_err(|e| anyhow!("widen:{f}: {e}"))?;
             Ok((wide, report))
         }
+        Candidate::Lmul(f) => {
+            let (rp, report) = Translator::new(mode, cfg).translate(prog)?;
+            let grouped = lmul::regroup(&rp, cfg.vlen, *f)
+                .map_err(|e| anyhow!("lmul:{f}: {e}"))?;
+            Ok((grouped, report))
+        }
     }
 }
 
@@ -144,7 +165,13 @@ mod tests {
 
     #[test]
     fn id_parse_round_trips() {
-        let mut cands = vec![Candidate::Static, Candidate::Widen(2), Candidate::Widen(8)];
+        let mut cands = vec![
+            Candidate::Static,
+            Candidate::Widen(2),
+            Candidate::Widen(8),
+            Candidate::Lmul(2),
+            Candidate::Lmul(4),
+        ];
         for (cat, _) in CATEGORY_NAMES {
             cands.push(Candidate::ForceBaseline(*cat));
         }
@@ -153,6 +180,9 @@ mod tests {
         }
         assert_eq!(Candidate::parse("widen:1"), None);
         assert_eq!(Candidate::parse("widen:x"), None);
+        assert_eq!(Candidate::parse("lmul:1"), None);
+        assert_eq!(Candidate::parse("lmul:8"), None);
+        assert_eq!(Candidate::parse("lmul:x"), None);
         assert_eq!(Candidate::parse("force-baseline:nope"), None);
         assert_eq!(Candidate::parse(""), None);
     }
@@ -163,6 +193,8 @@ mod tests {
         let all = enumerate(&case.prog, Mode::RvvCustom, 64);
         assert_eq!(all[0], Candidate::Static);
         assert!(all.contains(&Candidate::Widen(4)), "widen candidates missing: {all:?}");
+        assert!(all.contains(&Candidate::Lmul(2)), "lmul candidates missing: {all:?}");
+        assert!(all.contains(&Candidate::Lmul(4)), "lmul candidates missing: {all:?}");
         assert!(
             all.iter().any(|c| matches!(c, Candidate::ForceBaseline(_))),
             "force-baseline candidates missing: {all:?}"

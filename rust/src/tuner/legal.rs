@@ -1,0 +1,467 @@
+//! Shared loop-coalescing legality analysis, used by both iteration
+//! transforms in the tuner:
+//!
+//! - [`super::widen`] — multiply each body op's `vl` by `F` at `m1`
+//!   (fills the spare lanes of one wide register);
+//! - [`super::lmul`] — keep per-register occupancy and move the scaled
+//!   `vl` onto an `m2`/`m4` register *group* instead.
+//!
+//! Both transforms coalesce `F` consecutive iterations of a loop into
+//! one, so they share the same soundness argument and the same analysis;
+//! the only difference is capacity: widening packs `vl·F` lanes into a
+//! single register (`vl · F · SEW ≤ VLEN`), while regrouping grows the
+//! register group with the lane count (`vl · F ≤ VLMAX(mF)`, which holds
+//! exactly when the original `vl ≤ VLMAX(m1)` did). That difference is
+//! the `cap_factor` parameter of [`analyze`].
+//!
+//! The analysis is deliberately conservative — the tuner treats a refusal
+//! as "candidate scored out", never as an error, so it is always safe to
+//! say no:
+//!
+//! - the trip count must be positive, exact (`(end-start) % step == 0`)
+//!   and divisible by `F`;
+//! - every statement in the body is an unmasked vector op from an
+//!   element-wise whitelist (lane `i` depends only on lane `i` of its
+//!   sources), or a unit-stride `Vle`/`Vse` whose address advances by
+//!   exactly `vl` elements per iteration (`coeff(ivar) * step == vl`),
+//!   or a nested constant-bound loop of such ops;
+//! - each op's coalesced footprint fits the machine:
+//!   `vl * cap_factor * sew.bits() <= VLEN`;
+//! - no register written in the body is read before its first write in
+//!   the body (no loop-carried dependence) or anywhere outside the loop;
+//! - registers read but never written in the body (invariants) must be
+//!   defined by a single, program-unique top-level splat (`VmvVX` /
+//!   `VfmvVF`), which gets its `vl` scaled too;
+//! - no buffer is both loaded and stored in the body, and each stored
+//!   buffer has exactly one store op (so per-iteration store footprints
+//!   partition and merging iterations cannot reorder overlapping writes).
+//!
+//! Under those rules the coalesced loop performs exactly the same lane
+//! computations and exactly the same memory writes as `F` original
+//! iterations, so outputs are bit-identical — the tuner's differential
+//! check re-verifies this at runtime anyway.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::rvv::{Dst, RStmt, RvvInst, RvvKind, RvvProgram, Sew, Src};
+use crate::sim::AffineAddr;
+
+/// A vector or mask register, for dependence tracking.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+enum Reg {
+    V(u32),
+    M(u32),
+}
+
+/// What the environment knows about the last definition of a vreg:
+/// `Some((path, vl, sew))` for a top-level splat, `None` otherwise.
+type SplatInfo = Option<(Vec<usize>, u32, Sew)>;
+
+/// The result of a successful analysis: which loops to coalesce and which
+/// pre-loop splats must have their `vl` scaled along with them.
+#[derive(Default)]
+pub struct LoopPlan {
+    /// Index paths (through nested `Loop` bodies) of loops to coalesce.
+    pub loops: Vec<Vec<usize>>,
+    /// Index paths of pre-loop splats whose `vl` must be scaled.
+    pub splats: HashSet<Vec<usize>>,
+}
+
+/// Find every loop that legally admits coalescing `factor` iterations.
+/// `cap_factor` is the per-register footprint growth (see module docs);
+/// `Err` with a reason when no loop qualifies.
+pub fn analyze(
+    prog: &RvvProgram,
+    vlen: u32,
+    factor: u32,
+    cap_factor: u32,
+) -> Result<LoopPlan, String> {
+    if factor < 2 {
+        return Err(format!("factor {factor} must be >= 2"));
+    }
+    let (greads, gwrites) = global_counts(prog);
+    let mut plan = LoopPlan::default();
+    let cx = Analysis {
+        factor: u64::from(factor),
+        vlen: u64::from(vlen),
+        cap_factor: u64::from(cap_factor),
+        greads,
+        gwrites,
+    };
+    let mut env: HashMap<u32, SplatInfo> = HashMap::new();
+    scan(&prog.body, &mut Vec::new(), &cx, &mut env, &mut plan);
+    if plan.loops.is_empty() {
+        return Err(format!("no loop admits coalescing {factor} iterations"));
+    }
+    Ok(plan)
+}
+
+struct Analysis {
+    factor: u64,
+    vlen: u64,
+    cap_factor: u64,
+    greads: HashMap<Reg, usize>,
+    gwrites: HashMap<Reg, usize>,
+}
+
+/// Registers read by an instruction: vector/mask sources, the mask
+/// operand, and the accumulator (destination) of multiply-accumulate ops.
+fn inst_reads(inst: &RvvInst, out: &mut Vec<Reg>) {
+    for s in &inst.srcs {
+        match s {
+            Src::V(r) => out.push(Reg::V(*r)),
+            Src::M(r) => out.push(Reg::M(*r)),
+            _ => {}
+        }
+    }
+    if let Some(m) = inst.mask {
+        out.push(Reg::M(m));
+    }
+    if matches!(
+        inst.kind,
+        RvvKind::Vmacc
+            | RvvKind::Vnmsac
+            | RvvKind::Vwmacc
+            | RvvKind::Vwmaccu
+            | RvvKind::Vfmacc
+            | RvvKind::Vfnmacc
+            | RvvKind::Vfmsac
+            | RvvKind::Vfnmsac
+    ) {
+        if let Dst::V(r) = inst.dst {
+            out.push(Reg::V(r));
+        }
+    }
+}
+
+fn inst_write(inst: &RvvInst) -> Option<Reg> {
+    match inst.dst {
+        Dst::V(r) => Some(Reg::V(r)),
+        Dst::M(r) => Some(Reg::M(r)),
+        Dst::None => None,
+    }
+}
+
+/// Count every register read and write in the whole program, including
+/// scalar-fallback blocks (which read vreg args and may write a vreg).
+fn global_counts(prog: &RvvProgram) -> (HashMap<Reg, usize>, HashMap<Reg, usize>) {
+    let mut reads: HashMap<Reg, usize> = HashMap::new();
+    let mut writes: HashMap<Reg, usize> = HashMap::new();
+    fn walk(stmts: &[RStmt], reads: &mut HashMap<Reg, usize>, writes: &mut HashMap<Reg, usize>) {
+        let mut scratch = Vec::new();
+        for s in stmts {
+            match s {
+                RStmt::Op(inst) => {
+                    scratch.clear();
+                    inst_reads(inst, &mut scratch);
+                    for r in &scratch {
+                        *reads.entry(*r).or_insert(0) += 1;
+                    }
+                    if let Some(r) = inst_write(inst) {
+                        *writes.entry(r).or_insert(0) += 1;
+                    }
+                }
+                RStmt::Loop { body, .. } => walk(body, reads, writes),
+                RStmt::Scalar(b) => {
+                    for a in &b.call.args {
+                        if let crate::ir::Arg::V(r) = a {
+                            *reads.entry(Reg::V(*r)).or_insert(0) += 1;
+                        }
+                    }
+                    if let Some(r) = b.dst {
+                        *writes.entry(Reg::V(r)).or_insert(0) += 1;
+                    }
+                }
+                RStmt::SSet { .. } => {}
+            }
+        }
+    }
+    walk(&prog.body, &mut reads, &mut writes);
+    (reads, writes)
+}
+
+/// Program-order walk: maintain the splat environment, try each loop as
+/// a coalescing candidate, and descend into rejected loops looking for
+/// legal inner loops (e.g. a channel loop inside spatial loops).
+fn scan(
+    stmts: &[RStmt],
+    path: &mut Vec<usize>,
+    cx: &Analysis,
+    env: &mut HashMap<u32, SplatInfo>,
+    plan: &mut LoopPlan,
+) {
+    for (i, s) in stmts.iter().enumerate() {
+        path.push(i);
+        match s {
+            RStmt::Op(inst) => {
+                if let Dst::V(r) = inst.dst {
+                    let splat = matches!(inst.kind, RvvKind::VmvVX | RvvKind::VfmvVF)
+                        && path.len() == 1;
+                    env.insert(r, splat.then(|| (path.clone(), inst.vl, inst.sew)));
+                }
+            }
+            RStmt::Scalar(b) => {
+                if let Some(r) = b.dst {
+                    env.insert(r, None);
+                }
+            }
+            RStmt::SSet { .. } => {}
+            RStmt::Loop { ivar, start, end, step, body } => {
+                match check_loop(*ivar, *start, *end, *step, body, cx, env) {
+                    Some(splats) => {
+                        plan.loops.push(path.clone());
+                        plan.splats.extend(splats);
+                    }
+                    None => scan(body, path, cx, env, plan),
+                }
+                // after the loop, any reg its body defines is no longer a
+                // known splat for later candidates
+                let mut defs = Vec::new();
+                collect_vreg_defs(body, &mut defs);
+                for r in defs {
+                    env.insert(r, None);
+                }
+            }
+        }
+        path.pop();
+    }
+}
+
+fn collect_vreg_defs(stmts: &[RStmt], out: &mut Vec<u32>) {
+    for s in stmts {
+        match s {
+            RStmt::Op(inst) => {
+                if let Dst::V(r) = inst.dst {
+                    out.push(r);
+                }
+            }
+            RStmt::Loop { body, .. } => collect_vreg_defs(body, out),
+            RStmt::Scalar(b) => out.extend(b.dst),
+            RStmt::SSet { .. } => {}
+        }
+    }
+}
+
+/// Vector ops whose lane `i` depends only on lane `i` of each source —
+/// safe to execute over `F*vl` lanes at once. Widening/narrowing ops,
+/// reductions, permutes and strided memory ops are deliberately absent.
+fn elementwise(kind: RvvKind) -> bool {
+    use RvvKind::*;
+    matches!(
+        kind,
+        Vadd | Vsub | Vrsub | Vmul | Vmulh | Vmulhu | Vmin | Vminu | Vmax | Vmaxu
+            | Vsadd | Vsaddu | Vssub | Vssubu | Vand | Vor | Vxor | Vsll | Vsrl | Vsra
+            | VmvVV | VmvVX | VfmvVF | Vmerge | Vfmerge
+            | Vmseq | Vmsne | Vmsltu | Vmslt | Vmsleu | Vmsle | Vmsgtu | Vmsgt
+            | Vmfeq | Vmfne | Vmflt | Vmfle | Vmfgt | Vmfge
+            | Vmand | Vmor | Vmxor | Vmnand
+            | Vfadd | Vfsub | Vfrsub | Vfmul | Vfdiv | Vfrdiv
+            | Vfmacc | Vfnmacc | Vfmsac | Vfnmsac | Vmacc | Vnmsac
+            | Vfmin | Vfmax | Vfsqrt | Vfrec7 | Vfrsqrt7
+            | Vfsgnj | Vfsgnjn | Vfsgnjx
+            | VfcvtXF | VfcvtRtzXF | VfcvtFX | VfcvtFXu | VfcvtRtzXuF
+    )
+}
+
+/// Per-candidate mutable state threaded through the body walk.
+struct BodyCheck<'a> {
+    ivar: u32,
+    step: i64,
+    cx: &'a Analysis,
+    env: &'a HashMap<u32, SplatInfo>,
+    body_writes: HashSet<Reg>,
+    written: HashSet<Reg>,
+    body_reads: HashMap<Reg, usize>,
+    loaded_bufs: HashSet<u32>,
+    stored_bufs: HashSet<u32>,
+    splats: HashSet<Vec<usize>>,
+}
+
+/// Check one loop for coalescing legality. `Some(splat paths)` when legal.
+fn check_loop(
+    ivar: u32,
+    start: i64,
+    end: i64,
+    step: i64,
+    body: &[RStmt],
+    cx: &Analysis,
+    env: &HashMap<u32, SplatInfo>,
+) -> Option<HashSet<Vec<usize>>> {
+    if step <= 0 || end <= start || (end - start) % step != 0 {
+        return None;
+    }
+    let trip = (end - start) / step;
+    if trip <= 0 || (trip as u64) % cx.factor != 0 {
+        return None;
+    }
+    let mut body_writes = HashSet::new();
+    if !precollect_writes(body, &mut body_writes) {
+        return None;
+    }
+    let mut chk = BodyCheck {
+        ivar,
+        step,
+        cx,
+        env,
+        body_writes,
+        written: HashSet::new(),
+        body_reads: HashMap::new(),
+        loaded_bufs: HashSet::new(),
+        stored_bufs: HashSet::new(),
+        splats: HashSet::new(),
+    };
+    if !walk_body(body, &mut chk) {
+        return None;
+    }
+    // no buffer may be both loaded and stored inside the body
+    if chk.loaded_bufs.intersection(&chk.stored_bufs).next().is_some() {
+        return None;
+    }
+    // nothing written in the body may be read anywhere outside it
+    for r in &chk.body_writes {
+        let total = chk.cx.greads.get(r).copied().unwrap_or(0);
+        let inside = chk.body_reads.get(r).copied().unwrap_or(0);
+        if total != inside {
+            return None;
+        }
+    }
+    Some(chk.splats)
+}
+
+/// Collect every register the body writes; `false` on a scalar
+/// statement (SSet/Scalar), which disqualifies the loop outright.
+fn precollect_writes(stmts: &[RStmt], out: &mut HashSet<Reg>) -> bool {
+    for s in stmts {
+        match s {
+            RStmt::Op(inst) => {
+                if let Some(r) = inst_write(inst) {
+                    out.insert(r);
+                }
+            }
+            RStmt::Loop { body, .. } => {
+                if !precollect_writes(body, out) {
+                    return false;
+                }
+            }
+            RStmt::SSet { .. } | RStmt::Scalar(_) => return false,
+        }
+    }
+    true
+}
+
+fn walk_body(stmts: &[RStmt], chk: &mut BodyCheck<'_>) -> bool {
+    for s in stmts {
+        match s {
+            RStmt::SSet { .. } | RStmt::Scalar(_) => return false,
+            RStmt::Loop { ivar, body, .. } => {
+                // nested constant-bound loops are fine as long as they do
+                // not rebind the candidate induction variable
+                if *ivar == chk.ivar || !walk_body(body, chk) {
+                    return false;
+                }
+            }
+            RStmt::Op(inst) => {
+                if !check_op(inst, chk) {
+                    return false;
+                }
+            }
+        }
+    }
+    true
+}
+
+fn check_op(inst: &RvvInst, chk: &mut BodyCheck<'_>) -> bool {
+    if inst.mask.is_some() {
+        return false;
+    }
+    // the coalesced per-register footprint must fit the machine
+    if u64::from(inst.vl) * chk.cx.cap_factor * u64::from(inst.sew.bits()) > chk.cx.vlen {
+        return false;
+    }
+    match inst.kind {
+        RvvKind::Vle | RvvKind::Vse => {
+            let Some(mref) = &inst.mem else { return false };
+            if mref.stride != 1 {
+                return false;
+            }
+            let addr = AffineAddr::compile(&mref.index, 1);
+            let coeff = addr
+                .terms
+                .iter()
+                .find(|(r, _)| *r == chk.ivar)
+                .map(|(_, c)| *c)
+                .unwrap_or(0);
+            // the access must advance by exactly vl elements per iteration
+            // so that F coalesced iterations cover one contiguous run
+            if coeff * chk.step != i64::from(inst.vl) {
+                return false;
+            }
+            if inst.kind == RvvKind::Vle {
+                chk.loaded_bufs.insert(mref.buf);
+            } else if !chk.stored_bufs.insert(mref.buf) {
+                return false; // second store op to the same buffer
+            }
+        }
+        k if elementwise(k) => {}
+        _ => return false,
+    }
+    // the induction variable may not feed a vector op as a scalar operand
+    // (its value differs between the coalesced iterations)
+    if inst.srcs.iter().any(|s| matches!(s, Src::SReg(r) if *r == chk.ivar)) {
+        return false;
+    }
+    let mut reads = Vec::new();
+    inst_reads(inst, &mut reads);
+    for r in &reads {
+        *chk.body_reads.entry(*r).or_insert(0) += 1;
+        if chk.written.contains(r) {
+            continue;
+        }
+        if chk.body_writes.contains(r) {
+            return false; // read before first body write: loop-carried
+        }
+        // loop-invariant read: only a program-unique top-level splat
+        // qualifies (its vl gets scaled so every lane sees the value)
+        match r {
+            Reg::M(_) => return false,
+            Reg::V(v) => match chk.env.get(v) {
+                Some(Some((path, svl, ssew)))
+                    if chk.cx.gwrites.get(r).copied().unwrap_or(0) == 1
+                        && u64::from(*svl) * chk.cx.cap_factor * u64::from(ssew.bits())
+                            <= chk.cx.vlen =>
+                {
+                    chk.splats.insert(path.clone());
+                }
+                _ => return false,
+            },
+        }
+    }
+    if let Some(r) = inst_write(inst) {
+        chk.written.insert(r);
+    }
+    true
+}
+
+/// Navigate to the statement at an index path produced by [`analyze`].
+pub fn stmt_at_mut<'a>(body: &'a mut [RStmt], path: &[usize]) -> Option<&'a mut RStmt> {
+    let (first, rest) = path.split_first()?;
+    let s = body.get_mut(*first)?;
+    if rest.is_empty() {
+        return Some(s);
+    }
+    match s {
+        RStmt::Loop { body, .. } => stmt_at_mut(body, rest),
+        _ => None,
+    }
+}
+
+/// Multiply every vector op's `vl` in a statement subtree by `factor`.
+pub fn scale_vls(stmts: &mut [RStmt], factor: u32) {
+    for s in stmts {
+        match s {
+            RStmt::Op(inst) => inst.vl *= factor,
+            RStmt::Loop { body, .. } => scale_vls(body, factor),
+            _ => {}
+        }
+    }
+}

@@ -1,0 +1,260 @@
+//! Register-grouping transform over translated [`RvvProgram`]s: the
+//! tuner's `lmul:F` candidate family.
+//!
+//! Where [`super::widen`] packs `F` coalesced iterations into the spare
+//! lanes of a single wide register (`vl·F` at `m1`), `regroup` keeps the
+//! per-register occupancy fixed and moves the scaled `vl` onto an
+//! `m2`/`m4` register *group*: each vector operand occupies `F`
+//! consecutive architectural registers, `VLMAX` scales with the group,
+//! and one grouped instruction retires the work of `F` originals. Because
+//! per-register capacity does not grow, the transform applies even on
+//! machines the widen transform must refuse — a VLEN=128 unit with
+//! `vl=4×e32` loops has no spare lanes at `m1`, but `m2` grouping still
+//! halves the dynamic instruction count.
+//!
+//! Legality is the shared analysis in [`super::legal`] with
+//! `cap_factor = 1`: the coalesced `vl·F` always satisfies
+//! `vl·F ≤ VLMAX(mF)` exactly when the original `vl ≤ VLMAX(m1)` did.
+//!
+//! Application, given a legal plan:
+//!
+//! 1. coalesced loops get `step·F`, and every body op gets `vl·F` and
+//!    `lmul = mF` (nested legal loops included);
+//! 2. the plan's pre-loop splats get the same `vl·F` / `lmul = mF`
+//!    scaling so invariant lanes cover the whole group;
+//! 3. every vector register id in the program is remapped `r → r·F` and
+//!    `n_vregs` grows `×F`. The translator allocates ids densely, so
+//!    without the remap `v1` would be a misaligned `m2` group base
+//!    (`SimTrap::BadOperand`). After it, every named id is a multiple of
+//!    `F` — aligned by construction — and the `F−1` registers above each
+//!    base are named by no other operand, so groups cannot overlap
+//!    values that non-grouped ops still use.
+//!
+//! Mask registers are untouched: mask capacity is `VLEN` bits per
+//! register, which bounds `vl·F` for every legal vtype.
+
+use crate::rvv::machine::RvvConfig;
+use crate::rvv::{Lmul, RStmt, RvvProgram};
+use super::legal;
+
+/// Re-emit `prog`'s legal loops at register grouping `mF`. Returns `Err`
+/// with a reason when `factor` is not a supported grouping or no loop
+/// qualifies (the tuner records this as a scored-out candidate).
+pub fn regroup(prog: &RvvProgram, vlen: u32, factor: u32) -> Result<RvvProgram, String> {
+    let lmul = match factor {
+        2 => Lmul::M2,
+        4 => Lmul::M4,
+        _ => return Err(format!("unsupported register grouping factor {factor} (want 2 or 4)")),
+    };
+    // cap_factor 1: the per-register footprint is unchanged, the group grows
+    let plan = legal::analyze(prog, vlen, factor, 1)?;
+    let mut out = prog.clone();
+    for path in &plan.splats {
+        if let Some(RStmt::Op(inst)) = legal::stmt_at_mut(&mut out.body, path) {
+            inst.vl *= factor;
+            inst.lmul = lmul;
+        }
+    }
+    for path in &plan.loops {
+        if let Some(RStmt::Loop { step, body, .. }) = legal::stmt_at_mut(&mut out.body, path) {
+            *step *= i64::from(factor);
+            scale_and_group(body, factor, lmul);
+        }
+    }
+    remap_vregs(&mut out.body, factor);
+    out.n_vregs *= factor as usize;
+    Ok(out)
+}
+
+/// Convenience wrapper taking the machine config.
+pub fn regroup_for(prog: &RvvProgram, cfg: RvvConfig, factor: u32) -> Result<RvvProgram, String> {
+    regroup(prog, cfg.vlen, factor)
+}
+
+/// `vl·F` and `lmul = mF` on every vector op of a coalesced loop body.
+fn scale_and_group(stmts: &mut [RStmt], factor: u32, lmul: Lmul) {
+    for s in stmts {
+        match s {
+            RStmt::Op(inst) => {
+                inst.vl *= factor;
+                inst.lmul = lmul;
+            }
+            RStmt::Loop { body, .. } => scale_and_group(body, factor, lmul),
+            _ => {}
+        }
+    }
+}
+
+/// Remap every vector register id `r → r·F` program-wide: op destinations,
+/// vector sources, and the vreg references inside scalar-fallback blocks.
+/// Mask and scalar registers keep their ids.
+fn remap_vregs(stmts: &mut [RStmt], factor: u32) {
+    use crate::rvv::{Dst, Src};
+    for s in stmts {
+        match s {
+            RStmt::Op(inst) => {
+                if let Dst::V(r) = &mut inst.dst {
+                    *r *= factor;
+                }
+                for src in &mut inst.srcs {
+                    if let Src::V(r) = src {
+                        *r *= factor;
+                    }
+                }
+            }
+            RStmt::Loop { body, .. } => remap_vregs(body, factor),
+            RStmt::Scalar(b) => {
+                for a in &mut b.call.args {
+                    if let crate::ir::Arg::V(r) = a {
+                        *r *= factor;
+                    }
+                }
+                if let Some(r) = &mut b.dst {
+                    *r *= factor;
+                }
+            }
+            RStmt::SSet { .. } => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
+    use std::collections::HashMap;
+
+    use super::*;
+    use crate::ir::{AddrExpr, BufDecl, BufKind};
+    use crate::neon::elem::Elem;
+    use crate::neon::interp::Buffer;
+    use crate::rvv::{Dst, MemRef, RvvInst, RvvKind, Sew, Src};
+    use crate::sim::Simulator;
+
+    fn op(kind: RvvKind, vl: u32, dst: Dst, srcs: Vec<Src>, mem: Option<MemRef>) -> RStmt {
+        RStmt::Op(RvvInst { kind, sew: Sew::E32, lmul: Lmul::M1, vl, dst, srcs, mask: None, mem })
+    }
+
+    /// splat v1; loop: load v0, v2 = v0 + v1, store v2.
+    fn axpy_like(end: i64) -> RvvProgram {
+        RvvProgram {
+            name: "axpy-like".into(),
+            bufs: vec![
+                BufDecl { name: "x".into(), elem: Elem::I32, len: 32, kind: BufKind::Input },
+                BufDecl { name: "y".into(), elem: Elem::I32, len: 32, kind: BufKind::Output },
+            ],
+            body: vec![
+                op(RvvKind::VmvVX, 4, Dst::V(1), vec![Src::ImmI(100)], None),
+                RStmt::Loop {
+                    ivar: 0,
+                    start: 0,
+                    end,
+                    step: 4,
+                    body: vec![
+                        op(
+                            RvvKind::Vle,
+                            4,
+                            Dst::V(0),
+                            vec![],
+                            Some(MemRef { buf: 0, index: AddrExpr::s(0), stride: 1 }),
+                        ),
+                        op(RvvKind::Vadd, 4, Dst::V(2), vec![Src::V(0), Src::V(1)], None),
+                        op(
+                            RvvKind::Vse,
+                            4,
+                            Dst::None,
+                            vec![Src::V(2)],
+                            Some(MemRef { buf: 1, index: AddrExpr::s(0), stride: 1 }),
+                        ),
+                    ],
+                },
+            ],
+            n_vregs: 3,
+            n_mregs: 1,
+            n_sregs: 1,
+        }
+    }
+
+    fn inputs() -> HashMap<String, Buffer> {
+        let xs: Vec<i32> = (0..32).map(|i| i * 3 - 11).collect();
+        [("x".to_string(), Buffer::from_i32s(&xs))].into()
+    }
+
+    fn run(prog: &RvvProgram, vlen: u32) -> (Vec<u8>, u64) {
+        let cfg = RvvConfig::new(vlen);
+        let (out, stats) = Simulator::new(prog, cfg, &inputs()).unwrap().run().unwrap();
+        (out.get("y").unwrap().data.clone(), stats.total())
+    }
+
+    #[test]
+    fn regroups_and_stays_bit_identical_with_fewer_insts() {
+        let prog = axpy_like(32);
+        for factor in [2u32, 4] {
+            let grouped = regroup(&prog, 128, factor).expect("regroupable");
+            let (ref_data, ref_total) = run(&prog, 128);
+            let (data, total) = run(&grouped, 128);
+            assert_eq!(data, ref_data, "m{factor} grouping changed output bits");
+            assert!(
+                total < ref_total,
+                "m{factor} grouping did not reduce dyn insts: {total} vs {ref_total}"
+            );
+        }
+    }
+
+    #[test]
+    fn applies_where_widen_cannot() {
+        // VLEN 128 has zero spare lanes for a vl=4 e32 loop: widen must
+        // refuse, regroup must succeed — the whole point of the family
+        let prog = axpy_like(32);
+        assert!(super::super::widen::widen(&prog, 128, 2).is_err());
+        assert!(regroup(&prog, 128, 2).is_ok());
+    }
+
+    #[test]
+    fn regroup_sets_lmul_and_remaps_aligned_register_groups() {
+        let grouped = regroup(&axpy_like(32), 128, 2).unwrap();
+        assert_eq!(grouped.n_vregs, 6);
+        match &grouped.body[0] {
+            RStmt::Op(i) => {
+                assert_eq!(i.vl, 8);
+                assert_eq!(i.lmul, Lmul::M2);
+                assert_eq!(i.dst, Dst::V(2), "splat reg not remapped");
+            }
+            s => panic!("unexpected stmt {s:?}"),
+        }
+        match &grouped.body[1] {
+            RStmt::Loop { step, body, .. } => {
+                assert_eq!(*step, 8);
+                for s in body {
+                    let RStmt::Op(i) = s else { panic!("unexpected stmt {s:?}") };
+                    assert_eq!(i.vl, 8);
+                    assert_eq!(i.lmul, Lmul::M2);
+                    if let Dst::V(r) = i.dst {
+                        assert_eq!(r % 2, 0, "v{r} is a misaligned m2 group base");
+                    }
+                    for src in &i.srcs {
+                        if let Src::V(r) = src {
+                            assert_eq!(r % 2, 0, "v{r} is a misaligned m2 source");
+                        }
+                    }
+                }
+            }
+            s => panic!("unexpected stmt {s:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_bad_factors_and_illegal_loops() {
+        assert!(regroup(&axpy_like(32), 128, 3).is_err(), "m3 is not a grouping");
+        assert!(regroup(&axpy_like(32), 128, 8).is_err(), "m8 kept out of the family");
+        // trip 8 not divisible by coalescing factor 4... (32/4 = 8, fine);
+        // use trip 3 instead
+        assert!(regroup(&axpy_like(12), 128, 4).is_err(), "trip divisibility must fail");
+        // loop-carried dependence rejected like widen
+        let mut carried = axpy_like(32);
+        if let RStmt::Loop { body, .. } = &mut carried.body[1] {
+            body.push(op(RvvKind::VmvVV, 4, Dst::V(1), vec![Src::V(2)], None));
+        }
+        assert!(regroup(&carried, 128, 2).is_err(), "loop-carried dependence must fail");
+    }
+}

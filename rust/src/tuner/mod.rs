@@ -8,17 +8,23 @@
 //! 1. **Enumerate** ([`candidate`]) — for each kernel the static rule
 //!    plus alternatives: loop-coalescing `widen:F` variants that fill
 //!    wide vector units the fixed 128-bit NEON shapes leave idle
-//!    ([`widen`]), and `force-baseline:<category>` degradations that swap
-//!    a combo/algorithmic sequence for the generic SIMDe path.
+//!    ([`widen`]), register-grouping `lmul:F` variants that re-emit the
+//!    same coalescing at `m2`/`m4` vtypes ([`lmul`]) — applicable even
+//!    when the machine has no spare lanes — and
+//!    `force-baseline:<category>` degradations that swap a
+//!    combo/algorithmic sequence for the generic SIMDe path.
 //! 2. **Score** — run every candidate through the pre-decoded engine via
 //!    the coordinator's fault-tolerant primitive
-//!    ([`crate::coordinator::run_prepared_with_recovery`]). The score is
-//!    the paper's metric, [`crate::sim::SimStats::total`] dynamic
-//!    instructions, with wall-clock as tiebreak. A candidate that fails
-//!    to lower, traps, panics, or produces output bytes different from
-//!    the static reference is *scored out* (recorded with `ok = false`
-//!    and, for runtime faults, a [`crate::coordinator::FaultRecord`]) —
-//!    never aborts the search.
+//!    ([`crate::coordinator::run_prepared_with_recovery`]). Candidates
+//!    are independent, so the runs fan out over a worker pool; winner
+//!    selection stays deterministic because scoring walks the collected
+//!    results in candidate-id order. The score is the paper's metric,
+//!    [`crate::sim::SimStats::total`] dynamic instructions, with
+//!    wall-clock as tiebreak. A candidate that fails to lower, traps,
+//!    panics, or produces output bytes different from the static
+//!    reference is *scored out* (recorded with `ok = false` and, for
+//!    runtime faults, a [`crate::coordinator::FaultRecord`]) — never
+//!    aborts the search.
 //! 3. **Persist** ([`db`]) — winners plus full provenance (entire
 //!    candidate set with scores, shape fingerprint, engine) go into a
 //!    versioned `TUNED.json`. [`crate::simde::Translator::with_tuning`]
@@ -33,9 +39,12 @@
 
 pub mod candidate;
 pub mod db;
+pub mod legal;
+pub mod lmul;
 pub mod widen;
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Mutex, MutexGuard};
 
 use anyhow::{bail, Context, Result};
 
@@ -63,6 +72,8 @@ pub struct TunerOptions {
     pub max_candidates: usize,
     /// Recovery ladder for candidate runs.
     pub retry: RetryPolicy,
+    /// Worker threads for candidate runs within one tuning point.
+    pub threads: usize,
 }
 
 impl Default for TunerOptions {
@@ -73,17 +84,19 @@ impl Default for TunerOptions {
             modes: vec![Mode::RvvCustom],
             max_candidates: 16,
             retry: RetryPolicy::none(),
+            threads: std::thread::available_parallelism().map_or(1, |n| n.get()),
         }
     }
 }
 
 impl TunerOptions {
-    /// Tiny smoke configuration for CI: one kernel, minimal budget.
+    /// Tiny smoke configuration for CI: one kernel, budget just large
+    /// enough to cover the `widen` and `lmul` transform families.
     pub fn smoke(vlen: u32) -> TunerOptions {
         TunerOptions {
             vlens: vec![vlen],
             kernels: vec!["vrelu"],
-            max_candidates: 3,
+            max_candidates: 6,
             ..TunerOptions::default()
         }
     }
@@ -129,8 +142,52 @@ fn outputs_identical(a: &HashMap<String, Buffer>, b: &HashMap<String, Buffer>) -
         })
 }
 
-/// Tune one (kernel, mode, vlen) point: run the static lowering first as
-/// the bit-identity reference, then score each alternative against it.
+fn lock_ignore_poison<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
+/// What one candidate's lower + run produced, before scoring.
+enum CandRun {
+    /// The lowering refused to apply (e.g. no coalescible loop).
+    Skip(String),
+    /// Trap/panic survived the recovery ladder as a fault record.
+    Fault(Box<FaultRecord>),
+    /// A completed run with outputs and scoring signals.
+    Done(Box<coordinator::PreparedOutcome>),
+}
+
+/// Lower one candidate and run it through the recovery ladder. Pure
+/// function of its arguments — safe to fan out across worker threads.
+fn run_candidate(
+    ci: usize,
+    cand: &candidate::Candidate,
+    case: &kernels::KernelCase,
+    mode: Mode,
+    cfg: RvvConfig,
+    job: &Job,
+    retry: RetryPolicy,
+) -> CandRun {
+    match candidate::lower_with(&case.prog, mode, cfg, cand) {
+        Ok((rvv, _report)) => {
+            let decoded = decode(&rvv);
+            let prepared = CachedProgram { rvv, decoded };
+            match coordinator::run_prepared_with_recovery(ci, job, &prepared, &case.inputs, retry) {
+                Ok(out) => CandRun::Done(Box::new(out)),
+                Err(fault) => CandRun::Fault(Box::new(fault)),
+            }
+        }
+        Err(e) => CandRun::Skip(format!("{e:#}")),
+    }
+}
+
+/// Tune one (kernel, mode, vlen) point: fan the candidate runs out over
+/// a worker pool (they are independent), then score sequentially in
+/// candidate-id order with the static lowering as the bit-identity
+/// reference — index 0 is always `static`, so the reference is available
+/// before any alternative is judged and the winner is deterministic.
 fn tune_point(
     kernel: &'static str,
     mode: Mode,
@@ -144,36 +201,54 @@ fn tune_point(
     let cands = candidate::enumerate(&case.prog, mode, opts.max_candidates);
     let job = Job { kernel, mode, vlen };
 
+    // phase 1: run all candidates over the worker pool, results into
+    // per-candidate slots (same queue + slots shape as the coordinator's
+    // run_matrix_report pool)
+    let queue: Mutex<VecDeque<usize>> = Mutex::new((0..cands.len()).collect());
+    let slots: Mutex<Vec<Option<CandRun>>> =
+        Mutex::new((0..cands.len()).map(|_| None).collect());
+    let workers = opts.threads.max(1).min(cands.len().max(1));
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let next = lock_ignore_poison(&queue).pop_front();
+                let Some(ci) = next else { return };
+                let run = run_candidate(ci, &cands[ci], &case, mode, cfg, &job, opts.retry);
+                lock_ignore_poison(&slots)[ci] = Some(run);
+            });
+        }
+    });
+    let mut slots = match slots.into_inner() {
+        Ok(v) => v,
+        Err(p) => p.into_inner(),
+    };
+
+    // phase 2: sequential scoring in candidate-id order
     let mut scores: Vec<CandidateScore> = Vec::new();
     let mut reference: Option<HashMap<String, Buffer>> = None;
     let mut best: Option<(u64, u64, String, EngineKind)> = None;
 
     for (ci, cand) in cands.iter().enumerate() {
         let id = cand.id();
-        let lowered = candidate::lower_with(&case.prog, mode, cfg, cand);
-        let (rvv, _report) = match lowered {
-            Ok(x) => x,
-            Err(e) if cand.is_static() => {
-                return Err(e.context("static lowering failed — nothing to tune against"));
-            }
-            Err(e) => {
-                // candidate does not apply here (e.g. no widenable loop):
-                // scored out, search continues
+        let run = slots[ci]
+            .take()
+            .unwrap_or_else(|| CandRun::Skip("no result: worker thread died".to_string()));
+        match run {
+            CandRun::Skip(e) => {
+                if cand.is_static() {
+                    bail!("static lowering failed — nothing to tune against: {e}");
+                }
+                // candidate does not apply here (e.g. no coalescible
+                // loop): scored out, search continues
                 scores.push(CandidateScore {
                     id,
                     ok: false,
                     dyn_insts: 0,
                     wall_ns: 0,
-                    error: format!("{e:#}"),
+                    error: e,
                 });
-                continue;
             }
-        };
-        let decoded = decode(&rvv);
-        let prepared = CachedProgram { rvv, decoded };
-        match coordinator::run_prepared_with_recovery(ci, &job, &prepared, &case.inputs, opts.retry)
-        {
-            Ok(out) => {
+            CandRun::Done(out) => {
                 if let Some(reference) = &reference {
                     if !outputs_identical(reference, &out.outputs) {
                         scores.push(CandidateScore {
@@ -188,13 +263,14 @@ fn tune_point(
                 }
                 let dyn_insts = out.stats.total();
                 let wall_ns = out.wall.as_nanos() as u64;
+                let engine = out.engine;
                 if cand.is_static() {
                     reference = Some(out.outputs);
                 }
                 let better =
                     best.as_ref().is_none_or(|(d, w, _, _)| (dyn_insts, wall_ns) < (*d, *w));
                 if better {
-                    best = Some((dyn_insts, wall_ns, id.clone(), out.engine));
+                    best = Some((dyn_insts, wall_ns, id.clone(), engine));
                 }
                 scores.push(CandidateScore {
                     id,
@@ -204,12 +280,12 @@ fn tune_point(
                     error: String::new(),
                 });
             }
-            Err(fault) if cand.is_static() => {
-                let msg = fault.error.clone();
-                faults.push(fault);
-                bail!("static lowering faulted ({msg}) — nothing to tune against");
-            }
-            Err(fault) => {
+            CandRun::Fault(fault) => {
+                if cand.is_static() {
+                    let msg = fault.error.clone();
+                    faults.push(*fault);
+                    bail!("static lowering faulted ({msg}) — nothing to tune against");
+                }
                 // trap/panic inside a candidate: degrade to a fault record
                 // plus a scored-out row, keep searching
                 scores.push(CandidateScore {
@@ -219,7 +295,7 @@ fn tune_point(
                     wall_ns: 0,
                     error: fault.error.clone(),
                 });
-                faults.push(fault);
+                faults.push(*fault);
             }
         }
     }
@@ -286,5 +362,48 @@ mod tests {
             .winner("vrelu", Mode::RvvCustom, 512, e.fingerprint)
             .expect("winner must parse");
         assert!(!cand.is_static());
+    }
+
+    #[test]
+    fn narrow_machine_regroups_vrelu() {
+        // the same VLEN 128 point where widen scores out: with the full
+        // candidate budget the lmul family applies (per-register capacity
+        // is unchanged, the group grows) and must beat static
+        let opts = TunerOptions {
+            vlens: vec![128],
+            kernels: vec!["vrelu"],
+            ..TunerOptions::default()
+        };
+        let out = tune(&opts).unwrap();
+        let e = &out.db.entries[0];
+        assert!(e.winner.starts_with("lmul:"), "expected an lmul winner, got {}", e.winner);
+        assert!(e.improved(), "grouping must strictly beat static: {e:?}");
+        let lmuls: Vec<_> = e.candidates.iter().filter(|c| c.id.starts_with("lmul:")).collect();
+        assert_eq!(lmuls.len(), 2, "both lmul:2 and lmul:4 must be enumerated");
+        for c in lmuls {
+            assert!(c.ok, "lmul candidates must be legal at vlen 128: {c:?}");
+        }
+    }
+
+    #[test]
+    fn single_thread_and_pool_agree() {
+        // determinism satellite: the winner and full score table must not
+        // depend on how the candidate runs were scheduled (vlen 128 keeps
+        // the candidate dyn-inst scores distinct, so no wall-clock ties)
+        let pooled = TunerOptions {
+            vlens: vec![128],
+            kernels: vec!["vrelu"],
+            ..TunerOptions::default()
+        };
+        let serial = TunerOptions { threads: 1, ..pooled.clone() };
+        let a = tune(&pooled).unwrap();
+        let b = tune(&serial).unwrap();
+        assert_eq!(a.db.entries.len(), b.db.entries.len());
+        for (ea, eb) in a.db.entries.iter().zip(&b.db.entries) {
+            assert_eq!(ea.winner, eb.winner);
+            let ids_a: Vec<_> = ea.candidates.iter().map(|c| (&c.id, c.ok)).collect();
+            let ids_b: Vec<_> = eb.candidates.iter().map(|c| (&c.id, c.ok)).collect();
+            assert_eq!(ids_a, ids_b, "score tables diverge between schedules");
+        }
     }
 }

@@ -63,10 +63,19 @@ fn batched_reductions_match_interpreter_in_programs() {
     use simde_rvv::ir::{AddrExpr, BufDecl, BufKind};
     use simde_rvv::neon::elem::Elem;
     use simde_rvv::neon::interp::Buffer;
-    use simde_rvv::rvv::{Dst, MemRef, RStmt, RvvInst, RvvKind, RvvProgram, Sew, Src};
+    use simde_rvv::rvv::{Dst, Lmul, MemRef, RStmt, RvvInst, RvvKind, RvvProgram, Sew, Src};
 
     let op = |kind: RvvKind, dst: Dst, srcs: Vec<Src>, mem: Option<MemRef>| {
-        RStmt::Op(RvvInst { kind, sew: Sew::E32, vl: 4, dst, srcs, mask: None, mem })
+        RStmt::Op(RvvInst {
+            kind,
+            sew: Sew::E32,
+            lmul: Lmul::M1,
+            vl: 4,
+            dst,
+            srcs,
+            mask: None,
+            mem,
+        })
     };
     let kinds = [
         (RvvKind::Vredsum, false),
@@ -152,6 +161,165 @@ fn batched_reductions_match_interpreter_in_programs() {
             "reduction output not bit-identical for {kind:?}"
         );
     }
+}
+
+/// splat + axpy loop over 32 i32 elements at register grouping `F`:
+/// every vector op carries `vl = 4·F` at `mF`, register ids are spread to
+/// multiples of `F` (the alignment the tuner's remap guarantees), and the
+/// trip count is divided by `F`. `F = 1` is the plain m1 reference.
+fn grouped_axpy(factor: u32) -> simde_rvv::rvv::RvvProgram {
+    use simde_rvv::ir::{AddrExpr, BufDecl, BufKind};
+    use simde_rvv::neon::elem::Elem;
+    use simde_rvv::rvv::{Dst, Lmul, MemRef, RStmt, RvvInst, RvvKind, RvvProgram, Sew, Src};
+
+    let lmul = match factor {
+        1 => Lmul::M1,
+        2 => Lmul::M2,
+        4 => Lmul::M4,
+        _ => panic!("unsupported grouping {factor}"),
+    };
+    let vl = 4 * factor;
+    let op = move |kind: RvvKind, dst: Dst, srcs: Vec<Src>, mem: Option<MemRef>| {
+        RStmt::Op(RvvInst { kind, sew: Sew::E32, lmul, vl, dst, srcs, mask: None, mem })
+    };
+    RvvProgram {
+        name: format!("axpy-m{factor}"),
+        bufs: vec![
+            BufDecl { name: "x".into(), elem: Elem::I32, len: 32, kind: BufKind::Input },
+            BufDecl { name: "y".into(), elem: Elem::I32, len: 32, kind: BufKind::Output },
+        ],
+        body: vec![
+            op(RvvKind::VmvVX, Dst::V(factor), vec![Src::ImmI(100)], None),
+            RStmt::Loop {
+                ivar: 0,
+                start: 0,
+                end: 32,
+                step: i64::from(vl),
+                body: vec![
+                    op(
+                        RvvKind::Vle,
+                        Dst::V(0),
+                        vec![],
+                        Some(MemRef { buf: 0, index: AddrExpr::s(0), stride: 1 }),
+                    ),
+                    op(
+                        RvvKind::Vadd,
+                        Dst::V(2 * factor),
+                        vec![Src::V(0), Src::V(factor)],
+                        None,
+                    ),
+                    op(
+                        RvvKind::Vse,
+                        Dst::None,
+                        vec![Src::V(2 * factor)],
+                        Some(MemRef { buf: 1, index: AddrExpr::s(0), stride: 1 }),
+                    ),
+                ],
+            },
+        ],
+        n_vregs: 3 * factor as usize,
+        n_mregs: 1,
+        n_sregs: 1,
+    }
+}
+
+fn axpy_inputs() -> std::collections::HashMap<String, simde_rvv::neon::interp::Buffer> {
+    let xs: Vec<i32> = (0..32).map(|i| i * 5 - 37).collect();
+    [("x".to_string(), simde_rvv::neon::interp::Buffer::from_i32s(&xs))].into()
+}
+
+/// Register-grouped (m2/m4) programs must stay pinned three ways: the
+/// decoded engine matches the interpreter exactly (stats included, so the
+/// per-LMUL breakdown and the batched fast path are both checked), the
+/// grouped output is bit-identical to the m1 reference, and grouping
+/// strictly reduces the dynamic-instruction count.
+#[test]
+fn grouped_lmul_programs_match_interpreter_and_m1_bit_for_bit() {
+    use simde_rvv::rvv::Lmul;
+
+    let inputs = axpy_inputs();
+    for vlen in [128u32, 256, 512] {
+        let cfg = RvvConfig::new(vlen);
+        let m1 = grouped_axpy(1);
+        let (ref_out, ref_stats) = Simulator::new(&m1, cfg, &inputs)
+            .unwrap()
+            .run()
+            .unwrap_or_else(|e| panic!("m1 reference failed at vlen {vlen}: {e:#}"));
+        assert_eq!(ref_stats.by_lmul[Lmul::M2.index()], 0);
+        assert_eq!(ref_stats.by_lmul[Lmul::M4.index()], 0);
+
+        for (factor, lmul) in [(2u32, Lmul::M2), (4, Lmul::M4)] {
+            let ctx = format!("m{factor} vlen={vlen}");
+            let prog = grouped_axpy(factor);
+            let (iout, istats) = Simulator::new(&prog, cfg, &inputs)
+                .unwrap()
+                .run()
+                .unwrap_or_else(|e| panic!("interpreter failed for {ctx}: {e:#}"));
+            let dec = decode(&prog);
+            let (dout, dstats) = Engine::new(&prog, &dec, cfg, &inputs)
+                .unwrap()
+                .run()
+                .unwrap_or_else(|e| panic!("decoded engine failed for {ctx}: {e:#}"));
+
+            // engine parity, including the by_lmul breakdown
+            assert_eq!(dstats, istats, "SimStats diverged for {ctx}");
+            assert!(
+                istats.by_lmul[lmul.index()] > 0,
+                "grouped ops not counted under {lmul:?} for {ctx}: {istats:?}"
+            );
+            assert_eq!(
+                dout.get("y").unwrap().data,
+                iout.get("y").unwrap().data,
+                "engines diverged for {ctx}"
+            );
+            // lmul-vs-m1 bit identity and the win that motivates grouping
+            assert_eq!(
+                iout.get("y").unwrap().data,
+                ref_out.get("y").unwrap().data,
+                "grouped output differs from m1 reference for {ctx}"
+            );
+            assert!(
+                istats.total() < ref_stats.total(),
+                "grouping did not reduce dyn insts for {ctx}: {} vs {}",
+                istats.total(),
+                ref_stats.total()
+            );
+        }
+    }
+}
+
+/// A deliberately misaligned register-group base (`v1` as an m2 operand)
+/// must trap as `BadOperand` on BOTH engines — never a panic, never a
+/// silent wrong answer.
+#[test]
+fn misaligned_group_is_bad_operand_on_both_engines() {
+    use simde_rvv::rvv::{Dst, RStmt, SimTrap, TrapKind};
+
+    let mut prog = grouped_axpy(2);
+    if let RStmt::Loop { body, .. } = &mut prog.body[1] {
+        if let RStmt::Op(i) = &mut body[1] {
+            i.dst = Dst::V(1); // odd base for an m2 group
+        }
+    }
+    let inputs = axpy_inputs();
+    let cfg = RvvConfig::new(128);
+
+    let ierr = Simulator::new(&prog, cfg, &inputs).unwrap().run().unwrap_err();
+    let itrap = ierr.downcast_ref::<SimTrap>().expect("interp trap must be structured");
+    assert!(
+        matches!(itrap.kind, TrapKind::BadOperand(_)),
+        "expected BadOperand from interpreter: {itrap:?}"
+    );
+    assert_eq!(itrap.engine, Some("interp"));
+
+    let dec = decode(&prog);
+    let derr = Engine::new(&prog, &dec, cfg, &inputs).unwrap().run().unwrap_err();
+    let dtrap = derr.downcast_ref::<SimTrap>().expect("decoded trap must be structured");
+    assert!(
+        matches!(dtrap.kind, TrapKind::BadOperand(_)),
+        "expected BadOperand from decoded engine: {dtrap:?}"
+    );
+    assert_eq!(dtrap.engine, Some("decoded"));
 }
 
 /// The cached `by_name` path (default shapes) must agree with a fresh

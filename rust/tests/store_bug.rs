@@ -14,7 +14,7 @@ use simde_rvv::neon::ops::Family;
 use simde_rvv::rvv::machine::RvvConfig;
 use simde_rvv::rvv::ops::{Dst, MemRef, RvvInst, RvvKind, Src};
 use simde_rvv::rvv::program::{RStmt, RvvProgram};
-use simde_rvv::rvv::vtype::Sew;
+use simde_rvv::rvv::vtype::{Lmul, Sew};
 use simde_rvv::sim::{decode, Engine, SimTrap, Simulator, TrapKind};
 use simde_rvv::simde::{Mode, Translator};
 
@@ -136,6 +136,7 @@ fn oob_line_program() -> RvvProgram {
             RStmt::Op(RvvInst {
                 kind: RvvKind::Vle,
                 sew: Sew::E32,
+                lmul: Lmul::M1,
                 vl: 4,
                 dst: Dst::V(0),
                 srcs: vec![],
@@ -145,6 +146,7 @@ fn oob_line_program() -> RvvProgram {
             RStmt::Op(RvvInst {
                 kind: RvvKind::Vse,
                 sew: Sew::E32,
+                lmul: Lmul::M1,
                 vl: 4,
                 dst: Dst::None,
                 srcs: vec![Src::V(0)],
@@ -197,6 +199,7 @@ fn illegal_operand_program_traps_on_both_engines() {
         body: vec![RStmt::Op(RvvInst {
             kind: RvvKind::Vfadd,
             sew: Sew::E8,
+            lmul: Lmul::M1,
             vl: 4,
             dst: Dst::V(2),
             srcs: vec![Src::V(0), Src::V(1)],

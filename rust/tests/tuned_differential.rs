@@ -107,6 +107,149 @@ fn tuned_lowerings_are_bit_identical_and_improve_at_wide_vlen() {
     }
 }
 
+/// Every `lmul:{2,4}` candidate, lowered directly, must either refuse
+/// with a reason or produce output buffers bit-identical to the static
+/// m1 lowering — across the whole kernel suite × vlen {128, 256, 512}.
+/// Legal regroupings must also strictly reduce dynamic instructions and
+/// show up in the per-LMUL stats breakdown.
+#[test]
+fn lmul_candidates_are_bit_identical_across_the_suite() {
+    use simde_rvv::rvv::Lmul;
+    use simde_rvv::tuner::candidate::{self, Candidate};
+
+    let mut legal = 0usize;
+    for case in kernels::suite() {
+        for vlen in [128u32, 256, 512] {
+            let cfg = RvvConfig::new(vlen);
+            let ctx = format!("{} vlen={vlen}", case.name);
+            let (st, _) = Translator::new(Mode::RvvCustom, cfg)
+                .translate(&case.prog)
+                .unwrap_or_else(|e| panic!("static translate failed for {ctx}: {e:#}"));
+            let sdec = decode(&st);
+            let (sout, sstats) = Engine::new(&st, &sdec, cfg, &case.inputs)
+                .unwrap()
+                .run()
+                .unwrap_or_else(|e| panic!("static run failed for {ctx}: {e:#}"));
+
+            for f in [2u32, 4] {
+                let cand = Candidate::Lmul(f);
+                let lowered = candidate::lower_with(&case.prog, Mode::RvvCustom, cfg, &cand);
+                let (gp, _) = match lowered {
+                    Ok(x) => x,
+                    Err(e) => {
+                        // refusal is fine — but it must carry a reason
+                        assert!(
+                            !format!("{e:#}").is_empty(),
+                            "empty refusal for lmul:{f} on {ctx}"
+                        );
+                        continue;
+                    }
+                };
+                legal += 1;
+                let gdec = decode(&gp);
+                let (gout, gstats) = Engine::new(&gp, &gdec, cfg, &case.inputs)
+                    .unwrap()
+                    .run()
+                    .unwrap_or_else(|e| panic!("lmul:{f} run failed for {ctx}: {e:#}"));
+                assert_eq!(gout.len(), sout.len(), "output set diverged for lmul:{f} {ctx}");
+                for (name, sbuf) in &sout {
+                    let gbuf = gout.get(name).unwrap_or_else(|| {
+                        panic!("missing output '{name}' for lmul:{f} {ctx}")
+                    });
+                    assert_eq!(
+                        gbuf.data, sbuf.data,
+                        "lmul:{f} output '{name}' not bit-identical for {ctx}"
+                    );
+                }
+                let lm = if f == 2 { Lmul::M2 } else { Lmul::M4 };
+                assert!(
+                    gstats.by_lmul[lm.index()] > 0,
+                    "grouped ops missing from by_lmul for lmul:{f} {ctx}: {gstats:?}"
+                );
+                assert!(
+                    gstats.total() < sstats.total(),
+                    "lmul:{f} did not reduce dyn insts for {ctx}: {} vs {}",
+                    gstats.total(),
+                    sstats.total()
+                );
+            }
+        }
+    }
+    // vrelu alone must account for 6 legal points (2 factors × 3 vlens):
+    // its static lowering is a single elementwise loop, exactly the shape
+    // the grouping analysis admits at any vlen
+    assert!(legal >= 6, "only {legal} legal lmul points across the suite");
+}
+
+/// The search itself must enumerate the lmul family (budget permitting),
+/// keep full provenance for it, and still never abort anywhere on the
+/// suite × vlen grid.
+#[test]
+fn search_with_lmul_family_never_aborts_and_keeps_provenance() {
+    let opts = TunerOptions {
+        vlens: vec![128, 256, 512],
+        max_candidates: 6, // static + widen 2/4/8 + lmul 2/4
+        ..TunerOptions::default()
+    };
+    let out = tuner::tune(&opts).expect("search must not abort");
+    assert_eq!(out.db.entries.len(), kernels::NAMES.len() * 3, "one entry per point");
+    for e in &out.db.entries {
+        let lmuls: Vec<_> =
+            e.candidates.iter().filter(|c| c.id.starts_with("lmul:")).collect();
+        assert_eq!(lmuls.len(), 2, "{}: lmul family not enumerated: {e:?}", e.kernel);
+        for c in lmuls {
+            assert!(
+                c.ok || !c.error.is_empty(),
+                "{}: lmul scored out without a reason: {c:?}",
+                e.kernel
+            );
+        }
+        // a grouped winner is only ever recorded with a strict improvement
+        if e.winner.starts_with("lmul:") {
+            assert!(e.improved(), "{}: lmul winner without improvement: {e:?}", e.kernel);
+        }
+    }
+    // the narrow machine is where the family earns its keep: widen cannot
+    // apply at vlen 128, grouping can — at least vrelu must regroup there
+    let narrow = out
+        .db
+        .entries
+        .iter()
+        .find(|e| e.kernel == "vrelu" && e.vlen == 128)
+        .expect("vrelu@128 entry");
+    assert!(
+        narrow.winner.starts_with("lmul:"),
+        "vrelu@128 should pick a grouped winner, got {}",
+        narrow.winner
+    );
+
+    // and the grouped winner must replay bit-identically through the
+    // translator's tuning hook, same as any other tuned lowering
+    let db = Arc::new(out.db);
+    let case = kernels::by_name("vrelu").unwrap();
+    let cfg = RvvConfig::new(128);
+    let (st, _) = Translator::new(Mode::RvvCustom, cfg).translate(&case.prog).unwrap();
+    let (tu, _) =
+        Translator::new(Mode::RvvCustom, cfg).with_tuning(db).translate(&case.prog).unwrap();
+    let sdec = decode(&st);
+    let (sout, sstats) = Engine::new(&st, &sdec, cfg, &case.inputs).unwrap().run().unwrap();
+    let tdec = decode(&tu);
+    let (tout, tstats) = Engine::new(&tu, &tdec, cfg, &case.inputs).unwrap().run().unwrap();
+    for (name, sbuf) in &sout {
+        assert_eq!(
+            tout.get(name).map(|b| &b.data),
+            Some(&sbuf.data),
+            "replayed grouped lowering diverged on '{name}'"
+        );
+    }
+    assert!(
+        tstats.total() < sstats.total(),
+        "replayed grouped lowering lost its improvement: {} vs {}",
+        tstats.total(),
+        sstats.total()
+    );
+}
+
 /// A candidate whose program traps at runtime must come back as a
 /// structured `FaultRecord` (the tuner records it and keeps searching),
 /// not a panic or process abort.
@@ -114,10 +257,19 @@ fn tuned_lowerings_are_bit_identical_and_improve_at_wide_vlen() {
 fn trapping_candidate_degrades_to_fault_record() {
     use simde_rvv::ir::{AddrExpr, BufDecl, BufKind};
     use simde_rvv::neon::elem::Elem;
-    use simde_rvv::rvv::{Dst, MemRef, RStmt, RvvInst, RvvKind, RvvProgram, Sew, Src};
+    use simde_rvv::rvv::{Dst, Lmul, MemRef, RStmt, RvvInst, RvvKind, RvvProgram, Sew, Src};
 
     let op = |kind, dst, srcs, mem| {
-        RStmt::Op(RvvInst { kind, sew: Sew::E32, vl: 4, dst, srcs, mask: None, mem })
+        RStmt::Op(RvvInst {
+            kind,
+            sew: Sew::E32,
+            lmul: Lmul::M1,
+            vl: 4,
+            dst,
+            srcs,
+            mask: None,
+            mem,
+        })
     };
     let prog = RvvProgram {
         name: "oob-candidate".into(),
@@ -150,4 +302,51 @@ fn trapping_candidate_degrades_to_fault_record() {
         "unhelpful fault error: {}",
         fault.error
     );
+}
+
+/// A misaligned register group inside a candidate program must degrade to
+/// a structured `BadOperand` fault record through the same recovery
+/// primitive the tuner uses — never a panic.
+#[test]
+fn misaligned_group_candidate_degrades_to_fault_record() {
+    use simde_rvv::ir::{BufDecl, BufKind};
+    use simde_rvv::neon::elem::Elem;
+    use simde_rvv::rvv::{Dst, Lmul, RStmt, RvvInst, RvvKind, RvvProgram, Sew, Src, TrapKind};
+
+    let op = |kind, dst, srcs| {
+        RStmt::Op(RvvInst {
+            kind,
+            sew: Sew::E32,
+            lmul: Lmul::M2,
+            vl: 8,
+            dst,
+            srcs,
+            mask: None,
+            mem: None,
+        })
+    };
+    let prog = RvvProgram {
+        name: "misaligned-group".into(),
+        bufs: vec![BufDecl { name: "out".into(), elem: Elem::I32, len: 8, kind: BufKind::Output }],
+        body: vec![
+            op(RvvKind::VmvVX, Dst::V(0), vec![Src::ImmI(7)]),
+            // v1 is an odd base for an m2 group: BadOperand, not a panic
+            op(RvvKind::Vadd, Dst::V(1), vec![Src::V(0), Src::V(0)]),
+        ],
+        n_vregs: 4,
+        n_mregs: 1,
+        n_sregs: 1,
+    };
+    let prepared = CachedProgram { decoded: decode(&prog), rvv: prog };
+    let job = Job { kernel: "vrelu", mode: Mode::RvvCustom, vlen: 128 };
+    let inputs: Inputs = HashMap::new();
+    let fault =
+        coordinator::run_prepared_with_recovery(5, &job, &prepared, &inputs, RetryPolicy::none())
+            .expect_err("misaligned group must fault");
+    let trap = fault.trap.as_ref().expect("structured trap expected");
+    assert!(
+        matches!(trap.kind, TrapKind::BadOperand(_)),
+        "expected BadOperand, got {trap:?}"
+    );
+    assert!(fault.error.contains("bad-operand"), "unhelpful fault error: {}", fault.error);
 }
