@@ -16,6 +16,15 @@ cargo test -q
 echo "== cargo test -q --test fault_injection --test store_bug =="
 cargo test -q --test fault_injection --test store_bug
 
+# Admission-verifier gate: every lowering the pipeline can produce —
+# static rules plus all tuner candidate families (widen/lmul/
+# force-baseline) — for the full suite × both modes × three vlens must
+# pass the static verifier. Any rejection fails CI: the verifier's
+# accept ⇒ no-trap contract only protects runs if healthy programs are
+# actually accepted.
+echo "== verify --static (suite x mode x vlen {128,256,512}) =="
+cargo run --release --quiet -- verify --static --vlens 128,256,512
+
 # Autotuner smoke: one kernel, candidate budget just wide enough to
 # cover the widen AND lmul transform families — proves the search →
 # database → report pipeline end to end in seconds, and that the lmul
@@ -30,7 +39,9 @@ cargo fmt -- --check
 
 # -D warnings also enforces the warn-level clippy::unwrap_used /
 # clippy::expect_used gates scoped to the rvv and sim modules (their
-# mod.rs inner attributes): execution-layer faults must be SimTraps.
+# mod.rs inner attributes — rvv covers the new rvv::verify admission
+# pass): execution-layer faults must be SimTraps, and the verifier
+# itself must never panic on a malformed program.
 echo "== cargo clippy -- -D warnings =="
 cargo clippy -- -D warnings
 

@@ -29,6 +29,22 @@
 //! bit-identical buffers and equal [`SimStats`] (see the `sim` module
 //! docs).
 //!
+//! # Admission verification
+//!
+//! Every program entering execution through the coordinator passes the
+//! static verifier ([`crate::rvv::verify`]) first: the translation cache
+//! verifies a freshly translated program *before* decoding and caching
+//! it, and the fresh-translate paths (interp jobs, tuned jobs) verify
+//! inline. An illegal program — vl > VLMAX, misaligned register group,
+//! out-of-range register, unprovable or out-of-bounds affine address,
+//! non-terminating back-edge — is rejected at admission as a
+//! [`SimTrap`]-convertible `VerifyError`, so it degrades through the
+//! same ladder as a runtime trap instead of executing at all. The
+//! verifier's accept ⇒ no-trap contract and its exclusions (masked
+//! memory bounds, data-dependent lane indices) are documented on
+//! [`crate::rvv::verify`]; the runtime trap layer and the fuel bounds
+//! below cover exactly the excluded residue.
+//!
 //! # Fault tolerance
 //!
 //! A faulting or panicking job must never abort the matrix. The layers,
@@ -37,19 +53,34 @@
 //! 1. **Structured traps** — the simulators report faults as
 //!    [`SimTrap`]s (see [`crate::rvv::trap`]) rather than panicking, so a
 //!    bad program produces a typed error with kernel/engine/PC context.
-//! 2. **Panic backstop** — each job attempt runs under
+//! 2. **Fuel bounds** — both engines run under [`crate::sim::ExecLimits`]
+//!    (dynamic-instruction budget derived from the program's static
+//!    shape, optional wall deadline), so even a fault class the verifier
+//!    cannot see statically ends in a `FuelExhausted`/`DeadlineExceeded`
+//!    trap, never a hung worker.
+//! 3. **Panic backstop** — each job attempt runs under
 //!    `std::panic::catch_unwind`; a residual panic (simulator bug, bad
 //!    register index) becomes a [`TrapKind::Panic`] record instead of a
 //!    dead worker. Matrix runs and tuner searches install a scoped
 //!    [`quiet_panics`] guard around the backstop, so contained panics do
 //!    not spam backtraces; the previous hook is restored when the
 //!    outermost guard drops.
-//! 3. **Retries + degradation** — a [`RetryPolicy`] re-runs failed
+//! 4. **Retries + degradation** — a [`RetryPolicy`] re-runs failed
 //!    attempts, optionally falling back from the decoded engine to the
-//!    interpreter (identical semantics, independent code path). A job
-//!    that exhausts its attempts degrades to a [`FaultRecord`] in the
-//!    [`MatrixReport`]; healthy jobs are unaffected and workers keep
-//!    draining the queue.
+//!    interpreter (identical semantics, independent code path).
+//!    Deterministic traps (`TrapKind::is_deterministic`) skip the
+//!    remaining same-engine attempts — re-running an identical
+//!    deterministic simulation cannot change the outcome — and go
+//!    straight to the cross-engine fallback; injected/panic/deadline
+//!    faults keep full retry semantics. A job that exhausts its attempts
+//!    degrades to a [`FaultRecord`] in the [`MatrixReport`]; healthy
+//!    jobs are unaffected and workers keep draining the queue.
+//! 5. **Circuit breaker** — an optional per-(kernel, family) [`Breaker`]
+//!    opens after K consecutive faults; remaining jobs for that pair are
+//!    skipped up front and recorded as [`SkipRecord`]s, so a
+//!    systematically broken configuration stops burning retry budget.
+//!    [`MatrixReport::health`] summarises the run (verified / passed /
+//!    faulted / skipped, fuel spent).
 //!
 //! [`run_matrix_report`] is the fault-tolerant core. The legacy
 //! [`run_matrix`]/[`run_matrix_engine`] wrappers keep their strict
@@ -206,8 +237,10 @@ pub struct TranslationCache {
 }
 
 impl TranslationCache {
-    /// Fetch the decoded program for `job`, translating + decoding on
-    /// first use.
+    /// Fetch the decoded program for `job`, translating + verifying +
+    /// decoding on first use. Verification is the mandatory admission
+    /// stage: only verified programs are decoded and cached, so a cache
+    /// hit is a proof the program was admitted once already.
     ///
     /// The lock is deliberately released between the miss check and the
     /// insert so translation runs unlocked; concurrent misses on the same
@@ -224,6 +257,7 @@ impl TranslationCache {
         }
         let cfg = RvvConfig::new(job.vlen);
         let (rvv, _) = Translator::new(job.mode, cfg).translate(&case.prog)?;
+        verify_admission(&rvv, job)?;
         let decoded = decode(&rvv);
         let entry = Arc::new(CachedProgram { rvv, decoded });
         let mut map = lock_ignore_poison(&self.map);
@@ -238,6 +272,16 @@ impl TranslationCache {
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
+}
+
+/// The mandatory admission stage: statically verify a translated program
+/// before it may execute. A rejection is surfaced as the [`SimTrap`] the
+/// execution layer would have raised (tagged with the kernel name), so
+/// the recovery ladder records it as a structured `FaultRecord` and the
+/// retry classifier sees a deterministic fault.
+fn verify_admission(rvv: &RvvProgram, job: &Job) -> Result<()> {
+    crate::rvv::verify::verify(rvv, job.vlen)
+        .map_err(|e| anyhow::Error::new(SimTrap::from(e).in_kernel(job.kernel)))
 }
 
 /// The shared process-wide cache used by `run_job` and the worker pool.
@@ -283,11 +327,13 @@ pub fn run_job_engine_opts(
     let stats = match (engine, tuning) {
         (EngineKind::Interp, _) => {
             let (rp, _) = translator().translate(&case.prog)?;
+            verify_admission(&rp, job)?;
             let (_, stats) = Simulator::new(&rp, cfg, &case.inputs)?.run()?;
             stats
         }
         (EngineKind::Decoded, Some(_)) => {
             let (rp, _) = translator().translate(&case.prog)?;
+            verify_admission(&rp, job)?;
             let dec = decode(&rp);
             let (_, stats) = Engine::new(&rp, &dec, cfg, &case.inputs)?.run()?;
             stats
@@ -302,6 +348,12 @@ pub fn run_job_engine_opts(
 }
 
 /// How failed job attempts are retried.
+///
+/// Attempts whose failure is a deterministic trap
+/// (`TrapKind::is_deterministic`) do not re-run on the same engine —
+/// the remaining same-engine slots are skipped and the ladder moves
+/// straight to the cross-engine fallback. Injected/panic/deadline
+/// faults keep the full schedule.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct RetryPolicy {
     /// Attempts on the requested engine before giving up (min 1).
@@ -416,6 +468,68 @@ impl FaultPlan {
     }
 }
 
+/// Per-(kernel, family) consecutive-failure tracker: the circuit breaker.
+///
+/// After `threshold` consecutive faults for one (kernel, family) pair the
+/// breaker *opens* and callers skip further attempts for that pair up
+/// front (recorded as [`SkipRecord`]s / `Skipped` provenance) instead of
+/// burning full retry ladders on a systematically broken configuration.
+/// A success resets the pair's count. Under a parallel pool the count is
+/// racy by design — two workers may both start before either records a
+/// fault, so a breaker may open one or two jobs "late"; it never opens
+/// early, and healthy pairs (no faults at all) are never affected.
+#[derive(Debug)]
+pub struct Breaker {
+    threshold: u32,
+    state: Mutex<HashMap<(String, String), u32>>,
+}
+
+impl Breaker {
+    /// Breaker opening after `threshold` consecutive faults (min 1).
+    pub fn new(threshold: u32) -> Breaker {
+        Breaker { threshold: threshold.max(1), state: Mutex::new(HashMap::new()) }
+    }
+
+    pub fn threshold(&self) -> u32 {
+        self.threshold
+    }
+
+    pub fn is_open(&self, kernel: &str, family: &str) -> bool {
+        lock_ignore_poison(&self.state)
+            .get(&(kernel.to_string(), family.to_string()))
+            .is_some_and(|c| *c >= self.threshold)
+    }
+
+    pub fn record_ok(&self, kernel: &str, family: &str) {
+        lock_ignore_poison(&self.state).remove(&(kernel.to_string(), family.to_string()));
+    }
+
+    pub fn record_fault(&self, kernel: &str, family: &str) {
+        *lock_ignore_poison(&self.state)
+            .entry((kernel.to_string(), family.to_string()))
+            .or_insert(0) += 1;
+    }
+}
+
+/// A job that was never attempted because its breaker was open.
+#[derive(Debug, Clone)]
+pub struct SkipRecord {
+    /// Index into the submitted job list.
+    pub index: usize,
+    pub job: Job,
+    pub reason: String,
+}
+
+impl fmt::Display for SkipRecord {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "job #{} {} [{:?} vlen={}] skipped: {}",
+            self.index, self.job.kernel, self.job.mode, self.job.vlen, self.reason,
+        )
+    }
+}
+
 /// Options for [`run_matrix_report`].
 #[derive(Debug, Clone)]
 pub struct MatrixOptions {
@@ -426,6 +540,9 @@ pub struct MatrixOptions {
     /// Tuning database consulted during lowering; jobs bypass the
     /// translation cache when set (see [`run_job_engine_opts`]).
     pub tuning: Option<Arc<TuningDb>>,
+    /// Circuit breaker shared across the run (and, if the caller wants,
+    /// across runs). Family key is the job's mode. `None` = no breaker.
+    pub breaker: Option<Arc<Breaker>>,
 }
 
 impl MatrixOptions {
@@ -437,6 +554,7 @@ impl MatrixOptions {
             retry: RetryPolicy::default(),
             fault_plan: None,
             tuning: None,
+            breaker: None,
         }
     }
 
@@ -457,6 +575,11 @@ impl MatrixOptions {
 
     pub fn tuning(mut self, db: Arc<TuningDb>) -> MatrixOptions {
         self.tuning = Some(db);
+        self
+    }
+
+    pub fn breaker(mut self, breaker: Arc<Breaker>) -> MatrixOptions {
+        self.breaker = Some(breaker);
         self
     }
 }
@@ -497,25 +620,58 @@ impl fmt::Display for FaultRecord {
 impl std::error::Error for FaultRecord {}
 
 /// Outcome of a fault-tolerant matrix run: per-job results in input
-/// order (`None` where the job faulted) plus the fault records, sorted
-/// by job index.
+/// order (`None` where the job faulted or was skipped) plus the fault
+/// and skip records, sorted by job index.
 #[derive(Debug)]
 pub struct MatrixReport {
     pub results: Vec<Option<JobResult>>,
     pub faults: Vec<FaultRecord>,
+    /// Jobs never attempted because their circuit breaker was open.
+    pub skipped: Vec<SkipRecord>,
+}
+
+/// Health summary of one matrix run (see [`MatrixReport::health`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct MatrixHealth {
+    /// Jobs admitted by the verifier and executed (= passed + faulted).
+    pub verified: usize,
+    pub passed: usize,
+    pub faulted: usize,
+    /// Jobs skipped by an open circuit breaker.
+    pub skipped: usize,
+    /// Total dynamic instructions (fuel) consumed by successful jobs.
+    pub fuel_spent: u64,
 }
 
 impl MatrixReport {
     pub fn ok(&self) -> bool {
-        self.faults.is_empty()
+        self.faults.is_empty() && self.skipped.is_empty()
+    }
+
+    /// Aggregate verified/passed/faulted/skipped counts and the fuel
+    /// spent by successful jobs.
+    pub fn health(&self) -> MatrixHealth {
+        let passed = self.results.iter().flatten().count();
+        MatrixHealth {
+            verified: passed + self.faults.len(),
+            passed,
+            faulted: self.faults.len(),
+            skipped: self.skipped.len(),
+            fuel_spent: self.results.iter().flatten().map(|r| r.stats.total()).sum(),
+        }
     }
 
     /// Collapse to the strict contract: all results, or the first fault
     /// (in job order) as the error. The error is an `anyhow::Error`
     /// wrapping the [`FaultRecord`], so callers can still downcast.
+    /// Breaker skips (only possible when the caller opted into a
+    /// breaker) are an error too.
     pub fn into_results(self) -> Result<Vec<JobResult>> {
         if let Some(f) = self.faults.into_iter().next() {
             return Err(anyhow::Error::new(f));
+        }
+        if let Some(s) = self.skipped.first() {
+            bail!("{s}");
         }
         let mut out = Vec::with_capacity(self.results.len());
         for (i, slot) in self.results.into_iter().enumerate() {
@@ -556,8 +712,12 @@ fn run_with_recovery(
         schedule.push(EngineKind::Interp);
     }
     let mut last: Option<(anyhow::Error, EngineKind)> = None;
-    for (i, &eng) in schedule.iter().enumerate() {
-        let attempt = (i + 1) as u32;
+    let mut executed: u32 = 0;
+    let mut i = 0;
+    while i < schedule.len() {
+        let eng = schedule[i];
+        executed += 1;
+        let attempt = executed;
         let outcome = catch_unwind(AssertUnwindSafe(|| {
             if let Some(kind) = plan.and_then(|p| p.lookup(idx, attempt, eng)) {
                 match kind {
@@ -582,7 +742,19 @@ fn run_with_recovery(
                 jr.engine = eng;
                 return Ok(jr);
             }
-            Ok(Err(e)) => last = Some((e, eng)),
+            Ok(Err(e)) => {
+                // a deterministic trap re-runs identically: skip the
+                // remaining same-engine attempts, go straight to the
+                // cross-engine fallback (if any)
+                let deterministic =
+                    e.downcast_ref::<SimTrap>().is_some_and(|t| t.kind.is_deterministic());
+                last = Some((e, eng));
+                if deterministic {
+                    while i + 1 < schedule.len() && schedule[i + 1] == eng {
+                        i += 1;
+                    }
+                }
+            }
             Err(payload) => {
                 let trap = SimTrap::panicked(panic_message(payload))
                     .in_kernel(job.kernel)
@@ -590,8 +762,9 @@ fn run_with_recovery(
                 last = Some((anyhow::Error::new(trap), eng));
             }
         }
+        i += 1;
     }
-    let attempts = schedule.len() as u32;
+    let attempts = executed.max(1);
     let (error, engine) = match last {
         Some(l) => l,
         // unreachable: the schedule always has at least one attempt
@@ -643,8 +816,11 @@ pub fn run_prepared_with_recovery(
         schedule.push(EngineKind::Interp);
     }
     let mut last: Option<(anyhow::Error, EngineKind)> = None;
-    for (i, &eng) in schedule.iter().enumerate() {
-        let attempt = (i + 1) as u32;
+    let mut executed: u32 = 0;
+    let mut i = 0;
+    while i < schedule.len() {
+        let eng = schedule[i];
+        executed += 1;
         let t0 = Instant::now();
         let outcome = catch_unwind(AssertUnwindSafe(|| match eng {
             EngineKind::Interp => Simulator::new(&prog.rvv, cfg, inputs)?.run(),
@@ -656,11 +832,22 @@ pub fn run_prepared_with_recovery(
                     outputs,
                     stats,
                     wall: t0.elapsed(),
-                    attempts: attempt,
+                    attempts: executed,
                     engine: eng,
                 });
             }
-            Ok(Err(e)) => last = Some((e, eng)),
+            Ok(Err(e)) => {
+                // deterministic traps skip the remaining same-engine
+                // attempts — identical simulation, identical outcome
+                let deterministic =
+                    e.downcast_ref::<SimTrap>().is_some_and(|t| t.kind.is_deterministic());
+                last = Some((e, eng));
+                if deterministic {
+                    while i + 1 < schedule.len() && schedule[i + 1] == eng {
+                        i += 1;
+                    }
+                }
+            }
             Err(payload) => {
                 let trap = SimTrap::panicked(panic_message(payload))
                     .in_kernel(job.kernel)
@@ -668,8 +855,9 @@ pub fn run_prepared_with_recovery(
                 last = Some((anyhow::Error::new(trap), eng));
             }
         }
+        i += 1;
     }
-    let attempts = schedule.len() as u32;
+    let attempts = executed.max(1);
     let (error, engine) = match last {
         Some(l) => l,
         // unreachable: the schedule always has at least one attempt
@@ -691,12 +879,18 @@ pub fn run_prepared_with_recovery(
 /// queue, and the report carries partial results plus fault records.
 /// Never fails as a whole — degradation is per job.
 pub fn run_matrix_report(jobs: Vec<Job>, opts: MatrixOptions) -> MatrixReport {
+    enum Outcome {
+        Done(JobResult),
+        Fault(Box<FaultRecord>),
+        Skipped(SkipRecord),
+    }
+
     let _quiet = quiet_panics();
     let n = jobs.len();
     let job_table = jobs.clone();
     let queue: Arc<Mutex<VecDeque<(usize, Job)>>> =
         Arc::new(Mutex::new(jobs.into_iter().enumerate().collect()));
-    let (tx, rx) = mpsc::channel::<(usize, Result<JobResult, FaultRecord>)>();
+    let (tx, rx) = mpsc::channel::<(usize, Outcome)>();
 
     let workers: Vec<_> = (0..opts.threads.max(1))
         .map(|_| {
@@ -704,11 +898,31 @@ pub fn run_matrix_report(jobs: Vec<Job>, opts: MatrixOptions) -> MatrixReport {
             let tx = tx.clone();
             let plan = opts.fault_plan.clone();
             let tuning = opts.tuning.clone();
+            let breaker = opts.breaker.clone();
             let (retry, engine) = (opts.retry, opts.engine);
             std::thread::spawn(move || loop {
                 let next = lock_ignore_poison(&queue).pop_front();
                 match next {
                     Some((idx, job)) => {
+                        // family key for matrix jobs: the translation mode
+                        let family = format!("{:?}", job.mode);
+                        if let Some(b) = breaker.as_ref() {
+                            if b.is_open(job.kernel, &family) {
+                                let s = SkipRecord {
+                                    index: idx,
+                                    job: job.clone(),
+                                    reason: format!(
+                                        "breaker open for ({}, {family}) after {} consecutive fault(s)",
+                                        job.kernel,
+                                        b.threshold(),
+                                    ),
+                                };
+                                if tx.send((idx, Outcome::Skipped(s))).is_err() {
+                                    return;
+                                }
+                                continue;
+                            }
+                        }
                         let r = run_with_recovery(
                             idx,
                             &job,
@@ -717,7 +931,17 @@ pub fn run_matrix_report(jobs: Vec<Job>, opts: MatrixOptions) -> MatrixReport {
                             plan.as_deref(),
                             tuning.as_ref(),
                         );
-                        if tx.send((idx, r)).is_err() {
+                        if let Some(b) = breaker.as_ref() {
+                            match &r {
+                                Ok(_) => b.record_ok(job.kernel, &family),
+                                Err(_) => b.record_fault(job.kernel, &family),
+                            }
+                        }
+                        let out = match r {
+                            Ok(jr) => Outcome::Done(jr),
+                            Err(f) => Outcome::Fault(Box::new(f)),
+                        };
+                        if tx.send((idx, out)).is_err() {
                             return;
                         }
                     }
@@ -730,10 +954,12 @@ pub fn run_matrix_report(jobs: Vec<Job>, opts: MatrixOptions) -> MatrixReport {
 
     let mut slots: Vec<Option<JobResult>> = (0..n).map(|_| None).collect();
     let mut faults: Vec<FaultRecord> = Vec::new();
+    let mut skipped: Vec<SkipRecord> = Vec::new();
     for (idx, r) in rx {
         match r {
-            Ok(jr) => slots[idx] = Some(jr),
-            Err(f) => faults.push(f),
+            Outcome::Done(jr) => slots[idx] = Some(jr),
+            Outcome::Fault(f) => faults.push(*f),
+            Outcome::Skipped(s) => skipped.push(s),
         }
     }
     for w in workers {
@@ -742,7 +968,10 @@ pub fn run_matrix_report(jobs: Vec<Job>, opts: MatrixOptions) -> MatrixReport {
         let _ = w.join();
     }
     for (i, slot) in slots.iter().enumerate() {
-        if slot.is_none() && !faults.iter().any(|f| f.index == i) {
+        if slot.is_none()
+            && !faults.iter().any(|f| f.index == i)
+            && !skipped.iter().any(|s| s.index == i)
+        {
             faults.push(FaultRecord {
                 index: i,
                 job: job_table[i].clone(),
@@ -754,7 +983,8 @@ pub fn run_matrix_report(jobs: Vec<Job>, opts: MatrixOptions) -> MatrixReport {
         }
     }
     faults.sort_by_key(|f| f.index);
-    MatrixReport { results: slots, faults }
+    skipped.sort_by_key(|s| s.index);
+    MatrixReport { results: slots, faults, skipped }
 }
 
 /// Run a job list across `threads` workers; results in input order.
@@ -914,6 +1144,63 @@ mod tests {
         let c = run_job_engine(&job, EngineKind::Decoded).unwrap();
         assert_eq!(b.stats, c.stats);
         assert!(!translation_cache().is_empty());
+    }
+
+    #[test]
+    fn breaker_counts_consecutive_faults_and_resets_on_success() {
+        let b = Breaker::new(2);
+        b.record_fault("k", "f");
+        assert!(!b.is_open("k", "f"));
+        b.record_fault("k", "f");
+        assert!(b.is_open("k", "f"));
+        assert!(!b.is_open("k", "other"));
+        b.record_ok("k", "f");
+        assert!(!b.is_open("k", "f"));
+    }
+
+    #[test]
+    fn open_breaker_skips_remaining_jobs_and_health_reports_it() {
+        // six copies of one (kernel, mode) pair, all injected to fault;
+        // single worker for a deterministic order: threshold 2 means two
+        // full fault ladders, then four up-front skips
+        let jobs: Vec<Job> =
+            (0..6).map(|_| Job { kernel: "vrelu", mode: Mode::RvvCustom, vlen: 128 }).collect();
+        let mut plan = FaultPlan::new();
+        for i in 0..6 {
+            plan = plan.fail_always(i);
+        }
+        let opts = MatrixOptions::new(1)
+            .retry(RetryPolicy::none())
+            .fault_plan(plan)
+            .breaker(Arc::new(Breaker::new(2)));
+        let report = run_matrix_report(jobs, opts);
+        assert_eq!(report.faults.len(), 2);
+        assert_eq!(report.skipped.len(), 4);
+        assert!(report.skipped[0].reason.contains("breaker open"), "{}", report.skipped[0]);
+        assert!(!report.ok());
+        let h = report.health();
+        assert_eq!(h.verified, 2);
+        assert_eq!(h.passed, 0);
+        assert_eq!(h.faulted, 2);
+        assert_eq!(h.skipped, 4);
+        assert_eq!(h.fuel_spent, 0);
+    }
+
+    #[test]
+    fn healthy_run_reports_clean_health() {
+        let jobs = vec![
+            Job { kernel: "vrelu", mode: Mode::Baseline, vlen: 128 },
+            Job { kernel: "vrelu", mode: Mode::RvvCustom, vlen: 128 },
+        ];
+        let report =
+            run_matrix_report(jobs, MatrixOptions::new(2).breaker(Arc::new(Breaker::new(3))));
+        assert!(report.ok());
+        let h = report.health();
+        assert_eq!(h.passed, 2);
+        assert_eq!(h.verified, 2);
+        assert_eq!(h.faulted, 0);
+        assert_eq!(h.skipped, 0);
+        assert!(h.fuel_spent > 0);
     }
 
     #[test]

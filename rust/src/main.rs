@@ -7,6 +7,11 @@
 //!                                     replaying tuned lowerings)
 //!   verify [--kernel K] [--artifacts DIR] [--no-golden]
 //!                                     validate both modes vs NEON + XLA
+//!   verify --static [--vlens 128,256,512]
+//!                                     run the admission verifier over
+//!                                     every lowering (static rules plus
+//!                                     all tuner candidate families) for
+//!                                     suite x mode x vlen, no execution
 //!   translate --kernel K [--mode baseline|custom]
 //!                                     dump the translated RVV stream
 //!   tune [--vlens 128,...] [--kernel K] [--mode M] [--budget N]
@@ -111,6 +116,9 @@ fn bench_cmd(args: &Args) -> Result<()> {
 }
 
 fn verify_cmd(args: &Args) -> Result<()> {
+    if args.has("static") {
+        return verify_static_cmd(args);
+    }
     let s = settings(args)?;
     let oracle = if args.has("no-golden") {
         None
@@ -143,6 +151,70 @@ fn verify_cmd(args: &Args) -> Result<()> {
         bail!("verification failed");
     }
     println!("all {} kernels verified", cases.len());
+    Ok(())
+}
+
+/// `verify --static`: admission-verify every program the pipeline can
+/// produce — the static rule and every tuner candidate family
+/// (`widen:*`, `lmul:*`, `force-baseline:*`) — for the full kernel suite
+/// × both modes × the requested vlens, without executing anything. A
+/// lowering that refuses to apply (unmappable types at this vlen, no
+/// coalescible loop) is counted as not-applicable, not as a rejection.
+fn verify_static_cmd(args: &Args) -> Result<()> {
+    let vlens = args.get_u32_list("vlens", &[128, 256, 512])?;
+    let mut admitted = 0usize;
+    let mut not_applicable = 0usize;
+    let mut rejected: Vec<String> = Vec::new();
+    let mut check = |name: &str, mode: Mode, vlen: u32, id: &str,
+                     lowered: Result<simde_rvv::rvv::program::RvvProgram>| {
+        match lowered {
+            Ok(rvv) => match simde_rvv::rvv::verify::verify(&rvv, vlen) {
+                Ok(()) => admitted += 1,
+                Err(e) => {
+                    rejected.push(format!("{name} mode={} vlen={vlen} {id}: {e}", mode.name()));
+                }
+            },
+            Err(_) => not_applicable += 1,
+        }
+    };
+    for case in kernels::suite() {
+        for mode in [Mode::Baseline, Mode::RvvCustom] {
+            for &vlen in &vlens {
+                let cfg = RvvConfig::new(vlen);
+                check(
+                    case.name,
+                    mode,
+                    vlen,
+                    "static",
+                    Translator::new(mode, cfg).translate(&case.prog).map(|(rvv, _)| rvv),
+                );
+                for cand in tuner::candidate::enumerate(&case.prog, mode, usize::MAX) {
+                    if cand.is_static() {
+                        continue;
+                    }
+                    check(
+                        case.name,
+                        mode,
+                        vlen,
+                        &cand.id(),
+                        tuner::candidate::lower_with(&case.prog, mode, cfg, &cand)
+                            .map(|(rvv, _)| rvv),
+                    );
+                }
+            }
+        }
+    }
+    for r in &rejected {
+        eprintln!("REJECTED {r}");
+    }
+    println!(
+        "verify --static: {admitted} program(s) admitted, {not_applicable} lowering(s) \
+         not applicable, {} rejected",
+        rejected.len()
+    );
+    if !rejected.is_empty() {
+        bail!("{} program(s) rejected by the admission verifier", rejected.len());
+    }
     Ok(())
 }
 

@@ -143,6 +143,29 @@ pub fn tune_markdown(out: &crate::tuner::TuneOutcome) -> String {
         scored_out,
         out.faults.len()
     );
+    if out.skipped > 0 {
+        let _ = writeln!(
+            s,
+            "{} candidate run(s) skipped by an open circuit breaker (see the per-candidate provenance rows)",
+            out.skipped
+        );
+    }
+    s
+}
+
+/// Health summary of one fault-tolerant matrix run: admission/execution
+/// counters plus the fuel (dynamic instructions) the successful runs
+/// consumed.
+pub fn health_markdown(h: &crate::coordinator::MatrixHealth) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "### Run health\n");
+    let _ = writeln!(s, "| verified | passed | faulted | skipped | fuel spent |");
+    let _ = writeln!(s, "|---:|---:|---:|---:|---:|");
+    let _ = writeln!(
+        s,
+        "| {} | {} | {} | {} | {} |",
+        h.verified, h.passed, h.faulted, h.skipped, h.fuel_spent
+    );
     s
 }
 
@@ -246,11 +269,24 @@ mod tests {
             },
             faults: vec![],
             improved: 1,
+            skipped: 0,
         };
         let md = tune_markdown(&out);
         assert!(md.contains("| vrelu | rvv-custom | 512 | 1000 | widen:4 | 400 | -60.0% |"), "{md}");
         assert!(md.contains("1 of 1 points improved"), "{md}");
         assert!(md.contains("1 candidate(s) scored out"), "{md}");
+        assert!(!md.contains("circuit breaker"), "no breaker line on a clean run: {md}");
+        let skipped = TuneOutcome { skipped: 2, ..out };
+        let md = tune_markdown(&skipped);
+        assert!(md.contains("2 candidate run(s) skipped by an open circuit breaker"), "{md}");
+    }
+
+    #[test]
+    fn health_report_formats() {
+        use crate::coordinator::MatrixHealth;
+        let h = MatrixHealth { verified: 6, passed: 4, faulted: 2, skipped: 3, fuel_spent: 1234 };
+        let md = health_markdown(&h);
+        assert!(md.contains("| 6 | 4 | 2 | 3 | 1234 |"), "{md}");
     }
 
     #[test]

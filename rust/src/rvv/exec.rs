@@ -112,7 +112,7 @@ fn check_vl_legal(m: &RvvMachine, inst: &RvvInst) -> Result<(), SimTrap> {
 /// their grouped (EMUL-scaled) forms are not modelled — the legality
 /// analysis never emits them, so a grouped instance is a structural
 /// unsupported-op fault rather than silently wrong lane mapping.
-fn mixed_eew(k: RvvKind) -> bool {
+pub(crate) fn mixed_eew(k: RvvKind) -> bool {
     use RvvKind::*;
     matches!(
         k,

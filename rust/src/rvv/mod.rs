@@ -13,10 +13,12 @@ pub mod machine;
 pub mod ops;
 pub mod program;
 pub mod trap;
+pub mod verify;
 pub mod vtype;
 
 pub use machine::RvvMachine;
 pub use ops::{Dst, MemRef, RvvInst, RvvKind, Src};
 pub use program::{RStmt, RvvProgram, ScalarBlock};
 pub use trap::{SimTrap, TrapKind};
+pub use verify::{verify, VerifyError, VerifyErrorKind};
 pub use vtype::{Lmul, Sew, VType};

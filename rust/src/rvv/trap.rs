@@ -46,6 +46,12 @@ pub enum TrapKind {
     /// Deterministic test-only fault injected by the coordinator's
     /// `FaultPlan`.
     Injected(String),
+    /// The dynamic-instruction budget of `sim::ExecLimits` ran out — a
+    /// runaway (or grossly mis-estimated) program was stopped instead of
+    /// hanging its worker thread.
+    FuelExhausted(String),
+    /// The wall-clock deadline of `sim::ExecLimits` passed.
+    DeadlineExceeded(String),
 }
 
 impl TrapKind {
@@ -60,7 +66,27 @@ impl TrapKind {
             TrapKind::VsetvliViolation(_) => "vsetvli-violation",
             TrapKind::Panic(_) => "panic",
             TrapKind::Injected(_) => "injected",
+            TrapKind::FuelExhausted(_) => "fuel-exhausted",
+            TrapKind::DeadlineExceeded(_) => "deadline-exceeded",
         }
+    }
+
+    /// Whether re-running the identical deterministic simulation is
+    /// guaranteed to hit this fault again. The retry ladder skips repeat
+    /// attempts on the same engine for deterministic kinds and goes
+    /// straight to the cross-engine fallback; transient kinds (injected
+    /// test faults, panics that may stem from shared state, wall-clock
+    /// deadlines that depend on machine load) keep full retry semantics.
+    pub fn is_deterministic(&self) -> bool {
+        matches!(
+            self,
+            TrapKind::IllegalInstruction(_)
+                | TrapKind::OutOfBounds { .. }
+                | TrapKind::BadOperand(_)
+                | TrapKind::UnsupportedOp(_)
+                | TrapKind::VsetvliViolation(_)
+                | TrapKind::FuelExhausted(_)
+        )
     }
 }
 
@@ -72,7 +98,9 @@ impl fmt::Display for TrapKind {
             | TrapKind::UnsupportedOp(d)
             | TrapKind::VsetvliViolation(d)
             | TrapKind::Panic(d)
-            | TrapKind::Injected(d) => write!(f, "[{}] {d}", self.label()),
+            | TrapKind::Injected(d)
+            | TrapKind::FuelExhausted(d)
+            | TrapKind::DeadlineExceeded(d) => write!(f, "[{}] {d}", self.label()),
             TrapKind::OutOfBounds { buf, byte_off, width, len, store: _ } => write!(
                 f,
                 "[{}] {width} bytes at byte {byte_off} of buf{buf} ({len} bytes)",
@@ -131,6 +159,14 @@ impl SimTrap {
 
     pub fn injected(detail: impl Into<String>) -> SimTrap {
         SimTrap::new(TrapKind::Injected(detail.into()))
+    }
+
+    pub fn fuel_exhausted(detail: impl Into<String>) -> SimTrap {
+        SimTrap::new(TrapKind::FuelExhausted(detail.into()))
+    }
+
+    pub fn deadline_exceeded(detail: impl Into<String>) -> SimTrap {
+        SimTrap::new(TrapKind::DeadlineExceeded(detail.into()))
     }
 
     /// Attach the kernel name if not already set.

@@ -1,0 +1,1116 @@
+//! Admission-control verification of RVV programs.
+//!
+//! [`verify`] is a static pass over an [`RvvProgram`] that proves, without
+//! executing a single instruction, that the program is well-formed for a
+//! given VLEN. It runs before a program is cached, scored by the tuner, or
+//! replayed from the tuning database — an illegal program is rejected at
+//! admission instead of trapping (or hanging) mid-job.
+//!
+//! # The accept ⇒ no-trap contract
+//!
+//! A program the verifier accepts must execute on both engines without
+//! raising a *structural* [`SimTrap`] and without running forever. The
+//! checks mirror the execution layer's own fault conditions exactly:
+//!
+//! - `vl ≤ VLMAX(SEW, LMUL)` at every instruction (the runtime
+//!   `vsetvli-violation` check, proved statically);
+//! - register-group alignment and range: an `mF` operand names a base
+//!   register `≡ 0 (mod F)` and its `F` consecutive registers fit the
+//!   register file (the runtime `bad-operand` check in
+//!   `RvvMachine::check_group`);
+//! - mask and scalar register indices in range (the machine would
+//!   otherwise index-panic, leaning on the coordinator's unwind backstop);
+//! - widening/narrowing ops are not grouped (`unsupported-op` at
+//!   execution), and float ops do not run at `e8`;
+//! - scalar registers are defined (by an `SSet` or an enclosing loop's
+//!   induction variable, including loop-carried definitions) before any
+//!   use in an address expression or `.vx` operand, and vector/mask
+//!   registers are written before they are read;
+//! - every *unmasked* memory access is provably in-bounds: address
+//!   expressions are affine in scalar registers, loop bounds are static,
+//!   so interval arithmetic over the full trip range bounds each access
+//!   byte-exactly against the buffer's length;
+//! - every loop with `start < end` has `step > 0` — an affine back-edge
+//!   that cannot terminate is rejected as [`VerifyErrorKind::NonTerminatingLoop`]
+//!   instead of exhausting a fuel budget at run time.
+//!
+//! # Exclusions
+//!
+//! Three fault classes are deliberately left to the runtime layers
+//! (structured traps + fuel, see `sim` and `rvv::trap`):
+//!
+//! - **masked memory bounds** — a masked load/store only touches lanes
+//!   whose mask bit is set, which is data-dependent; the verifier checks
+//!   the address expression's registers but not the byte range;
+//! - **data-dependent lane indices** — `vrgather`/`vcompress` read lane
+//!   positions from register *contents*;
+//! - **scalar-fallback numerics** — `ScalarBlock`s are checked for
+//!   register/buffer ranges and affine memory bounds of their load/store
+//!   families, but the reference NEON semantics inside are trusted.
+//!
+//! Rejections convert into [`SimTrap`]s (`From<VerifyError>`), so callers
+//! reuse the PR 7 degradation ladder: a rejected program becomes a
+//! `FaultRecord`, never a dead worker.
+
+use std::fmt;
+
+use crate::ir::{AddrExpr, Arg};
+use crate::neon::ops::Family;
+
+use super::exec::mixed_eew;
+use super::ops::{Dst, RvvInst, RvvKind, Src};
+use super::program::{RStmt, RvvProgram, ScalarBlock};
+use super::trap::SimTrap;
+
+/// What class of illegality the verifier found.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VerifyErrorKind {
+    /// `vl` exceeds `VLMAX(SEW, LMUL)` at the given VLEN.
+    VlExceedsVlmax,
+    /// A grouped (`m2`/`m4`/`m8`) operand whose base register is not a
+    /// multiple of the group size.
+    MisalignedGroup,
+    /// A vector/mask/scalar register index outside the program's
+    /// declared register file.
+    RegisterOutOfRange,
+    /// A scalar/vector/mask register read before any definition reaches
+    /// the use (loop-carried definitions count).
+    UseBeforeDef,
+    /// An unmasked memory access not provably inside its buffer across
+    /// the full loop trip range.
+    OutOfBoundsAddress,
+    /// An affine back-edge that cannot terminate (`start < end` with
+    /// `step ≤ 0`).
+    NonTerminatingLoop,
+    /// A memory operand naming a buffer the program does not declare.
+    BadBuffer,
+    /// An op the execution layer rejects structurally on this shape
+    /// (grouped widening/narrowing, scalar fallback at tiny VLEN).
+    UnsupportedOp,
+    /// Operand list/kind does not match what the opcode requires.
+    Malformed,
+}
+
+impl VerifyErrorKind {
+    /// Short stable label for logs, reports and tests.
+    pub fn label(self) -> &'static str {
+        match self {
+            VerifyErrorKind::VlExceedsVlmax => "vl-exceeds-vlmax",
+            VerifyErrorKind::MisalignedGroup => "misaligned-group",
+            VerifyErrorKind::RegisterOutOfRange => "register-out-of-range",
+            VerifyErrorKind::UseBeforeDef => "use-before-def",
+            VerifyErrorKind::OutOfBoundsAddress => "out-of-bounds-address",
+            VerifyErrorKind::NonTerminatingLoop => "non-terminating-loop",
+            VerifyErrorKind::BadBuffer => "bad-buffer",
+            VerifyErrorKind::UnsupportedOp => "unsupported-op",
+            VerifyErrorKind::Malformed => "malformed",
+        }
+    }
+}
+
+/// A structured admission rejection: the illegality class plus a rendered
+/// description of the offending statement.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VerifyError {
+    pub kind: VerifyErrorKind,
+    pub detail: String,
+}
+
+impl VerifyError {
+    fn new(kind: VerifyErrorKind, detail: impl Into<String>) -> VerifyError {
+        VerifyError { kind, detail: detail.into() }
+    }
+}
+
+impl fmt::Display for VerifyError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "verify rejected [{}] {}", self.kind.label(), self.detail)
+    }
+}
+
+impl std::error::Error for VerifyError {}
+
+/// Convert a rejection into the trap the execution layer would have
+/// raised, so the coordinator's degradation ladder (retry classification,
+/// `FaultRecord`) treats admission rejections like runtime faults.
+impl From<VerifyError> for SimTrap {
+    fn from(e: VerifyError) -> SimTrap {
+        let msg = e.to_string();
+        match e.kind {
+            VerifyErrorKind::VlExceedsVlmax => SimTrap::vsetvli(msg),
+            VerifyErrorKind::UnsupportedOp => SimTrap::unsupported(msg),
+            // a non-terminating loop would only surface at run time as
+            // exhausted fuel — report it under the same kind
+            VerifyErrorKind::NonTerminatingLoop => SimTrap::fuel_exhausted(msg),
+            VerifyErrorKind::MisalignedGroup
+            | VerifyErrorKind::RegisterOutOfRange
+            | VerifyErrorKind::UseBeforeDef
+            | VerifyErrorKind::OutOfBoundsAddress
+            | VerifyErrorKind::BadBuffer
+            | VerifyErrorKind::Malformed => SimTrap::bad_operand(msg),
+        }
+    }
+}
+
+/// Verify `prog` for execution at `vlen`. Returns the first rejection in
+/// program order, or `Ok(())` when the program is admitted.
+pub fn verify(prog: &RvvProgram, vlen: u32) -> Result<(), VerifyError> {
+    let c = Checker { prog, vlen };
+    let mut env = Env {
+        sregs: vec![SVal::Undef; prog.n_sregs],
+        vdef: vec![false; prog.n_vregs],
+        mdef: vec![false; prog.n_mregs],
+    };
+    c.check_block(&prog.body, &mut env)
+}
+
+/// Abstract value of one scalar register.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SVal {
+    /// Never written; the machine zero-initialises, so a read yields 0 —
+    /// flagged as `UseBeforeDef` at checked uses.
+    Undef,
+    /// Known inclusive interval.
+    Range(i64, i64),
+    /// Written, value not statically bounded.
+    Any,
+}
+
+impl SVal {
+    fn join(self, other: SVal) -> SVal {
+        match (self, other) {
+            (SVal::Undef, SVal::Undef) => SVal::Undef,
+            // one side may read the zero-initialised value
+            (SVal::Undef, SVal::Range(a, b)) | (SVal::Range(a, b), SVal::Undef) => {
+                SVal::Range(a.min(0), b.max(0))
+            }
+            (SVal::Range(a, b), SVal::Range(c, d)) => SVal::Range(a.min(c), b.max(d)),
+            _ => SVal::Any,
+        }
+    }
+}
+
+/// Abstract machine state threaded through the walk: scalar-register
+/// intervals plus defined bits for vector and mask registers.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Env {
+    sregs: Vec<SVal>,
+    vdef: Vec<bool>,
+    mdef: Vec<bool>,
+}
+
+impl Env {
+    fn join(&self, other: &Env) -> Env {
+        Env {
+            sregs: self
+                .sregs
+                .iter()
+                .zip(&other.sregs)
+                .map(|(a, b)| a.join(*b))
+                .collect(),
+            vdef: self.vdef.iter().zip(&other.vdef).map(|(a, b)| *a || *b).collect(),
+            mdef: self.mdef.iter().zip(&other.mdef).map(|(a, b)| *a || *b).collect(),
+        }
+    }
+}
+
+/// Static trip range of a loop: `Terminates(first, last)` with trip ≥ 1,
+/// `Empty` for zero-trip, `Diverges` for a back-edge that never exits.
+enum Trip {
+    Terminates(i64, i64),
+    Empty,
+    Diverges,
+}
+
+fn trip_range(start: i64, end: i64, step: i64) -> Trip {
+    if start >= end {
+        return Trip::Empty;
+    }
+    if step <= 0 {
+        return Trip::Diverges;
+    }
+    let (s, e, st) = (start as i128, end as i128, step as i128);
+    let trip = (e - s + st - 1) / st;
+    let last = s + (trip - 1) * st;
+    Trip::Terminates(start, last as i64)
+}
+
+struct Checker<'p> {
+    prog: &'p RvvProgram,
+    vlen: u32,
+}
+
+impl Checker<'_> {
+    // ---- interval evaluation over affine address expressions ----
+
+    /// Checked evaluation: errors on out-of-range or undefined scalar
+    /// registers; `Ok(None)` means "written but unbounded".
+    fn eval_strict(&self, e: &AddrExpr, env: &Env) -> Result<Option<(i64, i64)>, VerifyError> {
+        match e {
+            AddrExpr::Const(v) => Ok(Some((*v, *v))),
+            AddrExpr::SReg(r) => {
+                let i = *r as usize;
+                if i >= env.sregs.len() {
+                    return Err(VerifyError::new(
+                        VerifyErrorKind::RegisterOutOfRange,
+                        format!("address uses s{r} but the program declares {} sregs", env.sregs.len()),
+                    ));
+                }
+                match env.sregs[i] {
+                    SVal::Undef => Err(VerifyError::new(
+                        VerifyErrorKind::UseBeforeDef,
+                        format!("s{r} read before any definition reaches the use"),
+                    )),
+                    SVal::Range(a, b) => Ok(Some((a, b))),
+                    SVal::Any => Ok(None),
+                }
+            }
+            AddrExpr::Add(a, b) => {
+                let (x, y) = (self.eval_strict(a, env)?, self.eval_strict(b, env)?);
+                Ok(match (x, y) {
+                    (Some((al, ah)), Some((bl, bh))) => {
+                        Some((al.saturating_add(bl), ah.saturating_add(bh)))
+                    }
+                    _ => None,
+                })
+            }
+            AddrExpr::Mul(a, k) => Ok(mul_interval(self.eval_strict(a, env)?, *k)),
+        }
+    }
+
+    /// Lenient evaluation for the transfer pass: undefined registers read
+    /// the machine's zero-initialised value, range errors degrade to
+    /// "unbounded" (the checked pass reports them).
+    fn eval_lenient(&self, e: &AddrExpr, env: &Env) -> Option<(i64, i64)> {
+        match e {
+            AddrExpr::Const(v) => Some((*v, *v)),
+            AddrExpr::SReg(r) => match env.sregs.get(*r as usize) {
+                Some(SVal::Undef) => Some((0, 0)),
+                Some(SVal::Range(a, b)) => Some((*a, *b)),
+                _ => None,
+            },
+            AddrExpr::Add(a, b) => match (self.eval_lenient(a, env), self.eval_lenient(b, env)) {
+                (Some((al, ah)), Some((bl, bh))) => {
+                    Some((al.saturating_add(bl), ah.saturating_add(bh)))
+                }
+                _ => None,
+            },
+            AddrExpr::Mul(a, k) => mul_interval(self.eval_lenient(a, env), *k),
+        }
+    }
+
+    // ---- effect transfer (no checks) ----
+
+    /// One pass of the abstract transfer function: update register
+    /// definitions and scalar intervals without raising errors (the
+    /// checked pass walks the same statements afterwards).
+    fn transfer(&self, stmts: &[RStmt], env: &mut Env) {
+        for s in stmts {
+            match s {
+                RStmt::Op(inst) => {
+                    let group = inst.lmul.group() as usize;
+                    match inst.dst {
+                        Dst::V(r) => mark_range(&mut env.vdef, r as usize, group),
+                        Dst::M(r) => mark_range(&mut env.mdef, r as usize, 1),
+                        Dst::None => {}
+                    }
+                }
+                RStmt::SSet { dst, expr } => {
+                    let v = self.eval_lenient(expr, env);
+                    if let Some(slot) = env.sregs.get_mut(*dst as usize) {
+                        *slot = v.map_or(SVal::Any, |(a, b)| SVal::Range(a, b));
+                    }
+                }
+                RStmt::Loop { ivar, start, end, step, body } => match trip_range(*start, *end, *step) {
+                    Trip::Empty => {}
+                    Trip::Terminates(first, last) => {
+                        self.loop_fix(body, env, *ivar as usize, SVal::Range(first, last));
+                    }
+                    Trip::Diverges => {
+                        // checked pass rejects; approximate for state flow
+                        self.loop_fix(body, env, *ivar as usize, SVal::Any);
+                    }
+                },
+                RStmt::Scalar(b) => {
+                    if !b.cost_only {
+                        if let Some(d) = b.dst {
+                            mark_range(&mut env.vdef, d as usize, 1);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Join-until-stable fixpoint over a loop body: the environment that
+    /// is valid at the top of *every* iteration (loop-carried scalar
+    /// ranges widened to `Any` if four join rounds do not stabilise).
+    fn loop_fix(&self, body: &[RStmt], env: &mut Env, ivar: usize, ivar_val: SVal) {
+        let set_ivar = |e: &mut Env| {
+            if let Some(slot) = e.sregs.get_mut(ivar) {
+                *slot = ivar_val;
+            }
+        };
+        set_ivar(env);
+        for _ in 0..4 {
+            let mut post = env.clone();
+            self.transfer(body, &mut post);
+            set_ivar(&mut post);
+            let joined = env.join(&post);
+            if joined == *env {
+                return;
+            }
+            *env = joined;
+        }
+        // did not stabilise (e.g. `s = s + k` accumulation): widen every
+        // scalar register the body writes, keep the definition bits
+        let mut writes = Vec::new();
+        collect_sreg_writes(body, &mut writes);
+        for r in writes {
+            if let Some(slot) = env.sregs.get_mut(r) {
+                if *slot != SVal::Undef {
+                    *slot = SVal::Any;
+                }
+            }
+        }
+        let mut post = env.clone();
+        self.transfer(body, &mut post);
+        *env = env.join(&post);
+        set_ivar(env);
+    }
+
+    // ---- checked walk ----
+
+    fn check_block(&self, stmts: &[RStmt], env: &mut Env) -> Result<(), VerifyError> {
+        for s in stmts {
+            match s {
+                RStmt::Op(inst) => self.check_inst(inst, env)?,
+                RStmt::SSet { dst, expr } => {
+                    let d = *dst as usize;
+                    if d >= env.sregs.len() {
+                        return Err(VerifyError::new(
+                            VerifyErrorKind::RegisterOutOfRange,
+                            format!("SSet writes s{dst} but the program declares {} sregs", env.sregs.len()),
+                        ));
+                    }
+                    let v = self.eval_strict(expr, env)?;
+                    env.sregs[d] = v.map_or(SVal::Any, |(a, b)| SVal::Range(a, b));
+                }
+                RStmt::Loop { ivar, start, end, step, body } => {
+                    self.check_loop(*ivar, *start, *end, *step, body, env)?;
+                }
+                RStmt::Scalar(b) => self.check_scalar(b, env)?,
+            }
+        }
+        Ok(())
+    }
+
+    fn check_loop(
+        &self,
+        ivar: u32,
+        start: i64,
+        end: i64,
+        step: i64,
+        body: &[RStmt],
+        env: &mut Env,
+    ) -> Result<(), VerifyError> {
+        let iv = ivar as usize;
+        if iv >= env.sregs.len() {
+            return Err(VerifyError::new(
+                VerifyErrorKind::RegisterOutOfRange,
+                format!("loop induction variable s{ivar} exceeds {} sregs", env.sregs.len()),
+            ));
+        }
+        match trip_range(start, end, step) {
+            Trip::Diverges => Err(VerifyError::new(
+                VerifyErrorKind::NonTerminatingLoop,
+                format!("loop s{ivar} = {start}..{end} step {step} cannot terminate"),
+            )),
+            Trip::Empty => {
+                // body never executes, but decode still resolves its
+                // buffer ids — keep that panic-free
+                self.check_buf_ids(body)
+            }
+            Trip::Terminates(first, last) => {
+                let mut stable = env.clone();
+                self.loop_fix(body, &mut stable, iv, SVal::Range(first, last));
+                let mut body_env = stable.clone();
+                self.check_block(body, &mut body_env)?;
+                *env = stable;
+                Ok(())
+            }
+        }
+    }
+
+    /// Structural buffer-id validity for statically unreachable code
+    /// (zero-trip loop bodies): `sim::decode` indexes `prog.bufs` for
+    /// every memory op it flattens, reachable or not.
+    fn check_buf_ids(&self, stmts: &[RStmt]) -> Result<(), VerifyError> {
+        for s in stmts {
+            match s {
+                RStmt::Op(inst) => {
+                    if let Some(mref) = &inst.mem {
+                        self.check_buf(mref.buf, &inst.asm())?;
+                    }
+                }
+                RStmt::Loop { body, .. } => self.check_buf_ids(body)?,
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+
+    fn check_buf(&self, buf: u32, ctx: &str) -> Result<(), VerifyError> {
+        if buf as usize >= self.prog.bufs.len() {
+            return Err(VerifyError::new(
+                VerifyErrorKind::BadBuffer,
+                format!("`{ctx}` names buf{buf} but the program declares {} buffers", self.prog.bufs.len()),
+            ));
+        }
+        Ok(())
+    }
+
+    fn check_vreg_use(
+        &self,
+        r: u32,
+        group: usize,
+        env: &Env,
+        ctx: &RvvInst,
+        is_use: bool,
+    ) -> Result<(), VerifyError> {
+        if group > 1 && r as usize % group != 0 {
+            return Err(VerifyError::new(
+                VerifyErrorKind::MisalignedGroup,
+                format!("`{}`: v{r} is not {group}-aligned for {}", ctx.asm(), ctx.lmul.asm()),
+            ));
+        }
+        if r as usize + group > env.vdef.len() {
+            return Err(VerifyError::new(
+                VerifyErrorKind::RegisterOutOfRange,
+                format!(
+                    "`{}`: register group v{r}..v{} exceeds register file of {}",
+                    ctx.asm(),
+                    r as usize + group - 1,
+                    env.vdef.len()
+                ),
+            ));
+        }
+        if is_use && !env.vdef[r as usize..r as usize + group].iter().all(|d| *d) {
+            return Err(VerifyError::new(
+                VerifyErrorKind::UseBeforeDef,
+                format!("`{}`: v{r} read before any definition reaches the use", ctx.asm()),
+            ));
+        }
+        Ok(())
+    }
+
+    fn check_mreg(&self, r: u32, env: &Env, ctx: &RvvInst, is_use: bool) -> Result<(), VerifyError> {
+        if r as usize >= env.mdef.len() {
+            return Err(VerifyError::new(
+                VerifyErrorKind::RegisterOutOfRange,
+                format!("`{}`: vm{r} exceeds {} mask registers", ctx.asm(), env.mdef.len()),
+            ));
+        }
+        if is_use && !env.mdef[r as usize] {
+            return Err(VerifyError::new(
+                VerifyErrorKind::UseBeforeDef,
+                format!("`{}`: vm{r} read before any definition reaches the use", ctx.asm()),
+            ));
+        }
+        Ok(())
+    }
+
+    fn check_inst(&self, inst: &RvvInst, env: &mut Env) -> Result<(), VerifyError> {
+        let k = inst.kind;
+        let group = inst.lmul.group() as usize;
+
+        // vl legality — the static mirror of the runtime vsetvli check
+        let vlmax = inst.vtype().vlmax(self.vlen);
+        if inst.vl > vlmax {
+            return Err(VerifyError::new(
+                VerifyErrorKind::VlExceedsVlmax,
+                format!(
+                    "`{}`: vl {} exceeds VLMAX {vlmax} for vtype `{}` at VLEN {}",
+                    inst.asm(),
+                    inst.vl,
+                    inst.vtype().asm(),
+                    self.vlen
+                ),
+            ));
+        }
+
+        // structurally unsupported shapes the execution layer traps on
+        if group > 1 && mixed_eew(k) {
+            return Err(VerifyError::new(
+                VerifyErrorKind::UnsupportedOp,
+                format!("`{}`: widening/narrowing op at grouped LMUL {}", inst.asm(), inst.lmul.asm()),
+            ));
+        }
+        if is_float_kind(k) && inst.sew == super::vtype::Sew::E8 {
+            return Err(VerifyError::new(
+                VerifyErrorKind::Malformed,
+                format!("`{}`: no e8 float type", inst.asm()),
+            ));
+        }
+        if is_widening_kind(k) && inst.sew == super::vtype::Sew::E64 {
+            return Err(VerifyError::new(
+                VerifyErrorKind::Malformed,
+                format!("`{}`: no widened SEW above e64", inst.asm()),
+            ));
+        }
+        if matches!(k, RvvKind::Vnsrl | RvvKind::Vnsra | RvvKind::VfncvtFF)
+            && inst.sew == super::vtype::Sew::E64
+        {
+            // narrowing reads the source at 2×SEW — e64 sources have no
+            // e128 wide side in this model
+            return Err(VerifyError::new(
+                VerifyErrorKind::Malformed,
+                format!("`{}`: no widened source SEW above e64", inst.asm()),
+            ));
+        }
+
+        // operand uses
+        for s in &inst.srcs {
+            match s {
+                Src::V(r) => self.check_vreg_use(*r, group, env, inst, true)?,
+                Src::M(r) => self.check_mreg(*r, env, inst, true)?,
+                Src::SReg(r) => {
+                    // reuse the strict evaluator's range/def checks
+                    self.eval_strict(&AddrExpr::SReg(*r), env)?;
+                }
+                Src::ImmI(_) | Src::ImmF(_) => {}
+            }
+        }
+        if let Some(mk) = inst.mask {
+            self.check_mreg(mk, env, inst, true)?;
+        }
+
+        // operand shapes the execution layer traps on
+        if k.writes_mask() && !matches!(inst.dst, Dst::M(_)) {
+            return Err(VerifyError::new(
+                VerifyErrorKind::Malformed,
+                format!("`{}`: mask-writing op without mask destination", inst.asm()),
+            ));
+        }
+
+        // memory
+        if k.is_load() || k.is_store() {
+            let Some(mref) = &inst.mem else {
+                return Err(VerifyError::new(
+                    VerifyErrorKind::Malformed,
+                    format!("`{}`: memory op without MemRef", inst.asm()),
+                ));
+            };
+            self.check_buf(mref.buf, &inst.asm())?;
+            if k.is_load() && !matches!(inst.dst, Dst::V(_)) {
+                return Err(VerifyError::new(
+                    VerifyErrorKind::Malformed,
+                    format!("`{}`: load without vreg destination", inst.asm()),
+                ));
+            }
+            if k.is_store() && !matches!(inst.srcs.first(), Some(Src::V(_))) {
+                return Err(VerifyError::new(
+                    VerifyErrorKind::Malformed,
+                    format!("`{}`: store without vreg source", inst.asm()),
+                ));
+            }
+            if inst.mask.is_none() && inst.vl > 0 {
+                // unmasked: every lane is touched, so the full affine
+                // range must be in-bounds (masked bounds are a documented
+                // exclusion — data-dependent)
+                let idx = self.eval_strict(&mref.index, env)?;
+                let Some((ilo, ihi)) = idx else {
+                    return Err(VerifyError::new(
+                        VerifyErrorKind::OutOfBoundsAddress,
+                        format!("`{}`: address not provably in bounds (unbounded affine term)", inst.asm()),
+                    ));
+                };
+                let decl = &self.prog.bufs[mref.buf as usize];
+                let eb = decl.elem.bytes() as i128;
+                let sewb = inst.sew.bytes() as i128;
+                let len_bytes = decl.len as i128 * eb;
+                let (base_lo, base_hi) = (ilo as i128 * eb, ihi as i128 * eb);
+                let (lo, hi) = if mref.stride == 1 {
+                    (base_lo, base_hi + inst.vl as i128 * sewb)
+                } else {
+                    let sb = mref.stride as i128 * sewb;
+                    let span = (inst.vl as i128 - 1) * sb;
+                    if sb >= 0 {
+                        (base_lo, base_hi + span + sewb)
+                    } else {
+                        (base_lo + span, base_hi + sewb)
+                    }
+                };
+                if lo < 0 || hi > len_bytes {
+                    return Err(VerifyError::new(
+                        VerifyErrorKind::OutOfBoundsAddress,
+                        format!(
+                            "`{}`: bytes [{lo}, {hi}) of buf{} ({len_bytes} bytes) across the full trip range",
+                            inst.asm(),
+                            mref.buf
+                        ),
+                    ));
+                }
+            } else {
+                // masked / vl=0: still validate the address expression's
+                // scalar registers so evaluation cannot panic
+                let _ = self.eval_strict(&mref.index, env)?;
+            }
+        }
+
+        // definitions last (an instruction cannot feed itself)
+        match inst.dst {
+            Dst::V(r) => {
+                self.check_vreg_use(r, group, env, inst, false)?;
+                mark_range(&mut env.vdef, r as usize, group);
+            }
+            Dst::M(r) => {
+                self.check_mreg(r, env, inst, false)?;
+                mark_range(&mut env.mdef, r as usize, 1);
+            }
+            Dst::None => {}
+        }
+        Ok(())
+    }
+
+    fn check_scalar(&self, b: &ScalarBlock, env: &mut Env) -> Result<(), VerifyError> {
+        if b.cost_only {
+            return Ok(());
+        }
+        let op = b.call.op;
+        let name = op.name();
+        // the scalar fallback stages fixed 128-bit NEON values in single
+        // (m1) registers, whose storage is 2×VLEN bits
+        if self.vlen < 64 {
+            return Err(VerifyError::new(
+                VerifyErrorKind::UnsupportedOp,
+                format!("scalar fallback `{name}` needs VLEN >= 64 for 128-bit NEON staging"),
+            ));
+        }
+        for a in &b.call.args {
+            match a {
+                Arg::V(r) => {
+                    if *r as usize >= env.vdef.len() {
+                        return Err(VerifyError::new(
+                            VerifyErrorKind::RegisterOutOfRange,
+                            format!("scalar `{name}`: v{r} exceeds register file of {}", env.vdef.len()),
+                        ));
+                    }
+                    if !env.vdef[*r as usize] {
+                        return Err(VerifyError::new(
+                            VerifyErrorKind::UseBeforeDef,
+                            format!("scalar `{name}`: v{r} read before any definition"),
+                        ));
+                    }
+                }
+                Arg::S(r) => {
+                    self.eval_strict(&AddrExpr::SReg(*r), env)?;
+                }
+                Arg::Mem { buf, index } => {
+                    self.check_buf(*buf, &format!("scalar {name}"))?;
+                    let _ = self.eval_strict(index, env)?;
+                }
+                Arg::Imm(_) | Arg::ImmF(_) => {}
+            }
+        }
+        // affine bounds for the memory families (mirrors sim::scalar)
+        if matches!(op.family, Family::Ld1 | Family::St1 | Family::Ld1Dup | Family::Ld1Lane | Family::St1Lane)
+        {
+            let Some(Arg::Mem { buf, index }) = b.call.args.first() else {
+                return Err(VerifyError::new(
+                    VerifyErrorKind::Malformed,
+                    format!("scalar `{name}`: memory family without memory operand"),
+                ));
+            };
+            let Some((ilo, ihi)) = self.eval_strict(index, env)? else {
+                return Err(VerifyError::new(
+                    VerifyErrorKind::OutOfBoundsAddress,
+                    format!("scalar `{name}`: address not provably in bounds (unbounded affine term)"),
+                ));
+            };
+            let decl = &self.prog.bufs[*buf as usize];
+            let eb = decl.elem.bytes() as i128;
+            let len_bytes = decl.len as i128 * eb;
+            let lanes = if matches!(op.family, Family::Ld1 | Family::St1) {
+                op.vt().lanes as i128
+            } else {
+                1
+            };
+            let lo = ilo as i128 * eb;
+            let hi = (ihi as i128 + lanes - 1) * eb + eb;
+            if lo < 0 || hi > len_bytes {
+                return Err(VerifyError::new(
+                    VerifyErrorKind::OutOfBoundsAddress,
+                    format!(
+                        "scalar `{name}`: bytes [{lo}, {hi}) of buf{buf} ({len_bytes} bytes) across the full trip range"
+                    ),
+                ));
+            }
+        }
+        if let Some(d) = b.dst {
+            if d as usize >= env.vdef.len() {
+                return Err(VerifyError::new(
+                    VerifyErrorKind::RegisterOutOfRange,
+                    format!("scalar `{name}`: dst v{d} exceeds register file of {}", env.vdef.len()),
+                ));
+            }
+            env.vdef[d as usize] = true;
+        }
+        Ok(())
+    }
+}
+
+fn mark_range(bits: &mut [bool], base: usize, n: usize) {
+    for b in bits.iter_mut().skip(base).take(n) {
+        *b = true;
+    }
+}
+
+fn mul_interval(v: Option<(i64, i64)>, k: i64) -> Option<(i64, i64)> {
+    match v {
+        Some((lo, hi)) => {
+            let (a, b) = (lo.saturating_mul(k), hi.saturating_mul(k));
+            Some((a.min(b), a.max(b)))
+        }
+        None if k == 0 => Some((0, 0)),
+        None => None,
+    }
+}
+
+fn collect_sreg_writes(stmts: &[RStmt], out: &mut Vec<usize>) {
+    for s in stmts {
+        match s {
+            RStmt::SSet { dst, .. } => out.push(*dst as usize),
+            RStmt::Loop { ivar, body, .. } => {
+                out.push(*ivar as usize);
+                collect_sreg_writes(body, out);
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Kinds whose execution goes through `float_elem` (no e8 form exists).
+fn is_float_kind(k: RvvKind) -> bool {
+    use RvvKind::*;
+    matches!(
+        k,
+        VfmvVF | Vfmerge | Vmfeq | Vmfne | Vmflt | Vmfle | Vmfgt | Vmfge | Vfadd | Vfsub
+            | Vfrsub | Vfmul | Vfdiv | Vfrdiv | Vfmacc | Vfnmacc | Vfmsac | Vfnmsac | Vfmin
+            | Vfmax | Vfsqrt | Vfrec7 | Vfrsqrt7 | Vfsgnj | Vfsgnjn | Vfsgnjx | VfcvtXF
+            | VfcvtRtzXF | VfcvtFX | VfcvtFXu | VfcvtRtzXuF | VfwcvtFF | VfncvtFF | Vfredusum
+            | Vfredmax | Vfredmin
+    )
+}
+
+/// Kinds whose destination (or accumulator) lives at 2×SEW.
+fn is_widening_kind(k: RvvKind) -> bool {
+    use RvvKind::*;
+    matches!(k, Vwmul | Vwmulu | Vwadd | Vwaddu | Vwmacc | Vwmaccu | VfwcvtFF | Vzext2 | Vsext2)
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
+    use super::*;
+    use crate::ir::{BufDecl, BufKind};
+    use crate::neon::elem::Elem;
+    use crate::rvv::ops::MemRef;
+    use crate::rvv::vtype::{Lmul, Sew};
+
+    fn buf(name: &str, len: usize, kind: BufKind) -> BufDecl {
+        BufDecl { name: name.into(), elem: Elem::I32, len, kind }
+    }
+
+    fn vle(dst: u32, b: u32, vl: u32) -> RStmt {
+        RStmt::Op(RvvInst {
+            kind: RvvKind::Vle,
+            sew: Sew::E32,
+            lmul: Lmul::M1,
+            vl,
+            dst: Dst::V(dst),
+            srcs: vec![],
+            mask: None,
+            mem: Some(MemRef { buf: b, index: AddrExpr::s(0), stride: 1 }),
+        })
+    }
+
+    fn vse(src: u32, b: u32, vl: u32) -> RStmt {
+        RStmt::Op(RvvInst {
+            kind: RvvKind::Vse,
+            sew: Sew::E32,
+            lmul: Lmul::M1,
+            vl,
+            dst: Dst::None,
+            srcs: vec![Src::V(src)],
+            mask: None,
+            mem: Some(MemRef { buf: b, index: AddrExpr::s(0), stride: 1 }),
+        })
+    }
+
+    fn vadd(dst: u32, a: u32, b: u32, vl: u32) -> RStmt {
+        RStmt::Op(RvvInst {
+            kind: RvvKind::Vadd,
+            sew: Sew::E32,
+            lmul: Lmul::M1,
+            vl,
+            dst: Dst::V(dst),
+            srcs: vec![Src::V(a), Src::V(b)],
+            mask: None,
+            mem: None,
+        })
+    }
+
+    /// 16-element looped add: the canonical legal program.
+    fn legal_program() -> RvvProgram {
+        RvvProgram {
+            name: "legal".into(),
+            bufs: vec![
+                buf("A", 16, BufKind::Input),
+                buf("B", 16, BufKind::Input),
+                buf("O", 16, BufKind::Output),
+            ],
+            body: vec![RStmt::Loop {
+                ivar: 0,
+                start: 0,
+                end: 16,
+                step: 4,
+                body: vec![vle(0, 0, 4), vle(1, 1, 4), vadd(2, 0, 1, 4), vse(2, 2, 4)],
+            }],
+            n_vregs: 3,
+            n_mregs: 0,
+            n_sregs: 1,
+        }
+    }
+
+    #[test]
+    fn legal_program_is_admitted() {
+        verify(&legal_program(), 128).unwrap();
+        verify(&legal_program(), 512).unwrap();
+    }
+
+    #[test]
+    fn vl_above_vlmax_is_rejected() {
+        let mut p = legal_program();
+        if let RStmt::Loop { body, .. } = &mut p.body[0] {
+            if let RStmt::Op(i) = &mut body[2] {
+                i.vl = 8; // VLMAX(e32, m1, 128) = 4
+            }
+        }
+        let e = verify(&p, 128).unwrap_err();
+        assert_eq!(e.kind, VerifyErrorKind::VlExceedsVlmax, "{e}");
+        // same program is legal on a wider machine
+        verify(&p, 256).unwrap();
+    }
+
+    #[test]
+    fn misaligned_group_base_is_rejected() {
+        let mut p = legal_program();
+        p.n_vregs = 8;
+        if let RStmt::Loop { body, .. } = &mut p.body[0] {
+            body[2] = RStmt::Op(RvvInst {
+                kind: RvvKind::Vadd,
+                sew: Sew::E32,
+                lmul: Lmul::M2,
+                vl: 4,
+                dst: Dst::V(3), // not 2-aligned
+                srcs: vec![Src::V(0), Src::V(0)],
+                mask: None,
+                mem: None,
+            });
+        }
+        let e = verify(&p, 128).unwrap_err();
+        assert_eq!(e.kind, VerifyErrorKind::MisalignedGroup, "{e}");
+    }
+
+    #[test]
+    fn register_out_of_range_is_rejected() {
+        let mut p = legal_program();
+        if let RStmt::Loop { body, .. } = &mut p.body[0] {
+            if let RStmt::Op(i) = &mut body[2] {
+                i.dst = Dst::V(40);
+            }
+        }
+        let e = verify(&p, 128).unwrap_err();
+        assert_eq!(e.kind, VerifyErrorKind::RegisterOutOfRange, "{e}");
+    }
+
+    #[test]
+    fn oob_affine_address_is_rejected_across_trip_range() {
+        let mut p = legal_program();
+        if let RStmt::Loop { end, .. } = &mut p.body[0] {
+            // last iteration reads A[16..20) of a 16-element buffer
+            *end = 20;
+        }
+        let e = verify(&p, 128).unwrap_err();
+        assert_eq!(e.kind, VerifyErrorKind::OutOfBoundsAddress, "{e}");
+        assert!(e.detail.contains("buf0"), "{e}");
+    }
+
+    #[test]
+    fn negative_address_is_rejected() {
+        let mut p = legal_program();
+        if let RStmt::Loop { start, .. } = &mut p.body[0] {
+            *start = -4;
+        }
+        let e = verify(&p, 128).unwrap_err();
+        assert_eq!(e.kind, VerifyErrorKind::OutOfBoundsAddress, "{e}");
+    }
+
+    #[test]
+    fn infinite_back_edge_is_rejected() {
+        for step in [0, -1] {
+            let mut p = legal_program();
+            if let RStmt::Loop { step: s, .. } = &mut p.body[0] {
+                *s = step;
+            }
+            let e = verify(&p, 128).unwrap_err();
+            assert_eq!(e.kind, VerifyErrorKind::NonTerminatingLoop, "step {step}: {e}");
+        }
+    }
+
+    #[test]
+    fn zero_trip_loop_body_is_not_bounds_checked() {
+        let mut p = legal_program();
+        if let RStmt::Loop { start, end, .. } = &mut p.body[0] {
+            // body would be wildly out of bounds if it ran — it never does
+            *start = 100;
+            *end = 0;
+        }
+        verify(&p, 128).unwrap();
+    }
+
+    #[test]
+    fn bad_buffer_id_is_rejected_even_in_dead_code() {
+        let mut p = legal_program();
+        if let RStmt::Loop { start, end, body, .. } = &mut p.body[0] {
+            *start = 1;
+            *end = 0;
+            if let RStmt::Op(i) = &mut body[0] {
+                i.mem.as_mut().unwrap().buf = 9;
+            }
+        }
+        let e = verify(&p, 128).unwrap_err();
+        assert_eq!(e.kind, VerifyErrorKind::BadBuffer, "{e}");
+    }
+
+    #[test]
+    fn use_before_def_is_rejected() {
+        let mut p = legal_program();
+        if let RStmt::Loop { body, .. } = &mut p.body[0] {
+            // v7 is never written anywhere
+            if let RStmt::Op(i) = &mut body[2] {
+                i.srcs = vec![Src::V(0), Src::V(7)];
+            }
+        }
+        p.n_vregs = 8;
+        let e = verify(&p, 128).unwrap_err();
+        assert_eq!(e.kind, VerifyErrorKind::UseBeforeDef, "{e}");
+    }
+
+    #[test]
+    fn loop_carried_defs_are_visible() {
+        // body reads v0 before (re)loading it — defined by iteration n-1
+        // and, before iteration 0, by a pre-loop load
+        let mut p = legal_program();
+        let pre = vle(0, 0, 4);
+        if let RStmt::Loop { body, .. } = &mut p.body[0] {
+            body.rotate_left(1); // vle(1), vadd, vse, vle(0)
+        }
+        p.body.insert(0, pre);
+        // the pre-loop load reads s0, so define it first (an undefined
+        // sreg address is itself a rejection)
+        p.body.insert(0, RStmt::SSet { dst: 0, expr: AddrExpr::k(0) });
+        verify(&p, 128).unwrap();
+    }
+
+    #[test]
+    fn undefined_sreg_address_is_rejected() {
+        let mut p = legal_program();
+        p.n_sregs = 2;
+        if let RStmt::Loop { body, .. } = &mut p.body[0] {
+            if let RStmt::Op(i) = &mut body[0] {
+                i.mem.as_mut().unwrap().index = AddrExpr::s(1); // never SSet
+            }
+        }
+        let e = verify(&p, 128).unwrap_err();
+        assert_eq!(e.kind, VerifyErrorKind::UseBeforeDef, "{e}");
+    }
+
+    #[test]
+    fn sset_defined_addresses_are_bounded() {
+        let mut p = legal_program();
+        p.n_sregs = 2;
+        if let RStmt::Loop { body, .. } = &mut p.body[0] {
+            body.insert(0, RStmt::SSet { dst: 1, expr: AddrExpr::s(0).mul(1).addk(0) });
+            if let RStmt::Op(i) = &mut body[1] {
+                i.mem.as_mut().unwrap().index = AddrExpr::s(1);
+            }
+        }
+        verify(&p, 128).unwrap();
+    }
+
+    #[test]
+    fn grouped_widening_op_is_rejected() {
+        let mut p = legal_program();
+        p.n_vregs = 8;
+        if let RStmt::Loop { body, .. } = &mut p.body[0] {
+            body[2] = RStmt::Op(RvvInst {
+                kind: RvvKind::Vwmul,
+                sew: Sew::E16,
+                lmul: Lmul::M2,
+                vl: 4,
+                dst: Dst::V(4),
+                srcs: vec![Src::V(0), Src::V(2)],
+                mask: None,
+                mem: None,
+            });
+        }
+        let e = verify(&p, 128).unwrap_err();
+        assert_eq!(e.kind, VerifyErrorKind::UnsupportedOp, "{e}");
+    }
+
+    #[test]
+    fn masked_memory_bounds_are_excluded() {
+        // a masked load past the end is admitted (data-dependent bounds
+        // are a documented exclusion) as long as the mask is defined
+        let mut p = legal_program();
+        p.n_mregs = 1;
+        if let RStmt::Loop { body, .. } = &mut p.body[0] {
+            body.insert(
+                2,
+                RStmt::Op(RvvInst {
+                    kind: RvvKind::Vmseq,
+                    sew: Sew::E32,
+                    lmul: Lmul::M1,
+                    vl: 4,
+                    dst: Dst::M(0),
+                    srcs: vec![Src::V(0), Src::V(1)],
+                    mask: None,
+                    mem: None,
+                }),
+            );
+            // mask the store (the compare at body[2] defines vm0 first)
+            // and point it far past the end of the buffer
+            if let RStmt::Op(i) = &mut body[4] {
+                i.mask = Some(0);
+                i.mem.as_mut().unwrap().index = AddrExpr::s(0).addk(1000);
+            }
+        }
+        verify(&p, 128).unwrap();
+    }
+
+    #[test]
+    fn error_converts_to_matching_trap() {
+        let e = VerifyError::new(VerifyErrorKind::VlExceedsVlmax, "x");
+        let t: SimTrap = e.into();
+        assert_eq!(t.kind.label(), "vsetvli-violation");
+        let e = VerifyError::new(VerifyErrorKind::NonTerminatingLoop, "x");
+        let t: SimTrap = e.into();
+        assert_eq!(t.kind.label(), "fuel-exhausted");
+        let e = VerifyError::new(VerifyErrorKind::OutOfBoundsAddress, "x");
+        let t: SimTrap = e.into();
+        assert_eq!(t.kind.label(), "bad-operand");
+    }
+}

@@ -16,7 +16,9 @@ use crate::neon::interp::{Buffer, Inputs};
 use crate::rvv::exec::exec;
 use crate::rvv::machine::{RvvConfig, RvvMachine};
 use crate::rvv::program::{RStmt, RvvProgram};
+use crate::rvv::trap::SimTrap;
 use crate::rvv::vtype::{Lmul, Sew};
+use super::limits::ExecLimits;
 use super::scalar::exec_scalar_block;
 use super::stats::{SimStats, LOOP_OVERHEAD};
 
@@ -29,11 +31,25 @@ pub struct Simulator<'p> {
     /// dynamic index of the executed statement (vector ops and scalar
     /// blocks) — attached to traps as their `pc`
     op_index: usize,
+    /// fuel / deadline bounds, checked at loop iterations
+    limits: ExecLimits,
+    started: std::time::Instant,
     pub stats: SimStats,
 }
 
 impl<'p> Simulator<'p> {
+    /// Build with the default fuel budget derived from the program's
+    /// static shape ([`ExecLimits::for_program`]).
     pub fn new(prog: &'p RvvProgram, cfg: RvvConfig, inputs: &Inputs) -> Result<Simulator<'p>> {
+        Simulator::with_limits(prog, cfg, inputs, ExecLimits::for_program(prog))
+    }
+
+    pub fn with_limits(
+        prog: &'p RvvProgram,
+        cfg: RvvConfig,
+        inputs: &Inputs,
+        limits: ExecLimits,
+    ) -> Result<Simulator<'p>> {
         let mut bufs = Vec::with_capacity(prog.bufs.len());
         for decl in &prog.bufs {
             let b = match decl.kind {
@@ -46,7 +62,40 @@ impl<'p> Simulator<'p> {
             bufs.push(b);
         }
         let m = RvvMachine::new(cfg, prog.n_vregs, prog.n_mregs, prog.n_sregs, bufs);
-        Ok(Simulator { prog, m, vcfg: None, op_index: 0, stats: SimStats::default() })
+        Ok(Simulator {
+            prog,
+            m,
+            vcfg: None,
+            op_index: 0,
+            limits,
+            started: std::time::Instant::now(),
+            stats: SimStats::default(),
+        })
+    }
+
+    /// Fuel / deadline check, run once per loop iteration (straight-line
+    /// code is statically bounded, so per-op checks would only add cost).
+    fn check_limits(&self) -> Result<()> {
+        if self.stats.total() >= self.limits.max_dyn_insts {
+            return Err(SimTrap::fuel_exhausted(format!(
+                "dynamic-instruction budget of {} exhausted",
+                self.limits.max_dyn_insts
+            ))
+            .in_kernel(&self.prog.name)
+            .on_engine("interp")
+            .into());
+        }
+        if let Some(d) = self.limits.wall_deadline {
+            if self.started.elapsed() >= d {
+                return Err(SimTrap::deadline_exceeded(format!(
+                    "wall-clock deadline of {d:?} passed"
+                ))
+                .in_kernel(&self.prog.name)
+                .on_engine("interp")
+                .into());
+            }
+        }
+        Ok(())
     }
 
     /// Run to completion, returning output buffers by name.
@@ -101,6 +150,7 @@ impl<'p> Simulator<'p> {
                 RStmt::Loop { ivar, start, end, step, body } => {
                     let mut i = *start;
                     while i < *end {
+                        self.check_limits()?;
                         self.m.sregs[*ivar as usize] = i;
                         self.stats.scalar_ops += LOOP_OVERHEAD;
                         self.exec_block(body)?;

@@ -26,8 +26,10 @@ use crate::neon::interp::{Buffer, Inputs};
 use crate::rvv::exec::{exec_batched, ExecScratch};
 use crate::rvv::machine::{RvvConfig, RvvMachine};
 use crate::rvv::program::RvvProgram;
+use crate::rvv::trap::SimTrap;
 use crate::rvv::vtype::{Lmul, Sew};
 use super::decode::{DecodedOp, DecodedProgram};
+use super::limits::ExecLimits;
 use super::scalar::exec_scalar_block;
 use super::stats::{SimStats, LOOP_OVERHEAD};
 
@@ -44,15 +46,30 @@ pub struct Engine<'p> {
     /// matching the interpreter's local loop variable)
     slots: Vec<i64>,
     scratch: ExecScratch,
+    /// fuel / deadline bounds, checked at loop entries and back-edges
+    limits: ExecLimits,
+    started: std::time::Instant,
     pub stats: SimStats,
 }
 
 impl<'p> Engine<'p> {
+    /// Build with the default fuel budget derived from the program's
+    /// static shape ([`ExecLimits::for_program`]).
     pub fn new(
         prog: &'p RvvProgram,
         dec: &'p DecodedProgram,
         cfg: RvvConfig,
         inputs: &Inputs,
+    ) -> Result<Engine<'p>> {
+        Engine::with_limits(prog, dec, cfg, inputs, ExecLimits::for_program(prog))
+    }
+
+    pub fn with_limits(
+        prog: &'p RvvProgram,
+        dec: &'p DecodedProgram,
+        cfg: RvvConfig,
+        inputs: &Inputs,
+        limits: ExecLimits,
     ) -> Result<Engine<'p>> {
         let mut bufs = Vec::with_capacity(prog.bufs.len());
         for decl in &prog.bufs {
@@ -73,8 +90,35 @@ impl<'p> Engine<'p> {
             vcfg: None,
             slots: vec![0; dec.n_loop_slots],
             scratch: ExecScratch::default(),
+            limits,
+            started: std::time::Instant::now(),
             stats: SimStats::default(),
         })
+    }
+
+    /// Fuel / deadline check, run once per loop iteration (straight-line
+    /// code is statically bounded, so per-op checks would only add cost).
+    fn check_limits(&self) -> Result<()> {
+        if self.stats.total() >= self.limits.max_dyn_insts {
+            return Err(SimTrap::fuel_exhausted(format!(
+                "dynamic-instruction budget of {} exhausted",
+                self.limits.max_dyn_insts
+            ))
+            .in_kernel(&self.prog.name)
+            .on_engine("decoded")
+            .into());
+        }
+        if let Some(d) = self.limits.wall_deadline {
+            if self.started.elapsed() >= d {
+                return Err(SimTrap::deadline_exceeded(format!(
+                    "wall-clock deadline of {d:?} passed"
+                ))
+                .in_kernel(&self.prog.name)
+                .on_engine("decoded")
+                .into());
+            }
+        }
+        Ok(())
     }
 
     /// Run to completion, returning output buffers by name.
@@ -126,6 +170,7 @@ impl<'p> Engine<'p> {
                 DecodedOp::LoopStart { slot, ivar, start, end, exit } => {
                     self.slots[*slot as usize] = *start;
                     if *start < *end {
+                        self.check_limits()?;
                         self.m.sregs[*ivar as usize] = *start;
                         self.stats.scalar_ops += LOOP_OVERHEAD;
                         pc += 1;
@@ -137,6 +182,7 @@ impl<'p> Engine<'p> {
                     let v = self.slots[*slot as usize] + *step;
                     self.slots[*slot as usize] = v;
                     if v < *end {
+                        self.check_limits()?;
                         self.m.sregs[*ivar as usize] = v;
                         self.stats.scalar_ops += LOOP_OVERHEAD;
                         pc = *back as usize;

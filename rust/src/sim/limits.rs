@@ -1,0 +1,124 @@
+//! Fuel-bounded execution.
+//!
+//! [`ExecLimits`] caps one program execution in two dimensions: a
+//! **dynamic-instruction budget** (`max_dyn_insts`, checked against
+//! `SimStats::total()`) and an optional **wall-clock deadline**. Both
+//! engines check the limits at loop iterations only — straight-line code
+//! is statically bounded, so a program cannot exceed its budget by more
+//! than one loop body.
+//!
+//! The default budget ([`ExecLimits::for_program`]) is derived from the
+//! program's *static shape*: statically known trip counts × estimated
+//! body cost, times a safety factor, plus slack. The estimate is an
+//! upper bound of the real dynamic cost for any well-formed program
+//! (every statement is costed at or above what the engines record), so
+//! healthy jobs never trip the default — only a runaway back-edge (which
+//! the estimator deliberately counts as a *single* trip) or a grossly
+//! mis-translated program runs out of fuel. Exhaustion raises
+//! `TrapKind::FuelExhausted` / `TrapKind::DeadlineExceeded`, which the
+//! coordinator degrades to a `FaultRecord` like any other trap — the
+//! worker thread survives.
+
+use std::time::Duration;
+
+use crate::rvv::program::{RStmt, RvvProgram};
+
+use super::stats::LOOP_OVERHEAD;
+
+/// Execution bounds for one job attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExecLimits {
+    /// Trap with `FuelExhausted` once `SimStats::total()` reaches this.
+    pub max_dyn_insts: u64,
+    /// Trap with `DeadlineExceeded` once this much wall-clock time has
+    /// passed since the engine was constructed. `None` = no deadline.
+    pub wall_deadline: Option<Duration>,
+}
+
+impl ExecLimits {
+    /// No bounds at all (differential oracles, benches).
+    pub fn unbounded() -> ExecLimits {
+        ExecLimits { max_dyn_insts: u64::MAX, wall_deadline: None }
+    }
+
+    /// Derive a budget from the program's static shape: 4× the estimated
+    /// dynamic cost plus fixed slack, no wall deadline. A loop whose
+    /// back-edge cannot terminate is costed at one trip, so an actual
+    /// runaway exhausts this budget almost immediately.
+    pub fn for_program(prog: &RvvProgram) -> ExecLimits {
+        let est = est_block(&prog.body);
+        ExecLimits {
+            max_dyn_insts: est.saturating_mul(4).saturating_add(1024),
+            wall_deadline: None,
+        }
+    }
+
+    pub fn with_deadline(mut self, d: Duration) -> ExecLimits {
+        self.wall_deadline = Some(d);
+        self
+    }
+}
+
+impl Default for ExecLimits {
+    fn default() -> ExecLimits {
+        ExecLimits::unbounded()
+    }
+}
+
+/// Static upper bound of the dynamic instructions a block records.
+fn est_block(stmts: &[RStmt]) -> u64 {
+    let mut total: u64 = 0;
+    for s in stmts {
+        let cost = match s {
+            // one op plus at most one vsetvli
+            RStmt::Op(_) => 2,
+            RStmt::SSet { .. } => 1,
+            RStmt::Scalar(b) => b.scalar_cost.saturating_add(b.mem_ops),
+            RStmt::Loop { start, end, step, body, .. } => {
+                let trips: u64 = if start >= end {
+                    0
+                } else if *step <= 0 {
+                    // cannot terminate — the verifier rejects this shape;
+                    // cost one trip so actual execution exhausts the fuel
+                    1
+                } else {
+                    let t = (*end as i128 - *start as i128 + *step as i128 - 1) / *step as i128;
+                    u64::try_from(t).unwrap_or(u64::MAX)
+                };
+                est_block(body).saturating_add(LOOP_OVERHEAD).saturating_mul(trips)
+            }
+        };
+        total = total.saturating_add(cost);
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
+    use super::*;
+
+    #[test]
+    fn budget_scales_with_trip_count() {
+        let body = vec![RStmt::Loop { ivar: 0, start: 0, end: 100, step: 1, body: vec![] }];
+        let p = RvvProgram { name: "l".into(), bufs: vec![], body, n_vregs: 0, n_mregs: 0, n_sregs: 1 };
+        let lim = ExecLimits::for_program(&p);
+        // 100 trips × LOOP_OVERHEAD × 4 + slack
+        assert_eq!(lim.max_dyn_insts, 100 * LOOP_OVERHEAD * 4 + 1024);
+        assert!(lim.wall_deadline.is_none());
+    }
+
+    #[test]
+    fn runaway_back_edge_is_costed_one_trip() {
+        let body = vec![RStmt::Loop { ivar: 0, start: 0, end: 100, step: 0, body: vec![] }];
+        let p = RvvProgram { name: "r".into(), bufs: vec![], body, n_vregs: 0, n_mregs: 0, n_sregs: 1 };
+        let lim = ExecLimits::for_program(&p);
+        assert_eq!(lim.max_dyn_insts, LOOP_OVERHEAD * 4 + 1024);
+    }
+
+    #[test]
+    fn unbounded_is_default() {
+        assert_eq!(ExecLimits::default(), ExecLimits::unbounded());
+    }
+}

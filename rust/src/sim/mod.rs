@@ -45,17 +45,30 @@
 //! `anyhow::Error` with `err.downcast_ref::<SimTrap>()`; the coordinator
 //! does exactly this to build `FaultRecord`s
 //! (see [`crate::coordinator`]).
+//!
+//! # Fuel
+//!
+//! Every execution is bounded by an [`ExecLimits`] (`limits.rs`): a
+//! dynamic-instruction budget derived from the program's static shape by
+//! default, plus an optional wall-clock deadline. Both engines check the
+//! bounds at loop iterations; exhaustion raises
+//! `TrapKind::FuelExhausted`/`DeadlineExceeded`, so a runaway back-edge
+//! degrades to a `FaultRecord` instead of hanging a worker thread.
+//! Construct with `Simulator::with_limits` / `Engine::with_limits` to
+//! override the default budget.
 
 #![warn(clippy::unwrap_used, clippy::expect_used)]
 
 pub mod cpu;
 pub mod decode;
 pub mod engine;
+pub mod limits;
 pub(crate) mod scalar;
 pub mod stats;
 
 pub use cpu::Simulator;
 pub use decode::{decode, AffineAddr, DecodedOp, DecodedProgram};
 pub use engine::Engine;
+pub use limits::ExecLimits;
 pub use stats::SimStats;
 pub use crate::rvv::trap::{SimTrap, TrapKind};

@@ -40,6 +40,9 @@ pub struct Translator {
 pub struct TranslationReport {
     /// (intrinsic name, method) per lowered call site.
     pub methods: Vec<(String, Method)>,
+    /// Non-fatal provenance notes — e.g. a tuned lowering that no longer
+    /// passes the admission verifier and was replaced by the static rule.
+    pub warnings: Vec<String>,
 }
 
 impl TranslationReport {
@@ -114,16 +117,34 @@ impl Translator {
         // Tuned override: a non-static winner recorded for exactly this
         // (kernel, mode, vlen, shape) replaces the static-rule lowering.
         // `lower_with` re-enters translation through a plain Translator
-        // (no tuning), so this cannot recurse.
+        // (no tuning), so this cannot recurse. The replayed program is
+        // re-verified at load time — the database is external input, so
+        // a winner recorded by an older build (or a tampered file) must
+        // not bypass admission; if it no longer verifies we fall back to
+        // the static rules and record a warning in the report.
+        let mut warnings: Vec<String> = Vec::new();
         if let Some(db) = &self.tuning {
             if let Some(cand) =
                 db.winner(&prog.name, self.mode, self.cfg.vlen, prog.fingerprint())
             {
                 if !cand.is_static() {
-                    return crate::tuner::candidate::lower_with(prog, self.mode, self.cfg, &cand)
-                        .with_context(|| {
-                            format!("applying tuned lowering '{}' to '{}'", cand.id(), prog.name)
-                        });
+                    let (rvv, report) =
+                        crate::tuner::candidate::lower_with(prog, self.mode, self.cfg, &cand)
+                            .with_context(|| {
+                                format!(
+                                    "applying tuned lowering '{}' to '{}'",
+                                    cand.id(),
+                                    prog.name
+                                )
+                            })?;
+                    match crate::rvv::verify::verify(&rvv, self.cfg.vlen) {
+                        Ok(()) => return Ok((rvv, report)),
+                        Err(e) => warnings.push(format!(
+                            "tuned lowering '{}' rejected by verifier ({e}) — \
+                             falling back to static rules",
+                            cand.id()
+                        )),
+                    }
                 }
             }
         }
@@ -140,7 +161,7 @@ impl Translator {
                 );
             }
         }
-        let mut report = TranslationReport::default();
+        let mut report = TranslationReport { warnings, ..TranslationReport::default() };
         let mut ctx = Ctx::new(self.cfg, &prog.bufs, prog.n_vregs as u32);
         let body = self.lower_block(&prog.body, &mut ctx, &mut report)?;
         let n_vregs = prog.n_vregs + ctx.scratch_max as usize;
@@ -235,6 +256,7 @@ mod tests {
         // vle32 + vle32 + vadd + vse32, like Listing 10
         assert_eq!(rp.static_ops(), 4);
         assert!(report.methods.iter().all(|(_, m)| m.is_custom()));
+        assert!(report.warnings.is_empty());
 
         let (out, stats) = Simulator::new(&rp, RvvConfig::new(128), &inputs())
             .unwrap()

@@ -13,12 +13,22 @@
 //!    when the machine has no spare lanes — and
 //!    `force-baseline:<category>` degradations that swap a
 //!    combo/algorithmic sequence for the generic SIMDe path.
-//! 2. **Score** — run every candidate through the pre-decoded engine via
-//!    the coordinator's fault-tolerant primitive
+//! 2. **Score** — every lowered candidate first passes the admission
+//!    verifier ([`crate::rvv::verify`]) as a cheap pre-filter: a program
+//!    the verifier rejects would only trap at runtime, so it is scored
+//!    out immediately without spending an execution. Survivors run
+//!    through the pre-decoded engine via the coordinator's
+//!    fault-tolerant primitive
 //!    ([`crate::coordinator::run_prepared_with_recovery`]). Candidates
 //!    are independent, so the runs fan out over a worker pool; winner
 //!    selection stays deterministic because scoring walks the collected
-//!    results in candidate-id order. The score is the paper's metric,
+//!    results in candidate-id order. A per-(kernel, candidate-family)
+//!    circuit breaker ([`crate::coordinator::Breaker`]) watches the
+//!    runs: after `breaker_threshold` consecutive faults in one family
+//!    (`widen`, `lmul`, `force-baseline`), the remaining candidates of
+//!    that family are skipped — the skip is recorded in the provenance
+//!    rows and counted in [`TuneOutcome::skipped`]. The static rule is
+//!    never breaker-skipped. The score is the paper's metric,
 //!    [`crate::sim::SimStats::total`] dynamic instructions, with
 //!    wall-clock as tiebreak. A candidate that fails to lower, traps,
 //!    panics, or produces output bytes different from the static
@@ -48,7 +58,7 @@ use std::sync::{Mutex, MutexGuard};
 
 use anyhow::{bail, Context, Result};
 
-use crate::coordinator::{self, CachedProgram, EngineKind, FaultRecord, Job, RetryPolicy};
+use crate::coordinator::{self, Breaker, CachedProgram, EngineKind, FaultRecord, Job, RetryPolicy};
 use crate::kernels;
 use crate::neon::interp::Buffer;
 use crate::rvv::machine::RvvConfig;
@@ -74,6 +84,10 @@ pub struct TunerOptions {
     pub retry: RetryPolicy,
     /// Worker threads for candidate runs within one tuning point.
     pub threads: usize,
+    /// Consecutive faults in one (kernel, candidate-family) before the
+    /// circuit breaker opens and the family's remaining candidates are
+    /// skipped (min 1; the static rule is never skipped).
+    pub breaker_threshold: u32,
 }
 
 impl Default for TunerOptions {
@@ -85,6 +99,7 @@ impl Default for TunerOptions {
             max_candidates: 16,
             retry: RetryPolicy::none(),
             threads: std::thread::available_parallelism().map_or(1, |n| n.get()),
+            breaker_threshold: 3,
         }
     }
 }
@@ -112,6 +127,9 @@ pub struct TuneOutcome {
     pub faults: Vec<FaultRecord>,
     /// Entries whose winner strictly beat the static rule.
     pub improved: usize,
+    /// Candidate runs skipped because their family's circuit breaker was
+    /// open (each is also a scored-out provenance row in its entry).
+    pub skipped: usize,
 }
 
 /// Run the search over the whole (vlen × kernel × mode) grid.
@@ -121,18 +139,21 @@ pub fn tune(opts: &TunerOptions) -> Result<TuneOutcome> {
         if opts.kernels.is_empty() { kernels::NAMES.to_vec() } else { opts.kernels.clone() };
     let mut db = TuningDb::new();
     let mut faults = Vec::new();
+    let mut skipped = 0usize;
+    let breaker = Breaker::new(opts.breaker_threshold);
     for &vlen in &opts.vlens {
         for &kernel in &kernel_names {
             for &mode in &opts.modes {
-                let entry = tune_point(kernel, mode, vlen, opts, &mut faults).with_context(
-                    || format!("tuning {kernel} mode={} vlen={vlen}", mode.name()),
-                )?;
+                let entry = tune_point(kernel, mode, vlen, opts, &breaker, &mut faults, &mut skipped)
+                    .with_context(
+                        || format!("tuning {kernel} mode={} vlen={vlen}", mode.name()),
+                    )?;
                 db.entries.push(entry);
             }
         }
     }
     let improved = db.entries.iter().filter(|e| e.improved()).count();
-    Ok(TuneOutcome { db, faults, improved })
+    Ok(TuneOutcome { db, faults, improved, skipped })
 }
 
 fn outputs_identical(a: &HashMap<String, Buffer>, b: &HashMap<String, Buffer>) -> bool {
@@ -159,8 +180,15 @@ enum CandRun {
     Done(Box<coordinator::PreparedOutcome>),
 }
 
-/// Lower one candidate and run it through the recovery ladder. Pure
-/// function of its arguments — safe to fan out across worker threads.
+/// The breaker family of a candidate id: the transform prefix before the
+/// first `:` (`widen:2` → `widen`), or the whole id (`static`).
+fn family_of(id: &str) -> &str {
+    id.split(':').next().unwrap_or(id)
+}
+
+/// Lower one candidate, pass it through the admission verifier, and run
+/// it through the recovery ladder. Pure function of its arguments — safe
+/// to fan out across worker threads.
 fn run_candidate(
     ci: usize,
     cand: &candidate::Candidate,
@@ -172,6 +200,11 @@ fn run_candidate(
 ) -> CandRun {
     match candidate::lower_with(&case.prog, mode, cfg, cand) {
         Ok((rvv, _report)) => {
+            // admission pre-filter: a rejected program would only trap at
+            // runtime, so score it out without spending an execution
+            if let Err(e) = crate::rvv::verify::verify(&rvv, job.vlen) {
+                return CandRun::Skip(format!("verify: {e}"));
+            }
             let decoded = decode(&rvv);
             let prepared = CachedProgram { rvv, decoded };
             match coordinator::run_prepared_with_recovery(ci, job, &prepared, &case.inputs, retry) {
@@ -193,7 +226,9 @@ fn tune_point(
     mode: Mode,
     vlen: u32,
     opts: &TunerOptions,
+    breaker: &Breaker,
     faults: &mut Vec<FaultRecord>,
+    skipped: &mut usize,
 ) -> Result<TunedEntry> {
     let case = kernels::by_name(kernel).with_context(|| format!("unknown kernel '{kernel}'"))?;
     let fingerprint = case.prog.fingerprint();
@@ -213,7 +248,27 @@ fn tune_point(
             s.spawn(|| loop {
                 let next = lock_ignore_poison(&queue).pop_front();
                 let Some(ci) = next else { return };
-                let run = run_candidate(ci, &cands[ci], &case, mode, cfg, &job, opts.retry);
+                let cand = &cands[ci];
+                let id = cand.id();
+                let fam = family_of(&id);
+                // the static rule is the bit-identity reference and is
+                // never breaker-skipped; alternatives of a family that
+                // keeps faulting are
+                if !cand.is_static() && breaker.is_open(kernel, fam) {
+                    lock_ignore_poison(&slots)[ci] = Some(CandRun::Skip(format!(
+                        "skipped: breaker open for ({kernel}, {fam}) after {} consecutive fault(s)",
+                        breaker.threshold()
+                    )));
+                    continue;
+                }
+                let run = run_candidate(ci, cand, &case, mode, cfg, &job, opts.retry);
+                if !cand.is_static() {
+                    match &run {
+                        CandRun::Fault(_) => breaker.record_fault(kernel, fam),
+                        CandRun::Done(_) => breaker.record_ok(kernel, fam),
+                        CandRun::Skip(_) => {}
+                    }
+                }
                 lock_ignore_poison(&slots)[ci] = Some(run);
             });
         }
@@ -238,8 +293,12 @@ fn tune_point(
                 if cand.is_static() {
                     bail!("static lowering failed — nothing to tune against: {e}");
                 }
-                // candidate does not apply here (e.g. no coalescible
-                // loop): scored out, search continues
+                // candidate does not apply here (no coalescible loop,
+                // verifier rejection, or open breaker): scored out,
+                // search continues
+                if e.starts_with("skipped: breaker open") {
+                    *skipped += 1;
+                }
                 scores.push(CandidateScore {
                     id,
                     ok: false,
@@ -356,6 +415,8 @@ mod tests {
         assert!(e.winner.starts_with("widen:"), "expected a widen winner, got {}", e.winner);
         assert!(e.improved(), "winner must strictly beat static: {e:?}");
         assert_eq!(out.improved, 1);
+        // healthy candidates never open the breaker
+        assert_eq!(out.skipped, 0);
         // winner must be replayable through the db lookup
         let cand = out
             .db

@@ -1,0 +1,171 @@
+//! Fuel-bounded execution: both engines must stop a program at its
+//! `ExecLimits` — dynamic-instruction budget or wall-clock deadline —
+//! with a structured trap instead of hanging, and the coordinator must
+//! degrade a runaway program to a `FaultRecord` while healthy matrix
+//! runs (threads {1, 4}) stay unaffected.
+
+use std::time::Duration;
+
+use simde_rvv::coordinator::{
+    run_matrix_report, run_prepared_with_recovery, CachedProgram, Job, MatrixOptions,
+    RetryPolicy,
+};
+use simde_rvv::neon::interp::Inputs;
+use simde_rvv::rvv::machine::RvvConfig;
+use simde_rvv::rvv::ops::{Dst, RvvInst, RvvKind, Src};
+use simde_rvv::rvv::program::{RStmt, RvvProgram};
+use simde_rvv::rvv::vtype::{Lmul, Sew};
+use simde_rvv::sim::{decode, Engine, ExecLimits, SimTrap, Simulator, TrapKind};
+use simde_rvv::simde::Mode;
+
+/// A buffer-free loop: `end`/`step` control the trip count, the body is
+/// one legal vector op so the fuel meter sees vector work too.
+fn counting_loop(end: i64, step: i64) -> RvvProgram {
+    RvvProgram {
+        name: "counting_loop".into(),
+        bufs: vec![],
+        body: vec![RStmt::Loop {
+            ivar: 0,
+            start: 0,
+            end,
+            step,
+            body: vec![RStmt::Op(RvvInst {
+                kind: RvvKind::VmvVX,
+                sew: Sew::E32,
+                lmul: Lmul::M1,
+                vl: 4,
+                dst: Dst::V(0),
+                srcs: vec![Src::ImmI(1)],
+                mask: None,
+                mem: None,
+            })],
+        }],
+        n_vregs: 1,
+        n_mregs: 0,
+        n_sregs: 1,
+    }
+}
+
+/// Run `prog` under `limits` on both engines, returning each trap.
+fn run_both(prog: &RvvProgram, limits: ExecLimits) -> Vec<(&'static str, SimTrap)> {
+    let cfg = RvvConfig::new(128);
+    let inputs = Inputs::new();
+    let mut traps = Vec::new();
+
+    let err = Simulator::with_limits(prog, cfg, &inputs, limits)
+        .unwrap()
+        .run()
+        .expect_err("interp must hit the limit");
+    traps.push(("interp", err.downcast::<SimTrap>().expect("structured trap")));
+
+    let dec = decode(prog);
+    let err = Engine::with_limits(prog, &dec, cfg, &inputs, limits)
+        .unwrap()
+        .run()
+        .expect_err("decoded must hit the limit");
+    traps.push(("decoded", err.downcast::<SimTrap>().expect("structured trap")));
+    traps
+}
+
+#[test]
+fn explicit_fuel_budget_traps_on_both_engines() {
+    // a long but finite loop against a tiny budget
+    let prog = counting_loop(1_000_000, 1);
+    let limits = ExecLimits { max_dyn_insts: 32, wall_deadline: None };
+    for (engine, trap) in run_both(&prog, limits) {
+        assert!(
+            matches!(trap.kind, TrapKind::FuelExhausted(_)),
+            "{engine}: {:?}",
+            trap.kind
+        );
+        assert_eq!(trap.kind.label(), "fuel-exhausted");
+        assert!(trap.kind.is_deterministic(), "same fuel, same program, same outcome");
+        assert_eq!(trap.engine, Some(engine));
+    }
+}
+
+#[test]
+fn zero_deadline_traps_on_both_engines() {
+    let prog = counting_loop(16, 4);
+    let limits = ExecLimits::unbounded().with_deadline(Duration::ZERO);
+    for (engine, trap) in run_both(&prog, limits) {
+        assert!(
+            matches!(trap.kind, TrapKind::DeadlineExceeded(_)),
+            "{engine}: {:?}",
+            trap.kind
+        );
+        assert_eq!(trap.kind.label(), "deadline-exceeded");
+        // a deadline depends on the host's clock, not the program: the
+        // retry ladder is allowed to try again
+        assert!(!trap.kind.is_deterministic());
+    }
+}
+
+#[test]
+fn default_budget_stops_a_runaway_back_edge() {
+    // step 0 never advances the induction variable: without fuel this
+    // loop runs forever. The default budget costs a non-terminating
+    // back-edge at one trip, so the runaway exhausts it almost at once.
+    let prog = counting_loop(16, 0);
+    let limits = ExecLimits::for_program(&prog);
+    assert!(limits.max_dyn_insts < u64::MAX);
+    for (engine, trap) in run_both(&prog, limits) {
+        assert!(
+            matches!(trap.kind, TrapKind::FuelExhausted(_)),
+            "{engine}: {:?}",
+            trap.kind
+        );
+    }
+}
+
+#[test]
+fn runaway_degrades_to_fault_record_through_the_coordinator() {
+    let prog = counting_loop(16, 0);
+    let decoded = decode(&prog);
+    let prepared = CachedProgram { rvv: prog, decoded };
+    let job = Job { kernel: "counting_loop", mode: Mode::RvvCustom, vlen: 128 };
+
+    // no retries: one decoded attempt, one fault record
+    let f = run_prepared_with_recovery(0, &job, &prepared, &Inputs::new(), RetryPolicy::none())
+        .expect_err("runaway must fault");
+    assert_eq!(f.attempts, 1);
+    let trap = f.trap.as_ref().expect("structured trap");
+    assert!(matches!(trap.kind, TrapKind::FuelExhausted(_)), "{:?}", trap.kind);
+
+    // with the full ladder: fuel exhaustion is deterministic, so the
+    // repeats on the same engine are skipped — one decoded attempt plus
+    // the interp fallback (which exhausts identically)
+    let f = run_prepared_with_recovery(
+        0,
+        &job,
+        &prepared,
+        &Inputs::new(),
+        RetryPolicy { max_attempts: 3, interp_fallback: true },
+    )
+    .expect_err("runaway must fault on every engine");
+    assert_eq!(f.attempts, 2, "1 decoded + 1 interp; deterministic repeats skipped");
+    let trap = f.trap.as_ref().expect("structured trap");
+    assert!(matches!(trap.kind, TrapKind::FuelExhausted(_)), "{:?}", trap.kind);
+}
+
+#[test]
+fn healthy_matrix_runs_stay_under_the_default_budget() {
+    // the default (shape-derived) limits must never fire on real suite
+    // kernels, across worker counts
+    for threads in [1, 4] {
+        let jobs: Vec<Job> = ["vrelu", "vsqrt"]
+            .into_iter()
+            .flat_map(|k| {
+                [Mode::Baseline, Mode::RvvCustom]
+                    .map(|mode| Job { kernel: k, mode, vlen: 128 })
+            })
+            .collect();
+        let report = run_matrix_report(jobs, MatrixOptions::new(threads));
+        assert!(report.ok(), "threads={threads}: {:?}", report.faults);
+        assert!(report.results.iter().all(|r| r.is_some()));
+        let health = report.health();
+        assert_eq!(health.passed, 4);
+        assert_eq!(health.faulted, 0);
+        assert!(health.fuel_spent > 0);
+    }
+}

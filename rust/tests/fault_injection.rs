@@ -140,6 +140,57 @@ fn figure2_report_degrades_per_kernel_on_both_engines() {
 }
 
 #[test]
+fn deterministic_trap_skips_straight_to_fallback() {
+    use simde_rvv::coordinator::{run_prepared_with_recovery, CachedProgram};
+    use simde_rvv::neon::interp::Inputs;
+    use simde_rvv::rvv::ops::{Dst, RvvInst, RvvKind, Src};
+    use simde_rvv::rvv::program::{RStmt, RvvProgram};
+    use simde_rvv::rvv::vtype::{Lmul, Sew};
+    use simde_rvv::sim::decode;
+
+    // vl=1000 > VLMAX(e32, m1) at vlen 128: a VsetvliViolation is
+    // deterministic — re-running the same engine on the same program
+    // cannot succeed, so the ladder must spend exactly one decoded
+    // attempt before the interp fallback instead of burning all three
+    let prog = RvvProgram {
+        name: "corrupt_vl".into(),
+        bufs: vec![],
+        body: vec![RStmt::Op(RvvInst {
+            kind: RvvKind::VmvVX,
+            sew: Sew::E32,
+            lmul: Lmul::M1,
+            vl: 1000,
+            dst: Dst::V(0),
+            srcs: vec![Src::ImmI(1)],
+            mask: None,
+            mem: None,
+        })],
+        n_vregs: 1,
+        n_mregs: 0,
+        n_sregs: 0,
+    };
+    let decoded = decode(&prog);
+    let prepared = CachedProgram { rvv: prog, decoded };
+    let job = Job { kernel: "corrupt_vl", mode: Mode::RvvCustom, vlen: 128 };
+    let f = run_prepared_with_recovery(
+        0,
+        &job,
+        &prepared,
+        &Inputs::new(),
+        RetryPolicy { max_attempts: 3, interp_fallback: true },
+    )
+    .expect_err("corrupt program must fault");
+    assert_eq!(
+        f.attempts, 2,
+        "1 decoded attempt + 1 interp fallback; deterministic same-engine repeats skipped"
+    );
+    assert_eq!(f.engine, EngineKind::Interp, "last attempt was the fallback");
+    let trap = f.trap.as_ref().expect("structured trap");
+    assert!(matches!(trap.kind, TrapKind::VsetvliViolation(_)), "{:?}", trap.kind);
+    assert!(trap.kind.is_deterministic());
+}
+
+#[test]
 fn strict_matrix_surfaces_fault_after_running_everything() {
     // the legacy strict wrapper: first fault in job order becomes the
     // error, but workers are joined and the fault is downcastable

@@ -1,0 +1,241 @@
+//! Seeded randomized differential fuzz for the admission verifier.
+//!
+//! Two properties, over a deterministic corpus (fixed xorshift64 seed,
+//! no wall-clock or OS entropy):
+//!
+//! 1. **Accept ⇒ no trap**: every generated-valid program must be
+//!    admitted by `rvv::verify` and then run trap-free on BOTH engines,
+//!    with bit-identical output buffers and exactly equal `SimStats`.
+//! 2. **Reject ⇒ matching trap**: every corrupted program must be
+//!    rejected statically with the expected `VerifyErrorKind`, and when
+//!    forced through execution anyway must raise the `TrapKind` the
+//!    rejection predicts — the verifier is exactly as strict as the
+//!    machine, never a different kind of strict.
+
+use std::collections::HashMap;
+
+use simde_rvv::ir::AddrExpr;
+use simde_rvv::ir::{BufDecl, BufKind};
+use simde_rvv::neon::elem::Elem;
+use simde_rvv::neon::interp::{Buffer, Inputs};
+use simde_rvv::rvv::machine::RvvConfig;
+use simde_rvv::rvv::ops::{Dst, MemRef, RvvInst, RvvKind, Src};
+use simde_rvv::rvv::program::{RStmt, RvvProgram};
+use simde_rvv::rvv::verify::{verify, VerifyErrorKind};
+use simde_rvv::rvv::vtype::{Lmul, Sew};
+use simde_rvv::sim::{decode, Engine, SimStats, SimTrap, Simulator, TrapKind};
+
+const VLEN: u32 = 128;
+
+/// xorshift64: tiny, deterministic, no external entropy.
+struct Rng(u64);
+
+impl Rng {
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x
+    }
+
+    fn pick(&mut self, n: u64) -> u64 {
+        self.next() % n
+    }
+}
+
+/// One generated case: a valid program plus matching inputs.
+struct Case {
+    prog: RvvProgram,
+    inputs: Inputs,
+}
+
+fn op(kind: RvvKind, dst: u32, a: u32, b: u32) -> RStmt {
+    RStmt::Op(RvvInst {
+        kind,
+        sew: Sew::E32,
+        lmul: Lmul::M1,
+        vl: 4,
+        dst: Dst::V(dst),
+        srcs: vec![Src::V(a), Src::V(b)],
+        mask: None,
+        mem: None,
+    })
+}
+
+fn mem_op(kind: RvvKind, dst: Dst, srcs: Vec<Src>, buf: u32) -> RStmt {
+    RStmt::Op(RvvInst {
+        kind,
+        sew: Sew::E32,
+        lmul: Lmul::M1,
+        vl: 4,
+        dst,
+        srcs,
+        mask: None,
+        mem: Some(MemRef { buf, index: AddrExpr::s(0), stride: 1 }),
+    })
+}
+
+/// A valid looped program: load A and B, a random chain of element-wise
+/// i32 ops, store to O; addresses stay in-bounds by construction.
+fn gen_case(rng: &mut Rng) -> Case {
+    let len = [16usize, 32, 64][rng.pick(3) as usize];
+    let arith = [RvvKind::Vadd, RvvKind::Vsub, RvvKind::Vmul, RvvKind::Vand, RvvKind::Vor, RvvKind::Vxor];
+    let mut body = vec![mem_op(RvvKind::Vle, Dst::V(0), vec![], 0), mem_op(RvvKind::Vle, Dst::V(1), vec![], 1)];
+    // 1..=3 chained ops, each reading the previous result
+    let chain = 1 + rng.pick(3) as u32;
+    for i in 0..chain {
+        let kind = arith[rng.pick(arith.len() as u64) as usize];
+        let prev = if i == 0 { 1 } else { 1 + i };
+        body.push(op(kind, 2 + i, 0, prev));
+    }
+    body.push(mem_op(RvvKind::Vse, Dst::None, vec![Src::V(1 + chain)], 2));
+    let prog = RvvProgram {
+        name: format!("fuzz_{len}_{chain}"),
+        bufs: vec![
+            BufDecl { name: "A".into(), elem: Elem::I32, len, kind: BufKind::Input },
+            BufDecl { name: "B".into(), elem: Elem::I32, len, kind: BufKind::Input },
+            BufDecl { name: "O".into(), elem: Elem::I32, len, kind: BufKind::Output },
+        ],
+        body: vec![RStmt::Loop { ivar: 0, start: 0, end: len as i64, step: 4, body }],
+        n_vregs: (2 + chain) as usize,
+        n_mregs: 0,
+        n_sregs: 1,
+    };
+    let mut inputs = Inputs::new();
+    let vals = |rng: &mut Rng| (0..len).map(|_| rng.next() as i32).collect::<Vec<_>>();
+    inputs.insert("A".into(), Buffer::from_i32s(&vals(rng)));
+    inputs.insert("B".into(), Buffer::from_i32s(&vals(rng)));
+    Case { prog, inputs }
+}
+
+fn run_interp(case: &Case) -> anyhow::Result<(HashMap<String, Buffer>, SimStats)> {
+    Simulator::new(&case.prog, RvvConfig::new(VLEN), &case.inputs)?.run()
+}
+
+fn run_decoded(case: &Case) -> anyhow::Result<(HashMap<String, Buffer>, SimStats)> {
+    let dec = decode(&case.prog);
+    Engine::new(&case.prog, &dec, RvvConfig::new(VLEN), &case.inputs)?.run()
+}
+
+#[test]
+fn accepted_programs_run_trap_free_and_bit_identical() {
+    let mut rng = Rng(0x9e3779b97f4a7c15);
+    for i in 0..64 {
+        let case = gen_case(&mut rng);
+        verify(&case.prog, VLEN)
+            .unwrap_or_else(|e| panic!("case {i} ({}) rejected: {e}", case.prog.name));
+        let (out_i, stats_i) = run_interp(&case)
+            .unwrap_or_else(|e| panic!("case {i}: interp trapped on admitted program: {e:#}"));
+        let (out_d, stats_d) = run_decoded(&case)
+            .unwrap_or_else(|e| panic!("case {i}: decoded trapped on admitted program: {e:#}"));
+        assert_eq!(stats_i, stats_d, "case {i}: stats diverge");
+        assert_eq!(out_i.len(), out_d.len());
+        for (name, buf) in &out_i {
+            let other = &out_d[name];
+            assert_eq!(buf.data, other.data, "case {i}: buffer '{name}' diverges bit-wise");
+        }
+    }
+}
+
+/// Force a rejected program through both engines and return the traps
+/// (the whole point: the verifier's rejection must predict them).
+fn forced_traps(case: &Case) -> Vec<SimTrap> {
+    [run_interp(case), run_decoded(case)]
+        .into_iter()
+        .map(|r| {
+            r.expect_err("rejected program must trap when forced through execution")
+                .downcast::<SimTrap>()
+                .expect("structured trap")
+        })
+        .collect()
+}
+
+fn assert_rejection(
+    case: &Case,
+    expected: VerifyErrorKind,
+    trap_matches: impl Fn(&TrapKind) -> bool,
+) {
+    let err = verify(&case.prog, VLEN).expect_err("corrupted program must be rejected");
+    assert_eq!(err.kind, expected, "{err}");
+    for trap in forced_traps(case) {
+        assert!(trap_matches(&trap.kind), "predicted {expected:?}, execution gave {:?}", trap.kind);
+    }
+}
+
+#[test]
+fn vl_corruption_rejects_and_traps_as_vsetvli() {
+    let mut rng = Rng(0xdeadbeefcafef00d);
+    for _ in 0..16 {
+        let mut case = gen_case(&mut rng);
+        // vl beyond VLMAX(e32, m1) on a random body op
+        if let RStmt::Loop { body, .. } = &mut case.prog.body[0] {
+            let i = rng.pick(body.len() as u64) as usize;
+            if let RStmt::Op(inst) = &mut body[i] {
+                inst.vl = 4 + 4 * (1 + rng.pick(8) as u32);
+            }
+        }
+        assert_rejection(&case, VerifyErrorKind::VlExceedsVlmax, |k| {
+            matches!(k, TrapKind::VsetvliViolation(_))
+        });
+    }
+}
+
+#[test]
+fn misaligned_group_rejects_and_traps_as_bad_operand() {
+    let mut rng = Rng(0x0123456789abcdef);
+    for _ in 0..16 {
+        let mut case = gen_case(&mut rng);
+        case.prog.n_vregs += 8;
+        // regroup the first arith op at m2 with an odd (misaligned) dst
+        if let RStmt::Loop { body, .. } = &mut case.prog.body[0] {
+            if let RStmt::Op(inst) = &mut body[2] {
+                inst.lmul = Lmul::M2;
+                inst.dst = Dst::V(3 + 2 * rng.pick(3) as u32);
+                inst.srcs = vec![Src::V(0), Src::V(0)];
+            }
+        }
+        assert_rejection(&case, VerifyErrorKind::MisalignedGroup, |k| {
+            matches!(k, TrapKind::BadOperand(_))
+        });
+    }
+}
+
+#[test]
+fn oob_address_rejects_and_traps_as_out_of_bounds() {
+    let mut rng = Rng(0x5ca1ab1e0ddba11);
+    for _ in 0..16 {
+        let mut case = gen_case(&mut rng);
+        let len = case.prog.bufs[2].len as i64;
+        // push the store past the end of O for the final iterations
+        if let RStmt::Loop { body, .. } = &mut case.prog.body[0] {
+            let last = body.len() - 1;
+            if let RStmt::Op(inst) = &mut body[last] {
+                if let Some(mref) = &mut inst.mem {
+                    mref.index = AddrExpr::s(0).addk(len + rng.pick(64) as i64);
+                }
+            }
+        }
+        assert_rejection(&case, VerifyErrorKind::OutOfBoundsAddress, |k| {
+            matches!(k, TrapKind::OutOfBounds { store: true, .. })
+        });
+    }
+}
+
+#[test]
+fn non_terminating_loop_rejects_and_fuel_traps() {
+    let mut rng = Rng(0xfeedfacecafebeef);
+    for _ in 0..8 {
+        let mut case = gen_case(&mut rng);
+        if let RStmt::Loop { step, .. } = &mut case.prog.body[0] {
+            *step = -(rng.pick(2) as i64); // 0 or -1: the back-edge never advances
+        }
+        // static rejection names the shape; forced execution degrades to
+        // fuel exhaustion (the default budget costs a diverging loop at
+        // one trip) instead of hanging the thread, on both engines
+        assert_rejection(&case, VerifyErrorKind::NonTerminatingLoop, |k| {
+            matches!(k, TrapKind::FuelExhausted(_))
+        });
+    }
+}
